@@ -1,0 +1,38 @@
+//! Baseline bake-off on one model (a single Table-2-style column): run
+//! every PTQ method at 4/3/2-bit weights and print the accuracy cliff.
+//! Demonstrates the `Method` registry of the experiment layer as a library
+//! API (the `exp table2` subcommand drives the full grid).
+
+use anyhow::Result;
+
+use brecq::coordinator::experiments::{quantize_with, ExpOpts, Method};
+use brecq::coordinator::Env;
+use brecq::eval::{accuracy, EvalParams};
+use brecq::recon::BitConfig;
+
+fn main() -> Result<()> {
+    let env = Env::bootstrap(None)?;
+    let mname = std::env::args().nth(1)
+        .unwrap_or_else(|| "resnet_s".into());
+    let model = env.model(&mname);
+    let train = env.train_set()?;
+    let test = env.test_set()?;
+    let o = ExpOpts { iters: 150, calib_n: 256, ..ExpOpts::default() };
+    let calib = env.calib(&train, o.calib_n, o.seed);
+
+    println!("{mname}: FP {:.2}%", model.fp_acc * 100.0);
+    println!("{:<22} {:>6} {:>6} {:>6}", "method", "W4", "W3", "W2");
+    for method in [Method::BiasCorr, Method::Omse, Method::AdaRoundLayer,
+                   Method::AdaQuantLike, Method::Brecq] {
+        let mut row = format!("{:<22}", method.name());
+        for wbits in [4usize, 3, 2] {
+            let bits = BitConfig::uniform(model, wbits, None, true);
+            let qm = quantize_with(&env, &mname, method, &calib, &bits, &o)?;
+            let acc = accuracy(&env.rt, model,
+                               &EvalParams::quantized(&qm), &test)?;
+            row.push_str(&format!(" {:>6.2}", acc * 100.0));
+        }
+        println!("{row}");
+    }
+    Ok(())
+}

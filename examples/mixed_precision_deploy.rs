@@ -1,0 +1,63 @@
+//! Mixed-precision deployment scenario (paper §3.4 / Fig. 2): a model must
+//! fit a hardware latency budget on the precision-scalable accelerator.
+//!
+//! Pipeline: sensitivity profiling (diagonal + intra-block off-diagonal)
+//! -> genetic bitwidth search under the systolic simulator's H(c)
+//! -> BRECQ calibration of the winning configuration -> evaluation,
+//! compared against the unified-precision alternative at the same budget.
+
+use anyhow::Result;
+
+use brecq::coordinator::Env;
+use brecq::eval::{accuracy, EvalParams};
+use brecq::hwsim::{HwMeasure, Systolic};
+use brecq::mp::{GaConfig, GeneticSearch};
+use brecq::recon::{BitConfig, Calibrator, ReconConfig};
+use brecq::sensitivity::Profiler;
+
+fn main() -> Result<()> {
+    let env = Env::bootstrap(None)?;
+    let model = env.model("resnet_s");
+    let train = env.train_set()?;
+    let test = env.test_set()?;
+    let calib = env.calib(&train, 256, 0);
+    let cal = Calibrator::new(&env.rt, &env.mf, model);
+    let (ws, bs) = cal.fp_weights()?;
+
+    let sim = Systolic::default();
+    let t8 = sim.measure(model, &vec![8; model.layers.len()], 8);
+    let t2 = sim.measure(model, &vec![2; model.layers.len()], 8);
+    // budget: 60% of the way from all-8-bit down to all-2-bit latency
+    let budget = t2 + (t8 - t2) * 0.4;
+    println!("systolic latency: all-8 {t8:.2}ms, all-2 {t2:.2}ms, \
+              budget {budget:.2}ms");
+
+    // sensitivity LUT with the paper's intra-block 2-bit pair terms
+    let prof = Profiler { rt: &env.rt, mf: &env.mf, model };
+    let table = prof.measure(&calib, &ws, &bs, true)?;
+
+    let ga = GeneticSearch { model, table: &table, hw: &sim, abits: 8,
+                             budget };
+    let res = ga.run(&GaConfig::default())?;
+    println!("GA ({} configs, {:.2}s): H(c) = {:.2}ms", res.evaluated,
+             res.seconds, res.hw_cost);
+    for (l, layer) in model.layers.iter().enumerate() {
+        println!("  {:<16} {}-bit", layer.name, res.wbits[l]);
+    }
+
+    // calibrate + evaluate the mixed configuration
+    let bits = BitConfig::mixed(res.wbits.clone(), 8, true);
+    let cfg = ReconConfig { iters: 150, ..ReconConfig::default() };
+    let qm = cal.calibrate(&calib, &bits, &cfg)?;
+    let acc = accuracy(&env.rt, model, &EvalParams::quantized(&qm), &test)?;
+    println!("mixed-precision model: {:.2}% top-1 at {:.2}ms", acc * 100.0,
+             res.hw_cost);
+
+    // unified-precision point that fits the same budget (w=2 everywhere)
+    let ubits = BitConfig::uniform(model, 2, Some(8), true);
+    let qm2 = cal.calibrate(&calib, &ubits, &cfg)?;
+    let acc2 = accuracy(&env.rt, model, &EvalParams::quantized(&qm2), &test)?;
+    println!("unified 2-bit at {:.2}ms: {:.2}% top-1  (mixed wins: {})",
+             sim.measure(model, &ubits.wbits, 8), acc2 * 100.0, acc > acc2);
+    Ok(())
+}

@@ -1,0 +1,44 @@
+//! Quickstart: post-training-quantize a pretrained model to 4-bit weights /
+//! 4-bit activations with BRECQ block reconstruction, then evaluate it.
+//!
+//!     make artifacts                       # once: trains + AOT-lowers
+//!     cargo run --release --example quickstart
+//!
+//! This is the full public-API surface a downstream user touches: bootstrap
+//! an `Env` from the artifacts, pick a `BitConfig`, run the `Calibrator`,
+//! evaluate the `QuantizedModel`.
+
+use anyhow::Result;
+
+use brecq::coordinator::Env;
+use brecq::eval::{accuracy, EvalParams};
+use brecq::recon::{BitConfig, Calibrator, ReconConfig};
+
+fn main() -> Result<()> {
+    // 1. load artifacts (manifest + PJRT runtime + datasets)
+    let env = Env::bootstrap(None)?;
+    let model = env.model("resnet_s");
+    println!("model {} — FP reference accuracy {:.2}%",
+             model.name, model.fp_acc * 100.0);
+
+    // 2. the paper's calibration protocol: 1024 images from the train set
+    let train = env.train_set()?;
+    let calib = env.calib(&train, 256, /*seed=*/ 0);
+
+    // 3. W4A4, first & last layer kept at 8-bit (paper §4.2 policy)
+    let bits = BitConfig::uniform(model, 4, Some(4), true);
+
+    // 4. BRECQ block reconstruction (Algorithm 1)
+    let cal = Calibrator::new(&env.rt, &env.mf, model);
+    let cfg = ReconConfig { iters: 150, verbose: true,
+                            ..ReconConfig::default() };
+    let qm = cal.calibrate(&calib, &bits, &cfg)?;
+    println!("calibrated in {:.1}s", qm.calib_seconds);
+
+    // 5. evaluate the quantized model on the held-out test set
+    let test = env.test_set()?;
+    let acc = accuracy(&env.rt, model, &EvalParams::quantized(&qm), &test)?;
+    println!("W4A4 top-1: {:.2}%  (FP {:.2}%)", acc * 100.0,
+             model.fp_acc * 100.0);
+    Ok(())
+}

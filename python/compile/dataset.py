@@ -1,0 +1,111 @@
+"""Deterministic synthetic datasets (ImageNet / MS-COCO stand-ins).
+
+`synth10`: 10-class 32x32x3 procedural texture classification. Each class is
+a distinct combination of oriented stripes (class frequency + orientation),
+a class-conditioned colour prior and a positioned radial blob, under per-
+sample jitter and pixel noise — separably learnable to >90% top-1 by the
+small FP models, yet non-trivial (classes share colour/orientation margins).
+
+Images are stored as u8 HWC rasters; both Python (training) and Rust
+(calibration/eval) standardize with the per-channel mean/std recorded in
+the manifest. Everything is seeded: the datasets are bit-reproducible.
+"""
+
+import os
+
+import numpy as np
+
+NUM_CLASSES = 10
+IMG = 32
+TRAIN_N = 10000
+TEST_N = 2000
+
+_PALETTE = np.array([
+    [0.9, 0.2, 0.2], [0.2, 0.9, 0.2], [0.2, 0.3, 0.9], [0.9, 0.8, 0.2],
+    [0.8, 0.2, 0.9], [0.2, 0.9, 0.9], [0.9, 0.5, 0.1], [0.5, 0.9, 0.5],
+    [0.6, 0.4, 0.9], [0.9, 0.9, 0.9],
+], dtype=np.float32)
+
+
+def _images_for(labels: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+    n = labels.shape[0]
+    yy, xx = np.mgrid[0:IMG, 0:IMG].astype(np.float32) / IMG
+    imgs = np.empty((n, IMG, IMG, 3), dtype=np.uint8)
+    for i, c in enumerate(labels):
+        # classes overlap in every single cue (orientation jitter comparable
+        # to class spacing, shared colours, jittered blob positions) so the
+        # FP models land in the mid-90s rather than saturating — quantization
+        # degradation then has somewhere to show.
+        theta = np.pi * c / NUM_CLASSES + rng.normal(0, 0.16)
+        freq = 2.5 + (c % 5) + rng.normal(0, 0.45)
+        phase = rng.uniform(0, 2 * np.pi)
+        stripes = np.sin(2 * np.pi * freq *
+                         (xx * np.cos(theta) + yy * np.sin(theta)) + phase)
+        cx = 0.3 + 0.4 * ((c % 3) / 2.0) + rng.normal(0, 0.13)
+        cy = 0.3 + 0.4 * ((c // 3 % 3) / 2.0) + rng.normal(0, 0.13)
+        blob = np.exp(-(((xx - cx) ** 2 + (yy - cy) ** 2) / 0.02))
+        col = 0.55 * _PALETTE[c] + 0.45 * _PALETTE[(c + 1) % NUM_CLASSES]
+        col2 = 0.55 * _PALETTE[(c + 3) % NUM_CLASSES] \
+            + 0.45 * _PALETTE[(c + 4) % NUM_CLASSES]
+        # class-independent distractor blob
+        dx, dy = rng.uniform(0.15, 0.85, size=2)
+        distract = np.exp(-(((xx - dx) ** 2 + (yy - dy) ** 2) / 0.015))
+        img = (0.45 + 0.15 * stripes[..., None] * col
+               + 0.22 * blob[..., None] * col2
+               + 0.18 * distract[..., None] * _PALETTE[rng.integers(10)]
+               + 0.16 * rng.normal(size=(IMG, IMG, 3)))
+        imgs[i] = np.clip(img * 255.0, 0, 255).astype(np.uint8)
+    return imgs
+
+
+def generate(seed: int = 1234):
+    """Returns (train_x u8 NHWC, train_y u8, test_x, test_y)."""
+    rng = np.random.default_rng(seed)
+    ytr = rng.integers(0, NUM_CLASSES, size=TRAIN_N).astype(np.uint8)
+    yte = rng.integers(0, NUM_CLASSES, size=TEST_N).astype(np.uint8)
+    xtr = _images_for(ytr, rng)
+    xte = _images_for(yte, rng)
+    return xtr, ytr, xte, yte
+
+
+def standardize_stats(xtr_u8: np.ndarray):
+    """Per-channel mean/std in [0,1] units."""
+    x = xtr_u8.astype(np.float32) / 255.0
+    return x.mean(axis=(0, 1, 2)), x.std(axis=(0, 1, 2))
+
+
+def to_nchw_f32(x_u8: np.ndarray, mean, std) -> np.ndarray:
+    x = x_u8.astype(np.float32) / 255.0
+    x = (x - mean) / std
+    return np.transpose(x, (0, 3, 1, 2)).copy()
+
+
+def ensure_on_disk(outdir: str, seed: int = 1234):
+    """Write train/test rasters + labels; no-op when files already exist.
+    Returns (paths dict, mean, std)."""
+    os.makedirs(outdir, exist_ok=True)
+    paths = {k: os.path.join(outdir, f'{k}.bin')
+             for k in ('train_x', 'train_y', 'test_x', 'test_y')}
+    stats_path = os.path.join(outdir, 'stats.npy')
+    if not all(os.path.exists(p) for p in paths.values()) \
+            or not os.path.exists(stats_path):
+        xtr, ytr, xte, yte = generate(seed)
+        mean, std = standardize_stats(xtr)
+        xtr.tofile(paths['train_x'])
+        ytr.tofile(paths['train_y'])
+        xte.tofile(paths['test_x'])
+        yte.tofile(paths['test_y'])
+        np.save(stats_path, np.stack([mean, std]))
+    stats = np.load(stats_path)
+    return paths, stats[0], stats[1]
+
+
+def load(outdir: str):
+    paths, mean, std = ensure_on_disk(outdir)
+    xtr = np.fromfile(paths['train_x'], dtype=np.uint8).reshape(
+        TRAIN_N, IMG, IMG, 3)
+    ytr = np.fromfile(paths['train_y'], dtype=np.uint8)
+    xte = np.fromfile(paths['test_x'], dtype=np.uint8).reshape(
+        TEST_N, IMG, IMG, 3)
+    yte = np.fromfile(paths['test_y'], dtype=np.uint8)
+    return (xtr, ytr, xte, yte), mean, std

@@ -1,0 +1,78 @@
+"""Shared tiling helpers for the Pallas kernels.
+
+All kernels view their operands as 2D (rows x 128-lane) tiles, the natural
+TPU VPU layout (see DESIGN.md §Hardware-Adaptation). Inputs of arbitrary
+shape are padded up to tile multiples in the surrounding jit graph (XLA fuses
+the pad/slice with neighbours, so this costs one pass at most) and sliced
+back afterwards.
+
+Kernels run with interpret=True: the CPU PJRT client cannot execute Mosaic
+custom-calls, so the Pallas body is lowered to plain HLO. The BlockSpec
+schedule is still the real one a TPU build would use.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128      # last-dim tile (TPU vector lanes)
+SUBLANES = 8     # row tile (f32 sublanes)
+
+INTERPRET = True
+
+# Interpret-mode pallas lowers every grid step into one iteration of an HLO
+# while-loop with dynamic-slice bookkeeping; on the CPU PJRT backend a
+# many-step grid dominates the executable's runtime. We therefore lower with
+# a single grid step whose block covers the whole (padded) operand — the
+# numerics and the kernel body are identical; the multi-step BlockSpec
+# schedule a real TPU build would use is what row_spec/grid_steps describe
+# when SINGLE_BLOCK is off (see DESIGN.md §Hardware-Adaptation and the
+# EXPERIMENTS.md §Perf entry for the before/after).
+SINGLE_BLOCK = True
+
+
+def grid_steps(rows: int, block_rows: int) -> int:
+    return 1 if SINGLE_BLOCK else rows // block_rows
+
+
+def ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def pad2d(a, rows, cols, value=0.0):
+    """Pad a 2D array up to (rows, cols) with a constant."""
+    r, c = a.shape
+    if r == rows and c == cols:
+        return a
+    return jnp.pad(a, ((0, rows - r), (0, cols - c)), constant_values=value)
+
+
+def as_rows128(a, value=0.0):
+    """Flatten to 1D, pad, reshape to (R, LANES) with R a SUBLANES multiple.
+
+    Returns (tiled, original_size).
+    """
+    flat = a.reshape(-1)
+    n = flat.shape[0]
+    ncols = LANES
+    nrows = ceil_to(max(1, (n + ncols - 1) // ncols), SUBLANES)
+    padded = jnp.pad(flat, (0, nrows * ncols - n), constant_values=value)
+    return padded.reshape(nrows, ncols), n
+
+
+def from_rows128(tiled, n, shape):
+    """Inverse of as_rows128."""
+    return tiled.reshape(-1)[:n].reshape(shape)
+
+
+def scalar_spec():
+    """BlockSpec for a (1,1) scalar operand broadcast to every grid step."""
+    return pl.BlockSpec((1, 1), lambda i: (0, 0))
+
+
+def row_spec(rows, cols=LANES):
+    """BlockSpec marching down the row dimension of an (R, cols) operand.
+    With SINGLE_BLOCK the block covers all rows in one grid step."""
+    if SINGLE_BLOCK:
+        return pl.BlockSpec((rows, cols), lambda i: (0, 0))
+    return pl.BlockSpec((SUBLANES, cols), lambda i: (i, 0))

@@ -1,0 +1,117 @@
+"""AdaRound soft weight fake-quantization as a Pallas kernel (Eq. 16).
+
+    w_hat = s * clip( floor(w/s) + h(v), n, p ),  h = rectified sigmoid
+
+The kernel is differentiable wrt the rounding variable `v` through a custom
+VJP whose backward pass is itself a Pallas kernel. `w` and `step` are frozen
+during BRECQ reconstruction, so their cotangents are zero.
+
+Tiling (§Hardware-Adaptation): weights are viewed as (C, K) = (out-channels,
+everything else), padded to (8k, 128m) tiles; the per-channel step rides
+along as a (C, 1) column broadcast across lanes; the clip bounds n/p are
+(1, 1) scalars broadcast to every grid step. The whole schedule reads each
+operand exactly once — the kernel is bandwidth-bound.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common as cm
+from .ref import ZETA, GAMMA
+
+
+def _fwd_kernel(w_ref, s_ref, v_ref, n_ref, p_ref, o_ref):
+    w = w_ref[...]
+    s = s_ref[...]          # (BC, 1) broadcasts across lanes
+    v = v_ref[...]
+    n = n_ref[0, 0]
+    p = p_ref[0, 0]
+    h = jnp.clip(jax.nn.sigmoid(v) * (ZETA - GAMMA) + GAMMA, 0.0, 1.0)
+    g = jnp.floor(w / s) + h
+    o_ref[...] = s * jnp.clip(g, n, p)
+
+
+def _bwd_kernel(w_ref, s_ref, v_ref, n_ref, p_ref, g_ref, o_ref):
+    w = w_ref[...]
+    s = s_ref[...]
+    v = v_ref[...]
+    n = n_ref[0, 0]
+    p = p_ref[0, 0]
+    gout = g_ref[...]
+    sig = jax.nn.sigmoid(v)
+    h = sig * (ZETA - GAMMA) + GAMMA
+    hgrad = jnp.where(jnp.logical_and(h > 0.0, h < 1.0),
+                      sig * (1.0 - sig) * (ZETA - GAMMA), 0.0)
+    g = jnp.floor(w / s) + jnp.clip(h, 0.0, 1.0)
+    inside = jnp.logical_and(g > n, g < p)
+    o_ref[...] = gout * s * jnp.where(inside, hgrad, 0.0)
+
+
+def _tile(w, step, v):
+    """(C, K) view padded to tiles; step padded with ones (avoids div-by-0
+    in dead rows; results there are sliced away)."""
+    c = w.shape[0]
+    w2 = w.reshape(c, -1)
+    v2 = v.reshape(c, -1)
+    k = w2.shape[1]
+    cp = cm.ceil_to(c, cm.SUBLANES)
+    kp = cm.ceil_to(k, cm.LANES)
+    w2 = cm.pad2d(w2, cp, kp)
+    v2 = cm.pad2d(v2, cp, kp)
+    s2 = jnp.pad(step.reshape(c, 1), ((0, cp - c), (0, 0)), constant_values=1.0)
+    return w2, s2, v2, c, k, cp, kp
+
+
+def _grid_specs(cp, kp):
+    if cm.SINGLE_BLOCK:
+        grid = (1,)
+        wspec = pl.BlockSpec((cp, kp), lambda i: (0, 0))
+        sspec = pl.BlockSpec((cp, 1), lambda i: (0, 0))
+    else:
+        grid = (cp // cm.SUBLANES,)
+        wspec = pl.BlockSpec((cm.SUBLANES, kp), lambda i: (i, 0))
+        sspec = pl.BlockSpec((cm.SUBLANES, 1), lambda i: (i, 0))
+    nspec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    return grid, wspec, sspec, nspec
+
+
+@jax.custom_vjp
+def adaround(w, step, v, n, p):
+    """Soft fake-quantized weights; step shape (C,), n/p shape (1,)."""
+    w2, s2, v2, c, k, cp, kp = _tile(w, step, v)
+    grid, wspec, sspec, nspec = _grid_specs(cp, kp)
+    out = pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[wspec, sspec, wspec, nspec, nspec],
+        out_specs=wspec,
+        out_shape=jax.ShapeDtypeStruct((cp, kp), w.dtype),
+        interpret=cm.INTERPRET,
+    )(w2, s2, v2, n.reshape(1, 1), p.reshape(1, 1))
+    return out[:c, :k].reshape(w.shape)
+
+
+def _fwd(w, step, v, n, p):
+    return adaround(w, step, v, n, p), (w, step, v, n, p)
+
+
+def _bwd(res, gout):
+    w, step, v, n, p = res
+    w2, s2, v2, c, k, cp, kp = _tile(w, step, v)
+    g2 = cm.pad2d(gout.reshape(c, -1), cp, kp)
+    grid, wspec, sspec, nspec = _grid_specs(cp, kp)
+    gv = pl.pallas_call(
+        _bwd_kernel,
+        grid=grid,
+        in_specs=[wspec, sspec, wspec, nspec, nspec, wspec],
+        out_specs=wspec,
+        out_shape=jax.ShapeDtypeStruct((cp, kp), w.dtype),
+        interpret=cm.INTERPRET,
+    )(w2, s2, v2, n.reshape(1, 1), p.reshape(1, 1), g2)
+    gv = gv[:c, :k].reshape(w.shape)
+    return (jnp.zeros_like(w), jnp.zeros_like(step), gv,
+            jnp.zeros_like(n), jnp.zeros_like(p))
+
+
+adaround.defvjp(_fwd, _bwd)

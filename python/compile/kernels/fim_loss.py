@@ -1,0 +1,76 @@
+"""FIM-weighted squared reconstruction error as a fused Pallas kernel (Eq. 10).
+
+    L = sum( fim * (z - z_hat)^2 ) / B
+
+where `fim` is the element-wise squared gradient of the task loss at the
+unit's FP output (the diagonal pre-activation Fisher), cached per calibration
+sample. The kernel fuses subtract/square/scale/reduce into one pass over the
+three operands (arith intensity < 1 FLOP/B: pure bandwidth), emitting
+per-tile partial sums reduced outside.
+
+Differentiable wrt z_hat only (z and fim are frozen calibration caches).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common as cm
+
+
+def _fwd_kernel(z_ref, q_ref, f_ref, o_ref):
+    d = z_ref[...] - q_ref[...]
+    o_ref[0, 0] = jnp.sum(f_ref[...] * d * d)
+
+
+def _bwd_kernel(z_ref, q_ref, f_ref, c_ref, o_ref):
+    # d/d z_hat [ f*(z-z_hat)^2 ] = -2 f (z - z_hat), times the scalar
+    # upstream cotangent (already divided by B).
+    c = c_ref[0, 0]
+    o_ref[...] = -2.0 * c * f_ref[...] * (z_ref[...] - q_ref[...])
+
+
+@jax.custom_vjp
+def fim_loss(z, zq, fim):
+    """Scalar FIM-weighted loss; batch dim = z.shape[0]."""
+    z2, _ = cm.as_rows128(z)
+    q2, _ = cm.as_rows128(zq)
+    f2, _ = cm.as_rows128(fim)     # zero-padded: dead lanes contribute 0
+    rows = z2.shape[0]
+    gsteps = cm.grid_steps(rows, cm.SUBLANES)
+    part = pl.pallas_call(
+        _fwd_kernel,
+        grid=(gsteps,),
+        in_specs=[cm.row_spec(rows), cm.row_spec(rows), cm.row_spec(rows)],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((gsteps, 1), z.dtype),
+        interpret=cm.INTERPRET,
+    )(z2, q2, f2)
+    return jnp.sum(part) / z.shape[0]
+
+
+def _fwd(z, zq, fim):
+    return fim_loss(z, zq, fim), (z, zq, fim)
+
+
+def _bwd(res, gout):
+    z, zq, fim = res
+    z2, n = cm.as_rows128(z)
+    q2, _ = cm.as_rows128(zq)
+    f2, _ = cm.as_rows128(fim)
+    rows = z2.shape[0]
+    c = (gout / z.shape[0]).reshape(1, 1)
+    gq2 = pl.pallas_call(
+        _bwd_kernel,
+        grid=(cm.grid_steps(rows, cm.SUBLANES),),
+        in_specs=[cm.row_spec(rows), cm.row_spec(rows), cm.row_spec(rows),
+                  cm.scalar_spec()],
+        out_specs=cm.row_spec(rows),
+        out_shape=jax.ShapeDtypeStruct((rows, cm.LANES), z.dtype),
+        interpret=cm.INTERPRET,
+    )(z2, q2, f2, c)
+    gq = cm.from_rows128(gq2, n, z.shape)
+    return jnp.zeros_like(z), gq, jnp.zeros_like(fim)
+
+
+fim_loss.defvjp(_fwd, _bwd)

@@ -1,0 +1,93 @@
+"""LSQ fake-quantization with a learned step size as a Pallas kernel.
+
+Forward:  x_hat = s * clip( round(x/s), qmin, qmax )
+Backward (Eq. 18 of the paper / Esser et al. 2020, no gradient scale):
+  wrt x: straight-through inside the clip range,
+  wrt s: qmin / qmax outside, (round(x/s) - x/s) inside.
+
+Used for activation quantization during block reconstruction (Algorithm 1's
+"update the activation quantization step size") and, with signed bounds, as
+the weight quantizer of the LSQ-QAT baseline (Table 4).
+
+Tiling: the activation is streamed as (8, 128) VPU tiles; the step and the
+clip bounds are (1,1) scalars broadcast to every grid step; the backward
+pass emits per-tile partial sums for d/ds which are reduced outside the
+kernel (one extra (G,1) vector — avoids a second HBM pass over x).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common as cm
+
+
+def _fwd_kernel(x_ref, s_ref, qn_ref, qp_ref, o_ref):
+    x = x_ref[...]
+    s = s_ref[0, 0]
+    qn = qn_ref[0, 0]
+    qp = qp_ref[0, 0]
+    o_ref[...] = s * jnp.clip(jnp.round(x / s), qn, qp)
+
+
+def _bwd_kernel(x_ref, s_ref, qn_ref, qp_ref, g_ref, gx_ref, gs_ref):
+    x = x_ref[...]
+    s = s_ref[0, 0]
+    qn = qn_ref[0, 0]
+    qp = qp_ref[0, 0]
+    g = g_ref[...]
+    xs = x / s
+    below = xs <= qn
+    above = xs >= qp
+    inside = jnp.logical_not(jnp.logical_or(below, above))
+    gx_ref[...] = g * inside.astype(x.dtype)
+    ds = jnp.where(below, qn, jnp.where(above, qp, jnp.round(xs) - xs))
+    gs_ref[0, 0] = jnp.sum(g * ds)
+
+
+@jax.custom_vjp
+def lsq_quant(x, step, qmin, qmax):
+    """Fake-quantize `x` (any shape); step/qmin/qmax are (1,)-shaped."""
+    x2, n = cm.as_rows128(x)
+    rows = x2.shape[0]
+    grid = (cm.grid_steps(rows, cm.SUBLANES),)
+    out = pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[cm.row_spec(rows), cm.scalar_spec(), cm.scalar_spec(),
+                  cm.scalar_spec()],
+        out_specs=cm.row_spec(rows),
+        out_shape=jax.ShapeDtypeStruct((rows, cm.LANES), x.dtype),
+        interpret=cm.INTERPRET,
+    )(x2, step.reshape(1, 1), qmin.reshape(1, 1), qmax.reshape(1, 1))
+    return cm.from_rows128(out, n, x.shape)
+
+
+def _fwd(x, step, qmin, qmax):
+    return lsq_quant(x, step, qmin, qmax), (x, step, qmin, qmax)
+
+
+def _bwd(res, gout):
+    x, step, qmin, qmax = res
+    x2, n = cm.as_rows128(x)
+    g2, _ = cm.as_rows128(gout)        # zero-padded: dead lanes contribute 0
+    rows = x2.shape[0]
+    gsteps = cm.grid_steps(rows, cm.SUBLANES)
+    grid = (gsteps,)
+    gx2, gs_part = pl.pallas_call(
+        _bwd_kernel,
+        grid=grid,
+        in_specs=[cm.row_spec(rows), cm.scalar_spec(), cm.scalar_spec(),
+                  cm.scalar_spec(), cm.row_spec(rows)],
+        out_specs=[cm.row_spec(rows),
+                   pl.BlockSpec((1, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((rows, cm.LANES), x.dtype),
+                   jax.ShapeDtypeStruct((gsteps, 1), x.dtype)],
+        interpret=cm.INTERPRET,
+    )(x2, step.reshape(1, 1), qmin.reshape(1, 1), qmax.reshape(1, 1), g2)
+    gx = cm.from_rows128(gx2, n, x.shape)
+    gs = jnp.sum(gs_part).reshape((1,))
+    return gx, gs, jnp.zeros_like(qmin), jnp.zeros_like(qmax)
+
+
+lsq_quant.defvjp(_fwd, _bwd)

@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for every Pallas kernel (forward + analytic VJPs).
+
+These are the correctness ground truth: pytest checks each Pallas kernel
+(interpret=True) against these, for values and for gradients. They are also
+used directly by the unit tests of the reconstruction objective.
+
+Notation follows the paper:
+  AdaRound (Eq. 16):  w_hat = s * clip( floor(w/s) + h(v), n, p )
+      h(v) = clip( sigmoid(v) * (zeta - gamma) + gamma, 0, 1 ),
+      zeta=1.1, gamma=-0.1 (rectified sigmoid of Nagel et al. 2020).
+  LSQ (Eq. 18):       x_hat = s * clip( round(x/s), qmin, qmax )
+      d x_hat / d s  = qmin                    if x/s <= qmin
+                     = qmax                    if x/s >= qmax
+                     = round(x/s) - x/s        otherwise
+      d x_hat / d x  = 1 inside the clip range, 0 outside (STE).
+  FIM loss (Eq. 10):  L = sum( fim * (z - z_hat)^2 ) / B
+      (fim = squared per-sample gradient dL/dz of the FP network).
+"""
+
+import jax
+import jax.numpy as jnp
+
+ZETA = 1.1
+GAMMA = -0.1
+
+
+def rect_sigmoid(v):
+    """Rectified sigmoid h(v) from AdaRound."""
+    return jnp.clip(jax.nn.sigmoid(v) * (ZETA - GAMMA) + GAMMA, 0.0, 1.0)
+
+
+def rect_sigmoid_grad(v):
+    """dh/dv (zero in the rectified/clipped region)."""
+    s = jax.nn.sigmoid(v)
+    h = s * (ZETA - GAMMA) + GAMMA
+    inside = jnp.logical_and(h > 0.0, h < 1.0)
+    return jnp.where(inside, s * (1.0 - s) * (ZETA - GAMMA), 0.0)
+
+
+def adaround_ref(w, step, v, n, p):
+    """AdaRound soft fake-quant. `step` broadcasts against `w`
+    (per-channel: shape (C,1,..)), `n`/`p` are (1,)-shaped clip bounds."""
+    g = jnp.floor(w / step) + rect_sigmoid(v)
+    return step * jnp.clip(g, n.reshape(()), p.reshape(()))
+
+
+def adaround_grad_v_ref(w, step, v, n, p, gout):
+    """VJP wrt v: gout * step * 1{n < floor(w/s)+h(v) < p} * h'(v)."""
+    g = jnp.floor(w / step) + rect_sigmoid(v)
+    nn, pp = n.reshape(()), p.reshape(())
+    inside = jnp.logical_and(g > nn, g < pp)
+    return gout * step * jnp.where(inside, rect_sigmoid_grad(v), 0.0)
+
+
+def adaround_hard_ref(w, step, v, n, p):
+    """Hard-rounding commit: h(v) binarized at 0.5 (used after calibration)."""
+    g = jnp.floor(w / step) + (rect_sigmoid(v) >= 0.5).astype(w.dtype)
+    return step * jnp.clip(g, n.reshape(()), p.reshape(()))
+
+
+def lsq_ref(x, step, qmin, qmax):
+    """LSQ fake-quant with a (1,)-shaped scalar step and clip bounds."""
+    s = step.reshape(())
+    r = jnp.clip(jnp.round(x / s), qmin.reshape(()), qmax.reshape(()))
+    return s * r
+
+
+def lsq_grads_ref(x, step, qmin, qmax, gout):
+    """VJP wrt (x, step) per Eq. 18. Returns (gx, gstep) with gstep (1,)."""
+    s = step.reshape(())
+    qn, qp = qmin.reshape(()), qmax.reshape(())
+    xs = x / s
+    below = xs <= qn
+    above = xs >= qp
+    inside = jnp.logical_not(jnp.logical_or(below, above))
+    gx = gout * inside.astype(x.dtype)
+    ds = jnp.where(below, qn, jnp.where(above, qp, jnp.round(xs) - xs))
+    gstep = jnp.sum(gout * ds).reshape((1,))
+    return gx, gstep
+
+
+def fim_loss_ref(z, zq, fim):
+    """FIM-weighted squared error, averaged over the leading batch dim."""
+    b = z.shape[0]
+    return jnp.sum(fim * (z - zq) ** 2) / b
+
+
+def fim_loss_grad_zq_ref(z, zq, fim, gout):
+    """VJP wrt zq: -2/B * fim * (z - zq) * gout."""
+    b = z.shape[0]
+    return -2.0 / b * fim * (z - zq) * gout
+
+
+def round_ste_ref(w, step, n, p):
+    """Plain nearest-rounding fake quant (baselines: OMSE, bias correction)."""
+    r = jnp.clip(jnp.round(w / step), n.reshape(()), p.reshape(()))
+    return step * r

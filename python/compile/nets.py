@@ -1,0 +1,568 @@
+"""Functional CNN model zoo + BRECQ reconstruction-unit partitioner.
+
+Models are CIFAR-scale stand-ins for the paper's ImageNet nets, keeping the
+block taxonomy BRECQ's analysis keys on:
+
+  resnet_s       — ResNet-style basic blocks (normal conv, residual)
+  mobilenetv2_s  — inverted residual blocks (depthwise separable, linear
+                   bottleneck → signed activation sites)
+  regnet_s       — RegNetX-style X-blocks (group conv)
+  mnasnet_s      — NAS-searched-style MB blocks (mixed kernel size / expand)
+
+A model is: stem (layer unit) + body blocks + head (layer units), exactly the
+decomposition of Fig. 1a. `Model.units(gran)` partitions the body at one of
+the paper's four granularities (layer / block / stage / net); stem and head
+always use naive layer reconstruction (§B.4.4).
+
+Everything is pure-functional: parameters are flat dicts keyed by layer name
+("s1.b0.conv1.w", ...). The same block-apply code serves FP training (BN,
+batch stats via `TrainCtx`), deployment/eval and the reconstruction
+objective (`Ctx` with pluggable weight/activation fake-quant hooks).
+
+Stream semantics for unit-by-unit advance (used by the Rust coordinator and
+mirrored here for FIM/AOT): the calibration activation stream is a pair
+(main, skip). For each unit in order:
+    if unit.save_skip: skip := main            # captured at unit input
+    main := unit.fn(ctx, main, skip if unit.uses_skip else None)
+    if unit.uses_skip: skip := None            # consumed
+This makes every unit a single-output subgraph even when residual adds are
+split at layer granularity.
+"""
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+EPS_BN = 1e-5
+
+
+# --------------------------------------------------------------------------
+# Layers
+# --------------------------------------------------------------------------
+
+@dataclass
+class Layer:
+    """One weighted op in deploy form (BN already folded into w, b)."""
+    name: str
+    kind: str                  # 'conv' | 'fc'
+    cin: int
+    cout: int
+    k: int = 1
+    stride: int = 1
+    groups: int = 1
+    relu: bool = True          # ReLU applied inside the layer
+    site_signed: bool = False  # can this layer's *input* be negative?
+
+    def wshape(self):
+        if self.kind == 'fc':
+            return (self.cout, self.cin)
+        return (self.cout, self.cin // self.groups, self.k, self.k)
+
+    def nparams(self):
+        s = self.wshape()
+        n = 1
+        for d in s:
+            n *= d
+        return n + self.cout
+
+    def macs(self, hw_in: Tuple[int, int]):
+        """MACs for one sample at the given input spatial size."""
+        if self.kind == 'fc':
+            return self.cin * self.cout
+        h = hw_in[0] // self.stride
+        w = hw_in[1] // self.stride
+        return h * w * self.cout * (self.cin // self.groups) * self.k * self.k
+
+
+def conv2d(x, w, stride, groups):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), 'SAME',
+        feature_group_count=groups,
+        dimension_numbers=('NCHW', 'OIHW', 'NCHW'))
+
+
+class Ctx:
+    """Deploy-mode execution context with fake-quant hooks.
+
+    qw(name, w) -> w'   weight hook (AdaRound soft-quant during recon;
+                         identity for FP / pre-quantized weights)
+    qa(name, x) -> x'   activation hook at the layer's input site
+    """
+
+    def __init__(self, params, qw=None, qa=None):
+        self.params = params
+        self.qw = qw or (lambda n, w: w)
+        self.qa = qa or (lambda n, x: x)
+
+    def layer(self, l: Layer, x):
+        w = self.qw(l.name, self.params[l.name + '.w'])
+        b = self.params[l.name + '.b']
+        x = self.qa(l.name, x)
+        if l.kind == 'fc':
+            z = x @ w.T + b
+        else:
+            z = conv2d(x, w, l.stride, l.groups) + b.reshape(1, -1, 1, 1)
+        return jax.nn.relu(z) if l.relu else z
+
+
+class TrainCtx:
+    """Training-mode context: conv (no bias) -> BatchNorm -> ReLU.
+
+    Collects the batch statistics of every BN into `self.stats` so the
+    training loop can maintain running estimates (and `train.py` can do the
+    exact post-training stat recalibration pass before folding).
+    """
+
+    def __init__(self, params, running=None, use_batch_stats=True):
+        self.params = params
+        self.running = running or {}
+        self.use_batch_stats = use_batch_stats
+        self.stats = {}
+
+    def layer(self, l: Layer, x):
+        w = self.params[l.name + '.w']
+        if l.kind == 'fc':
+            z = x @ w.T + self.params[l.name + '.b']
+            return jax.nn.relu(z) if l.relu else z
+        z = conv2d(x, w, l.stride, l.groups)
+        if self.use_batch_stats:
+            mu = jnp.mean(z, axis=(0, 2, 3))
+            var = jnp.var(z, axis=(0, 2, 3))
+        else:
+            mu = self.running[l.name + '.mu']
+            var = self.running[l.name + '.var']
+        self.stats[l.name] = (mu, var)
+        zn = (z - mu.reshape(1, -1, 1, 1)) / jnp.sqrt(
+            var.reshape(1, -1, 1, 1) + EPS_BN)
+        z = (self.params[l.name + '.gamma'].reshape(1, -1, 1, 1) * zn
+             + self.params[l.name + '.beta'].reshape(1, -1, 1, 1))
+        return jax.nn.relu(z) if l.relu else z
+
+
+# --------------------------------------------------------------------------
+# Units
+# --------------------------------------------------------------------------
+
+@dataclass
+class Unit:
+    """Single-output reconstruction subgraph (see module docstring)."""
+    name: str
+    layers: List[Layer]                       # weights owned / reconstructed
+    fn: Callable                              # fn(ctx, x, skip=None) -> z
+    uses_skip: bool = False
+    save_skip: bool = False
+    topo: str = ''   # structural tag: units with equal (topo, shapes, layer
+                     # configs) lower to identical HLO -> AOT dedup key
+
+
+# --------------------------------------------------------------------------
+# Blocks
+# --------------------------------------------------------------------------
+
+class Block:
+    """Interface: .layers (list), .apply(ctx, x), .layer_units(),
+    .block_unit(), .out_signed, .stride"""
+
+    def block_unit(self) -> Unit:
+        return Unit(self.name, list(self.layers),
+                    lambda ctx, x, skip=None: self.apply(ctx, x),
+                    topo=self.topo())
+
+    def topo(self) -> str:
+        raise NotImplementedError
+
+    def layer_units(self) -> List[Unit]:
+        raise NotImplementedError
+
+
+class BasicBlock(Block):
+    """ResNet basic block: relu(conv2(relu(conv1(x))) + down(x))."""
+
+    def __init__(self, name, cin, cout, stride, in_signed=False):
+        self.name, self.stride = name, stride
+        self.conv1 = Layer(f'{name}.conv1', 'conv', cin, cout, 3, stride,
+                           relu=True, site_signed=in_signed)
+        self.conv2 = Layer(f'{name}.conv2', 'conv', cout, cout, 3, 1,
+                           relu=False, site_signed=False)
+        self.down = None
+        if stride != 1 or cin != cout:
+            self.down = Layer(f'{name}.down', 'conv', cin, cout, 1, stride,
+                              relu=False, site_signed=in_signed)
+        self.layers = [l for l in (self.conv1, self.conv2, self.down) if l]
+        self.out_signed = False
+
+    def topo(self):
+        return f'basic(down={self.down is not None})'
+
+    def apply(self, ctx, x):
+        h = ctx.layer(self.conv2, ctx.layer(self.conv1, x))
+        sc = ctx.layer(self.down, x) if self.down else x
+        return jax.nn.relu(h + sc)
+
+    def layer_units(self):
+        u1 = Unit(self.conv1.name, [self.conv1],
+                  lambda ctx, x, skip=None: ctx.layer(self.conv1, x),
+                  save_skip=True, topo='conv')
+
+        def f2(ctx, x, skip=None):
+            h = ctx.layer(self.conv2, x)
+            sc = ctx.layer(self.down, skip) if self.down else skip
+            return jax.nn.relu(h + sc)
+        owned = [self.conv2] + ([self.down] if self.down else [])
+        u2 = Unit(self.conv2.name, owned, f2, uses_skip=True,
+                  topo=f'basic_l2(down={self.down is not None})')
+        return [u1, u2]
+
+
+class InvertedResidual(Block):
+    """MobileNetV2 block: project(dw(expand(x))) [+ x]. Linear bottleneck —
+    the block output is signed."""
+
+    def __init__(self, name, cin, cout, stride, t=4, k=3, in_signed=True):
+        self.name, self.stride = name, stride
+        mid = cin * t
+        self.expand = Layer(f'{name}.expand', 'conv', cin, mid, 1, 1,
+                            relu=True, site_signed=in_signed)
+        self.dw = Layer(f'{name}.dw', 'conv', mid, mid, k, stride,
+                        groups=mid, relu=True, site_signed=False)
+        self.project = Layer(f'{name}.project', 'conv', mid, cout, 1, 1,
+                             relu=False, site_signed=False)
+        self.residual = (stride == 1 and cin == cout)
+        self.layers = [self.expand, self.dw, self.project]
+        self.out_signed = True
+
+    def topo(self):
+        return f'ir(res={self.residual})'
+
+    def apply(self, ctx, x):
+        h = ctx.layer(self.project,
+                      ctx.layer(self.dw, ctx.layer(self.expand, x)))
+        return h + x if self.residual else h
+
+    def layer_units(self):
+        u1 = Unit(self.expand.name, [self.expand],
+                  lambda ctx, x, skip=None: ctx.layer(self.expand, x),
+                  save_skip=self.residual, topo='conv')
+        u2 = Unit(self.dw.name, [self.dw],
+                  lambda ctx, x, skip=None: ctx.layer(self.dw, x),
+                  topo='conv')
+        if self.residual:
+            u3 = Unit(self.project.name, [self.project],
+                      lambda ctx, x, skip=None:
+                          ctx.layer(self.project, x) + skip,
+                      uses_skip=True, topo='ir_l3(res)')
+        else:
+            u3 = Unit(self.project.name, [self.project],
+                      lambda ctx, x, skip=None: ctx.layer(self.project, x),
+                      topo='conv')
+        return [u1, u2, u3]
+
+
+class XBlock(Block):
+    """RegNetX block: relu(conv3(conv2g(conv1(x))) + down(x)), group conv."""
+
+    def __init__(self, name, cin, cout, stride, group_w=8, in_signed=False):
+        self.name, self.stride = name, stride
+        g = max(1, cout // group_w)
+        self.conv1 = Layer(f'{name}.conv1', 'conv', cin, cout, 1, 1,
+                           relu=True, site_signed=in_signed)
+        self.conv2 = Layer(f'{name}.conv2', 'conv', cout, cout, 3, stride,
+                           groups=g, relu=True, site_signed=False)
+        self.conv3 = Layer(f'{name}.conv3', 'conv', cout, cout, 1, 1,
+                           relu=False, site_signed=False)
+        self.down = None
+        if stride != 1 or cin != cout:
+            self.down = Layer(f'{name}.down', 'conv', cin, cout, 1, stride,
+                              relu=False, site_signed=in_signed)
+        self.layers = [l for l in
+                       (self.conv1, self.conv2, self.conv3, self.down) if l]
+        self.out_signed = False
+
+    def topo(self):
+        return f'xblock(down={self.down is not None})'
+
+    def apply(self, ctx, x):
+        h = ctx.layer(self.conv3,
+                      ctx.layer(self.conv2, ctx.layer(self.conv1, x)))
+        sc = ctx.layer(self.down, x) if self.down else x
+        return jax.nn.relu(h + sc)
+
+    def layer_units(self):
+        u1 = Unit(self.conv1.name, [self.conv1],
+                  lambda ctx, x, skip=None: ctx.layer(self.conv1, x),
+                  save_skip=True, topo='conv')
+        u2 = Unit(self.conv2.name, [self.conv2],
+                  lambda ctx, x, skip=None: ctx.layer(self.conv2, x),
+                  topo='conv')
+
+        def f3(ctx, x, skip=None):
+            h = ctx.layer(self.conv3, x)
+            sc = ctx.layer(self.down, skip) if self.down else skip
+            return jax.nn.relu(h + sc)
+        owned = [self.conv3] + ([self.down] if self.down else [])
+        u3 = Unit(self.conv3.name, owned, f3, uses_skip=True,
+                  topo=f'xblock_l3(down={self.down is not None})')
+        return [u1, u2, u3]
+
+
+# --------------------------------------------------------------------------
+# Model
+# --------------------------------------------------------------------------
+
+GRANULARITIES = ('layer', 'block', 'stage', 'net')
+
+
+@dataclass(eq=False)  # identity hash: Model instances are jit static args
+class Model:
+    name: str
+    stem: Layer
+    blocks: List[Block]
+    stages: List[Tuple[int, int]]          # [start, end) block indices
+    head_convs: List[Layer]                # e.g. mbv2 final 1x1 conv
+    fc: Layer
+    num_classes: int = 10
+    input_hw: int = 32
+
+    @property
+    def layers(self) -> List[Layer]:
+        out = [self.stem]
+        for b in self.blocks:
+            out.extend(b.layers)
+        out.extend(self.head_convs)
+        out.append(self.fc)
+        return out
+
+    # -- whole-net apply (any ctx) ----------------------------------------
+    def apply(self, ctx, x):
+        x = ctx.layer(self.stem, x)
+        for b in self.blocks:
+            x = b.apply(ctx, x)
+        for hc in self.head_convs:
+            x = ctx.layer(hc, x)
+        x = jnp.mean(x, axis=(2, 3))
+        return ctx.layer(self.fc, x)
+
+    # -- unit partition -----------------------------------------------------
+    def units(self, gran: str) -> List[Unit]:
+        assert gran in GRANULARITIES, gran
+        units = [Unit('stem', [self.stem],
+                      lambda ctx, x, skip=None: ctx.layer(self.stem, x),
+                      topo='conv')]
+        if gran == 'layer':
+            for b in self.blocks:
+                units.extend(b.layer_units())
+        elif gran == 'block':
+            for b in self.blocks:
+                units.append(b.block_unit())
+        elif gran == 'stage':
+            for si, (s, e) in enumerate(self.stages):
+                blks = self.blocks[s:e]
+                layers = [l for b in blks for l in b.layers]
+
+                def mk(blks):
+                    def fn(ctx, x, skip=None):
+                        for b in blks:
+                            x = b.apply(ctx, x)
+                        return x
+                    return fn
+                units.append(Unit(f'stage{si + 1}', layers, mk(blks),
+                                  topo='seq(' + ','.join(
+                                      b.topo() for b in blks) + ')'))
+        else:  # net
+            layers = [l for b in self.blocks for l in b.layers]
+
+            def fn(ctx, x, skip=None):
+                for b in self.blocks:
+                    x = b.apply(ctx, x)
+                return x
+            units.append(Unit('net', layers, fn,
+                              topo='seq(' + ','.join(
+                                  b.topo() for b in self.blocks) + ')'))
+        for hc in self.head_convs:
+            def mkh(hc):
+                return lambda ctx, x, skip=None: ctx.layer(hc, x)
+            units.append(Unit(hc.name, [hc], mkh(hc), topo='conv'))
+
+        def fhead(ctx, x, skip=None):
+            return ctx.layer(self.fc, jnp.mean(x, axis=(2, 3)))
+        units.append(Unit('head', [self.fc], fhead, topo='gap_fc'))
+        return units
+
+    # -- unit stream runner (shared semantics with the Rust coordinator) --
+    def run_units(self, ctx, x, gran: str, tap=None):
+        """Run the whole net unit-by-unit; `tap(i, unit, z)` may transform
+        each unit output (used for FIM eps-injection). Returns logits."""
+        main, skip = x, None
+        for i, u in enumerate(self.units(gran)):
+            if u.save_skip:
+                skip = main
+            z = u.fn(ctx, main, skip) if u.uses_skip else u.fn(ctx, main)
+            if tap is not None:
+                z = tap(i, u, z)
+            main = z
+            if u.uses_skip:
+                skip = None
+        return main
+
+    # -- hardware metadata (consumed by the Rust hwsim via the manifest) --
+    def layer_geometry(self):
+        """Per-layer (name, cin, cout, k, stride, groups, h_in, w_in, macs,
+        nparams) walking the real spatial sizes."""
+        out = []
+        hw = self.input_hw
+        # stem
+        out.append(self._geo(self.stem, hw))
+        hw //= self.stem.stride
+        for b in self.blocks:
+            for l in b.layers:
+                out.append(self._geo(l, hw))
+            hw //= b.stride
+        for hc in self.head_convs:
+            out.append(self._geo(hc, hw))
+        fcg = self._geo(self.fc, 1)
+        out.append(fcg)
+        return out
+
+    def _geo(self, l: Layer, hw: int):
+        return dict(name=l.name, kind=l.kind, cin=l.cin, cout=l.cout,
+                    k=l.k, stride=l.stride, groups=l.groups, relu=l.relu,
+                    site_signed=l.site_signed, h_in=hw, w_in=hw,
+                    macs=l.macs((hw, hw)), nparams=l.nparams())
+
+
+# --------------------------------------------------------------------------
+# Model zoo
+# --------------------------------------------------------------------------
+
+def _stage_ranges(blocks_per_stage):
+    out, s = [], 0
+    for n in blocks_per_stage:
+        out.append((s, s + n))
+        s += n
+    return out
+
+
+def resnet_s() -> Model:
+    stem = Layer('stem', 'conv', 3, 16, 3, 1, relu=True, site_signed=True)
+    widths, strides = [16, 32, 64], [1, 2, 2]
+    blocks, cin = [], 16
+    for si, (w, st) in enumerate(zip(widths, strides)):
+        for bi in range(2):
+            blocks.append(BasicBlock(f's{si + 1}.b{bi}', cin, w,
+                                     st if bi == 0 else 1))
+            cin = w
+    fc = Layer('head.fc', 'fc', 64, 10, relu=False, site_signed=False)
+    return Model('resnet_s', stem, blocks, _stage_ranges([2, 2, 2]), [], fc)
+
+
+def mobilenetv2_s() -> Model:
+    stem = Layer('stem', 'conv', 3, 16, 3, 1, relu=True, site_signed=True)
+    cfg = [  # (cout, stride, t)
+        (24, 1, 4), (24, 1, 4),
+        (32, 2, 4), (32, 1, 4),
+        (64, 2, 4), (64, 1, 4),
+    ]
+    blocks, cin, sig = [], 16, False   # stem output is post-ReLU
+    for i, (cout, st, t) in enumerate(cfg):
+        blocks.append(InvertedResidual(f's{i // 2 + 1}.b{i % 2}', cin, cout,
+                                       st, t=t, in_signed=sig))
+        cin, sig = cout, True          # linear bottleneck output: signed
+    head = Layer('head.conv', 'conv', 64, 128, 1, 1, relu=True,
+                 site_signed=True)
+    fc = Layer('head.fc', 'fc', 128, 10, relu=False, site_signed=False)
+    return Model('mobilenetv2_s', stem, blocks, _stage_ranges([2, 2, 2]),
+                 [head], fc)
+
+
+def regnet_s() -> Model:
+    stem = Layer('stem', 'conv', 3, 24, 3, 1, relu=True, site_signed=True)
+    widths, strides = [32, 64, 96], [1, 2, 2]
+    blocks, cin = [], 24
+    for si, (w, st) in enumerate(zip(widths, strides)):
+        for bi in range(2):
+            blocks.append(XBlock(f's{si + 1}.b{bi}', cin, w,
+                                 st if bi == 0 else 1))
+            cin = w
+    fc = Layer('head.fc', 'fc', 96, 10, relu=False, site_signed=False)
+    return Model('regnet_s', stem, blocks, _stage_ranges([2, 2, 2]), [], fc)
+
+
+def mnasnet_s() -> Model:
+    """NAS-searched-style: MB blocks with per-stage kernel size / expansion
+    (the MnasNet signature)."""
+    stem = Layer('stem', 'conv', 3, 16, 3, 1, relu=True, site_signed=True)
+    cfg = [  # (cout, stride, t, k)
+        (24, 1, 3, 3), (24, 1, 3, 3),
+        (48, 2, 3, 5), (48, 1, 3, 5),
+        (80, 2, 6, 3), (80, 1, 6, 3),
+    ]
+    blocks, cin, sig = [], 16, False
+    for i, (cout, st, t, k) in enumerate(cfg):
+        blocks.append(InvertedResidual(f's{i // 2 + 1}.b{i % 2}', cin, cout,
+                                       st, t=t, k=k, in_signed=sig))
+        cin, sig = cout, True
+    head = Layer('head.conv', 'conv', 80, 128, 1, 1, relu=True,
+                 site_signed=True)
+    fc = Layer('head.fc', 'fc', 128, 10, relu=False, site_signed=False)
+    return Model('mnasnet_s', stem, blocks, _stage_ranges([2, 2, 2]),
+                 [head], fc)
+
+
+ZOO = {
+    'resnet_s': resnet_s,
+    'mobilenetv2_s': mobilenetv2_s,
+    'regnet_s': regnet_s,
+    'mnasnet_s': mnasnet_s,
+}
+
+
+def get_model(name: str) -> Model:
+    return ZOO[name]()
+
+
+# --------------------------------------------------------------------------
+# Parameter initialization (training mode) and BN folding
+# --------------------------------------------------------------------------
+
+def init_train_params(model: Model, seed: int = 0):
+    """He-init conv weights + BN affine params (train mode), plus fc."""
+    key = jax.random.PRNGKey(seed)
+    params, running = {}, {}
+    for l in model.layers:
+        key, k1 = jax.random.split(key)
+        fan_in = (l.cin // l.groups) * l.k * l.k if l.kind == 'conv' else l.cin
+        w = jax.random.normal(k1, l.wshape()) * jnp.sqrt(2.0 / fan_in)
+        params[l.name + '.w'] = w.astype(jnp.float32)
+        if l.kind == 'conv':
+            params[l.name + '.gamma'] = jnp.ones((l.cout,), jnp.float32)
+            params[l.name + '.beta'] = jnp.zeros((l.cout,), jnp.float32)
+            running[l.name + '.mu'] = jnp.zeros((l.cout,), jnp.float32)
+            running[l.name + '.var'] = jnp.ones((l.cout,), jnp.float32)
+        else:
+            params[l.name + '.b'] = jnp.zeros((l.cout,), jnp.float32)
+    return params, running
+
+
+def fold_bn(model: Model, params, running):
+    """Fold BN into conv weights: deploy params {name.w, name.b}."""
+    out = {}
+    for l in model.layers:
+        w = params[l.name + '.w']
+        if l.kind == 'conv':
+            gamma = params[l.name + '.gamma']
+            beta = params[l.name + '.beta']
+            mu = running[l.name + '.mu']
+            var = running[l.name + '.var']
+            scale = gamma / jnp.sqrt(var + EPS_BN)
+            out[l.name + '.w'] = w * scale.reshape(-1, 1, 1, 1)
+            out[l.name + '.b'] = beta - mu * scale
+        else:
+            out[l.name + '.w'] = w
+            out[l.name + '.b'] = params[l.name + '.b']
+    return out
+
+
+def cross_entropy(logits, onehot):
+    return -jnp.mean(jnp.sum(onehot * jax.nn.log_softmax(logits), axis=-1))

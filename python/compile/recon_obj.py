@@ -1,0 +1,423 @@
+"""Builders for every AOT executable (L2 compute graphs).
+
+Each builder returns `(fn, in_specs, out_specs)` where specs are ordered
+`(role_name, shape)` lists — the positional ABI recorded in the manifest and
+consumed by the Rust runtime. Roles are index-based (`w0`, `v0`, `astep1`,
+...) rather than layer-name based so that structurally identical units share
+one executable (AOT dedup).
+
+Executables (all f32, shapes static, bitwidths are *runtime* scalars):
+
+  unit_fwd    — run one reconstruction unit, FP or fake-quant activations.
+                Used by the dual-stream collector and final stitched eval.
+  unit_recon  — one optimization step of Eq. 10 + rounding regularizer:
+                forward + gradients wrt AdaRound v and activation steps.
+                The Rust coordinator owns the Adam state and β schedule.
+  eval_fwd    — whole-model logits (eval batch) with optional act quant.
+  fim         — ∂L/∂z at every unit output of a granularity (eps-injection
+                trick: grad wrt zero perturbations added at unit outputs).
+  qat_step    — LSQ QAT loss + grads wrt (w, b, w_step, a_step) (Table 4).
+  distill     — ZeroQ BN-statistics matching loss + grad wrt the input
+                images (distilled-data generation, Fig. 3 / Table 4).
+
+Passing bit bounds (wn/wp/aqmin/aqmax) and flags as (1,)-shaped runtime
+inputs is what lets a single executable serve 2/4/8-bit, mixed precision and
+the FP stream — no per-bitwidth recompilation.
+"""
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import nets
+from .kernels import fake_quant, fim_loss, lsq, ref
+
+
+class Sig:
+    """Ordered (name, shape) argument list."""
+
+    def __init__(self):
+        self.items: List[Tuple[str, tuple]] = []
+
+    def add(self, name, shape):
+        self.items.append((name, tuple(int(d) for d in shape)))
+
+    def index(self):
+        return {n: i for i, (n, _) in enumerate(self.items)}
+
+
+def unit_io_shapes(model: nets.Model, gran: str, batch: int):
+    """Walk the unit stream with abstract values; returns per-unit
+    (in_shape, skip_shape|None, out_shape)."""
+    units = model.units(gran)
+    outs = []
+
+    def tap(i, u, z):
+        outs.append(tuple(z.shape))
+        return z
+
+    params_spec = {}
+    for l in model.layers:
+        params_spec[l.name + '.w'] = jax.ShapeDtypeStruct(l.wshape(),
+                                                          jnp.float32)
+        params_spec[l.name + '.b'] = jax.ShapeDtypeStruct((l.cout,),
+                                                          jnp.float32)
+    x_spec = jax.ShapeDtypeStruct((batch, 3, model.input_hw, model.input_hw),
+                                  jnp.float32)
+    jax.eval_shape(lambda x, p: model.run_units(nets.Ctx(p), x, gran, tap),
+                   x_spec, params_spec)
+
+    shapes, main, pending = [], tuple(x_spec.shape), None
+    for u, out in zip(units, outs):
+        if u.save_skip:
+            pending = main
+        skip = pending if u.uses_skip else None
+        shapes.append((main, skip, out))
+        main = out
+        if u.uses_skip:
+            pending = None
+    return shapes
+
+
+def _mk_qa(d, idx, name2i, flag_name='aq_flag'):
+    """Activation hook: LSQ fake-quant gated by the aq_flag input."""
+    def qa(name, x):
+        i = name2i[name]
+        xq = lsq.lsq_quant(x, d[idx[f'astep{i}']], d[idx[f'aqmin{i}']],
+                           d[idx[f'aqmax{i}']])
+        return jnp.where(d[idx[flag_name]][0] > 0, xq, x)
+    return qa
+
+
+# --------------------------------------------------------------------------
+# unit_fwd
+# --------------------------------------------------------------------------
+
+def build_unit_fwd(unit: nets.Unit, in_shape, skip_shape, out_shape):
+    sig = Sig()
+    sig.add('x', in_shape)
+    if unit.uses_skip:
+        sig.add('skip', skip_shape)
+    for i, l in enumerate(unit.layers):
+        sig.add(f'w{i}', l.wshape())
+        sig.add(f'b{i}', (l.cout,))
+    for i, _ in enumerate(unit.layers):
+        sig.add(f'astep{i}', (1,))
+        sig.add(f'aqmin{i}', (1,))
+        sig.add(f'aqmax{i}', (1,))
+    sig.add('aq_flag', (1,))
+    idx = sig.index()
+    name2i = {l.name: i for i, l in enumerate(unit.layers)}
+
+    def fn(*d):
+        params = {}
+        for i, l in enumerate(unit.layers):
+            params[l.name + '.w'] = d[idx[f'w{i}']]
+            params[l.name + '.b'] = d[idx[f'b{i}']]
+        ctx = nets.Ctx(params, qa=_mk_qa(d, idx, name2i))
+        if unit.uses_skip:
+            z = unit.fn(ctx, d[idx['x']], d[idx['skip']])
+        else:
+            z = unit.fn(ctx, d[idx['x']])
+        return (z,)
+
+    return fn, sig.items, [('z', tuple(out_shape))]
+
+
+# --------------------------------------------------------------------------
+# unit_recon
+# --------------------------------------------------------------------------
+
+def build_unit_recon(unit: nets.Unit, in_shape, skip_shape, out_shape):
+    sig = Sig()
+    sig.add('x', in_shape)
+    if unit.uses_skip:
+        sig.add('skip', skip_shape)
+    sig.add('z_fp', out_shape)
+    sig.add('fim', out_shape)
+    for i, l in enumerate(unit.layers):
+        sig.add(f'w{i}', l.wshape())
+        sig.add(f'b{i}', (l.cout,))
+        sig.add(f'wstep{i}', (l.cout,))
+        sig.add(f'v{i}', l.wshape())
+        sig.add(f'wn{i}', (1,))
+        sig.add(f'wp{i}', (1,))
+    for i, _ in enumerate(unit.layers):
+        sig.add(f'astep{i}', (1,))
+        sig.add(f'aqmin{i}', (1,))
+        sig.add(f'aqmax{i}', (1,))
+    sig.add('beta', (1,))
+    sig.add('lam', (1,))
+    sig.add('aq_flag', (1,))
+    idx = sig.index()
+    name2i = {l.name: i for i, l in enumerate(unit.layers)}
+    nl = len(unit.layers)
+
+    def fn(*d):
+        params = {}
+        for i, l in enumerate(unit.layers):
+            params[l.name + '.w'] = d[idx[f'w{i}']]
+            params[l.name + '.b'] = d[idx[f'b{i}']]
+
+        def loss_fn(vs, asteps):
+            def qw(name, w):
+                i = name2i[name]
+                return fake_quant.adaround(w, d[idx[f'wstep{i}']], vs[i],
+                                           d[idx[f'wn{i}']], d[idx[f'wp{i}']])
+
+            def qa(name, x):
+                i = name2i[name]
+                xq = lsq.lsq_quant(x, asteps[i], d[idx[f'aqmin{i}']],
+                                   d[idx[f'aqmax{i}']])
+                return jnp.where(d[idx['aq_flag']][0] > 0, xq, x)
+
+            ctx = nets.Ctx(params, qw=qw, qa=qa)
+            if unit.uses_skip:
+                zq = unit.fn(ctx, d[idx['x']], d[idx['skip']])
+            else:
+                zq = unit.fn(ctx, d[idx['x']])
+            rec = fim_loss.fim_loss(d[idx['z_fp']], zq, d[idx['fim']])
+            beta = d[idx['beta']][0]
+            rl = jnp.float32(0.0)
+            for v in vs:
+                h = ref.rect_sigmoid(v)
+                rl = rl + jnp.sum(1.0 - jnp.abs(2.0 * h - 1.0) ** beta)
+            return rec + d[idx['lam']][0] * rl, (rec, rl)
+
+        vs = tuple(d[idx[f'v{i}']] for i in range(nl))
+        asteps = tuple(d[idx[f'astep{i}']] for i in range(nl))
+        (loss, (rec, rl)), (gv, gs) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True)(vs, asteps)
+        return (loss.reshape(1), rec.reshape(1), rl.reshape(1), *gv, *gs)
+
+    outs = [('loss', (1,)), ('rec_loss', (1,)), ('round_loss', (1,))]
+    for i, l in enumerate(unit.layers):
+        outs.append((f'gv{i}', l.wshape()))
+    for i in range(nl):
+        outs.append((f'gastep{i}', (1,)))
+    return fn, sig.items, outs
+
+
+# --------------------------------------------------------------------------
+# eval_fwd
+# --------------------------------------------------------------------------
+
+def build_eval_fwd(model: nets.Model, batch: int):
+    layers = model.layers
+    sig = Sig()
+    sig.add('images', (batch, 3, model.input_hw, model.input_hw))
+    for i, l in enumerate(layers):
+        sig.add(f'w{i}', l.wshape())
+        sig.add(f'b{i}', (l.cout,))
+    for i, _ in enumerate(layers):
+        sig.add(f'astep{i}', (1,))
+        sig.add(f'aqmin{i}', (1,))
+        sig.add(f'aqmax{i}', (1,))
+    sig.add('aq_flag', (1,))
+    idx = sig.index()
+    name2i = {l.name: i for i, l in enumerate(layers)}
+
+    def fn(*d):
+        params = {}
+        for i, l in enumerate(layers):
+            params[l.name + '.w'] = d[idx[f'w{i}']]
+            params[l.name + '.b'] = d[idx[f'b{i}']]
+        ctx = nets.Ctx(params, qa=_mk_qa(d, idx, name2i))
+        return (model.apply(ctx, d[idx['images']]),)
+
+    return fn, sig.items, [('logits', (batch, model.num_classes))]
+
+
+# --------------------------------------------------------------------------
+# fim
+# --------------------------------------------------------------------------
+
+def build_fim(model: nets.Model, gran: str, batch: int):
+    layers = model.layers
+    shapes = unit_io_shapes(model, gran, batch)
+    units = model.units(gran)
+    sig = Sig()
+    sig.add('images', (batch, 3, model.input_hw, model.input_hw))
+    sig.add('onehot', (batch, model.num_classes))
+    for i, l in enumerate(layers):
+        sig.add(f'w{i}', l.wshape())
+        sig.add(f'b{i}', (l.cout,))
+    idx = sig.index()
+
+    def fn(*d):
+        params = {}
+        for i, l in enumerate(layers):
+            params[l.name + '.w'] = d[idx[f'w{i}']]
+            params[l.name + '.b'] = d[idx[f'b{i}']]
+        ctx = nets.Ctx(params)
+
+        def loss_of(eps):
+            def tap(i, u, z):
+                return z + eps[i]
+            logits = model.run_units(ctx, d[idx['images']], gran, tap)
+            return nets.cross_entropy(logits, d[idx['onehot']])
+
+        eps0 = tuple(jnp.zeros(s[2], jnp.float32) for s in shapes)
+        return jax.grad(loss_of)(eps0)
+
+    outs = [(f'g{j}', shapes[j][2]) for j in range(len(units))]
+    return fn, sig.items, outs
+
+
+# --------------------------------------------------------------------------
+# qat_step (LSQ QAT baseline, Table 4)
+# --------------------------------------------------------------------------
+
+def build_qat_step(model: nets.Model, batch: int):
+    layers = model.layers
+    sig = Sig()
+    sig.add('images', (batch, 3, model.input_hw, model.input_hw))
+    sig.add('onehot', (batch, model.num_classes))
+    for i, l in enumerate(layers):
+        sig.add(f'w{i}', l.wshape())
+        sig.add(f'b{i}', (l.cout,))
+    for i, _ in enumerate(layers):
+        sig.add(f'wstep{i}', (1,))
+        sig.add(f'astep{i}', (1,))
+        sig.add(f'aqmin{i}', (1,))
+        sig.add(f'aqmax{i}', (1,))
+    sig.add('wqmin', (1,))
+    sig.add('wqmax', (1,))
+    idx = sig.index()
+    name2i = {l.name: i for i, l in enumerate(layers)}
+
+    def fn(*d):
+        def loss_fn(ws, bs, wsteps, asteps):
+            params = {}
+            for i, l in enumerate(layers):
+                params[l.name + '.w'] = ws[i]
+                params[l.name + '.b'] = bs[i]
+
+            def qw(name, w):
+                i = name2i[name]
+                return lsq.lsq_quant(w, wsteps[i], d[idx['wqmin']],
+                                     d[idx['wqmax']])
+
+            def qa(name, x):
+                i = name2i[name]
+                return lsq.lsq_quant(x, asteps[i], d[idx[f'aqmin{i}']],
+                                     d[idx[f'aqmax{i}']])
+
+            ctx = nets.Ctx(params, qw=qw, qa=qa)
+            logits = model.apply(ctx, d[idx['images']])
+            return nets.cross_entropy(logits, d[idx['onehot']])
+
+        ws = tuple(d[idx[f'w{i}']] for i in range(len(layers)))
+        bs = tuple(d[idx[f'b{i}']] for i in range(len(layers)))
+        wsteps = tuple(d[idx[f'wstep{i}']] for i in range(len(layers)))
+        asteps = tuple(d[idx[f'astep{i}']] for i in range(len(layers)))
+        loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1, 2, 3))(
+            ws, bs, wsteps, asteps)
+        gw, gb, gws, gas = grads
+        return (loss.reshape(1), *gw, *gb, *gws, *gas)
+
+    outs = [('loss', (1,))]
+    for i, l in enumerate(layers):
+        outs.append((f'gw{i}', l.wshape()))
+    for i, l in enumerate(layers):
+        outs.append((f'gb{i}', (l.cout,)))
+    for i in range(len(layers)):
+        outs.append((f'gwstep{i}', (1,)))
+    for i in range(len(layers)):
+        outs.append((f'gastep{i}', (1,)))
+    return fn, sig.items, outs
+
+
+# --------------------------------------------------------------------------
+# distill (ZeroQ data distillation)
+# --------------------------------------------------------------------------
+
+def build_distill(model: nets.Model, batch: int):
+    """BN-statistics matching: loss(x) + grad wrt x. Raw (unfolded) params."""
+    convs = [l for l in model.layers if l.kind == 'conv']
+    fc = [l for l in model.layers if l.kind == 'fc']
+    sig = Sig()
+    sig.add('x', (batch, 3, model.input_hw, model.input_hw))
+    for i, l in enumerate(convs):
+        sig.add(f'w{i}', l.wshape())
+        sig.add(f'gamma{i}', (l.cout,))
+        sig.add(f'beta{i}', (l.cout,))
+        sig.add(f'mu{i}', (l.cout,))       # target running stats
+        sig.add(f'var{i}', (l.cout,))
+    for j, l in enumerate(fc):
+        sig.add(f'fcw{j}', l.wshape())
+        sig.add(f'fcb{j}', (l.cout,))
+    idx = sig.index()
+
+    def fn(*d):
+        def loss_fn(x):
+            params = {}
+            for i, l in enumerate(convs):
+                params[l.name + '.w'] = d[idx[f'w{i}']]
+                params[l.name + '.gamma'] = d[idx[f'gamma{i}']]
+                params[l.name + '.beta'] = d[idx[f'beta{i}']]
+            for j, l in enumerate(fc):
+                params[l.name + '.w'] = d[idx[f'fcw{j}']]
+                params[l.name + '.b'] = d[idx[f'fcb{j}']]
+            ctx = nets.TrainCtx(params, use_batch_stats=True)
+            logits = model.apply(ctx, x)
+            # zero-weighted logits term: keeps the fc params in the
+            # lowered signature (jax.jit would DCE-prune them otherwise)
+            loss = jnp.float32(0.0) + 0.0 * jnp.sum(logits)
+            for i, l in enumerate(convs):
+                mu_b, var_b = ctx.stats[l.name]
+                loss = loss + jnp.mean((mu_b - d[idx[f'mu{i}']]) ** 2)
+                loss = loss + jnp.mean((var_b - d[idx[f'var{i}']]) ** 2)
+            # input prior: standardized images have zero mean / unit variance
+            loss = loss + jnp.mean(jnp.mean(x, axis=(0, 2, 3)) ** 2)
+            loss = loss + jnp.mean((jnp.var(x, axis=(0, 2, 3)) - 1.0) ** 2)
+            return loss
+
+        loss, gx = jax.value_and_grad(loss_fn)(d[idx['x']])
+        return (loss.reshape(1), gx)
+
+    outs = [('loss', (1,)),
+            ('gx', (batch, 3, model.input_hw, model.input_hw))]
+    return fn, sig.items, outs
+
+
+# --------------------------------------------------------------------------
+# act_obs (activation-site statistics for LSQ step init)
+# --------------------------------------------------------------------------
+
+def build_act_obs(model: nets.Model, batch: int):
+    """Per-layer [max|x|, mean|x|] of every layer's input activation —
+    the Rust coordinator initializes LSQ steps as 2*E|x|/sqrt(qmax)."""
+    layers = model.layers
+    sig = Sig()
+    sig.add('images', (batch, 3, model.input_hw, model.input_hw))
+    for i, l in enumerate(layers):
+        sig.add(f'w{i}', l.wshape())
+        sig.add(f'b{i}', (l.cout,))
+    idx = sig.index()
+
+    def fn(*d):
+        params = {}
+        for i, l in enumerate(layers):
+            params[l.name + '.w'] = d[idx[f'w{i}']]
+            params[l.name + '.b'] = d[idx[f'b{i}']]
+        stats = {}
+
+        def qa(name, x):
+            stats[name] = jnp.stack(
+                [jnp.max(jnp.abs(x)), jnp.mean(jnp.abs(x))])
+            return x
+
+        ctx = nets.Ctx(params, qa=qa)
+        logits = model.apply(ctx, d[idx['images']])
+        # anchor: jax.jit DCE-prunes unused params at lowering time, which
+        # would desync the executable signature from the manifest — the
+        # final layer's w/b don't affect any site statistic, so thread a
+        # zero-weighted dependency on the logits through the last output.
+        out = [stats[l.name] for l in layers]
+        out[-1] = out[-1] + 0.0 * jnp.sum(logits)
+        return tuple(out)
+
+    outs = [(f'obs{i}', (2,)) for i in range(len(layers))]
+    return fn, sig.items, outs

@@ -1,0 +1,34 @@
+"""Flat tensor store: `<name>.bin` (little-endian f32) + `<name>.json` index.
+
+The ABI shared with the Rust side (`rust/src/store.rs`): the JSON maps
+tensor name -> {shape, offset, size} with offsets in f32 elements.
+"""
+
+import json
+
+import numpy as np
+
+
+def write_store(path_prefix: str, tensors: dict):
+    """tensors: name -> np.ndarray (written as f32)."""
+    index, offset = {}, 0
+    with open(path_prefix + '.bin', 'wb') as f:
+        for name in sorted(tensors):
+            a = np.asarray(tensors[name], dtype=np.float32)
+            f.write(a.tobytes())
+            index[name] = {'shape': list(a.shape), 'offset': offset,
+                           'size': int(a.size)}
+            offset += int(a.size)
+    with open(path_prefix + '.json', 'w') as f:
+        json.dump({'tensors': index}, f)
+
+
+def read_store(path_prefix: str) -> dict:
+    with open(path_prefix + '.json') as f:
+        index = json.load(f)['tensors']
+    buf = np.fromfile(path_prefix + '.bin', dtype='<f4')
+    out = {}
+    for name, meta in index.items():
+        a = buf[meta['offset']:meta['offset'] + meta['size']]
+        out[name] = a.reshape(meta['shape']).copy()
+    return out

@@ -1,0 +1,164 @@
+"""FP pre-training of the model zoo (build path only).
+
+Trains each model with Adam + BN on `synth10`, then:
+  1. runs an exact BN-statistics recalibration pass over the train set
+     (aggregated mean/var, not EMA — the PTQ literature assumes converged
+     BN stats before folding),
+  2. folds BN into conv weights (deploy params),
+  3. writes both deploy and raw(+BN-stat) tensors to the artifact store
+     (raw params feed the ZeroQ distilled-data executable).
+
+Invoked by aot.py when the weight store is missing; `make artifacts` is a
+no-op when everything is already on disk.
+"""
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dataset, nets, store
+
+
+def _onehot(y, n=10):
+    return jax.nn.one_hot(y, n, dtype=jnp.float32)
+
+
+def make_train_step(model):
+    def loss_fn(params, running, x, y1h):
+        ctx = nets.TrainCtx(params, running, use_batch_stats=True)
+        logits = model.apply(ctx, x)
+        loss = nets.cross_entropy(logits, y1h)
+        wd = sum(jnp.sum(params[l.name + '.w'] ** 2) for l in model.layers)
+        return loss + 5e-4 * wd, ctx.stats
+
+    @jax.jit
+    def step(params, running, opt_m, opt_v, t, x, y1h, lr):
+        (loss, stats), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, running, x, y1h)
+        new_p, new_m, new_v = {}, {}, {}
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        for k in params:
+            g = grads[k]
+            m = b1 * opt_m[k] + (1 - b1) * g
+            v = b2 * opt_v[k] + (1 - b2) * g * g
+            mh = m / (1 - b1 ** t)
+            vh = v / (1 - b2 ** t)
+            new_p[k] = params[k] - lr * mh / (jnp.sqrt(vh) + eps)
+            new_m[k], new_v[k] = m, v
+        new_run = dict(running)
+        for name, (mu, var) in stats.items():
+            new_run[name + '.mu'] = 0.9 * running[name + '.mu'] + 0.1 * mu
+            new_run[name + '.var'] = 0.9 * running[name + '.var'] + 0.1 * var
+        return new_p, new_run, new_m, new_v, loss
+
+    return step
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _eval_logits(model, params, running, x):
+    ctx = nets.TrainCtx(params, running, use_batch_stats=False)
+    return model.apply(ctx, x)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _batch_stats(model, params, x):
+    ctx = nets.TrainCtx(params, {}, use_batch_stats=True)
+    model.apply(ctx, x)
+    return ctx.stats
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _deploy_logits(model, dparams, x):
+    return model.apply(nets.Ctx(dparams), x)
+
+
+def evaluate(model, params, running, x, y, bs=500):
+    correct = 0
+    for i in range(0, x.shape[0], bs):
+        logits = _eval_logits(model, params, running, x[i:i + bs])
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == y[i:i + bs]))
+    return correct / x.shape[0]
+
+
+def evaluate_deploy(model, dparams, x, y, bs=500):
+    correct = 0
+    for i in range(0, x.shape[0], bs):
+        logits = _deploy_logits(model, dparams, x[i:i + bs])
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == y[i:i + bs]))
+    return correct / x.shape[0]
+
+
+def recalibrate_bn(model, params, xtr, bs=256, nbatches=24):
+    """Exact aggregated BN statistics over `nbatches` training batches."""
+    sums, sqs, count = {}, {}, 0
+    for i in range(nbatches):
+        x = xtr[i * bs:(i + 1) * bs]
+        if x.shape[0] < bs:
+            break
+        stats = _batch_stats(model, params, x)
+        for name, (mu, var) in stats.items():
+            # E[z], E[z^2] aggregation (var = E[z^2] - E[z]^2 at the end)
+            sums[name] = sums.get(name, 0) + mu
+            sqs[name] = sqs.get(name, 0) + (var + mu * mu)
+        count += 1
+    running = {}
+    for name in sums:
+        mu = sums[name] / count
+        running[name + '.mu'] = mu
+        running[name + '.var'] = sqs[name] / count - mu * mu
+    return running
+
+
+def train_model(model, data, mean, std, epochs=8, bs=128, lr=2e-3, seed=0):
+    (xtr_u8, ytr, xte_u8, yte) = data
+    xtr = dataset.to_nchw_f32(xtr_u8, mean, std)
+    xte = dataset.to_nchw_f32(xte_u8, mean, std)
+    xtr_j, ytr_j = jnp.asarray(xtr), jnp.asarray(ytr.astype(np.int32))
+    params, running = nets.init_train_params(model, seed)
+    opt_m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    opt_v = {k: jnp.zeros_like(v) for k, v in params.items()}
+    step = make_train_step(model)
+    n = xtr.shape[0]
+    rng = np.random.default_rng(seed)
+    t0, t = time.time(), 0
+    steps_total = epochs * (n // bs)
+    for ep in range(epochs):
+        perm = rng.permutation(n)
+        for i in range(n // bs):
+            idx = perm[i * bs:(i + 1) * bs]
+            t += 1
+            cur_lr = lr * 0.5 * (1 + np.cos(np.pi * t / steps_total))
+            params, running, opt_m, opt_v, loss = step(
+                params, running, opt_m, opt_v, t,
+                xtr_j[idx], _onehot(ytr_j[idx]), cur_lr)
+        acc = evaluate(model, params, running, jnp.asarray(xte),
+                       jnp.asarray(yte.astype(np.int32)))
+        print(f'  [{model.name}] epoch {ep + 1}/{epochs} '
+              f'loss={float(loss):.3f} test_acc={acc * 100:.2f}% '
+              f'({time.time() - t0:.0f}s)')
+    running = recalibrate_bn(model, params, xtr_j)
+    dparams = nets.fold_bn(model, params, running)
+    acc = evaluate_deploy(model, dparams, jnp.asarray(xte),
+                          jnp.asarray(yte.astype(np.int32)))
+    print(f'  [{model.name}] folded deploy test_acc={acc * 100:.2f}%')
+    return params, running, dparams, acc
+
+
+def train_and_store(model_name: str, artifacts_dir: str, data, mean, std,
+                    epochs=8):
+    model = nets.get_model(model_name)
+    params, running, dparams, acc = train_model(model, data, mean, std,
+                                                epochs=epochs)
+    tensors = {}
+    for k, v in dparams.items():
+        tensors[k] = np.asarray(v)
+    for k, v in params.items():
+        tensors['raw.' + k] = np.asarray(v)
+    for k, v in running.items():
+        tensors['bnstat.' + k] = np.asarray(v)
+    tensors['meta.fp_acc'] = np.array([acc], dtype=np.float32)
+    store.write_store(f'{artifacts_dir}/weights_{model_name}', tensors)
+    return acc

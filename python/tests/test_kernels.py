@@ -1,0 +1,244 @@
+"""Pallas kernels vs pure-jnp oracle: values and gradients.
+
+Hypothesis sweeps shapes/values; every kernel is checked in interpret mode
+against ref.py for both the forward pass and the custom-VJP backward pass.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fake_quant, fim_loss, lsq, ref
+
+jax.config.update('jax_platform_name', 'cpu')
+
+
+def rand(rng, shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * scale)
+
+
+# --------------------------------------------------------------------------
+# AdaRound fake-quant
+# --------------------------------------------------------------------------
+
+SHAPES_W = [(4, 3, 3, 3), (16, 8, 1, 1), (7, 5, 3, 3), (10, 64), (1, 1, 1, 1),
+            (33, 2, 5, 5)]
+
+
+@pytest.mark.parametrize('shape', SHAPES_W)
+@pytest.mark.parametrize('bits', [2, 4, 8])
+def test_adaround_fwd_matches_ref(shape, bits):
+    rng = np.random.default_rng(hash((shape, bits)) % 2 ** 31)
+    w = rand(rng, shape)
+    c = shape[0]
+    step = jnp.asarray(np.abs(rng.normal(size=(c,))).astype(np.float32)
+                       * 0.1 + 0.01)
+    v = rand(rng, shape, 2.0)
+    n = jnp.array([-2.0 ** (bits - 1)], jnp.float32)
+    p = jnp.array([2.0 ** (bits - 1) - 1], jnp.float32)
+    got = fake_quant.adaround(w, step, v, n, p)
+    sb = step.reshape((c,) + (1,) * (len(shape) - 1))
+    want = ref.adaround_ref(w, sb, v, n, p)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+@pytest.mark.parametrize('shape', SHAPES_W)
+def test_adaround_grad_v_matches_ref(shape):
+    rng = np.random.default_rng(hash(shape) % 2 ** 31)
+    w = rand(rng, shape)
+    c = shape[0]
+    step = jnp.asarray(np.abs(rng.normal(size=(c,))).astype(np.float32)
+                       * 0.1 + 0.01)
+    v = rand(rng, shape, 2.0)
+    n, p = jnp.array([-8.0]), jnp.array([7.0])
+    g = rand(rng, shape)
+    _, vjp = jax.vjp(lambda vv: fake_quant.adaround(w, step, vv, n, p), v)
+    got = vjp(g)[0]
+    sb = step.reshape((c,) + (1,) * (len(shape) - 1))
+    want = ref.adaround_grad_v_ref(w, sb, v, n, p, g)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_adaround_extreme_v_is_floor_or_ceil():
+    """h(v) saturates: v >> 0 gives ceil, v << 0 gives floor."""
+    rng = np.random.default_rng(0)
+    w = rand(rng, (6, 4))
+    step = jnp.full((6,), 0.07, jnp.float32)
+    n, p = jnp.array([-128.0]), jnp.array([127.0])
+    hi = fake_quant.adaround(w, step, jnp.full(w.shape, 20.0), n, p)
+    lo = fake_quant.adaround(w, step, jnp.full(w.shape, -20.0), n, p)
+    sb = step.reshape(6, 1)
+    np.testing.assert_allclose(hi, sb * (jnp.floor(w / sb) + 1), atol=1e-6)
+    np.testing.assert_allclose(lo, sb * jnp.floor(w / sb), atol=1e-6)
+
+
+def test_adaround_output_on_grid():
+    """With saturated v, quantized weights live on the step grid in [n,p]."""
+    rng = np.random.default_rng(1)
+    w = rand(rng, (8, 8))
+    step = jnp.full((8,), 0.05, jnp.float32)
+    n, p = jnp.array([-2.0]), jnp.array([1.0])
+    v = jnp.where(rand(rng, w.shape) > 0, 20.0, -20.0)
+    q = np.asarray(fake_quant.adaround(w, step, v, n, p)) / 0.05
+    assert np.all(q >= -2.0 - 1e-5) and np.all(q <= 1.0 + 1e-5)
+    np.testing.assert_allclose(q, np.round(q), atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(c=st.integers(1, 24), k=st.integers(1, 40), seed=st.integers(0, 999))
+def test_adaround_hypothesis_sweep(c, k, seed):
+    rng = np.random.default_rng(seed)
+    w = rand(rng, (c, k))
+    step = jnp.asarray(np.abs(rng.normal(size=(c,))).astype(np.float32)
+                       * 0.2 + 0.005)
+    v = rand(rng, (c, k), 3.0)
+    n, p = jnp.array([-8.0]), jnp.array([7.0])
+    got = fake_quant.adaround(w, step, v, n, p)
+    want = ref.adaround_ref(w, step.reshape(c, 1), v, n, p)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# LSQ activation fake-quant
+# --------------------------------------------------------------------------
+
+SHAPES_X = [(2, 3, 8, 8), (32,), (5, 7), (1, 130), (3, 3, 3, 3, 2)]
+
+
+@pytest.mark.parametrize('shape', SHAPES_X)
+@pytest.mark.parametrize('signed', [False, True])
+def test_lsq_fwd_matches_ref(shape, signed):
+    rng = np.random.default_rng(hash((shape, signed)) % 2 ** 31)
+    x = rand(rng, shape, 2.0)
+    s = jnp.array([0.09], jnp.float32)
+    qn = jnp.array([-8.0 if signed else 0.0], jnp.float32)
+    qp = jnp.array([7.0 if signed else 15.0], jnp.float32)
+    got = lsq.lsq_quant(x, s, qn, qp)
+    want = ref.lsq_ref(x, s, qn, qp)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+@pytest.mark.parametrize('shape', SHAPES_X)
+def test_lsq_grads_match_ref(shape):
+    rng = np.random.default_rng(hash(shape) % 2 ** 31)
+    x = rand(rng, shape, 2.0)
+    s = jnp.array([0.13], jnp.float32)
+    qn, qp = jnp.array([0.0]), jnp.array([15.0])
+    g = rand(rng, shape)
+    _, vjp = jax.vjp(lambda xx, ss: lsq.lsq_quant(xx, ss, qn, qp), x, s)
+    gx, gs = vjp(g)
+    gxr, gsr = ref.lsq_grads_ref(x, s, qn, qp, g)
+    np.testing.assert_allclose(gx, gxr, atol=1e-6)
+    np.testing.assert_allclose(gs, gsr, rtol=2e-4, atol=1e-5)
+
+
+def test_lsq_idempotent():
+    """Quantizing an already-quantized tensor is the identity."""
+    rng = np.random.default_rng(3)
+    x = rand(rng, (4, 16), 2.0)
+    s = jnp.array([0.11])
+    qn, qp = jnp.array([-8.0]), jnp.array([7.0])
+    q1 = lsq.lsq_quant(x, s, qn, qp)
+    q2 = lsq.lsq_quant(q1, s, qn, qp)
+    np.testing.assert_allclose(q1, q2, atol=1e-6)
+
+
+def test_lsq_step_gradient_signs():
+    """Saturated-low elements pull the step with weight qmin; saturated-high
+    with qmax (Eq. 18 boundary behaviour)."""
+    x = jnp.array([-100.0, 100.0], jnp.float32)
+    s = jnp.array([0.1])
+    qn, qp = jnp.array([-8.0]), jnp.array([7.0])
+    _, vjp = jax.vjp(lambda ss: lsq.lsq_quant(x, ss, qn, qp), s)
+    g_low = vjp(jnp.array([1.0, 0.0], jnp.float32))[0]
+    g_high = vjp(jnp.array([0.0, 1.0], jnp.float32))[0]
+    np.testing.assert_allclose(g_low, [-8.0], atol=1e-6)
+    np.testing.assert_allclose(g_high, [7.0], atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 600), seed=st.integers(0, 999),
+       bits=st.sampled_from([2, 4, 8]))
+def test_lsq_hypothesis_sweep(n, seed, bits):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, (n,), 3.0)
+    s = jnp.array([float(np.abs(rng.normal()) * 0.3 + 0.01)], jnp.float32)
+    qn = jnp.array([0.0])
+    qp = jnp.array([2.0 ** bits - 1])
+    np.testing.assert_allclose(lsq.lsq_quant(x, s, qn, qp),
+                               ref.lsq_ref(x, s, qn, qp), atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# FIM-weighted loss
+# --------------------------------------------------------------------------
+
+SHAPES_Z = [(8, 4, 4, 4), (2, 10), (32, 3), (1, 1, 1, 1)]
+
+
+@pytest.mark.parametrize('shape', SHAPES_Z)
+def test_fim_loss_matches_ref(shape):
+    rng = np.random.default_rng(hash(shape) % 2 ** 31)
+    z = rand(rng, shape)
+    zq = z + rand(rng, shape, 0.1)
+    fim = jnp.asarray((rng.normal(size=shape) ** 2).astype(np.float32))
+    got = fim_loss.fim_loss(z, zq, fim)
+    want = ref.fim_loss_ref(z, zq, fim)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize('shape', SHAPES_Z)
+def test_fim_loss_grad_matches_ref(shape):
+    rng = np.random.default_rng(hash(shape) % 2 ** 31)
+    z = rand(rng, shape)
+    zq = z + rand(rng, shape, 0.1)
+    fim = jnp.asarray((rng.normal(size=shape) ** 2).astype(np.float32))
+    _, vjp = jax.vjp(lambda q: fim_loss.fim_loss(z, q, fim), zq)
+    got = vjp(jnp.float32(1.0))[0]
+    want = ref.fim_loss_grad_zq_ref(z, zq, fim, 1.0)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_fim_loss_zero_at_equal():
+    rng = np.random.default_rng(5)
+    z = rand(rng, (4, 8))
+    fim = jnp.ones_like(z)
+    assert float(fim_loss.fim_loss(z, z, fim)) == 0.0
+
+
+def test_fim_loss_reduces_to_mse_with_unit_fim():
+    """fim == 1 recovers the plain layer-wise MSE objective (AdaRound)."""
+    rng = np.random.default_rng(6)
+    z = rand(rng, (8, 6))
+    zq = z + rand(rng, (8, 6), 0.2)
+    got = fim_loss.fim_loss(z, zq, jnp.ones_like(z))
+    want = jnp.sum((z - zq) ** 2) / 8
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_fim_loss_weighting_order():
+    """Elements with larger FIM weight dominate the loss (Eq. 10 intent)."""
+    z = jnp.zeros((1, 2), jnp.float32)
+    zq = jnp.ones((1, 2), jnp.float32)
+    hi = fim_loss.fim_loss(z, zq, jnp.array([[10.0, 0.1]], jnp.float32))
+    lo = fim_loss.fim_loss(z, zq, jnp.array([[0.1, 0.1]], jnp.float32))
+    assert float(hi) > float(lo)
+
+
+# --------------------------------------------------------------------------
+# Hard-rounding commit (ref only — the Rust side mirrors this math)
+# --------------------------------------------------------------------------
+
+def test_hard_round_consistent_with_saturated_soft():
+    rng = np.random.default_rng(7)
+    w = rand(rng, (5, 9))
+    step = jnp.asarray(np.abs(rng.normal(size=(5,))).astype(np.float32)
+                       * 0.1 + 0.02).reshape(5, 1)
+    n, p = jnp.array([-8.0]), jnp.array([7.0])
+    v = rand(rng, w.shape, 4.0)
+    hard = ref.adaround_hard_ref(w, step, v, n, p)
+    soft_sat = ref.adaround_ref(w, step, jnp.where(
+        ref.rect_sigmoid(v) >= 0.5, 20.0, -20.0), n, p)
+    np.testing.assert_allclose(hard, soft_sat, atol=1e-6)

@@ -1,0 +1,82 @@
+"""Manifest / artifact validation (skips until `make artifacts` has run).
+
+This is the ABI contract test between the Python build path and the Rust
+runtime: every executable referenced by a unit must exist on disk with a
+signature whose role layout matches what rust/src/recon.rs assembles.
+"""
+
+import json
+import os
+
+import pytest
+
+ART = os.environ.get(
+    'BRECQ_ARTIFACTS',
+    os.path.join(os.path.dirname(__file__), '..', '..', 'artifacts'))
+MANIFEST = os.path.join(ART, 'manifest.json')
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST),
+    reason='artifacts not built (run `make artifacts`)')
+
+
+@pytest.fixture(scope='module')
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_all_executable_files_exist(manifest):
+    for name, e in manifest['executables'].items():
+        path = os.path.join(ART, e['file'])
+        assert os.path.exists(path), name
+        assert os.path.getsize(path) > 100, name
+
+
+def test_unit_exe_signatures_match_role_layout(manifest):
+    for mname, m in manifest['models'].items():
+        for gran, g in m['grans'].items():
+            for u in g['units']:
+                exe = manifest['executables'][u['recon_exe']]
+                names = [i['name'] for i in exe['inputs']]
+                nl = len(u['layers'])
+                want = ['x'] + (['skip'] if u['uses_skip'] else [])
+                want += ['z_fp', 'fim']
+                for i in range(nl):
+                    want += [f'w{i}', f'b{i}', f'wstep{i}', f'v{i}',
+                             f'wn{i}', f'wp{i}']
+                for i in range(nl):
+                    want += [f'astep{i}', f'aqmin{i}', f'aqmax{i}']
+                want += ['beta', 'lam', 'aq_flag']
+                assert names == want, (mname, gran, u['name'])
+                onames = [o['name'] for o in exe['outputs']]
+                wout = ['loss', 'rec_loss', 'round_loss']
+                wout += [f'gv{i}' for i in range(nl)]
+                wout += [f'gastep{i}' for i in range(nl)]
+                assert onames == wout, (mname, gran, u['name'])
+
+
+def test_unit_shapes_chain(manifest):
+    """Within a granularity, unit in_shape equals previous out_shape."""
+    for m in manifest['models'].values():
+        for g in m['grans'].values():
+            prev = None
+            for u in g['units']:
+                if prev is not None:
+                    assert u['in_shape'] == prev, u['name']
+                prev = u['out_shape']
+
+
+def test_weight_store_exists(manifest):
+    for m in manifest['models'].values():
+        for ext in ('.json', '.bin'):
+            assert os.path.exists(os.path.join(ART, m['weights'] + ext))
+
+
+def test_dedup_happened(manifest):
+    """Structurally identical units must share executables."""
+    total_units = sum(len(g['units'])
+                      for m in manifest['models'].values()
+                      for g in m['grans'].values())
+    distinct_exes = len(manifest['executables'])
+    assert distinct_exes < 2 * total_units + 10 * len(manifest['models'])

@@ -1,0 +1,98 @@
+"""Model zoo / unit-partition invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import nets
+
+jax.config.update('jax_platform_name', 'cpu')
+
+
+@pytest.fixture(scope='module', params=list(nets.ZOO))
+def model_and_params(request):
+    m = nets.get_model(request.param)
+    params, running = nets.init_train_params(m, seed=3)
+    dparams = nets.fold_bn(m, params, running)
+    return m, params, running, dparams
+
+
+def test_forward_shapes(model_and_params):
+    m, _, _, d = model_and_params
+    x = jnp.zeros((2, 3, 32, 32))
+    logits = m.apply(nets.Ctx(d), x)
+    assert logits.shape == (2, 10)
+
+
+@pytest.mark.parametrize('gran', nets.GRANULARITIES)
+def test_unit_stream_equals_direct_apply(model_and_params, gran):
+    m, _, _, d = model_and_params
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 3, 32, 32)).astype(np.float32))
+    direct = m.apply(nets.Ctx(d), x)
+    streamed = m.run_units(nets.Ctx(d), x, gran)
+    np.testing.assert_allclose(streamed, direct, atol=1e-4)
+
+
+def test_units_cover_all_layers_exactly_once(model_and_params):
+    m, _, _, _ = model_and_params
+    all_names = [l.name for l in m.layers]
+    for gran in nets.GRANULARITIES:
+        owned = [l.name for u in m.units(gran) for l in u.layers]
+        assert sorted(owned) == sorted(all_names), (m.name, gran)
+
+
+def test_geometry_matches_param_shapes(model_and_params):
+    m, _, _, d = model_and_params
+    for geo, l in zip(m.layer_geometry(), m.layers):
+        assert tuple(d[l.name + '.w'].shape) == l.wshape()
+        assert geo['nparams'] == int(np.prod(l.wshape())) + l.cout
+        assert geo['macs'] > 0
+
+
+def test_bn_fold_preserves_inference(model_and_params):
+    """Deploy-mode (folded) forward == train-mode forward with running
+    stats — the PTQ substrate's starting point must be exact."""
+    m, params, running, d = model_and_params
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(4, 3, 32, 32)).astype(np.float32))
+    train_logits = m.apply(
+        nets.TrainCtx(params, running, use_batch_stats=False), x)
+    deploy_logits = m.apply(nets.Ctx(d), x)
+    np.testing.assert_allclose(deploy_logits, train_logits,
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_skip_units_structure(model_and_params):
+    """save_skip precedes uses_skip, and both are cleared in order."""
+    m, _, _, _ = model_and_params
+    for gran in nets.GRANULARITIES:
+        pending = False
+        for u in m.units(gran):
+            if u.save_skip:
+                pending = True
+            if u.uses_skip:
+                assert pending, (m.name, gran, u.name)
+                pending = False
+        assert not pending, (m.name, gran)
+
+
+def test_mbv2_signed_sites():
+    """Linear bottleneck outputs feed signed activation sites."""
+    m = nets.get_model('mobilenetv2_s')
+    # the expand conv of every non-first block sees a signed input
+    signed = [l.site_signed for l in m.layers if l.name.endswith('expand')]
+    assert signed[1:] == [True] * (len(signed) - 1)
+    # stem sees the (standardized, signed) image
+    assert m.stem.site_signed
+
+
+def test_depthwise_and_group_conv_configs():
+    mb = nets.get_model('mobilenetv2_s')
+    dw = [l for l in mb.layers if l.groups > 1]
+    assert dw and all(l.groups == l.cin for l in dw)
+    rg = nets.get_model('regnet_s')
+    gc = [l for l in rg.layers if l.groups > 1]
+    assert gc and all(l.cin % l.groups == 0 and l.groups < l.cin
+                      for l in gc)

@@ -1,0 +1,215 @@
+"""Reconstruction-objective builders: ABI, numerics and gradients.
+
+These are the contracts the Rust coordinator relies on; every builder is
+checked against an independently-constructed reference computation.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import nets, recon_obj
+from compile.kernels import ref
+
+jax.config.update('jax_platform_name', 'cpu')
+
+B = 4
+
+
+def mk_args(isig, rng, overrides=None):
+    args = []
+    for name, shape in isig:
+        if name.startswith(('wstep', 'astep')):
+            a = np.abs(rng.normal(size=shape)).astype(np.float32) * 0.05 + 0.02
+        elif name.startswith('wn') or name == 'wqmin':
+            a = np.array([-8.0], np.float32)
+        elif name.startswith('wp') or name == 'wqmax':
+            a = np.array([7.0], np.float32)
+        elif name.startswith('aqmin'):
+            a = np.array([0.0], np.float32)
+        elif name.startswith(('aqmax',)):
+            a = np.array([15.0], np.float32)
+        elif name == 'beta':
+            a = np.array([8.0], np.float32)
+        elif name == 'lam':
+            a = np.array([0.01], np.float32)
+        elif name == 'aq_flag':
+            a = np.array([0.0], np.float32)
+        elif name == 'onehot':
+            a = np.zeros(shape, np.float32)
+            a[np.arange(shape[0]), rng.integers(0, shape[1], shape[0])] = 1
+        else:
+            a = rng.normal(size=shape).astype(np.float32) * 0.5
+        if overrides and name in overrides:
+            a = overrides[name]
+        args.append(jnp.asarray(a))
+    return args
+
+
+@pytest.fixture(scope='module')
+def resnet():
+    m = nets.get_model('resnet_s')
+    params, running = nets.init_train_params(m, seed=5)
+    d = nets.fold_bn(m, params, running)
+    return m, d
+
+
+def test_unit_fwd_matches_direct(resnet):
+    m, d = resnet
+    shapes = recon_obj.unit_io_shapes(m, 'block', B)
+    units = m.units('block')
+    u, (ins, sk, out) = units[3], shapes[3]
+    fn, isig, osig = recon_obj.build_unit_fwd(u, ins, sk, out)
+    rng = np.random.default_rng(2)
+    # bind the real folded weights so we can compare with unit.fn directly
+    over = {}
+    for i, l in enumerate(u.layers):
+        over[f'w{i}'] = np.asarray(d[l.name + '.w'])
+        over[f'b{i}'] = np.asarray(d[l.name + '.b'])
+    args = mk_args(isig, rng, over)
+    (z,) = jax.jit(fn)(*args)
+    x = args[0]
+    want = u.fn(nets.Ctx(d), x)
+    np.testing.assert_allclose(z, want, rtol=1e-4, atol=1e-5)
+
+
+def test_unit_fwd_aq_flag_gates_quantization(resnet):
+    m, d = resnet
+    shapes = recon_obj.unit_io_shapes(m, 'block', B)
+    u, (ins, sk, out) = m.units('block')[1], shapes[1]
+    fn, isig, _ = recon_obj.build_unit_fwd(u, ins, sk, out)
+    rng = np.random.default_rng(3)
+    args = mk_args(isig, rng)
+    idx = {n: i for i, (n, _) in enumerate(isig)}
+    args[idx['aq_flag']] = jnp.array([0.0])
+    (z_off,) = jax.jit(fn)(*args)
+    args[idx['aq_flag']] = jnp.array([1.0])
+    (z_on,) = jax.jit(fn)(*args)
+    # quantization must change the output (and only when the flag is on)
+    assert not np.allclose(z_off, z_on)
+
+
+def test_unit_recon_grads_match_ref_objective(resnet):
+    """The AOT unit_recon gradient wrt v must equal jax.grad of an
+    independently assembled (pure-ref, no pallas) objective."""
+    m, d = resnet
+    shapes = recon_obj.unit_io_shapes(m, 'block', B)
+    u, (ins, sk, out) = m.units('block')[1], shapes[1]
+    fn, isig, osig = recon_obj.build_unit_recon(u, ins, sk, out)
+    rng = np.random.default_rng(4)
+    args = mk_args(isig, rng)
+    outs = jax.jit(fn)(*args)
+    idx = {n: i for i, (n, _) in enumerate(isig)}
+    names = [n for n, _ in osig]
+
+    def ref_loss(vs):
+        params = {}
+        for i, l in enumerate(u.layers):
+            params[l.name + '.w'] = args[idx[f'w{i}']]
+            params[l.name + '.b'] = args[idx[f'b{i}']]
+
+        def qw(name, w):
+            i = [l.name for l in u.layers].index(name)
+            step = args[idx[f'wstep{i}']]
+            sb = step.reshape((step.shape[0],) + (1,) * (w.ndim - 1))
+            return ref.adaround_ref(w, sb, vs[i], args[idx[f'wn{i}']],
+                                    args[idx[f'wp{i}']])
+
+        ctx = nets.Ctx(params, qw=qw)  # aq_flag=0: no act quant
+        zq = u.fn(ctx, args[idx['x']])
+        rec = ref.fim_loss_ref(args[idx['z_fp']], zq, args[idx['fim']])
+        beta = args[idx['beta']][0]
+        rl = sum(jnp.sum(1.0 - jnp.abs(2 * ref.rect_sigmoid(v) - 1) ** beta)
+                 for v in vs)
+        return rec + args[idx['lam']][0] * rl
+
+    vs = tuple(args[idx[f'v{i}']] for i in range(len(u.layers)))
+    want_loss = ref_loss(vs)
+    gv_ref = jax.grad(lambda vv: ref_loss(vv))(vs)
+    np.testing.assert_allclose(outs[0][0], want_loss, rtol=1e-4)
+    for i in range(len(u.layers)):
+        got = outs[names.index(f'gv{i}')]
+        np.testing.assert_allclose(got, gv_ref[i], rtol=1e-3, atol=1e-6)
+
+
+def test_fim_outputs_match_unit_count(resnet):
+    m, d = resnet
+    for gran in ('block', 'layer'):
+        fn, isig, osig = recon_obj.build_fim(m, gran, B)
+        assert len(osig) == len(m.units(gran))
+        rng = np.random.default_rng(6)
+        over = {}
+        li = 0
+        for l in m.layers:
+            over[f'w{li}'] = np.asarray(d[l.name + '.w'])
+            over[f'b{li}'] = np.asarray(d[l.name + '.b'])
+            li += 1
+        args = mk_args(isig, rng, over)
+        outs = jax.jit(fn)(*args)
+        shapes = recon_obj.unit_io_shapes(m, gran, B)
+        for t, (_, _, out_shape) in zip(outs, shapes):
+            assert tuple(t.shape) == tuple(out_shape)
+        # gradients at the last unit (logits) are nonzero for a CE loss
+        assert float(jnp.abs(outs[-1]).max()) > 0
+
+
+def test_eval_fwd_matches_apply(resnet):
+    m, d = resnet
+    fn, isig, _ = recon_obj.build_eval_fwd(m, B)
+    rng = np.random.default_rng(7)
+    over = {}
+    for i, l in enumerate(m.layers):
+        over[f'w{i}'] = np.asarray(d[l.name + '.w'])
+        over[f'b{i}'] = np.asarray(d[l.name + '.b'])
+    args = mk_args(isig, rng, over)
+    (logits,) = jax.jit(fn)(*args)
+    want = m.apply(nets.Ctx(d), args[0])
+    np.testing.assert_allclose(logits, want, rtol=1e-4, atol=1e-5)
+
+
+def test_act_obs_reports_input_stats(resnet):
+    m, d = resnet
+    fn, isig, osig = recon_obj.build_act_obs(m, B)
+    rng = np.random.default_rng(8)
+    args = mk_args(isig, rng)
+    outs = jax.jit(fn)(*args)
+    assert len(outs) == len(m.layers)
+    for t in outs:
+        maxabs, meanabs = float(t[0]), float(t[1])
+        assert maxabs >= meanabs >= 0
+
+
+def test_qat_step_outputs(resnet):
+    m, _ = resnet
+    fn, isig, osig = recon_obj.build_qat_step(m, B)
+    rng = np.random.default_rng(9)
+    args = mk_args(isig, rng)
+    outs = jax.jit(fn)(*args)
+    nl = len(m.layers)
+    assert len(outs) == 1 + 4 * nl
+    assert outs[0].shape == (1,)
+    # weight gradients flow through the LSQ STE
+    assert any(float(jnp.abs(outs[1 + i]).max()) > 0 for i in range(nl))
+
+
+def test_distill_grad_decreases_loss(resnet):
+    m, _ = resnet
+    params, running = nets.init_train_params(m, seed=10)
+    fn, isig, _ = recon_obj.build_distill(m, B)
+    rng = np.random.default_rng(11)
+    over = {}
+    convs = [l for l in m.layers if l.kind == 'conv']
+    for i, l in enumerate(convs):
+        over[f'w{i}'] = np.asarray(params[l.name + '.w'])
+        over[f'gamma{i}'] = np.asarray(params[l.name + '.gamma'])
+        over[f'beta{i}'] = np.asarray(params[l.name + '.beta'])
+        over[f'mu{i}'] = rng.normal(size=(l.cout,)).astype(np.float32) * 0.1
+        over[f'var{i}'] = np.abs(
+            rng.normal(size=(l.cout,))).astype(np.float32) + 0.5
+    args = mk_args(isig, rng, over)
+    f = jax.jit(fn)
+    loss0, gx = f(*args)
+    x = args[0] - 0.5 * gx  # one crude gradient step
+    loss1, _ = f(x, *args[1:])
+    assert float(loss1[0]) < float(loss0[0])

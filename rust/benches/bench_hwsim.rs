@@ -1,0 +1,47 @@
+//! Bench: hardware-simulator throughput. The GA evaluates H(c) inside its
+//! fitness loop (paper: whole search finishes in ~3s), so a single model
+//! measurement must stay in the microsecond range.
+
+mod harness;
+
+use brecq::coordinator::Env;
+use brecq::hwsim::{ArmCpu, HwMeasure, ModelSize, Systolic};
+use harness::Bench;
+
+fn main() {
+    if !harness::artifacts_ready() {
+        return;
+    }
+    let env = Env::bootstrap(None).unwrap();
+    let model = env.model("resnet_s");
+    let wbits = vec![4usize; model.layers.len()];
+
+    let sim = Systolic::default();
+    Bench::new("systolic.model_ms x1000").iters(20).run(|| {
+        let mut acc = 0.0;
+        for _ in 0..1000 {
+            acc += sim.measure(model, &wbits, 8);
+        }
+        std::hint::black_box(acc);
+    });
+
+    let arm = ArmCpu::default();
+    if ArmCpu::supports(model) {
+        Bench::new("armcpu.model_ms x1000").iters(20).run(|| {
+            let mut acc = 0.0;
+            for _ in 0..1000 {
+                acc += arm.measure(model, &wbits, 8);
+            }
+            std::hint::black_box(acc);
+        });
+    }
+
+    let size = ModelSize;
+    Bench::new("model_size x1000").iters(20).run(|| {
+        let mut acc = 0.0;
+        for _ in 0..1000 {
+            acc += size.measure(model, &wbits, 8);
+        }
+        std::hint::black_box(acc);
+    });
+}

@@ -1,0 +1,61 @@
+//! Bench: genetic mixed-precision search (Algorithm 2). Paper B.4.4: "the
+//! genetic algorithm usually completes the evolution in only about 3
+//! seconds" — this bench checks we're in that class (with the LUT already
+//! measured, as in the paper's protocol).
+
+mod harness;
+
+use std::collections::HashMap;
+
+use brecq::coordinator::Env;
+use brecq::hwsim::{HwMeasure, ModelSize, Systolic};
+use brecq::mp::{GaConfig, GeneticSearch};
+use brecq::sensitivity::{intra_block_pairs, SensitivityTable};
+use harness::Bench;
+
+fn main() {
+    if !harness::artifacts_ready() {
+        return;
+    }
+    let env = Env::bootstrap(None).unwrap();
+    let model = env.model("resnet_s");
+
+    // synthetic-but-shaped LUT (measuring the real one needs calibration
+    // dispatches; GA cost is independent of where the numbers came from)
+    let diag = (0..model.layers.len())
+        .map(|l| {
+            let mut m = HashMap::new();
+            m.insert(2usize, 0.1 + 0.01 * l as f64);
+            m.insert(4usize, 0.01 + 0.001 * l as f64);
+            m
+        })
+        .collect();
+    let mut offdiag = HashMap::new();
+    for (a, b) in intra_block_pairs(model) {
+        offdiag.insert((a, b), 0.02);
+    }
+    let table = SensitivityTable { diag, offdiag, base_loss: 0.5 };
+
+    let size = ModelSize;
+    let full = size.measure(model, &vec![8; model.layers.len()], 8);
+    let ga = GeneticSearch { model, table: &table, hw: &size, abits: 8,
+                             budget: full * 0.5 };
+    Bench::new("ga.search pop=50 iters=100").iters(5).run(|| {
+        let r = ga.run(&GaConfig::default()).unwrap();
+        std::hint::black_box(r.predicted_loss);
+    });
+
+    let sim = Systolic::default();
+    let t8 = sim.measure(model, &vec![8; model.layers.len()], 8);
+    let ga2 = GeneticSearch { model, table: &table, hw: &sim, abits: 8,
+                              budget: t8 * 0.6 };
+    Bench::new("ga.search fpga-constrained").iters(5).run(|| {
+        let r = ga2.run(&GaConfig::default()).unwrap();
+        std::hint::black_box(r.predicted_loss);
+    });
+
+    Bench::new("pareto_greedy").iters(5).run(|| {
+        let r = ga.pareto_greedy().unwrap();
+        std::hint::black_box(r.predicted_loss);
+    });
+}

@@ -1,0 +1,71 @@
+//! Bench: the reconstruction step and a full mini-calibration — the paper's
+//! headline production-cost claim (Table 4: ResNet-18 calibrated in 0.4 GPU
+//! hours vs 100 for QAT; §3.3: "a quantized ResNet-18 within 20 minutes").
+//! This regenerates the cost side of Table 4 on our substrate: calibration
+//! wall-clock per model/config.
+
+mod harness;
+
+use brecq::coordinator::Env;
+use brecq::recon::{BitConfig, Calibrator, ReconConfig};
+use harness::Bench;
+
+fn main() {
+    if !harness::artifacts_ready() {
+        return;
+    }
+    let env = Env::bootstrap(None).unwrap();
+    let model = env.model("resnet_s");
+    let train = env.train_set().unwrap();
+    let calib = env.calib(&train, 64, 0);
+    let cal = Calibrator::new(&env.rt, &env.mf, model);
+
+    // end-to-end mini-calibration (8 units x 20 iters, 64 calib images)
+    for (name, gran) in [("block", "block"), ("layer", "layer")] {
+        let bits = BitConfig::uniform(model, 4, None, true);
+        let cfg = ReconConfig {
+            gran: gran.into(),
+            iters: 20,
+            ..ReconConfig::default()
+        };
+        Bench::new(&format!("calibrate 20it/unit gran={name}"))
+            .iters(2)
+            .run(|| {
+                let qm = cal.calibrate(&calib, &bits, &cfg).unwrap();
+                std::hint::black_box(qm.weights.len());
+            });
+    }
+
+    // per-dispatch cost of the hottest executable (largest recon unit)
+    let units = &model.gran("block").units;
+    for u in units.iter().take(3) {
+        let exe = env.rt.load(&u.recon_exe).unwrap();
+        // build a correctly-shaped argument set once; reuse across iters
+        let args: Vec<brecq::tensor::Tensor> = exe
+            .sig
+            .inputs
+            .iter()
+            .map(|(name, shape)| {
+                if name.starts_with("wstep") || name.starts_with("astep") {
+                    brecq::tensor::Tensor::full(shape.clone(), 0.05)
+                } else if name.starts_with("wp") || name.starts_with("aqmax")
+                {
+                    brecq::tensor::Tensor::full(shape.clone(), 7.0)
+                } else if name.starts_with("wn") {
+                    brecq::tensor::Tensor::full(shape.clone(), -8.0)
+                } else if name == "beta" {
+                    brecq::tensor::Tensor::full(shape.clone(), 10.0)
+                } else {
+                    brecq::tensor::Tensor::zeros(shape.clone())
+                }
+            })
+            .collect();
+        let refs: Vec<&brecq::tensor::Tensor> = args.iter().collect();
+        Bench::new(&format!("unit_recon dispatch [{}]", u.name))
+            .iters(10)
+            .run(|| {
+                let out = exe.run(&refs).unwrap();
+                std::hint::black_box(out[0].data[0]);
+            });
+    }
+}

@@ -1,0 +1,67 @@
+//! Bench: end-to-end experiment-driver costs — one timed entry per paper
+//! table/figure pipeline (reduced budgets; the full-budget runs live in
+//! EXPERIMENTS.md). Regenerating a table is itself the workload here: these
+//! timings are the "production cycle" the paper's PTQ-vs-QAT argument is
+//! about.
+
+mod harness;
+
+use brecq::coordinator::experiments::{quantize_with, ExpOpts, Method};
+use brecq::coordinator::Env;
+use brecq::eval::{accuracy, EvalParams};
+use brecq::recon::BitConfig;
+use brecq::sensitivity::Profiler;
+use brecq::recon::Calibrator;
+use harness::Bench;
+
+fn main() {
+    if !harness::artifacts_ready() {
+        return;
+    }
+    let env = Env::bootstrap(None).unwrap();
+    let train = env.train_set().unwrap();
+    let test = env.test_set().unwrap();
+    let o = ExpOpts { iters: 30, calib_n: 64, ..ExpOpts::default() };
+    let calib = env.calib(&train, o.calib_n, 0);
+
+    // Table 1 cell: one granularity run (block, W2)
+    let model = env.model("resnet_s");
+    Bench::new("table1-cell brecq block W2").iters(3).run(|| {
+        let bits = BitConfig::uniform(model, 2, None, true);
+        let qm = quantize_with(&env, "resnet_s", Method::Brecq, &calib,
+                               &bits, &o)
+            .unwrap();
+        let acc = accuracy(&env.rt, model, &EvalParams::quantized(&qm),
+                           &test)
+            .unwrap();
+        std::hint::black_box(acc);
+    });
+
+    // Table 2 cell: one baseline run (OMSE W4 — data-free, fast path)
+    Bench::new("table2-cell omse W4").iters(3).run(|| {
+        let bits = BitConfig::uniform(model, 4, None, true);
+        let qm = quantize_with(&env, "resnet_s", Method::Omse, &calib,
+                               &bits, &o)
+            .unwrap();
+        std::hint::black_box(qm.weights.len());
+    });
+
+    // Table 3 cell: fully quantized run (W4A4)
+    Bench::new("table3-cell brecq W4A4").iters(3).run(|| {
+        let bits = BitConfig::uniform(model, 4, Some(4), true);
+        let qm = quantize_with(&env, "resnet_s", Method::Brecq, &calib,
+                               &bits, &o)
+            .unwrap();
+        std::hint::black_box(qm.act_steps[1]);
+    });
+
+    // Fig 2 pipeline stage: sensitivity LUT (diag only here; pairs in the
+    // full run)
+    let cal = Calibrator::new(&env.rt, &env.mf, model);
+    let (ws, bs) = cal.fp_weights().unwrap();
+    Bench::new("fig2-stage sensitivity diag").iters(3).run(|| {
+        let prof = Profiler { rt: &env.rt, mf: &env.mf, model };
+        let t = prof.measure(&calib, &ws, &bs, false).unwrap();
+        std::hint::black_box(t.base_loss);
+    });
+}

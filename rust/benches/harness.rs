@@ -1,0 +1,51 @@
+//! Minimal bench harness (criterion is unavailable offline): warmup +
+//! timed iterations, reporting mean/p50/p95/min via util::stats. Used by
+//! every `[[bench]]` target with `harness = false`.
+
+use std::time::Instant;
+
+use brecq::util::stats;
+
+pub struct Bench {
+    pub name: String,
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        Bench { name: name.to_string(), warmup: 2, iters: 10 }
+    }
+
+    pub fn iters(mut self, n: usize) -> Bench {
+        self.iters = n;
+        self
+    }
+
+    /// Times `f` and prints a summary line; returns per-iter seconds.
+    pub fn run<F: FnMut()>(&self, mut f: F) -> Vec<f64> {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64() * 1e3); // ms
+        }
+        println!("bench {:<40} {} ms", self.name, stats::summary(&samples));
+        samples
+    }
+}
+
+/// Skip (but report) when artifacts are missing — benches must not fail the
+/// build on a fresh checkout.
+pub fn artifacts_ready() -> bool {
+    let dir = std::env::var("BRECQ_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".into());
+    let ok = std::path::Path::new(&dir).join("manifest.json").exists();
+    if !ok {
+        println!("bench SKIPPED: no artifacts at {dir}/ (run `make artifacts`)");
+    }
+    ok
+}

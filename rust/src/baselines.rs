@@ -1,0 +1,195 @@
+//! PTQ baselines the paper compares against (Tables 2 & 3).
+//!
+//! * `omse`            — OMSE (Choukroun et al. 2019): per-channel
+//!                       MSE-optimal steps, nearest rounding, no data.
+//! * `bias_correction` — DFQ-style (Nagel et al. 2019): nearest rounding
+//!                       plus empirical per-channel output-mean correction
+//!                       measured on calibration data. We correct at
+//!                       (layer-granularity) unit outputs — a faithful
+//!                       empirical variant of the analytic BN-based rule.
+//! * `adaround_layer`  — AdaRound (Nagel et al. 2020): layer-by-layer
+//!                       reconstruction, plain MSE objective (H = cI),
+//!                       rounding regularizer on. Implemented as the BRECQ
+//!                       engine at `gran=layer, use_fim=false`.
+//! * `adaquant_like`   — AdaQuant (Hubara et al. 2020) proxy: layer-wise
+//!                       MSE reconstruction with *unregularized* continuous
+//!                       rounding variables (committed by thresholding).
+//!                       Like AdaQuant's unconstrained weight learning, the
+//!                       relaxation is benign at 4-bit and collapses at
+//!                       2-bit.
+//! * `zeroq_nodata`    — ZeroQ (Cai et al. 2020) proxy: no real data at
+//!                       all; weights by nearest rounding, activation steps
+//!                       calibrated on BN-distilled data (see distill.rs).
+//!
+//! All baselines share the quantizer substrate (per-channel symmetric,
+//! first/last-8-bit policy) so the comparison isolates the *objective*, as
+//! in the paper.
+
+use anyhow::Result;
+
+use crate::calib::CalibSet;
+use crate::model::{Manifest, ModelInfo};
+use crate::quant::{mse_steps_per_channel, quantize_nearest};
+use crate::recon::{BitConfig, Calibrator, QuantizedModel, ReconConfig};
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+/// OMSE: data-free nearest rounding with MSE-optimal per-channel steps.
+/// When `bits.aq` is set, activation steps come from calibration stats.
+pub fn omse(
+    rt: &Runtime,
+    mf: &Manifest,
+    model: &ModelInfo,
+    calib: &CalibSet,
+    bits: &BitConfig,
+) -> Result<QuantizedModel> {
+    let t0 = std::time::Instant::now();
+    let cal = Calibrator::new(rt, mf, model);
+    let (ws, bs) = cal.fp_weights()?;
+    let weights: Vec<Tensor> = ws
+        .iter()
+        .enumerate()
+        .map(|(l, w)| {
+            let steps = mse_steps_per_channel(w, bits.wbits[l]);
+            quantize_nearest(w, &steps, bits.wbits[l])
+        })
+        .collect();
+    let act_steps = if bits.aq {
+        cal.init_act_steps(calib, &ws, &bs, bits, 4)?
+    } else {
+        vec![1.0; ws.len()]
+    };
+    Ok(QuantizedModel {
+        weights,
+        biases: bs,
+        act_steps,
+        bits: bits.clone(),
+        reports: vec![],
+        calib_seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// DFQ-style bias correction: nearest-rounded weights, then walk the
+/// layer-granularity units correcting each unit's final-layer bias by the
+/// per-channel mean output shift (quantized stream vs FP stream).
+pub fn bias_correction(
+    rt: &Runtime,
+    mf: &Manifest,
+    model: &ModelInfo,
+    calib: &CalibSet,
+    bits: &BitConfig,
+) -> Result<QuantizedModel> {
+    let t0 = std::time::Instant::now();
+    let cal = Calibrator::new(rt, mf, model);
+    let (ws, bs) = cal.fp_weights()?;
+    let qweights: Vec<Tensor> = ws
+        .iter()
+        .enumerate()
+        .map(|(l, w)| {
+            let steps = mse_steps_per_channel(w, bits.wbits[l]);
+            quantize_nearest(w, &steps, bits.wbits[l])
+        })
+        .collect();
+    let mut biases = bs.clone();
+    let act_steps = vec![1.0; ws.len()];
+    let nobits = BitConfig::uniform(model, 8, None, false); // acts FP here
+
+    let gran = model.gran("layer");
+    let mut fp_main = calib.images.clone();
+    let mut q_main = calib.images.clone();
+    let mut fp_skip: Option<Tensor> = None;
+    let mut q_skip: Option<Tensor> = None;
+
+    for unit in &gran.units {
+        if unit.save_skip {
+            fp_skip = Some(fp_main.clone());
+            q_skip = Some(q_main.clone());
+        }
+        let z_fp = cal.advance(
+            unit, &fp_main, fp_skip.as_ref(), &ws, &bs, &act_steps, &nobits,
+            false,
+        )?;
+        let z_q = cal.advance(
+            unit, &q_main, q_skip.as_ref(), &qweights, &biases, &act_steps,
+            &nobits, false,
+        )?;
+        // per-channel mean shift at the unit output -> correct the bias of
+        // the unit's *first owned* layer output channelwise.
+        // unit outputs are (K, C, H, W) or (K, C)
+        let c = z_fp.shape[1];
+        let inner: usize = z_fp.shape[2..].iter().product::<usize>().max(1);
+        let k = z_fp.shape[0];
+        let mut delta = vec![0f64; c];
+        for i in 0..k {
+            for ch in 0..c {
+                let off = (i * c + ch) * inner;
+                for j in 0..inner {
+                    delta[ch] +=
+                        (z_q.data[off + j] - z_fp.data[off + j]) as f64;
+                }
+            }
+        }
+        let scale = 1.0 / (k * inner) as f64;
+        // the layer whose cout matches the unit output owns the correction
+        if let Some(&lid) = unit
+            .layer_ids
+            .iter()
+            .find(|&&l| model.layers[l].cout == c)
+        {
+            for ch in 0..c {
+                biases[lid].data[ch] -= (delta[ch] * scale) as f32;
+            }
+        }
+        // advance with corrected biases
+        let q_next = cal.advance(
+            unit, &q_main, q_skip.as_ref(), &qweights, &biases, &act_steps,
+            &nobits, false,
+        )?;
+        fp_main = z_fp;
+        q_main = q_next;
+        if unit.uses_skip {
+            fp_skip = None;
+            q_skip = None;
+        }
+    }
+
+    let act_steps = if bits.aq {
+        cal.init_act_steps(calib, &ws, &bs, bits, 4)?
+    } else {
+        act_steps
+    };
+    Ok(QuantizedModel {
+        weights: qweights,
+        biases,
+        act_steps,
+        bits: bits.clone(),
+        reports: vec![],
+        calib_seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// AdaRound baseline: layer-wise reconstruction, MSE objective.
+pub fn adaround_layer_cfg(base: &ReconConfig) -> ReconConfig {
+    ReconConfig {
+        gran: "layer".into(),
+        use_fim: false,
+        round_reg: true,
+        ..base.clone()
+    }
+}
+
+/// AdaQuant-like baseline: layer-wise MSE, no rounding regularization.
+pub fn adaquant_like_cfg(base: &ReconConfig) -> ReconConfig {
+    ReconConfig {
+        gran: "layer".into(),
+        use_fim: false,
+        round_reg: false,
+        ..base.clone()
+    }
+}
+
+/// BRECQ at an arbitrary granularity (Table 1 ablation runs this four ways).
+pub fn brecq_cfg(base: &ReconConfig, gran: &str) -> ReconConfig {
+    ReconConfig { gran: gran.into(), use_fim: true, round_reg: true,
+                  ..base.clone() }
+}

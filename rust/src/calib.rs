@@ -1,0 +1,169 @@
+//! Calibration data pipeline: raster loading, standardization, batching.
+//!
+//! The datasets are u8 NHWC rasters (see python/compile/dataset.py); this
+//! module converts them to the standardized NCHW f32 layout the executables
+//! expect, holds the calibration subset (the paper uses 1024 train images)
+//! and the test set, and serves deterministic batch views.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::model::DatasetInfo;
+use crate::store::load_u8;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+pub struct DataSet {
+    pub images: Tensor, // (N, 3, H, W) standardized
+    pub labels: Vec<usize>,
+}
+
+impl DataSet {
+    /// `which` is "train" or "test".
+    pub fn load(info: &DatasetInfo, which: &str) -> Result<DataSet> {
+        let n = match which {
+            "train" => info.train_n,
+            "test" => info.test_n,
+            _ => bail!("unknown split {which}"),
+        };
+        let img = info.img;
+        let x = load_u8(&Path::new(&info.dir).join(format!("{which}_x.bin")))?;
+        let y = load_u8(&Path::new(&info.dir).join(format!("{which}_y.bin")))?;
+        if x.len() != n * img * img * 3 || y.len() != n {
+            bail!(
+                "dataset size mismatch: {} vs {} / {} vs {}",
+                x.len(),
+                n * img * img * 3,
+                y.len(),
+                n
+            );
+        }
+        // u8 HWC -> standardized f32 CHW
+        let mut images = vec![0f32; n * 3 * img * img];
+        for i in 0..n {
+            for h in 0..img {
+                for w in 0..img {
+                    for c in 0..3 {
+                        let v = x[((i * img + h) * img + w) * 3 + c] as f32
+                            / 255.0;
+                        let v = (v - info.mean[c]) / info.std[c];
+                        images[((i * 3 + c) * img + h) * img + w] = v;
+                    }
+                }
+            }
+        }
+        Ok(DataSet {
+            images: Tensor::new(vec![n, 3, img, img], images),
+            labels: y.iter().map(|&v| v as usize).collect(),
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Contiguous batch view (copies — executables need owned literals).
+    pub fn batch(&self, start: usize, len: usize) -> Tensor {
+        self.images.slice0(start, len)
+    }
+
+    /// The calibration subset: `k` images sampled without replacement.
+    pub fn calib_subset(&self, k: usize, rng: &mut Rng) -> CalibSet {
+        let idx = rng.sample_indices(self.len(), k);
+        let inner = self.images.inner();
+        let mut data = Vec::with_capacity(k * inner);
+        let mut labels = Vec::with_capacity(k);
+        for &i in &idx {
+            data.extend_from_slice(
+                &self.images.data[i * inner..(i + 1) * inner],
+            );
+            labels.push(self.labels[i]);
+        }
+        let mut shape = self.images.shape.clone();
+        shape[0] = k;
+        CalibSet {
+            images: Tensor::new(shape, data),
+            labels,
+        }
+    }
+}
+
+/// The calibration working set (paper: 1024 images). Also constructible
+/// directly from distilled data (ZeroQ path).
+pub struct CalibSet {
+    pub images: Tensor, // (K, 3, H, W)
+    pub labels: Vec<usize>,
+}
+
+impl CalibSet {
+    pub fn len(&self) -> usize {
+        self.images.shape[0]
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn batch(&self, start: usize, len: usize) -> Tensor {
+        self.images.slice0(start, len)
+    }
+
+    /// One-hot labels for a batch (classes from the logits width).
+    pub fn onehot(&self, start: usize, len: usize, classes: usize) -> Tensor {
+        let mut data = vec![0f32; len * classes];
+        for (r, &lab) in self.labels[start..start + len].iter().enumerate() {
+            data[r * classes + lab] = 1.0;
+        }
+        Tensor::new(vec![len, classes], data)
+    }
+
+    /// Random batch of `len` sample indices (with replacement across calls,
+    /// without within a batch) — the reconstruction loop's sampler.
+    pub fn random_batch_rows(&self, len: usize, rng: &mut Rng) -> Vec<usize> {
+        rng.sample_indices(self.len(), len)
+    }
+
+    /// Gather rows of a cached activation tensor into a batch.
+    pub fn gather_rows(src: &Tensor, rows: &[usize]) -> Tensor {
+        let inner = src.inner();
+        let mut data = Vec::with_capacity(rows.len() * inner);
+        for &r in rows {
+            data.extend_from_slice(&src.data[r * inner..(r + 1) * inner]);
+        }
+        let mut shape = src.shape.clone();
+        shape[0] = rows.len();
+        Tensor::new(shape, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_rows_picks_rows() {
+        let src = Tensor::new(vec![4, 2], vec![0., 1., 2., 3., 4., 5., 6., 7.]);
+        let g = CalibSet::gather_rows(&src, &[3, 0]);
+        assert_eq!(g.shape, vec![2, 2]);
+        assert_eq!(g.data, vec![6., 7., 0., 1.]);
+    }
+
+    #[test]
+    fn onehot_layout() {
+        let cs = CalibSet {
+            images: Tensor::zeros(vec![3, 1, 1, 1]),
+            labels: vec![2, 0, 1],
+        };
+        let oh = cs.onehot(0, 3, 4);
+        assert_eq!(oh.shape, vec![3, 4]);
+        assert_eq!(
+            oh.data,
+            vec![0., 0., 1., 0., 1., 0., 0., 0., 0., 1., 0., 0.]
+        );
+    }
+}

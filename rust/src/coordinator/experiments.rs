@@ -1,0 +1,504 @@
+//! Experiment drivers: one per table/figure of the paper's evaluation.
+//!
+//! Each driver regenerates the corresponding rows (same methods, same
+//! sweep axes) on the synth10 substrate and saves a markdown+JSON report
+//! under artifacts/reports/. Absolute numbers differ from the paper (our
+//! substrate is a small synthetic task); EXPERIMENTS.md tracks the *shape*:
+//! who wins, where the cliffs are, how the curves order.
+
+use anyhow::Result;
+
+use crate::baselines;
+use crate::calib::CalibSet;
+use crate::coordinator::report::{pct, Table};
+use crate::coordinator::Env;
+use crate::distill::{self, DistillConfig};
+use crate::eval::{accuracy, EvalParams};
+use crate::hwsim::{size_mb, ArmCpu, HwMeasure, ModelSize, Systolic};
+use crate::mp::{GaConfig, GeneticSearch};
+use crate::qat::{self, QatConfig};
+use crate::recon::{BitConfig, Calibrator, QuantizedModel, ReconConfig};
+use crate::sensitivity::Profiler;
+use crate::util::stats;
+
+/// Shared experiment options (CLI-tunable).
+#[derive(Clone)]
+pub struct ExpOpts {
+    pub iters: usize,
+    pub calib_n: usize,
+    pub seed: u64,
+    pub seeds: usize, // variance study: #seeds for BRECQ rows
+    pub verbose: bool,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        ExpOpts { iters: 250, calib_n: 1024, seed: 0, seeds: 1,
+                  verbose: false }
+    }
+}
+
+fn base_cfg(o: &ExpOpts) -> ReconConfig {
+    ReconConfig {
+        iters: o.iters,
+        seed: o.seed,
+        verbose: o.verbose,
+        ..ReconConfig::default()
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Debug)]
+pub enum Method {
+    BiasCorr,
+    Omse,
+    AdaRoundLayer,
+    AdaQuantLike,
+    Brecq,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::BiasCorr => "Bias Correction*",
+            Method::Omse => "OMSE",
+            Method::AdaRoundLayer => "AdaRound (layer)*",
+            Method::AdaQuantLike => "AdaQuant-like*",
+            Method::Brecq => "BRECQ (ours)",
+        }
+    }
+}
+
+/// Quantize `model` with one method at the given bit config.
+pub fn quantize_with(
+    env: &Env,
+    model_name: &str,
+    method: Method,
+    calib: &CalibSet,
+    bits: &BitConfig,
+    o: &ExpOpts,
+) -> Result<QuantizedModel> {
+    let model = env.model(model_name);
+    let cal = Calibrator::new(&env.rt, &env.mf, model);
+    let cfg = base_cfg(o);
+    match method {
+        Method::BiasCorr => {
+            baselines::bias_correction(&env.rt, &env.mf, model, calib, bits)
+        }
+        Method::Omse => baselines::omse(&env.rt, &env.mf, model, calib, bits),
+        Method::AdaRoundLayer => {
+            cal.calibrate(calib, bits, &baselines::adaround_layer_cfg(&cfg))
+        }
+        Method::AdaQuantLike => {
+            cal.calibrate(calib, bits, &baselines::adaquant_like_cfg(&cfg))
+        }
+        Method::Brecq => {
+            cal.calibrate(calib, bits, &baselines::brecq_cfg(&cfg, "block"))
+        }
+    }
+}
+
+fn eval_quantized(
+    env: &Env,
+    model_name: &str,
+    qm: &QuantizedModel,
+) -> Result<f64> {
+    let test = env.test_set()?;
+    accuracy(&env.rt, env.model(model_name), &EvalParams::quantized(qm),
+             &test)
+}
+
+// ------------------------------------------------------------------
+// Table 1: reconstruction-granularity ablation (W2, A=FP)
+// ------------------------------------------------------------------
+
+pub fn table1(env: &Env, o: &ExpOpts) -> Result<Table> {
+    let mut t = Table::new(
+        "Table 1 — granularity ablation, 2-bit weights (top-1 %)",
+        &["Model", "FP", "Layer", "Block", "Stage", "Net"],
+    );
+    let train = env.train_set()?;
+    for mname in ["resnet_s", "mobilenetv2_s"] {
+        if !env.mf.models.contains_key(mname) {
+            println!("  table1 {mname}: not in manifest (export with \
+`python -m compile.aot --models {mname}`)");
+            continue;
+        }
+        let model = env.model(mname);
+        let calib = env.calib(&train, o.calib_n, o.seed);
+        let bits = BitConfig::uniform(model, 2, None, true);
+        let mut cells = vec![mname.to_string(), pct(model.fp_acc)];
+        for gran in ["layer", "block", "stage", "net"] {
+            let cal = Calibrator::new(&env.rt, &env.mf, model);
+            let cfg = baselines::brecq_cfg(&base_cfg(o), gran);
+            let qm = cal.calibrate(&calib, &bits, &cfg)?;
+            let acc = eval_quantized(env, mname, &qm)?;
+            println!("  table1 {mname} {gran}: {:.2}%", acc * 100.0);
+            cells.push(pct(acc));
+        }
+        t.row(cells);
+    }
+    Ok(t)
+}
+
+// ------------------------------------------------------------------
+// Table 2: weight-only PTQ comparison (W4/W3/W2, A=FP)
+// ------------------------------------------------------------------
+
+pub fn table2(env: &Env, o: &ExpOpts, models: &[String]) -> Result<Table> {
+    let mut t = Table::new(
+        "Table 2 — weight-only PTQ (top-1 %), activations FP",
+        &["Method", "Bits (W/A)", "resnet_s", "mobilenetv2_s", "regnet_s",
+          "mnasnet_s"],
+    );
+    let train = env.train_set()?;
+    let mut fp = vec!["Full Prec.".to_string(), "32/32".to_string()];
+    for m in ALL_MODELS {
+        fp.push(env.mf.models.get(m).map(|mi| pct(mi.fp_acc))
+            .unwrap_or_else(|| "-".into()));
+    }
+    t.row(fp);
+
+    for wbits in [4usize, 3, 2] {
+        for method in [Method::BiasCorr, Method::Omse,
+                       Method::AdaRoundLayer, Method::AdaQuantLike,
+                       Method::Brecq] {
+            let mut cells = vec![
+                method.name().to_string(),
+                format!("{wbits}/32"),
+            ];
+            for mname in ALL_MODELS {
+                if !models.iter().any(|m| m == mname)
+                    || !env.mf.models.contains_key(mname)
+                {
+                    cells.push("-".into());
+                    continue;
+                }
+                let model = env.model(mname);
+                let bits = BitConfig::uniform(model, wbits, None, true);
+                // variance study on the BRECQ rows
+                let runs = if method == Method::Brecq { o.seeds } else { 1 };
+                let mut accs = Vec::new();
+                for s in 0..runs {
+                    let calib =
+                        env.calib(&train, o.calib_n, o.seed + s as u64);
+                    let mut os = o.clone();
+                    os.seed = o.seed + s as u64;
+                    let qm = quantize_with(env, mname, method, &calib,
+                                           &bits, &os)?;
+                    accs.push(eval_quantized(env, mname, &qm)? * 100.0);
+                }
+                let cell = if runs > 1 {
+                    format!("{:.2}±{:.2}", stats::mean(&accs),
+                            stats::std_dev(&accs))
+                } else {
+                    format!("{:.2}", accs[0])
+                };
+                println!("  table2 {} W{wbits} {mname}: {cell}",
+                         method.name());
+                cells.push(cell);
+            }
+            t.row(cells);
+        }
+    }
+    Ok(t)
+}
+
+pub const ALL_MODELS: [&str; 4] =
+    ["resnet_s", "mobilenetv2_s", "regnet_s", "mnasnet_s"];
+
+// ------------------------------------------------------------------
+// Table 3: fully quantized (W4A4, W2A4)
+// ------------------------------------------------------------------
+
+pub fn table3(env: &Env, o: &ExpOpts, models: &[String]) -> Result<Table> {
+    let mut t = Table::new(
+        "Table 3 — fully quantized PTQ (top-1 %), 4-bit activations",
+        &["Method", "Bits (W/A)", "resnet_s", "mobilenetv2_s", "regnet_s",
+          "mnasnet_s"],
+    );
+    let train = env.train_set()?;
+    let mut fp = vec!["Full Prec.".to_string(), "32/32".to_string()];
+    for m in ALL_MODELS {
+        fp.push(env.mf.models.get(m).map(|mi| pct(mi.fp_acc))
+            .unwrap_or_else(|| "-".into()));
+    }
+    t.row(fp);
+
+    for wbits in [4usize, 2] {
+        for method in [Method::Omse, Method::AdaQuantLike, Method::Brecq] {
+            let mut cells = vec![
+                method.name().to_string(),
+                format!("{wbits}/4"),
+            ];
+            for mname in ALL_MODELS {
+                if !models.iter().any(|m| m == mname)
+                    || !env.mf.models.contains_key(mname)
+                {
+                    cells.push("-".into());
+                    continue;
+                }
+                let model = env.model(mname);
+                let bits = BitConfig::uniform(model, wbits, Some(4), true);
+                let calib = env.calib(&train, o.calib_n, o.seed);
+                let qm = quantize_with(env, mname, method, &calib, &bits, o)?;
+                let acc = eval_quantized(env, mname, &qm)?;
+                println!("  table3 {} W{wbits}A4 {mname}: {:.2}%",
+                         method.name(), acc * 100.0);
+                cells.push(pct(acc));
+            }
+            t.row(cells);
+        }
+    }
+    Ok(t)
+}
+
+// ------------------------------------------------------------------
+// Table 4: PTQ vs QAT cost comparison
+// ------------------------------------------------------------------
+
+pub fn table4(env: &Env, o: &ExpOpts, qat_steps: usize) -> Result<Table> {
+    let mut t = Table::new(
+        "Table 4 — BRECQ (PTQ) vs LSQ-QAT: accuracy and production cost",
+        &["Model", "Method", "Bits", "Top-1 %", "Size (MB)",
+          "#Train data", "Wall-clock (s)"],
+    );
+    let train = env.train_set()?;
+    for mname in ["resnet_s", "mobilenetv2_s"] {
+        if !env.mf.models.contains_key(mname) {
+            continue;
+        }
+        let model = env.model(mname);
+        let bits4 = BitConfig::uniform(model, 4, Some(4), true);
+        let sz = size_mb(model, &bits4.wbits);
+
+        // BRECQ with 1024 real calibration images
+        let calib = env.calib(&train, o.calib_n, o.seed);
+        let cal = Calibrator::new(&env.rt, &env.mf, model);
+        let qm = cal.calibrate(&calib, &bits4,
+                               &baselines::brecq_cfg(&base_cfg(o), "block"))?;
+        let acc = eval_quantized(env, mname, &qm)?;
+        t.row(vec![mname.into(), "BRECQ (ours)".into(), "4/4".into(),
+                   pct(acc), format!("{sz:.2}"),
+                   format!("{}", o.calib_n),
+                   format!("{:.1}", qm.calib_seconds)]);
+        println!("  table4 {mname} brecq: {:.2}% in {:.0}s",
+                 acc * 100.0, qm.calib_seconds);
+
+        // BRECQ with distilled (zero-shot) data — resnet only (the
+        // distill executable is exported for it)
+        if model.distill_exe.is_some() {
+            let t0 = std::time::Instant::now();
+            let dcal = distill::distill(&env.rt, &env.mf, model,
+                                        &DistillConfig {
+                                            total: o.calib_n,
+                                            seed: o.seed,
+                                            ..Default::default()
+                                        })?;
+            let qm = cal.calibrate(&dcal, &bits4,
+                                   &baselines::brecq_cfg(&base_cfg(o),
+                                                         "block"))?;
+            let acc = eval_quantized(env, mname, &qm)?;
+            t.row(vec![mname.into(), "BRECQ (distilled data)".into(),
+                       "4/4".into(), pct(acc), format!("{sz:.2}"),
+                       "0".into(),
+                       format!("{:.1}", t0.elapsed().as_secs_f64())]);
+            println!("  table4 {mname} brecq-distilled: {:.2}%", acc * 100.0);
+        }
+
+        // LSQ QAT on the full training set
+        if model.qat_exe.is_some() {
+            let r = qat::train(&env.rt, &env.mf, model, &train,
+                               &QatConfig {
+                                   steps: qat_steps,
+                                   seed: o.seed,
+                                   verbose: o.verbose,
+                                   ..Default::default()
+                               })?;
+            let acc = eval_quantized(env, mname, &r.model)?;
+            t.row(vec![mname.into(), "LSQ QAT".into(), "4/4".into(),
+                       pct(acc), format!("{sz:.2}"),
+                       format!("{}", train.len()),
+                       format!("{:.1}", r.train_seconds)]);
+            println!("  table4 {mname} qat({qat_steps} steps): {:.2}% in {:.0}s",
+                     acc * 100.0, r.train_seconds);
+        }
+    }
+    Ok(t)
+}
+
+// ------------------------------------------------------------------
+// Fig 2 / Fig 4: mixed precision under size / latency budgets
+// ------------------------------------------------------------------
+
+pub fn mixed_precision(
+    env: &Env,
+    o: &ExpOpts,
+    model_name: &str,
+    hw_kind: &str, // "size" | "fpga" | "arm"
+) -> Result<Table> {
+    let model = env.model(model_name);
+    let train = env.train_set()?;
+    let calib = env.calib(&train, o.calib_n, o.seed);
+    let cal = Calibrator::new(&env.rt, &env.mf, model);
+    let (ws, bs) = cal.fp_weights()?;
+
+    // sensitivity LUT (with intra-block off-diagonal terms, 2-bit only)
+    let prof = Profiler { rt: &env.rt, mf: &env.mf, model };
+    let table = prof.measure(&calib, &ws, &bs, true)?;
+
+    let systolic = Systolic::default();
+    let arm = ArmCpu::default();
+    let size = ModelSize;
+    let hw: &dyn HwMeasure = match hw_kind {
+        "size" => &size,
+        "fpga" => &systolic,
+        "arm" => {
+            anyhow::ensure!(ArmCpu::supports(model),
+                "ARM GEMM model supports normal conv only (paper B.4.3)");
+            &arm
+        }
+        _ => anyhow::bail!("unknown hw '{hw_kind}'"),
+    };
+    let abits = 8usize; // the paper keeps A8 in the MP study
+
+    let mut t = Table::new(
+        &format!("Mixed precision — {model_name} under {} budgets",
+                 hw.name()),
+        &["Config", "H(c) [{unit}]", "Avg W-bits", "Top-1 %",
+          "GA predicted loss", "GA seconds"],
+    );
+    t.headers[1] = format!("H(c) [{}]", hw.unit());
+
+    // unified precision anchor points
+    let mut anchors = Vec::new();
+    for wb in [8usize, 4, 2] {
+        let bits = BitConfig::uniform(model, wb, Some(abits), true);
+        let cost = hw.measure(model, &bits.wbits, abits);
+        let qm = cal.calibrate(&calib, &bits,
+                               &baselines::brecq_cfg(&base_cfg(o), "block"))?;
+        let acc = eval_quantized(env, model_name, &qm)?;
+        println!("  mp {model_name} unified W{wb}: H={cost:.3} acc={:.2}%",
+                 acc * 100.0);
+        t.row(vec![format!("unified W{wb}"), format!("{cost:.3}"),
+                   format!("{wb}"), pct(acc), "-".into(), "-".into()]);
+        anchors.push(cost);
+    }
+
+    // mixed precision at budgets interpolating the unified anchors
+    let (hi, lo) = (anchors[1], anchors[2]); // W4 .. W2 corridor
+    for frac in [0.85f64, 0.6, 0.35] {
+        let budget = lo + (hi - lo) * frac;
+        let ga = GeneticSearch { model, table: &table, hw, abits, budget };
+        let res = ga.run(&GaConfig { seed: o.seed, ..Default::default() })?;
+        let bits = BitConfig::mixed(res.wbits.clone(), abits, true);
+        let qm = cal.calibrate(&calib, &bits,
+                               &baselines::brecq_cfg(&base_cfg(o), "block"))?;
+        let acc = eval_quantized(env, model_name, &qm)?;
+        let avg: f64 = res.wbits.iter().sum::<usize>() as f64
+            / res.wbits.len() as f64;
+        println!(
+            "  mp {model_name} budget {budget:.3}: H={:.3} avg {avg:.2} \
+             bits acc={:.2}% ({} cfgs in {:.2}s)",
+            res.hw_cost, acc * 100.0, res.evaluated, res.seconds);
+        t.row(vec![format!("GA mixed (δ={budget:.3})"),
+                   format!("{:.3}", res.hw_cost),
+                   format!("{avg:.2}"), pct(acc),
+                   format!("{:.4}", res.predicted_loss),
+                   format!("{:.2}", res.seconds)]);
+    }
+    Ok(t)
+}
+
+// ------------------------------------------------------------------
+// Table 6 / B.1: first & last layer at 8-bit vs quantized
+// ------------------------------------------------------------------
+
+pub fn table6(env: &Env, o: &ExpOpts) -> Result<Table> {
+    let mut t = Table::new(
+        "Table 6 — impact of keeping first/last layer at 8-bit (A8)",
+        &["Model", "First 8b", "Last 8b", "W-bits", "Top-1 %",
+          "Size (MB)", "FPGA lat (ms)"],
+    );
+    let train = env.train_set()?;
+    let systolic = Systolic::default();
+    for mname in ["resnet_s", "mobilenetv2_s", "regnet_s"] {
+        if !env.mf.models.contains_key(mname) {
+            continue;
+        }
+        let model = env.model(mname);
+        let calib = env.calib(&train, o.calib_n, o.seed);
+        let cal = Calibrator::new(&env.rt, &env.mf, model);
+        for wb in [4usize, 2] {
+            for (f8, l8) in [(true, true), (false, true), (true, false),
+                             (false, false)] {
+                let mut bits = BitConfig::uniform(model, wb, Some(8), false);
+                if f8 {
+                    bits.wbits[model.first_layer()] = 8;
+                }
+                if l8 {
+                    bits.wbits[model.last_layer()] = 8;
+                }
+                let qm = cal.calibrate(
+                    &calib, &bits,
+                    &baselines::brecq_cfg(&base_cfg(o), "block"))?;
+                let acc = eval_quantized(env, mname, &qm)?;
+                let sz = size_mb(model, &bits.wbits);
+                let lat = systolic.model_ms(model, &bits.wbits, 8);
+                println!("  table6 {mname} W{wb} f8={f8} l8={l8}: {:.2}%",
+                         acc * 100.0);
+                t.row(vec![mname.into(),
+                           if f8 { "yes" } else { "no" }.into(),
+                           if l8 { "yes" } else { "no" }.into(),
+                           format!("{wb}"), pct(acc), format!("{sz:.3}"),
+                           format!("{lat:.2}")]);
+            }
+        }
+    }
+    Ok(t)
+}
+
+// ------------------------------------------------------------------
+// Fig 3 / B.2: calibration-set size and data source
+// ------------------------------------------------------------------
+
+pub fn fig3(env: &Env, o: &ExpOpts) -> Result<Table> {
+    let mut t = Table::new(
+        "Fig 3 — effect of #calibration images and data source (resnet_s)",
+        &["Source", "#Images", "W-bits", "Top-1 %"],
+    );
+    let mname = "resnet_s";
+    let model = env.model(mname);
+    let train = env.train_set()?;
+    let cal = Calibrator::new(&env.rt, &env.mf, model);
+    for wb in [4usize, 2] {
+        for n in [32usize, 128, 256, 512, 1024] {
+            let calib = env.calib(&train, n, o.seed);
+            let bits = BitConfig::uniform(model, wb, None, true);
+            let qm = cal.calibrate(&calib, &bits,
+                                   &baselines::brecq_cfg(&base_cfg(o),
+                                                         "block"))?;
+            let acc = eval_quantized(env, mname, &qm)?;
+            println!("  fig3 real n={n} W{wb}: {:.2}%", acc * 100.0);
+            t.row(vec!["real".into(), format!("{n}"), format!("{wb}"),
+                       pct(acc)]);
+        }
+        // distilled data source
+        for n in [256usize, 1024] {
+            let dcal = distill::distill(&env.rt, &env.mf, model,
+                                        &DistillConfig {
+                                            total: n,
+                                            seed: o.seed,
+                                            ..Default::default()
+                                        })?;
+            let bits = BitConfig::uniform(model, wb, None, true);
+            let qm = cal.calibrate(&dcal, &bits,
+                                   &baselines::brecq_cfg(&base_cfg(o),
+                                                         "block"))?;
+            let acc = eval_quantized(env, mname, &qm)?;
+            println!("  fig3 distilled n={n} W{wb}: {:.2}%", acc * 100.0);
+            t.row(vec!["distilled".into(), format!("{n}"), format!("{wb}"),
+                       pct(acc)]);
+        }
+    }
+    Ok(t)
+}

@@ -1,0 +1,53 @@
+//! Coordinator: environment bootstrap, experiment configuration and report
+//! writing — the glue the CLI and the experiment drivers run on.
+
+pub mod experiments;
+pub mod report;
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::calib::{CalibSet, DataSet};
+use crate::model::{Manifest, ModelInfo};
+use crate::runtime::Runtime;
+use crate::util::rng::Rng;
+
+/// Everything an experiment needs: manifest, runtime, datasets.
+pub struct Env {
+    pub mf: Manifest,
+    pub rt: Runtime,
+    pub dir: PathBuf,
+}
+
+impl Env {
+    /// `dir` defaults to ./artifacts (or $BRECQ_ARTIFACTS).
+    pub fn bootstrap(dir: Option<String>) -> Result<Env> {
+        let dir = PathBuf::from(
+            dir.or_else(|| std::env::var("BRECQ_ARTIFACTS").ok())
+                .unwrap_or_else(|| "artifacts".into()),
+        );
+        let mf = Manifest::load(&dir)?;
+        let rt = Runtime::new(&dir, &mf.json)?;
+        Ok(Env { mf, rt, dir })
+    }
+
+    pub fn model(&self, name: &str) -> &ModelInfo {
+        self.mf.model(name)
+    }
+
+    pub fn train_set(&self) -> Result<DataSet> {
+        DataSet::load(&self.mf.dataset, "train")
+    }
+
+    pub fn test_set(&self) -> Result<DataSet> {
+        DataSet::load(&self.mf.dataset, "test")
+    }
+
+    /// The paper's calibration protocol: `k` images from the train set.
+    pub fn calib(&self, train: &DataSet, k: usize, seed: u64)
+        -> CalibSet {
+        let mut rng = Rng::new(seed ^ 0xca11b);
+        train.calib_subset(k, &mut rng)
+    }
+}

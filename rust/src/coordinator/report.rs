@@ -1,0 +1,127 @@
+//! Markdown table / JSON report writers for the experiment drivers.
+//! Each experiment prints its table to stdout (mirroring the paper's rows)
+//! and appends a machine-readable record to artifacts/reports/.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        let mut out = format!("\n### {}\n\n", self.title);
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.to_markdown());
+    }
+
+    /// Persist under artifacts/reports/<id>.md (+ .json).
+    pub fn save(&self, dir: &Path, id: &str) -> Result<()> {
+        let rep = dir.join("reports");
+        fs::create_dir_all(&rep)?;
+        fs::write(rep.join(format!("{id}.md")), self.to_markdown())?;
+        let json = crate::util::json::obj(vec![
+            ("title", crate::util::json::s(&self.title)),
+            (
+                "headers",
+                Json::Arr(
+                    self.headers
+                        .iter()
+                        .map(|h| crate::util::json::s(h))
+                        .collect(),
+                ),
+            ),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::Arr(
+                                r.iter()
+                                    .map(|c| crate::util::json::s(c))
+                                    .collect(),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        fs::write(rep.join(format!("{id}.json")), json.to_string())?;
+        Ok(())
+    }
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{:.2}", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_layout() {
+        let mut t = Table::new("T", &["a", "bee"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### T"));
+        assert!(md.contains("| a | bee |"));
+        assert!(md.contains("| 1 | 2   |"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("T", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,132 @@
+//! ZeroQ-style data distillation (paper §B.2, Fig. 3, Table 4's
+//! zero-shot row): synthesize calibration images by matching the stored
+//! (pre-fold) BatchNorm statistics of the FP model, via the AOT
+//! `distill_grad` executable (BN-matching loss + ∂loss/∂images) and
+//! host-side Adam on the pixels.
+//!
+//! Labels for the distilled set (needed by the FIM pass) are the FP
+//! model's own predictions — the distilled data has no ground truth.
+
+use anyhow::Result;
+
+use crate::calib::CalibSet;
+use crate::eval::{forward, EvalParams};
+use crate::model::{Manifest, ModelInfo};
+use crate::optim::Adam;
+use crate::recon::Calibrator;
+use crate::runtime::Runtime;
+use crate::store::Store;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+pub struct DistillConfig {
+    pub total: usize, // number of distilled images (multiple of batch)
+    pub iters: usize, // Adam steps per batch
+    pub lr: f32,
+    pub seed: u64,
+    pub verbose: bool,
+}
+
+impl Default for DistillConfig {
+    fn default() -> Self {
+        DistillConfig { total: 1024, iters: 160, lr: 0.1, seed: 0,
+                        verbose: false }
+    }
+}
+
+/// Generate a distilled calibration set.
+pub fn distill(
+    rt: &Runtime,
+    mf: &Manifest,
+    model: &ModelInfo,
+    cfg: &DistillConfig,
+) -> Result<CalibSet> {
+    let exe = model.distill_exe.as_ref().ok_or_else(|| {
+        anyhow::anyhow!("{}: no distill executable", model.name)
+    })?;
+    let b = model.distill_batch;
+    assert!(cfg.total % b == 0);
+    let store = mf.load_weights(model)?;
+
+    // raw (unfolded) conv params + BN stats, in model conv order, then fc
+    let convs: Vec<&crate::model::LayerInfo> = model
+        .layers
+        .iter()
+        .filter(|l| l.kind == "conv")
+        .collect();
+    let fcs: Vec<&crate::model::LayerInfo> = model
+        .layers
+        .iter()
+        .filter(|l| l.kind == "fc")
+        .collect();
+    let mut fixed: Vec<Tensor> = Vec::new();
+    for l in &convs {
+        fixed.push(get(&store, &format!("raw.{}.w", l.name)));
+        fixed.push(get(&store, &format!("raw.{}.gamma", l.name)));
+        fixed.push(get(&store, &format!("raw.{}.beta", l.name)));
+        fixed.push(get(&store, &format!("bnstat.{}.mu", l.name)));
+        fixed.push(get(&store, &format!("bnstat.{}.var", l.name)));
+    }
+    for l in &fcs {
+        fixed.push(get(&store, &format!("raw.{}.w", l.name)));
+        fixed.push(get(&store, &format!("raw.{}.b", l.name)));
+    }
+
+    let hw = mf.dataset.img;
+    let mut rng = Rng::new(cfg.seed);
+    let mut batches = Vec::new();
+    for bi in 0..cfg.total / b {
+        let mut x = Tensor::new(
+            vec![b, 3, hw, hw],
+            (0..b * 3 * hw * hw)
+                .map(|_| rng.gauss() as f32)
+                .collect(),
+        );
+        let mut opt = Adam::new(cfg.lr, &[x.numel()]);
+        let mut last = f32::INFINITY;
+        for _ in 0..cfg.iters {
+            let mut args: Vec<&Tensor> = vec![&x];
+            for t in &fixed {
+                args.push(t);
+            }
+            let out = rt.run(exe, &args)?;
+            last = out[0].data[0];
+            opt.step(&mut [&mut x], &[&out[1]]);
+        }
+        if cfg.verbose {
+            eprintln!("  [distill {}] batch {bi} loss {last:.4}",
+                      model.name);
+        }
+        batches.push(x);
+    }
+    let images = Tensor::stack0(&batches);
+
+    // pseudo-labels from the FP model
+    let cal = Calibrator::new(rt, mf, model);
+    let (ws, bs) = cal.fp_weights()?;
+    let p = EvalParams::fp(model, &ws, &bs);
+    let eb = model.eval_batch;
+    let total = cfg.total;
+    let mut labels = Vec::with_capacity(total);
+    let mut start = 0;
+    while start < total {
+        let take = eb.min(total - start);
+        let imgs = if take == eb {
+            images.slice0(start, eb)
+        } else {
+            Tensor::stack0(&[
+                images.slice0(start, take),
+                images.slice0(0, eb - take),
+            ])
+        };
+        let logits = forward(rt, model, &p, &imgs)?;
+        let preds = logits.argmax_rows();
+        labels.extend_from_slice(&preds[..take]);
+        start += take;
+    }
+    Ok(CalibSet { images, labels })
+}
+
+fn get(store: &Store, name: &str) -> Tensor {
+    store.get(name).clone()
+}

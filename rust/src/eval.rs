@@ -1,0 +1,169 @@
+//! Model evaluation through the AOT `eval_fwd` executable: top-1 accuracy
+//! and cross-entropy loss over arbitrary (weights, act-steps, flag)
+//! configurations — FP reference, hard-quantized, or mixed precision.
+
+use anyhow::Result;
+
+use crate::calib::{CalibSet, DataSet};
+use crate::model::{Manifest, ModelInfo};
+use crate::quant::act_bounds;
+use crate::recon::{BitConfig, QuantizedModel};
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+/// Full eval-forward parameterization.
+pub struct EvalParams<'t> {
+    pub weights: &'t [Tensor],
+    pub biases: &'t [Tensor],
+    pub act_steps: Vec<f32>,
+    pub bits: BitConfig,
+    pub aq: bool,
+}
+
+impl<'t> EvalParams<'t> {
+    pub fn fp(model: &ModelInfo, ws: &'t [Tensor], bs: &'t [Tensor]) -> Self {
+        EvalParams {
+            weights: ws,
+            biases: bs,
+            act_steps: vec![1.0; model.layers.len()],
+            bits: BitConfig::uniform(model, 8, None, false),
+            aq: false,
+        }
+    }
+
+    pub fn quantized(qm: &'t QuantizedModel) -> Self {
+        EvalParams {
+            weights: &qm.weights,
+            biases: &qm.biases,
+            act_steps: qm.act_steps.clone(),
+            bits: qm.bits.clone(),
+            aq: qm.bits.aq,
+        }
+    }
+}
+
+/// Logits for `images` (must match the eval batch size of the model).
+pub fn forward(
+    rt: &Runtime,
+    model: &ModelInfo,
+    p: &EvalParams,
+    images: &Tensor,
+) -> Result<Tensor> {
+    let nl = model.layers.len();
+    let flag = Tensor::scalar1(if p.aq { 1.0 } else { 0.0 });
+    let mut scalars = Vec::with_capacity(nl);
+    for (l, layer) in model.layers.iter().enumerate() {
+        let (lo, hi) = act_bounds(p.bits.abits[l], layer.site_signed);
+        scalars.push((
+            Tensor::scalar1(p.act_steps[l]),
+            Tensor::scalar1(lo),
+            Tensor::scalar1(hi),
+        ));
+    }
+    let mut args: Vec<&Tensor> = vec![images];
+    for l in 0..nl {
+        args.push(&p.weights[l]);
+        args.push(&p.biases[l]);
+    }
+    for (st, lo, hi) in &scalars {
+        args.push(st);
+        args.push(lo);
+        args.push(hi);
+    }
+    args.push(&flag);
+    let mut out = rt.run(&model.fwd_exe, &args)?;
+    Ok(out.remove(0))
+}
+
+/// Top-1 accuracy over a dataset (handles the trailing partial batch by
+/// padding with wraparound rows and masking them out of the count).
+pub fn accuracy(
+    rt: &Runtime,
+    model: &ModelInfo,
+    p: &EvalParams,
+    data: &DataSet,
+) -> Result<f64> {
+    let b = model.eval_batch;
+    let n = data.len();
+    let mut correct = 0usize;
+    let mut seen = 0usize;
+    let mut start = 0;
+    while start < n {
+        let take = b.min(n - start);
+        let images = if take == b {
+            data.batch(start, b)
+        } else {
+            // pad by wrapping (cyclically); padded rows are ignored below
+            let mut parts = vec![data.batch(start, take)];
+            let mut have = take;
+            while have < b {
+                let chunk = (b - have).min(n);
+                parts.push(data.batch(0, chunk));
+                have += chunk;
+            }
+            Tensor::stack0(&parts)
+        };
+        let logits = forward(rt, model, p, &images)?;
+        let pred = logits.argmax_rows();
+        for i in 0..take {
+            if pred[i] == data.labels[start + i] {
+                correct += 1;
+            }
+        }
+        seen += take;
+        start += take;
+    }
+    Ok(correct as f64 / seen as f64)
+}
+
+/// Mean cross-entropy over a calibration set (sensitivity fitness signal).
+pub fn calib_loss(
+    rt: &Runtime,
+    mf: &Manifest,
+    model: &ModelInfo,
+    p: &EvalParams,
+    calib: &CalibSet,
+) -> Result<f64> {
+    let b = model.eval_batch;
+    let n = calib.len();
+    let classes = mf.dataset.classes;
+    let mut total = 0.0f64;
+    let mut seen = 0usize;
+    let mut start = 0;
+    while start + b <= n {
+        let images = calib.batch(start, b);
+        let logits = forward(rt, model, p, &images)?;
+        for i in 0..b {
+            let row = &logits.data[i * classes..(i + 1) * classes];
+            let m = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+            let lse: f32 =
+                row.iter().map(|&x| (x - m).exp()).sum::<f32>().ln() + m;
+            total += (lse - row[calib.labels[start + i]]) as f64;
+            seen += 1;
+        }
+        start += b;
+    }
+    // trailing partial chunk (calib 1024 with eval batch 200): wrap-pad,
+    // tiling the set cyclically when it is smaller than the pad
+    if start < n {
+        let take = n - start;
+        let mut parts = vec![calib.batch(start, take)];
+        let mut have = take;
+        while have < b {
+            let chunk = (b - have).min(n);
+            parts.push(calib.batch(0, chunk));
+            have += chunk;
+        }
+        let images = Tensor::stack0(&parts);
+        let logits = forward(rt, model, p, &images)?;
+        for i in 0..take {
+            let row = &logits.data[i * classes..(i + 1) * classes];
+            let m = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+            let lse: f32 =
+                row.iter().map(|&x| (x - m).exp()).sum::<f32>().ln() + m;
+            total += (lse - row[calib.labels[start + i]]) as f64;
+            seen += 1;
+        }
+    }
+    Ok(total / seen as f64)
+}

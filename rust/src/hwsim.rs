@@ -1,0 +1,401 @@
+//! Hardware performance models H(c) for mixed-precision search
+//! (paper Appendix B.4.3).
+//!
+//! Three measurement functions over a per-layer bit assignment:
+//!
+//!  * `ModelSize` — weight bytes at the assigned precision (+f32 biases),
+//!  * `Systolic`  — tile-level cycle simulation of the paper's self-built
+//!    precision-scalable systolic accelerator: 16x16 MAC array whose peak
+//!    throughput scales linearly as precision decreases (256 GMAC/s at
+//!    8x8-bit up to 4 TMAC/s at 2x2-bit, via scalable function units à la
+//!    BitFusion), a double-buffered on-chip buffer with bounded DRAM
+//!    bandwidth, and the parallelism penalty for depthwise/group conv the
+//!    appendix calls out ("the parallelism of the specific layer ... is
+//!    limited"),
+//!  * `ArmCpu`    — the redesigned low-bit GEMM latency model of Han et al.
+//!    2020: no sub-8-bit ALUs on ARM, so compute does not speed up, but
+//!    bit-packing cuts data movement, and lower bit-widths allow more
+//!    accumulations into an 8-bit register before a 16-bit widening move.
+//!    Like the paper's implementation it only supports normal convolution
+//!    (depthwise/group layers are rejected), which is why Fig. 4 only shows
+//!    ResNets.
+//!
+//! All simulators are deterministic functions of the manifest geometry —
+//! they run inside the GA fitness loop, so they must be microsecond-fast.
+
+use crate::model::{LayerInfo, ModelInfo};
+
+/// A hardware measurement function H(c) (Eq. 11).
+pub trait HwMeasure {
+    /// Cost of the model under per-layer weight bits `wbits` and uniform
+    /// activation bits `abits`. Units: bytes (size) or milliseconds.
+    fn measure(&self, model: &ModelInfo, wbits: &[usize], abits: usize)
+        -> f64;
+    fn unit(&self) -> &'static str;
+    fn name(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------------
+// Model size
+// ---------------------------------------------------------------------
+
+pub struct ModelSize;
+
+impl HwMeasure for ModelSize {
+    fn measure(&self, model: &ModelInfo, wbits: &[usize], _abits: usize)
+        -> f64 {
+        let mut bits: u64 = 0;
+        for (l, layer) in model.layers.iter().enumerate() {
+            let n: u64 = layer.wshape.iter().product::<usize>() as u64;
+            bits += n * wbits[l] as u64;
+            bits += layer.cout as u64 * 32; // biases kept f32
+        }
+        bits as f64 / 8.0
+    }
+
+    fn unit(&self) -> &'static str {
+        "bytes"
+    }
+
+    fn name(&self) -> &'static str {
+        "model-size"
+    }
+}
+
+pub fn size_mb(model: &ModelInfo, wbits: &[usize]) -> f64 {
+    ModelSize.measure(model, wbits, 8) / (1024.0 * 1024.0)
+}
+
+// ---------------------------------------------------------------------
+// Precision-scalable systolic accelerator (FPGA)
+// ---------------------------------------------------------------------
+
+pub struct Systolic {
+    /// MAC array geometry (rows = input-channel lanes, cols = out channels)
+    pub rows: usize,
+    pub cols: usize,
+    /// clock in MHz -> 16x16 @ 1000 MHz = 256 GMAC/s at 8x8
+    pub clock_mhz: f64,
+    /// DRAM <-> on-chip buffer bandwidth, bytes/cycle
+    pub dram_bpc: f64,
+    /// fixed per-layer launch overhead, cycles
+    pub launch_cycles: f64,
+    /// spatial tile (output pixels per pass)
+    pub tile_px: usize,
+}
+
+impl Default for Systolic {
+    fn default() -> Self {
+        Systolic {
+            rows: 16,
+            cols: 16,
+            clock_mhz: 1000.0,
+            dram_bpc: 8.0,
+            launch_cycles: 2000.0,
+            tile_px: 64,
+        }
+    }
+}
+
+impl Systolic {
+    /// Precision-scaled MACs/cycle of the full array: peak 256 at 8x8,
+    /// x2 per halved operand width (scalable function units).
+    fn macs_per_cycle(&self, wbit: usize, abit: usize) -> f64 {
+        (self.rows * self.cols) as f64 * (8.0 / wbit as f64)
+            * (8.0 / abit as f64)
+    }
+
+    /// Cycle count for one layer (tile-level simulation).
+    pub fn layer_cycles(&self, l: &LayerInfo, wbit: usize, abit: usize)
+        -> f64 {
+        let h_out = (l.h_in / l.stride).max(1);
+        let w_out = (l.w_in / l.stride).max(1);
+        let out_px = (h_out * w_out).max(1);
+        let cin_g = (l.cin / l.groups).max(1);
+
+        // array utilization: rows carry input-channel lanes (depthwise has
+        // 1), cols carry output channels
+        let row_util = (cin_g.min(self.rows)) as f64 / self.rows as f64;
+        let col_util = (l.cout.min(self.cols)) as f64 / self.cols as f64;
+        let util = (row_util * col_util).max(1e-3);
+
+        let peak = self.macs_per_cycle(wbit, abit);
+        let weight_bytes =
+            l.wshape.iter().product::<usize>() as f64 * wbit as f64 / 8.0;
+
+        // tiles over output pixels; weights stream once (double-buffered),
+        // activations stream per tile
+        let ntiles = (out_px + self.tile_px - 1) / self.tile_px;
+        let macs_per_tile = l.macs as f64 / out_px as f64
+            * self.tile_px.min(out_px) as f64;
+        let act_in_bytes_tile = (self.tile_px.min(out_px)
+            * l.stride
+            * l.stride) as f64
+            * l.cin as f64
+            * abit as f64
+            / 8.0;
+        let act_out_bytes_tile =
+            self.tile_px.min(out_px) as f64 * l.cout as f64 * abit as f64
+                / 8.0;
+
+        let mut cycles = self.launch_cycles;
+        // weight fill overlaps the first tile only partially
+        cycles += weight_bytes / self.dram_bpc;
+        for _ in 0..ntiles {
+            let compute = macs_per_tile / (peak * util);
+            let mem =
+                (act_in_bytes_tile + act_out_bytes_tile) / self.dram_bpc;
+            cycles += compute.max(mem); // double buffering: overlap
+        }
+        cycles
+    }
+
+    pub fn model_ms(&self, model: &ModelInfo, wbits: &[usize], abits: usize)
+        -> f64 {
+        let total: f64 = model
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| self.layer_cycles(l, wbits[i], abits))
+            .sum();
+        total / (self.clock_mhz * 1e3) // cycles @ MHz -> ms
+    }
+}
+
+impl HwMeasure for Systolic {
+    fn measure(&self, model: &ModelInfo, wbits: &[usize], abits: usize)
+        -> f64 {
+        self.model_ms(model, wbits, abits)
+    }
+
+    fn unit(&self) -> &'static str {
+        "ms"
+    }
+
+    fn name(&self) -> &'static str {
+        "systolic-fpga"
+    }
+}
+
+// ---------------------------------------------------------------------
+// ARM mobile CPU low-bit GEMM (Han et al. 2020 model)
+// ---------------------------------------------------------------------
+
+pub struct ArmCpu {
+    /// effective MAC throughput of the NEON kernel, MMAC/s
+    pub mmacs: f64,
+    /// memory streaming bandwidth, MB/s
+    pub mem_mbs: f64,
+    /// per-layer call overhead, ms
+    pub overhead_ms: f64,
+}
+
+impl Default for ArmCpu {
+    fn default() -> Self {
+        // Raspberry Pi 3B-class: quad A53 @1.2GHz
+        ArmCpu { mmacs: 3200.0, mem_mbs: 1800.0, overhead_ms: 0.12 }
+    }
+}
+
+impl ArmCpu {
+    /// How many low-bit products fit an 8-bit accumulator before widening:
+    /// products of w-bit x a-bit values need (w + a) bits headroom; the
+    /// remaining 16-(w+a) bits allow 2^(16-w-a) accumulations per 16-bit
+    /// lane vs 1 for 8x8 — modelled as a widening-traffic divisor.
+    fn widen_divisor(wbit: usize, abit: usize) -> f64 {
+        let head = 16i32 - (wbit + abit) as i32;
+        2f64.powi(head.clamp(0, 6)) // 8x8 -> 1, 4x8 -> 16x fewer widens
+    }
+
+    pub fn layer_ms(&self, l: &LayerInfo, wbit: usize, abit: usize) -> f64 {
+        assert!(
+            l.groups == 1 || l.kind == "fc",
+            "ArmCpu GEMM model supports normal convolution only (paper B.4.3)"
+        );
+        let weight_mb = l.wshape.iter().product::<usize>() as f64
+            * wbit as f64
+            / 8.0
+            / 1e6;
+        let h_out = (l.h_in / l.stride).max(1);
+        let w_out = (l.w_in / l.stride).max(1);
+        // im2col activation traffic (packed at abit)
+        let act_mb = (h_out * w_out * l.cin * l.k * l.k) as f64
+            * abit as f64
+            / 8.0
+            / 1e6
+            + (h_out * w_out * l.cout) as f64 * abit as f64 / 8.0 / 1e6;
+        // widening moves: one 8->16 transfer per `widen_divisor` MACs
+        let widen_mb = l.macs as f64 * 2.0
+            / Self::widen_divisor(wbit, abit)
+            / 1e6;
+        let mem_ms = (weight_mb + act_mb + widen_mb) / self.mem_mbs * 1e3;
+        let compute_ms = l.macs as f64 / (self.mmacs * 1e6) * 1e3;
+        self.overhead_ms + compute_ms.max(mem_ms)
+    }
+
+    pub fn model_ms(&self, model: &ModelInfo, wbits: &[usize], abits: usize)
+        -> f64 {
+        model
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| self.layer_ms(l, wbits[i], abits))
+            .sum()
+    }
+
+    /// The model only covers normal conv; callers must check first.
+    pub fn supports(model: &ModelInfo) -> bool {
+        model
+            .layers
+            .iter()
+            .all(|l| l.groups == 1 || l.kind == "fc")
+    }
+}
+
+impl HwMeasure for ArmCpu {
+    fn measure(&self, model: &ModelInfo, wbits: &[usize], abits: usize)
+        -> f64 {
+        self.model_ms(model, wbits, abits)
+    }
+
+    fn unit(&self) -> &'static str {
+        "ms"
+    }
+
+    fn name(&self) -> &'static str {
+        "arm-cpu"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv(name: &str, cin: usize, cout: usize, k: usize, stride: usize,
+            groups: usize, hw: usize) -> LayerInfo {
+        let macs = (hw / stride) * (hw / stride) * cout * (cin / groups)
+            * k * k;
+        LayerInfo {
+            name: name.into(),
+            kind: "conv".into(),
+            cin,
+            cout,
+            k,
+            stride,
+            groups,
+            relu: true,
+            site_signed: false,
+            h_in: hw,
+            w_in: hw,
+            macs: macs as u64,
+            nparams: (cout * (cin / groups) * k * k + cout) as u64,
+            wshape: vec![cout, cin / groups, k, k],
+        }
+    }
+
+    fn toy_model() -> ModelInfo {
+        ModelInfo {
+            name: "toy".into(),
+            fp_acc: 1.0,
+            weights_prefix: String::new(),
+            layers: vec![
+                conv("a", 3, 16, 3, 1, 1, 32),
+                conv("b", 16, 32, 3, 2, 1, 32),
+                conv("c", 32, 32, 3, 1, 32, 16), // depthwise
+            ],
+            fwd_exe: String::new(),
+            act_obs_exe: String::new(),
+            eval_batch: 1,
+            grans: Default::default(),
+            qat_exe: None,
+            qat_batch: 0,
+            distill_exe: None,
+            distill_batch: 0,
+        }
+    }
+
+    #[test]
+    fn size_scales_with_bits() {
+        let m = toy_model();
+        let s8 = ModelSize.measure(&m, &[8, 8, 8], 8);
+        let s2 = ModelSize.measure(&m, &[2, 2, 2], 8);
+        assert!(s2 < s8);
+        // weight bits scale 4x; biases stay f32 so ratio is < 4
+        let wbytes8: f64 = m
+            .layers
+            .iter()
+            .map(|l| l.wshape.iter().product::<usize>() as f64)
+            .sum();
+        assert!((s8 - s2) * 8.0 / 6.0 - wbytes8 < 1.0);
+    }
+
+    #[test]
+    fn systolic_lower_bits_faster() {
+        let m = toy_model();
+        let sim = Systolic::default();
+        let t8 = sim.model_ms(&m, &[8, 8, 8], 8);
+        let t4 = sim.model_ms(&m, &[4, 4, 4], 8);
+        let t2 = sim.model_ms(&m, &[2, 2, 2], 4);
+        assert!(t4 < t8, "{t4} vs {t8}");
+        assert!(t2 < t4, "{t2} vs {t4}");
+    }
+
+    #[test]
+    fn systolic_sublinear_scaling() {
+        // memory/launch bounds prevent perfectly linear 4x speedup
+        let m = toy_model();
+        let sim = Systolic::default();
+        let t8 = sim.model_ms(&m, &[8, 8, 8], 8);
+        let t2 = sim.model_ms(&m, &[2, 2, 2], 8);
+        assert!(t8 / t2 < 4.0, "speedup {}", t8 / t2);
+        assert!(t8 / t2 > 1.2, "speedup {}", t8 / t2);
+    }
+
+    #[test]
+    fn systolic_depthwise_penalty() {
+        // depthwise layer has ~1/16 row utilization: cycles/MAC far higher
+        let m = toy_model();
+        let sim = Systolic::default();
+        let dense = sim.layer_cycles(&m.layers[1], 8, 8)
+            / m.layers[1].macs as f64;
+        let dw =
+            sim.layer_cycles(&m.layers[2], 8, 8) / m.layers[2].macs as f64;
+        assert!(dw > dense * 2.0, "dw {dw} dense {dense}");
+    }
+
+    #[test]
+    fn arm_lower_bits_faster_but_saturating() {
+        let l = conv("x", 64, 64, 3, 1, 1, 16);
+        let sim = ArmCpu::default();
+        let t8 = sim.layer_ms(&l, 8, 8);
+        let t4 = sim.layer_ms(&l, 4, 8);
+        let t2 = sim.layer_ms(&l, 2, 8);
+        assert!(t4 <= t8);
+        assert!(t2 <= t4);
+        // compute floor: gains stay below the 4x raw bit reduction
+        assert!(t8 / t2 < 4.0, "{}", t8 / t2);
+        assert!(t8 / t2 > 1.05, "{}", t8 / t2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn arm_rejects_group_conv() {
+        let l = conv("g", 32, 32, 3, 1, 4, 16);
+        ArmCpu::default().layer_ms(&l, 8, 8);
+    }
+
+    #[test]
+    fn arm_supports_check() {
+        assert!(!ArmCpu::supports(&toy_model())); // has depthwise
+    }
+
+    #[test]
+    fn mixed_between_uniform() {
+        let m = toy_model();
+        let sim = Systolic::default();
+        let t8 = sim.model_ms(&m, &[8, 8, 8], 8);
+        let t2 = sim.model_ms(&m, &[2, 2, 2], 8);
+        let tm = sim.model_ms(&m, &[8, 2, 2], 8);
+        assert!(tm < t8 && tm > t2);
+    }
+}

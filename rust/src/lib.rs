@@ -1,0 +1,37 @@
+//! # brecq — BRECQ post-training quantization (ICLR 2021), reproduced
+//!
+//! A three-layer Rust + JAX + Pallas system: Python authors and AOT-lowers
+//! the compute (models, Pallas fake-quant kernels, reconstruction
+//! objectives) to HLO text once at build time; this crate is the entire
+//! runtime — it loads the artifacts via PJRT and drives the paper's
+//! algorithms: block reconstruction (Algorithm 1), FIM-weighted objectives
+//! (Eq. 10), sensitivity profiling, genetic mixed-precision search
+//! (Algorithm 2), the precision-scalable accelerator latency simulator and
+//! the full experiment suite.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod util {
+    pub mod cli;
+    pub mod json;
+    pub mod rng;
+    pub mod stats;
+}
+
+pub mod tensor;
+pub mod store;
+pub mod runtime;
+pub mod model;
+pub mod calib;
+pub mod quant;
+pub mod optim;
+pub mod recon;
+pub mod eval;
+pub mod sensitivity;
+pub mod mp;
+pub mod hwsim;
+pub mod baselines;
+pub mod qat;
+pub mod distill;
+pub mod coordinator;

@@ -1,0 +1,295 @@
+//! brecq CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   calibrate  — run BRECQ (or a baseline) on one model and report accuracy
+//!   eval       — FP accuracy of a model through the AOT eval path
+//!   sensitivity— print the per-layer/-pair sensitivity LUT
+//!   mp-search  — GA mixed-precision search under a hardware budget
+//!   hwsim      — latency/size of a model at a uniform precision
+//!   distill    — generate ZeroQ-style distilled calibration data
+//!   exp        — regenerate a paper table/figure (table1..table6, fig2,
+//!                fig3, fig4, all)
+
+use anyhow::Result;
+
+use brecq::baselines;
+use brecq::coordinator::experiments::{self as exp, ExpOpts, Method};
+use brecq::coordinator::report::Table;
+use brecq::coordinator::Env;
+use brecq::distill::DistillConfig;
+use brecq::eval::{accuracy, EvalParams};
+use brecq::hwsim::{size_mb, ArmCpu, HwMeasure, ModelSize, Systolic};
+use brecq::mp::{GaConfig, GeneticSearch};
+use brecq::recon::{BitConfig, Calibrator};
+use brecq::sensitivity::Profiler;
+use brecq::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn opts(a: &Args) -> ExpOpts {
+    ExpOpts {
+        iters: a.usize("iters", 250),
+        calib_n: a.usize("calib", 1024),
+        seed: a.u64("seed", 0),
+        seeds: a.usize("seeds", 1),
+        verbose: a.bool("verbose", false),
+    }
+}
+
+fn run() -> Result<()> {
+    let a = Args::from_env();
+    let artifacts = a.opt_str("artifacts");
+    match a.cmd.as_str() {
+        "eval" => {
+            let env = Env::bootstrap(artifacts)?;
+            let mname = a.str("model", "resnet_s");
+            let model = env.model(&mname);
+            let cal = Calibrator::new(&env.rt, &env.mf, model);
+            let (ws, bs) = cal.fp_weights()?;
+            let test = env.test_set()?;
+            let acc = accuracy(&env.rt, model,
+                               &EvalParams::fp(model, &ws, &bs), &test)?;
+            println!("{mname}: FP top-1 {:.2}% (train-time reference {:.2}%)",
+                     acc * 100.0, model.fp_acc * 100.0);
+        }
+        "calibrate" => {
+            let env = Env::bootstrap(artifacts)?;
+            let o = opts(&a);
+            let mname = a.str("model", "resnet_s");
+            let wbits = a.usize("bits", 4);
+            let abits = a.usize("act-bits", 0);
+            let method = match a.str("method", "brecq").as_str() {
+                "brecq" => Method::Brecq,
+                "adaround" => Method::AdaRoundLayer,
+                "adaquant" => Method::AdaQuantLike,
+                "omse" => Method::Omse,
+                "biascorr" => Method::BiasCorr,
+                m => anyhow::bail!("unknown method {m}"),
+            };
+            let gran = a.str("gran", "block");
+            let model = env.model(&mname);
+            let bits = BitConfig::uniform(
+                model, wbits,
+                if abits == 0 { None } else { Some(abits) },
+                !a.bool("quantize-first-last", false));
+            let train = env.train_set()?;
+            let calib = env.calib(&train, o.calib_n, o.seed);
+            let qm = if method == Method::Brecq && gran != "block" {
+                let cal = Calibrator::new(&env.rt, &env.mf, model);
+                let cfg = baselines::brecq_cfg(
+                    &brecq::recon::ReconConfig {
+                        iters: o.iters, seed: o.seed, verbose: o.verbose,
+                        ..Default::default()
+                    }, &gran);
+                cal.calibrate(&calib, &bits, &cfg)?
+            } else {
+                exp::quantize_with(&env, &mname, method, &calib, &bits, &o)?
+            };
+            let test = env.test_set()?;
+            let acc = accuracy(&env.rt, model, &EvalParams::quantized(&qm),
+                               &test)?;
+            println!(
+                "{mname} {} W{wbits}A{}: top-1 {:.2}% (FP {:.2}%), \
+                 calibrated in {:.1}s",
+                a.str("method", "brecq"),
+                if abits == 0 { "FP".into() } else { abits.to_string() },
+                acc * 100.0, model.fp_acc * 100.0, qm.calib_seconds);
+            for r in &qm.reports {
+                println!("  unit {:<14} loss {:.3e} -> {:.3e} ({} iters)",
+                         r.name, r.initial_loss, r.final_loss, r.iters);
+            }
+        }
+        "sensitivity" => {
+            let env = Env::bootstrap(artifacts)?;
+            let o = opts(&a);
+            let mname = a.str("model", "resnet_s");
+            let model = env.model(&mname);
+            let train = env.train_set()?;
+            let calib = env.calib(&train, o.calib_n, o.seed);
+            let cal = Calibrator::new(&env.rt, &env.mf, model);
+            let (ws, bs) = cal.fp_weights()?;
+            let prof = Profiler { rt: &env.rt, mf: &env.mf, model };
+            let t = prof.measure(&calib, &ws, &bs, true)?;
+            println!("base calib loss: {:.4}", t.base_loss);
+            let mut tab = Table::new(
+                &format!("Sensitivity LUT — {mname}"),
+                &["Layer", "s(4-bit)", "s(2-bit)"]);
+            for (l, layer) in model.layers.iter().enumerate() {
+                tab.row(vec![layer.name.clone(),
+                             format!("{:.5}", t.diag[l][&4]),
+                             format!("{:.5}", t.diag[l][&2])]);
+            }
+            tab.print();
+            println!("intra-block off-diagonal (2-bit pairs):");
+            for ((x, y), v) in &t.offdiag {
+                println!("  {} x {}: {v:+.5}",
+                         model.layers[*x].name, model.layers[*y].name);
+            }
+        }
+        "mp-search" => {
+            let env = Env::bootstrap(artifacts)?;
+            let o = opts(&a);
+            let mname = a.str("model", "resnet_s");
+            let model = env.model(&mname);
+            let hw_kind = a.str("hw", "size");
+            let budget = a.f32("budget", 0.0) as f64;
+            anyhow::ensure!(budget > 0.0, "--budget required");
+            let train = env.train_set()?;
+            let calib = env.calib(&train, o.calib_n, o.seed);
+            let cal = Calibrator::new(&env.rt, &env.mf, model);
+            let (ws, bs) = cal.fp_weights()?;
+            let prof = Profiler { rt: &env.rt, mf: &env.mf, model };
+            let table = prof.measure(&calib, &ws, &bs, true)?;
+            let systolic = Systolic::default();
+            let arm = ArmCpu::default();
+            let size = ModelSize;
+            let hw: &dyn HwMeasure = match hw_kind.as_str() {
+                "size" => &size,
+                "fpga" => &systolic,
+                "arm" => &arm,
+                _ => anyhow::bail!("--hw must be size|fpga|arm"),
+            };
+            let ga = GeneticSearch { model, table: &table, hw, abits: 8,
+                                     budget };
+            let res = ga.run(&GaConfig { seed: o.seed,
+                                         ..Default::default() })?;
+            println!("GA best ({} evals, {:.2}s): H(c)={:.4} {}",
+                     res.evaluated, res.seconds, res.hw_cost, hw.unit());
+            for (l, layer) in model.layers.iter().enumerate() {
+                println!("  {:<16} {} bits", layer.name, res.wbits[l]);
+            }
+        }
+        "hwsim" => {
+            let env = Env::bootstrap(artifacts)?;
+            let mname = a.str("model", "resnet_s");
+            let model = env.model(&mname);
+            let abits = a.usize("act-bits", 8);
+            let mut tab = Table::new(
+                &format!("hwsim — {mname} (A{abits})"),
+                &["W-bits", "Size (MB)", "FPGA (ms)", "ARM (ms)"]);
+            let systolic = Systolic::default();
+            let arm_ok = ArmCpu::supports(model);
+            let arm = ArmCpu::default();
+            for wb in [8usize, 4, 2] {
+                let wbits = vec![wb; model.layers.len()];
+                tab.row(vec![
+                    format!("{wb}"),
+                    format!("{:.3}", size_mb(model, &wbits)),
+                    format!("{:.2}", systolic.model_ms(model, &wbits,
+                                                       abits)),
+                    if arm_ok {
+                        format!("{:.2}", arm.model_ms(model, &wbits, abits))
+                    } else {
+                        "n/a (group/dw conv)".into()
+                    },
+                ]);
+            }
+            tab.print();
+        }
+        "distill" => {
+            let env = Env::bootstrap(artifacts)?;
+            let o = opts(&a);
+            let mname = a.str("model", "resnet_s");
+            let model = env.model(&mname);
+            let dcal = brecq::distill::distill(
+                &env.rt, &env.mf, model,
+                &DistillConfig {
+                    total: a.usize("n", 256),
+                    iters: a.usize("distill-iters", 160),
+                    seed: o.seed,
+                    verbose: o.verbose,
+                    ..Default::default()
+                })?;
+            println!("distilled {} images; label histogram:", dcal.len());
+            let mut hist = vec![0usize; env.mf.dataset.classes];
+            for &l in &dcal.labels {
+                hist[l] += 1;
+            }
+            println!("  {hist:?}");
+        }
+        "exp" => {
+            let env = Env::bootstrap(artifacts)?;
+            let o = opts(&a);
+            let which = a.positional.first().cloned()
+                .unwrap_or_else(|| "all".into());
+            let models = a.list(
+                "models", "resnet_s,mobilenetv2_s,regnet_s,mnasnet_s");
+            run_exp(&env, &o, &which, &models, &a)?;
+            for (name, calls, secs) in env.rt.hotspots(8) {
+                eprintln!("[dispatch] {name}: {calls} calls {secs:.1}s");
+            }
+        }
+        "" | "help" => {
+            println!("{}", HELP);
+        }
+        other => {
+            anyhow::bail!("unknown subcommand '{other}'\n{HELP}");
+        }
+    }
+    Ok(())
+}
+
+fn run_exp(env: &Env, o: &ExpOpts, which: &str, models: &[String],
+           a: &Args) -> Result<()> {
+    let save = |t: Table, id: &str| -> Result<()> {
+        t.print();
+        t.save(&env.dir, id)?;
+        Ok(())
+    };
+    match which {
+        "table1" => save(exp::table1(env, o)?, "table1")?,
+        "table2" => save(exp::table2(env, o, models)?, "table2")?,
+        "table3" => save(exp::table3(env, o, models)?, "table3")?,
+        "table4" => {
+            let steps = a.usize("qat-steps", 600);
+            save(exp::table4(env, o, steps)?, "table4")?
+        }
+        "table6" => save(exp::table6(env, o)?, "table6")?,
+        "fig2" => {
+            for m in ["resnet_s", "mobilenetv2_s", "regnet_s"] {
+                if models.iter().any(|x| x == m)
+                    && env.mf.models.contains_key(m) {
+                    save(exp::mixed_precision(env, o, m, "size")?,
+                         &format!("fig2_size_{m}"))?;
+                    save(exp::mixed_precision(env, o, m, "fpga")?,
+                         &format!("fig2_fpga_{m}"))?;
+                }
+            }
+        }
+        "fig3" => save(exp::fig3(env, o)?, "fig3")?,
+        "fig4" => {
+            save(exp::mixed_precision(env, o, "resnet_s", "arm")?,
+                 "fig4_arm_resnet_s")?
+        }
+        "all" => {
+            for w in ["table1", "table2", "table3", "table4", "table6",
+                      "fig2", "fig3", "fig4"] {
+                run_exp(env, o, w, models, a)?;
+            }
+        }
+        other => anyhow::bail!("unknown experiment '{other}'"),
+    }
+    Ok(())
+}
+
+const HELP: &str = "brecq — BRECQ post-training quantization (ICLR 2021)
+
+USAGE: brecq <cmd> [--flags]
+
+  eval        --model M
+  calibrate   --model M --bits B [--act-bits A] [--method brecq|adaround|
+              adaquant|omse|biascorr] [--gran layer|block|stage|net]
+              [--iters N] [--calib K] [--seed S] [--verbose]
+  sensitivity --model M
+  mp-search   --model M --hw size|fpga|arm --budget X
+  hwsim       --model M [--act-bits A]
+  distill     --model M --n K
+  exp         <table1|table2|table3|table4|table6|fig2|fig3|fig4|all>
+              [--models a,b,c] [--iters N] [--seeds S] [--qat-steps N]
+
+Global: --artifacts DIR (default ./artifacts or $BRECQ_ARTIFACTS)";

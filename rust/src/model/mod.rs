@@ -1,0 +1,264 @@
+//! Model graph as seen by the coordinator: parsed from manifest.json.
+//!
+//! The manifest is produced by `python/compile/aot.py` and is the single
+//! source of truth for layer geometry (shapes, MACs, act-site signedness),
+//! the unit partition of every exported granularity, and the executable
+//! signatures each unit binds to. Nothing here re-derives network structure
+//! — the Rust side is deliberately architecture-agnostic.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::store::Store;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct LayerInfo {
+    pub name: String,
+    pub kind: String, // "conv" | "fc"
+    pub cin: usize,
+    pub cout: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub groups: usize,
+    pub relu: bool,
+    pub site_signed: bool,
+    pub h_in: usize,
+    pub w_in: usize,
+    pub macs: u64,
+    pub nparams: u64,
+    pub wshape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct UnitInfo {
+    pub name: String,
+    pub topo: String,
+    /// indices into ModelInfo::layers, in executable binding order
+    pub layer_ids: Vec<usize>,
+    pub uses_skip: bool,
+    pub save_skip: bool,
+    pub in_shape: Vec<usize>,
+    pub skip_shape: Option<Vec<usize>>,
+    pub out_shape: Vec<usize>,
+    pub fwd_exe: String,
+    pub recon_exe: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct GranInfo {
+    pub fim_exe: String,
+    pub units: Vec<UnitInfo>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub fp_acc: f64,
+    pub weights_prefix: String,
+    pub layers: Vec<LayerInfo>,
+    pub fwd_exe: String,
+    pub act_obs_exe: String,
+    pub eval_batch: usize,
+    pub grans: HashMap<String, GranInfo>,
+    pub qat_exe: Option<String>,
+    pub qat_batch: usize,
+    pub distill_exe: Option<String>,
+    pub distill_batch: usize,
+}
+
+impl ModelInfo {
+    pub fn layer_index(&self, name: &str) -> usize {
+        self.layers
+            .iter()
+            .position(|l| l.name == name)
+            .unwrap_or_else(|| panic!("unknown layer '{name}'"))
+    }
+
+    /// First (stem) and last (classifier) layer indices — the layers the
+    /// paper keeps at 8-bit by default (§4.2 / Table 6).
+    pub fn first_layer(&self) -> usize {
+        0
+    }
+
+    pub fn last_layer(&self) -> usize {
+        self.layers.len() - 1
+    }
+
+    pub fn gran(&self, g: &str) -> &GranInfo {
+        self.grans
+            .get(g)
+            .unwrap_or_else(|| panic!("{}: granularity '{g}' not exported", self.name))
+    }
+
+    /// Total weight parameters (excluding biases, like the paper's size
+    /// accounting which stores biases at high precision anyway).
+    pub fn total_weight_params(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| l.wshape.iter().product::<usize>() as u64)
+            .sum()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct DatasetInfo {
+    pub dir: PathBuf,
+    pub img: usize,
+    pub classes: usize,
+    pub train_n: usize,
+    pub test_n: usize,
+    pub mean: Vec<f32>,
+    pub std: Vec<f32>,
+}
+
+pub struct Manifest {
+    pub json: Json,
+    pub dir: PathBuf,
+    pub calib_batch: usize,
+    pub dataset: DatasetInfo,
+    pub models: HashMap<String, ModelInfo>,
+}
+
+fn parse_layer(j: &Json) -> LayerInfo {
+    LayerInfo {
+        name: j.req("name").as_str().unwrap().to_string(),
+        kind: j.req("kind").as_str().unwrap().to_string(),
+        cin: j.req("cin").as_usize().unwrap(),
+        cout: j.req("cout").as_usize().unwrap(),
+        k: j.req("k").as_usize().unwrap(),
+        stride: j.req("stride").as_usize().unwrap(),
+        groups: j.req("groups").as_usize().unwrap(),
+        relu: j.req("relu").as_bool().unwrap(),
+        site_signed: j.req("site_signed").as_bool().unwrap(),
+        h_in: j.req("h_in").as_usize().unwrap(),
+        w_in: j.req("w_in").as_usize().unwrap(),
+        macs: j.req("macs").as_f64().unwrap() as u64,
+        nparams: j.req("nparams").as_f64().unwrap() as u64,
+        wshape: j.req("wshape").usize_vec(),
+    }
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?}"))?;
+        let json = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+
+        let d = json.req("dataset");
+        let dataset = DatasetInfo {
+            dir: dir.join(d.req("dir").as_str().unwrap()),
+            img: d.req("img").as_usize().unwrap(),
+            classes: d.req("classes").as_usize().unwrap(),
+            train_n: d.req("train_n").as_usize().unwrap(),
+            test_n: d.req("test_n").as_usize().unwrap(),
+            mean: d.req("mean").f32_vec(),
+            std: d.req("std").f32_vec(),
+        };
+
+        let mut models = HashMap::new();
+        for (name, m) in json.req("models").as_obj().unwrap() {
+            let layers: Vec<LayerInfo> = m
+                .req("layers")
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(parse_layer)
+                .collect();
+            let layer_idx: HashMap<&str, usize> = layers
+                .iter()
+                .enumerate()
+                .map(|(i, l)| (l.name.as_str(), i))
+                .collect();
+
+            let mut grans = HashMap::new();
+            for (g, ge) in m.req("grans").as_obj().unwrap() {
+                let units = ge
+                    .req("units")
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|u| UnitInfo {
+                        name: u.req("name").as_str().unwrap().to_string(),
+                        topo: u.req("topo").as_str().unwrap().to_string(),
+                        layer_ids: u
+                            .req("layers")
+                            .as_arr()
+                            .unwrap()
+                            .iter()
+                            .map(|l| layer_idx[l.as_str().unwrap()])
+                            .collect(),
+                        uses_skip: u.req("uses_skip").as_bool().unwrap(),
+                        save_skip: u.req("save_skip").as_bool().unwrap(),
+                        in_shape: u.req("in_shape").usize_vec(),
+                        skip_shape: match u.req("skip_shape") {
+                            Json::Null => None,
+                            v => Some(v.usize_vec()),
+                        },
+                        out_shape: u.req("out_shape").usize_vec(),
+                        fwd_exe: u.req("fwd_exe").as_str().unwrap().into(),
+                        recon_exe: u.req("recon_exe").as_str().unwrap().into(),
+                    })
+                    .collect();
+                grans.insert(
+                    g.clone(),
+                    GranInfo {
+                        fim_exe: ge.req("fim_exe").as_str().unwrap().into(),
+                        units,
+                    },
+                );
+            }
+
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    name: name.clone(),
+                    fp_acc: m.req("fp_acc").as_f64().unwrap(),
+                    weights_prefix: m.req("weights").as_str().unwrap().into(),
+                    layers,
+                    fwd_exe: m.req("fwd_exe").as_str().unwrap().into(),
+                    act_obs_exe: m.req("act_obs_exe").as_str().unwrap().into(),
+                    eval_batch: m.req("eval_batch").as_usize().unwrap(),
+                    grans,
+                    qat_exe: m
+                        .get("qat_exe")
+                        .and_then(|v| v.as_str())
+                        .map(String::from),
+                    qat_batch: m
+                        .get("qat_batch")
+                        .and_then(|v| v.as_usize())
+                        .unwrap_or(0),
+                    distill_exe: m
+                        .get("distill_exe")
+                        .and_then(|v| v.as_str())
+                        .map(String::from),
+                    distill_batch: m
+                        .get("distill_batch")
+                        .and_then(|v| v.as_usize())
+                        .unwrap_or(0),
+                },
+            );
+        }
+
+        Ok(Manifest {
+            calib_batch: json.req("calib_batch").as_usize().unwrap(),
+            dataset,
+            models,
+            json,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn model(&self, name: &str) -> &ModelInfo {
+        self.models
+            .get(name)
+            .unwrap_or_else(|| panic!("model '{name}' not in manifest"))
+    }
+
+    pub fn load_weights(&self, model: &ModelInfo) -> Result<Store> {
+        Store::load(&self.dir.join(&model.weights_prefix))
+    }
+}

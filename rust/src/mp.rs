@@ -1,0 +1,461 @@
+//! Mixed-precision search (paper §3.4, Algorithm 2).
+//!
+//! Genetic algorithm over per-layer weight bit assignments c ∈ {2,4,8}^n:
+//! fitness is the sensitivity-LUT-predicted loss (diagonal + intra-block
+//! off-diagonal terms), subject to a hardware constraint H(c) ≤ δ evaluated
+//! by one of the `hwsim` measurement functions. First and last layers stay
+//! pinned at 8-bit (the paper's deployment policy).
+//!
+//! A ZeroQ-style Pareto-greedy searcher is included as the baseline the
+//! paper compares against conceptually (integer-programming/Pareto methods
+//! that ignore the off-diagonal terms).
+
+use anyhow::Result;
+
+use crate::hwsim::HwMeasure;
+use crate::model::ModelInfo;
+use crate::sensitivity::SensitivityTable;
+use crate::util::rng::Rng;
+
+pub const BIT_CHOICES: [usize; 3] = [2, 4, 8];
+
+#[derive(Debug, Clone)]
+pub struct GaConfig {
+    pub population: usize,
+    pub iters: usize,
+    pub mutate_p: f64,
+    pub topk: usize,
+    pub seed: u64,
+}
+
+impl Default for GaConfig {
+    fn default() -> Self {
+        // paper B.4.4: population 50, 100 iterations, mutation 0.1
+        GaConfig { population: 50, iters: 100, mutate_p: 0.1, topk: 10,
+                   seed: 0 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    pub wbits: Vec<usize>,
+    pub predicted_loss: f64,
+    pub hw_cost: f64,
+    pub evaluated: usize,
+    pub seconds: f64,
+}
+
+/// Free (searchable) layer indices: everything but first/last.
+fn free_layers(model: &ModelInfo) -> Vec<usize> {
+    (0..model.layers.len())
+        .filter(|&l| l != model.first_layer() && l != model.last_layer())
+        .collect()
+}
+
+fn assemble(model: &ModelInfo, genes: &[usize]) -> Vec<usize> {
+    let free = free_layers(model);
+    let mut w = vec![8usize; model.layers.len()];
+    for (g, &l) in genes.iter().zip(&free) {
+        w[l] = *g;
+    }
+    w
+}
+
+pub struct GeneticSearch<'a> {
+    pub model: &'a ModelInfo,
+    pub table: &'a SensitivityTable,
+    pub hw: &'a dyn HwMeasure,
+    pub abits: usize,
+    pub budget: f64,
+}
+
+impl<'a> GeneticSearch<'a> {
+    fn feasible(&self, genes: &[usize]) -> bool {
+        let w = assemble(self.model, genes);
+        self.hw.measure(self.model, &w, self.abits) <= self.budget
+    }
+
+    fn fitness(&self, genes: &[usize]) -> f64 {
+        self.table.predict(&assemble(self.model, genes))
+    }
+
+    /// Algorithm 2. Returns the best feasible assignment found.
+    pub fn run(&self, cfg: &GaConfig) -> Result<SearchResult> {
+        let t0 = std::time::Instant::now();
+        let mut rng = Rng::new(cfg.seed);
+        let ng = free_layers(self.model).len();
+        let mut evaluated = 0usize;
+
+        // init: random population, rejection-sampled to feasibility
+        // (paper: Gaussian init rounded to {2,4,8}; uniform is equivalent
+        // after rounding at our gene count)
+        let mut pop: Vec<Vec<usize>> = Vec::new();
+        let mut guard = 0;
+        while pop.len() < cfg.population && guard < cfg.population * 200 {
+            guard += 1;
+            let cand: Vec<usize> =
+                (0..ng).map(|_| BIT_CHOICES[rng.below(3)]).collect();
+            if self.feasible(&cand) {
+                pop.push(cand);
+            }
+        }
+        if pop.is_empty() {
+            // budget below the all-2-bit floor
+            let floor: Vec<usize> = vec![2; ng];
+            anyhow::ensure!(
+                self.feasible(&floor),
+                "hardware budget {} infeasible even at all-2-bit",
+                self.budget
+            );
+            pop.push(floor);
+        }
+
+        let mut topk: Vec<(f64, Vec<usize>)> = Vec::new();
+        for _t in 0..cfg.iters {
+            // evaluate fitness, update TopK
+            for ind in &pop {
+                let f = self.fitness(ind);
+                evaluated += 1;
+                if !topk.iter().any(|(_, g)| g == ind) {
+                    topk.push((f, ind.clone()));
+                }
+            }
+            topk.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            topk.truncate(cfg.topk);
+
+            // crossover half
+            let mut crossover = Vec::new();
+            let mut guard = 0;
+            while crossover.len() < cfg.population / 2
+                && guard < cfg.population * 100
+            {
+                guard += 1;
+                let a = &topk[rng.below(topk.len())].1;
+                let b = &topk[rng.below(topk.len())].1;
+                let child: Vec<usize> = (0..ng)
+                    .map(|i| if rng.f64() < 0.5 { a[i] } else { b[i] })
+                    .collect();
+                if self.feasible(&child) {
+                    crossover.push(child);
+                }
+            }
+            // mutation half
+            let mut mutate = Vec::new();
+            let mut guard = 0;
+            while mutate.len() < cfg.population / 2
+                && guard < cfg.population * 100
+            {
+                guard += 1;
+                let mut child = topk[rng.below(topk.len())].1.clone();
+                for g in child.iter_mut() {
+                    if rng.f64() < cfg.mutate_p {
+                        *g = BIT_CHOICES[rng.below(3)];
+                    }
+                }
+                if self.feasible(&child) {
+                    mutate.push(child);
+                }
+            }
+            pop = crossover;
+            pop.append(&mut mutate);
+            if pop.is_empty() {
+                pop.push(topk[0].1.clone());
+            }
+        }
+        for ind in &pop {
+            let f = self.fitness(ind);
+            evaluated += 1;
+            if !topk.iter().any(|(_, g)| g == ind) {
+                topk.push((f, ind.clone()));
+            }
+        }
+        topk.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let best = &topk[0];
+        let wbits = assemble(self.model, &best.1);
+        Ok(SearchResult {
+            hw_cost: self.hw.measure(self.model, &wbits, self.abits),
+            wbits,
+            predicted_loss: best.0,
+            evaluated,
+            seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// ZeroQ-style Pareto-greedy baseline: start all-8, repeatedly drop the
+    /// precision of the layer with the best (sensitivity increase)/(bytes
+    /// saved) ratio until H(c) ≤ δ. Ignores off-diagonal terms — the
+    /// comparison the paper draws.
+    pub fn pareto_greedy(&self) -> Result<SearchResult> {
+        let t0 = std::time::Instant::now();
+        let free = free_layers(self.model);
+        let mut wbits = vec![8usize; self.model.layers.len()];
+        let mut evaluated = 0usize;
+        loop {
+            let cost = self.hw.measure(self.model, &wbits, self.abits);
+            if cost <= self.budget {
+                break;
+            }
+            // candidate single-step reductions 8->4->2
+            let mut best: Option<(f64, usize, usize)> = None;
+            for &l in &free {
+                let next = match wbits[l] {
+                    8 => 4,
+                    4 => 2,
+                    _ => continue,
+                };
+                let mut trial = wbits.clone();
+                trial[l] = next;
+                evaluated += 1;
+                let dloss = (self.table.diag[l].get(&next).copied()
+                    .unwrap_or(0.0)
+                    - self.table.diag[l].get(&wbits[l]).copied()
+                        .unwrap_or(0.0))
+                .max(1e-9);
+                let saved = (cost
+                    - self.hw.measure(self.model, &trial, self.abits))
+                .max(1e-12);
+                let ratio = dloss / saved;
+                if best.map_or(true, |(r, _, _)| ratio < r) {
+                    best = Some((ratio, l, next));
+                }
+            }
+            match best {
+                Some((_, l, next)) => wbits[l] = next,
+                None => anyhow::bail!(
+                    "pareto: budget {} infeasible at all-2-bit",
+                    self.budget
+                ),
+            }
+        }
+        Ok(SearchResult {
+            hw_cost: self.hw.measure(self.model, &wbits, self.abits),
+            predicted_loss: self.table.predict(&wbits),
+            wbits,
+            evaluated,
+            seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// AdaQuant-style integer-programming relaxation: minimize predicted
+    /// loss subject to H(c) <= budget, treating layers as independent
+    /// (diagonal terms only) and solving by exhaustive per-layer greedy
+    /// exchange to a local optimum. Unlike `pareto_greedy` it starts from
+    /// the all-2-bit floor and *buys back* precision with the best
+    /// loss-reduction-per-cost ratio — the standard knapsack heuristic.
+    pub fn integer_programming(&self) -> Result<SearchResult> {
+        let t0 = std::time::Instant::now();
+        let free = free_layers(self.model);
+        let mut wbits = vec![8usize; self.model.layers.len()];
+        for &l in &free {
+            wbits[l] = 2;
+        }
+        anyhow::ensure!(
+            self.hw.measure(self.model, &wbits, self.abits) <= self.budget,
+            "IP: budget {} infeasible at all-2-bit",
+            self.budget
+        );
+        let mut evaluated = 0usize;
+        loop {
+            let cost = self.hw.measure(self.model, &wbits, self.abits);
+            let mut best: Option<(f64, usize, usize)> = None;
+            for &l in &free {
+                let next = match wbits[l] {
+                    2 => 4,
+                    4 => 8,
+                    _ => continue,
+                };
+                let mut trial = wbits.clone();
+                trial[l] = next;
+                evaluated += 1;
+                if self.hw.measure(self.model, &trial, self.abits)
+                    > self.budget
+                {
+                    continue;
+                }
+                let gain = (self.table.diag[l]
+                    .get(&wbits[l])
+                    .copied()
+                    .unwrap_or(0.0)
+                    - self.table.diag[l].get(&next).copied().unwrap_or(0.0))
+                .max(0.0);
+                let dcost = (self
+                    .hw
+                    .measure(self.model, &trial, self.abits)
+                    - cost)
+                    .max(1e-12);
+                let ratio = gain / dcost;
+                if best.map_or(true, |(r, _, _)| ratio > r) {
+                    best = Some((ratio, l, next));
+                }
+            }
+            match best {
+                Some((r, l, next)) if r > 0.0 => wbits[l] = next,
+                Some((_, l, next)) => {
+                    // no loss gain left but budget remains: still raise
+                    // precision (free accuracy headroom)
+                    wbits[l] = next;
+                }
+                None => break,
+            }
+        }
+        Ok(SearchResult {
+            hw_cost: self.hw.measure(self.model, &wbits, self.abits),
+            predicted_loss: self.table.predict(&wbits),
+            wbits,
+            evaluated,
+            seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwsim::ModelSize;
+    use crate::model::LayerInfo;
+    use std::collections::HashMap;
+
+    fn layer(name: &str, nw: usize) -> LayerInfo {
+        LayerInfo {
+            name: name.into(),
+            kind: "conv".into(),
+            cin: 1,
+            cout: 1,
+            k: 1,
+            stride: 1,
+            groups: 1,
+            relu: true,
+            site_signed: false,
+            h_in: 8,
+            w_in: 8,
+            macs: 64,
+            nparams: nw as u64,
+            wshape: vec![1, nw],
+        }
+    }
+
+    fn model(nlayers: usize) -> ModelInfo {
+        ModelInfo {
+            name: "toy".into(),
+            fp_acc: 1.0,
+            weights_prefix: String::new(),
+            layers: (0..nlayers)
+                .map(|i| layer(&format!("l{i}"), 1000))
+                .collect(),
+            fwd_exe: String::new(),
+            act_obs_exe: String::new(),
+            eval_batch: 1,
+            grans: Default::default(),
+            qat_exe: None,
+            qat_batch: 0,
+            distill_exe: None,
+            distill_batch: 0,
+        }
+    }
+
+    fn table(nlayers: usize, hot: usize) -> SensitivityTable {
+        // layer `hot` is very sensitive; others cheap
+        let diag = (0..nlayers)
+            .map(|l| {
+                let mut m = HashMap::new();
+                let scale = if l == hot { 10.0 } else { 0.1 };
+                m.insert(2, scale);
+                m.insert(4, scale * 0.1);
+                m
+            })
+            .collect();
+        SensitivityTable { diag, offdiag: HashMap::new(), base_loss: 1.0 }
+    }
+
+    #[test]
+    fn ga_respects_budget_and_avoids_hot_layer() {
+        let m = model(8);
+        let t = table(8, 3);
+        let size = ModelSize;
+        // budget: roughly half of all-8-bit
+        let full = size.measure(&m, &vec![8; 8], 8);
+        let ga = GeneticSearch {
+            model: &m,
+            table: &t,
+            hw: &size,
+            abits: 8,
+            budget: full * 0.55,
+        };
+        let r = ga.run(&GaConfig { iters: 40, ..Default::default() })
+            .unwrap();
+        assert!(r.hw_cost <= full * 0.55);
+        // the hot layer should keep higher precision than the coldest ones
+        let hot_bits = r.wbits[3];
+        let cold_bits: Vec<usize> = (1..7).filter(|&l| l != 3)
+            .map(|l| r.wbits[l]).collect();
+        assert!(
+            hot_bits >= *cold_bits.iter().min().unwrap(),
+            "hot {hot_bits} cold {cold_bits:?}"
+        );
+        // pinned first/last
+        assert_eq!(r.wbits[0], 8);
+        assert_eq!(r.wbits[7], 8);
+    }
+
+    #[test]
+    fn ga_better_or_equal_pareto_with_offdiag() {
+        // off-diagonal term makes layers 1&2 bad together: GA (which sees
+        // it) must be no worse than the greedy (which ignores it)
+        let m = model(6);
+        let mut t = table(6, 100); // no single hot layer
+        t.offdiag.insert((1, 2), 5.0);
+        let size = ModelSize;
+        let full = size.measure(&m, &vec![8; 6], 8);
+        // budget must stay above the floor set by pinned-8-bit first/last
+        let ga = GeneticSearch {
+            model: &m,
+            table: &t,
+            hw: &size,
+            abits: 8,
+            budget: full * 0.55,
+        };
+        let g = ga.run(&GaConfig { iters: 60, seed: 3, ..Default::default() })
+            .unwrap();
+        let p = ga.pareto_greedy().unwrap();
+        assert!(g.predicted_loss <= p.predicted_loss + 1e-9);
+        assert!(p.hw_cost <= full * 0.55);
+    }
+
+    #[test]
+    fn ip_respects_budget_and_buys_back_cold_layers() {
+        let m = model(8);
+        let t = table(8, 3);
+        let size = ModelSize;
+        let full = size.measure(&m, &vec![8; 8], 8);
+        let ga = GeneticSearch {
+            model: &m,
+            table: &t,
+            hw: &size,
+            abits: 8,
+            budget: full * 0.6,
+        };
+        let r = ga.integer_programming().unwrap();
+        assert!(r.hw_cost <= full * 0.6);
+        // hot layer 3 gets precision priority over the cold free layers
+        assert!(r.wbits[3] >= *r.wbits[1..7].iter().min().unwrap());
+        assert_eq!(r.wbits[0], 8);
+        assert_eq!(r.wbits[7], 8);
+    }
+
+    #[test]
+    fn infeasible_budget_errors() {
+        let m = model(4);
+        let t = table(4, 0);
+        let size = ModelSize;
+        let ga = GeneticSearch {
+            model: &m,
+            table: &t,
+            hw: &size,
+            abits: 8,
+            budget: 1.0, // bytes: impossible
+        };
+        assert!(ga.run(&GaConfig::default()).is_err());
+        assert!(ga.pareto_greedy().is_err());
+        assert!(ga.integer_programming().is_err());
+    }
+}

@@ -1,0 +1,137 @@
+//! Adam optimizer (host side). The AOT executables return gradients; the
+//! coordinator owns all optimizer state — AdaRound rounding variables,
+//! activation step sizes, QAT parameters and distilled-data pixels all
+//! update through this one implementation.
+
+use crate::tensor::Tensor;
+
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    t: i32,
+}
+
+impl Adam {
+    pub fn new(lr: f32, sizes: &[usize]) -> Adam {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: sizes.iter().map(|&n| vec![0.0; n]).collect(),
+            v: sizes.iter().map(|&n| vec![0.0; n]).collect(),
+            t: 0,
+        }
+    }
+
+    pub fn for_params(lr: f32, params: &[&Tensor]) -> Adam {
+        Adam::new(lr, &params.iter().map(|p| p.numel()).collect::<Vec<_>>())
+    }
+
+    /// One step: params[i] -= lr * mhat/(sqrt(vhat)+eps). Call with the
+    /// same param ordering every time.
+    pub fn step(&mut self, params: &mut [&mut Tensor], grads: &[&Tensor]) {
+        assert_eq!(params.len(), self.m.len());
+        assert_eq!(grads.len(), self.m.len());
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t);
+        let bc2 = 1.0 - self.beta2.powi(self.t);
+        for (i, p) in params.iter_mut().enumerate() {
+            let g = &grads[i].data;
+            assert_eq!(p.numel(), g.len());
+            let (m, v) = (&mut self.m[i], &mut self.v[i]);
+            for j in 0..g.len() {
+                m[j] = self.beta1 * m[j] + (1.0 - self.beta1) * g[j];
+                v[j] = self.beta2 * v[j] + (1.0 - self.beta2) * g[j] * g[j];
+                let mh = m[j] / bc1;
+                let vh = v[j] / bc2;
+                p.data[j] -= self.lr * mh / (vh.sqrt() + self.eps);
+            }
+        }
+    }
+}
+
+/// BRECQ's β annealing for the rounding regularizer: warmup with λ=0,
+/// then β decays start→end (Nagel et al. 2020 schedule family).
+pub struct BetaSchedule {
+    pub total: usize,
+    pub warmup: f32,
+    pub start: f32,
+    pub end: f32,
+}
+
+impl BetaSchedule {
+    pub fn brecq_default(total: usize) -> BetaSchedule {
+        BetaSchedule { total, warmup: 0.2, start: 20.0, end: 2.0 }
+    }
+
+    /// Returns (beta, reg_active) at iteration t.
+    pub fn at(&self, t: usize) -> (f32, bool) {
+        let warm = (self.total as f32 * self.warmup) as usize;
+        if t < warm {
+            return (self.start, false);
+        }
+        let rel = (t - warm) as f32 / (self.total - warm).max(1) as f32;
+        (self.end + (self.start - self.end) * (1.0 - rel), true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adam_minimizes_quadratic() {
+        // f(x) = sum (x - 3)^2 — Adam should converge to 3
+        let mut x = Tensor::zeros(vec![4]);
+        let mut opt = Adam::new(0.1, &[4]);
+        for _ in 0..500 {
+            let g = Tensor::new(
+                vec![4],
+                x.data.iter().map(|&v| 2.0 * (v - 3.0)).collect(),
+            );
+            opt.step(&mut [&mut x], &[&g]);
+        }
+        for &v in &x.data {
+            assert!((v - 3.0).abs() < 1e-2, "{v}");
+        }
+    }
+
+    #[test]
+    fn adam_multi_param_groups() {
+        let mut a = Tensor::zeros(vec![2]);
+        let mut b = Tensor::full(vec![3], 5.0);
+        let mut opt = Adam::new(0.05, &[2, 3]);
+        for _ in 0..800 {
+            let ga = Tensor::new(
+                vec![2],
+                a.data.iter().map(|&v| 2.0 * (v + 1.0)).collect(),
+            );
+            let gb = Tensor::new(
+                vec![3],
+                b.data.iter().map(|&v| 2.0 * (v - 2.0)).collect(),
+            );
+            opt.step(&mut [&mut a, &mut b], &[&ga, &gb]);
+        }
+        assert!(a.data.iter().all(|&v| (v + 1.0).abs() < 1e-2));
+        assert!(b.data.iter().all(|&v| (v - 2.0).abs() < 1e-2));
+    }
+
+    #[test]
+    fn beta_schedule_shape() {
+        let s = BetaSchedule::brecq_default(1000);
+        let (b0, on0) = s.at(0);
+        assert_eq!(b0, 20.0);
+        assert!(!on0); // warmup: regularizer off
+        let (_, on1) = s.at(300);
+        assert!(on1);
+        let (bmid, _) = s.at(600);
+        assert!(bmid < 20.0 && bmid > 2.0);
+        let (bend, _) = s.at(999);
+        assert!((bend - 2.0).abs() < 0.1);
+    }
+}

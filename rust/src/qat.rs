@@ -1,0 +1,210 @@
+//! LSQ quantization-aware training baseline (Table 4's cost comparison).
+//!
+//! Full-dataset QAT through the AOT `qat_step` executable: weights and
+//! activations fake-quantized by LSQ with learnable per-tensor steps,
+//! straight-through gradients (the Pallas lsq kernel's custom VJP), all
+//! parameters updated by host-side Adam. This is deliberately the
+//! *expensive* path — the point of Table 4 is that BRECQ reaches comparable
+//! accuracy at a tiny fraction of this cost, so wall-clock is recorded.
+
+use anyhow::Result;
+
+use crate::calib::DataSet;
+use crate::model::{Manifest, ModelInfo};
+use crate::optim::Adam;
+use crate::quant::{act_bounds, mse_step_tensor, weight_bounds};
+use crate::recon::{BitConfig, Calibrator, QuantizedModel};
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+pub struct QatConfig {
+    pub steps: usize,
+    pub lr_w: f32,
+    pub lr_s: f32,
+    pub wbits: usize,
+    pub abits: usize,
+    pub seed: u64,
+    pub verbose: bool,
+}
+
+impl Default for QatConfig {
+    fn default() -> Self {
+        QatConfig {
+            steps: 600,
+            lr_w: 5e-4,
+            lr_s: 1e-3,
+            wbits: 4,
+            abits: 4,
+            seed: 0,
+            verbose: false,
+        }
+    }
+}
+
+pub struct QatResult {
+    pub model: QuantizedModel,
+    pub train_seconds: f64,
+    pub steps: usize,
+    pub images_seen: usize,
+}
+
+/// Run LSQ QAT on the full training set; returns deployable quantized
+/// weights (hard LSQ rounding of the trained FP weights).
+pub fn train(
+    rt: &Runtime,
+    mf: &Manifest,
+    model: &ModelInfo,
+    trainset: &DataSet,
+    cfg: &QatConfig,
+) -> Result<QatResult> {
+    let exe = model
+        .qat_exe
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("{}: no qat executable", model.name))?;
+    let b = model.qat_batch;
+    let nl = model.layers.len();
+    let classes = mf.dataset.classes;
+    let t0 = std::time::Instant::now();
+
+    let cal = Calibrator::new(rt, mf, model);
+    let (mut ws, mut bs) = cal.fp_weights()?;
+
+    // per-tensor weight steps (LSQ init) + activation steps from stats
+    let mut wsteps: Vec<Tensor> = ws
+        .iter()
+        .map(|w| {
+            let (n, p) = weight_bounds(cfg.wbits);
+            Tensor::scalar1(mse_step_tensor(&w.data, n, p))
+        })
+        .collect();
+    let bits = BitConfig::uniform(model, cfg.wbits, Some(cfg.abits), true);
+    let calib_like = trainset_as_calib(trainset, 512);
+    let mut asteps_f = cal.init_act_steps(&calib_like, &ws, &bs, &bits, 4)?;
+    let mut asteps: Vec<Tensor> =
+        asteps_f.iter().map(|&s| Tensor::scalar1(s)).collect();
+
+    let (wqmin, wqmax) = weight_bounds(cfg.wbits);
+    let wqmin_t = Tensor::scalar1(wqmin);
+    let wqmax_t = Tensor::scalar1(wqmax);
+    let abounds: Vec<(Tensor, Tensor)> = model
+        .layers
+        .iter()
+        .map(|l| {
+            let (lo, hi) = act_bounds(cfg.abits, l.site_signed);
+            (Tensor::scalar1(lo), Tensor::scalar1(hi))
+        })
+        .collect();
+
+    let sizes: Vec<usize> = ws
+        .iter()
+        .map(|w| w.numel())
+        .chain(bs.iter().map(|x| x.numel()))
+        .collect();
+    let mut opt_w = Adam::new(cfg.lr_w, &sizes);
+    let mut opt_s = Adam::new(cfg.lr_s, &vec![1usize; 2 * nl]);
+
+    let mut rng = Rng::new(cfg.seed);
+    let n = trainset.len();
+    let mut images_seen = 0;
+    for t in 0..cfg.steps {
+        let rows = rng.sample_indices(n, b);
+        let images = gather_images(trainset, &rows);
+        let onehot = onehot_rows(trainset, &rows, classes);
+        let mut args: Vec<&Tensor> = vec![&images, &onehot];
+        for l in 0..nl {
+            args.push(&ws[l]);
+            args.push(&bs[l]);
+        }
+        for l in 0..nl {
+            args.push(&wsteps[l]);
+            args.push(&asteps[l]);
+            args.push(&abounds[l].0);
+            args.push(&abounds[l].1);
+        }
+        args.push(&wqmin_t);
+        args.push(&wqmax_t);
+        let out = rt.run(exe, &args)?;
+        // outputs: loss, gw*nl, gb*nl, gwstep*nl, gastep*nl
+        let loss = out[0].data[0];
+        let gw = &out[1..1 + nl];
+        let gb = &out[1 + nl..1 + 2 * nl];
+        let gws = &out[1 + 2 * nl..1 + 3 * nl];
+        let gas = &out[1 + 3 * nl..1 + 4 * nl];
+        {
+            let mut params: Vec<&mut Tensor> = ws
+                .iter_mut()
+                .chain(bs.iter_mut())
+                .collect();
+            let grads: Vec<&Tensor> = gw.iter().chain(gb.iter()).collect();
+            opt_w.step(&mut params, &grads);
+        }
+        {
+            let mut params: Vec<&mut Tensor> = wsteps
+                .iter_mut()
+                .chain(asteps.iter_mut())
+                .collect();
+            let grads: Vec<&Tensor> = gws.iter().chain(gas.iter()).collect();
+            opt_s.step(&mut params, &grads);
+            for p in wsteps.iter_mut().chain(asteps.iter_mut()) {
+                p.data[0] = p.data[0].max(1e-6);
+            }
+        }
+        images_seen += b;
+        if cfg.verbose && t % 100 == 0 {
+            eprintln!("  [qat {}] step {t} loss {loss:.4}", model.name);
+        }
+    }
+
+    // deploy: hard LSQ rounding of the trained weights
+    let weights: Vec<Tensor> = ws
+        .iter()
+        .enumerate()
+        .map(|(l, w)| {
+            let s = wsteps[l].data[0];
+            w.map(|x| s * (x / s).round().clamp(wqmin, wqmax))
+        })
+        .collect();
+    for l in 0..nl {
+        asteps_f[l] = asteps[l].data[0];
+    }
+    Ok(QatResult {
+        model: QuantizedModel {
+            weights,
+            biases: bs,
+            act_steps: asteps_f,
+            bits,
+            reports: vec![],
+            calib_seconds: t0.elapsed().as_secs_f64(),
+        },
+        train_seconds: t0.elapsed().as_secs_f64(),
+        steps: cfg.steps,
+        images_seen,
+    })
+}
+
+fn gather_images(ds: &DataSet, rows: &[usize]) -> Tensor {
+    let inner = ds.images.inner();
+    let mut data = Vec::with_capacity(rows.len() * inner);
+    for &r in rows {
+        data.extend_from_slice(&ds.images.data[r * inner..(r + 1) * inner]);
+    }
+    let mut shape = ds.images.shape.clone();
+    shape[0] = rows.len();
+    Tensor::new(shape, data)
+}
+
+fn onehot_rows(ds: &DataSet, rows: &[usize], classes: usize) -> Tensor {
+    let mut data = vec![0f32; rows.len() * classes];
+    for (i, &r) in rows.iter().enumerate() {
+        data[i * classes + ds.labels[r]] = 1.0;
+    }
+    Tensor::new(vec![rows.len(), classes], data)
+}
+
+fn trainset_as_calib(ds: &DataSet, k: usize) -> crate::calib::CalibSet {
+    crate::calib::CalibSet {
+        images: ds.images.slice0(0, k.min(ds.len())),
+        labels: ds.labels[..k.min(ds.len())].to_vec(),
+    }
+}

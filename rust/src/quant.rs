@@ -1,0 +1,303 @@
+//! Quantizer substrate: uniform symmetric grids, per-channel MSE step
+//! search, AdaRound state (init + hard commit), LSQ activation-step init.
+//!
+//! Mirrors the math of the Pallas kernels exactly (python/compile/kernels);
+//! the Rust side owns everything that happens *outside* the AOT graphs:
+//! step initialization, the rounding-variable state between executor calls,
+//! and the final hard-rounding commit of Eq. 16.
+
+use crate::tensor::Tensor;
+
+pub const ZETA: f32 = 1.1;
+pub const GAMMA: f32 = -0.1;
+
+/// Signed integer grid bounds for b-bit weights: [-2^(b-1), 2^(b-1)-1].
+pub fn weight_bounds(bits: usize) -> (f32, f32) {
+    let h = 1i64 << (bits - 1);
+    (-(h as f32), (h - 1) as f32)
+}
+
+/// Activation grid bounds: unsigned [0, 2^b - 1] after ReLU, signed
+/// otherwise (linear-bottleneck outputs, standardized images).
+pub fn act_bounds(bits: usize, signed: bool) -> (f32, f32) {
+    if signed {
+        weight_bounds(bits)
+    } else {
+        (0.0, ((1i64 << bits) - 1) as f32)
+    }
+}
+
+pub fn rect_sigmoid(v: f32) -> f32 {
+    let s = 1.0 / (1.0 + (-v).exp());
+    (s * (ZETA - GAMMA) + GAMMA).clamp(0.0, 1.0)
+}
+
+/// Inverse of the rectified sigmoid on (0,1): the AdaRound v init such
+/// that h(v) equals the fractional part of w/s (soft quant == FP weight).
+pub fn rect_sigmoid_inv(h: f32) -> f32 {
+    let h = h.clamp(0.01, 0.99);
+    let s = (h - GAMMA) / (ZETA - GAMMA);
+    (s / (1.0 - s)).ln()
+}
+
+/// Nearest-rounding fake-quant of one value.
+pub fn round_quant(w: f32, step: f32, n: f32, p: f32) -> f32 {
+    step * (w / step).round().clamp(n, p)
+}
+
+/// Per-channel MSE-optimal step search (the paper's quantizer init; also
+/// the OMSE baseline). For each leading-dim channel, scans `grid` scale
+/// fractions of max|w| and keeps the step minimizing ||w - q(w)||^2.
+pub fn mse_steps_per_channel(w: &Tensor, bits: usize) -> Vec<f32> {
+    let (n, p) = weight_bounds(bits);
+    let c = w.c0();
+    let inner = w.inner();
+    let mut steps = Vec::with_capacity(c);
+    for ch in 0..c {
+        let row = &w.data[ch * inner..(ch + 1) * inner];
+        steps.push(mse_step_slice(row, n, p));
+    }
+    steps
+}
+
+/// Per-tensor MSE-optimal step (activations; also per-tensor weight mode).
+pub fn mse_step_tensor(xs: &[f32], qmin: f32, qmax: f32) -> f32 {
+    mse_step_slice(xs, qmin, qmax)
+}
+
+fn mse_step_slice(row: &[f32], n: f32, p: f32) -> f32 {
+    let maxabs = row.iter().fold(0f32, |m, &x| m.max(x.abs())).max(1e-8);
+    // candidate grid: the usual LAPQ/BRECQ-style scan around maxabs/p
+    let denom = p.abs().max(n.abs()).max(1.0);
+    let base = maxabs / denom;
+    let mut best = (f64::INFINITY, base);
+    for i in 0..80 {
+        let frac = 0.2 + 1.0 * (i as f32) / 79.0; // 0.2 .. 1.2
+        let s = (base * frac).max(1e-8);
+        let mut err = 0f64;
+        for &x in row {
+            let d = x - round_quant(x, s, n, p);
+            err += (d as f64) * (d as f64);
+        }
+        if err < best.0 {
+            best = (err, s);
+        }
+    }
+    best.1
+}
+
+/// Hard nearest-rounding quantization with per-channel steps (baselines,
+/// and the sensitivity probe's layer quantizer).
+pub fn quantize_nearest(w: &Tensor, steps: &[f32], bits: usize) -> Tensor {
+    let (n, p) = weight_bounds(bits);
+    let inner = w.inner();
+    let mut out = w.clone();
+    for ch in 0..w.c0() {
+        let s = steps[ch];
+        for v in &mut out.data[ch * inner..(ch + 1) * inner] {
+            *v = round_quant(*v, s, n, p);
+        }
+    }
+    out
+}
+
+/// AdaRound per-layer state: the continuous rounding variables `v`
+/// (same shape as w) plus the frozen per-channel steps and clip bounds.
+pub struct AdaRoundState {
+    pub v: Tensor,
+    pub steps: Vec<f32>,
+    pub bits: usize,
+}
+
+impl AdaRoundState {
+    /// v init so that h(v) = frac(w/s): the soft-quantized weight starts
+    /// exactly at the FP weight (Nagel et al. 2020 init).
+    pub fn init(w: &Tensor, steps: &[f32], bits: usize) -> AdaRoundState {
+        let inner = w.inner();
+        let mut v = Tensor::zeros(w.shape.clone());
+        for ch in 0..w.c0() {
+            let s = steps[ch];
+            for i in ch * inner..(ch + 1) * inner {
+                let r = w.data[i] / s - (w.data[i] / s).floor();
+                v.data[i] = rect_sigmoid_inv(r);
+            }
+        }
+        AdaRoundState { v, steps: steps.to_vec(), bits }
+    }
+
+    /// Hard commit (Eq. 16 with h binarized at 0.5): the deployed weights.
+    pub fn commit(&self, w: &Tensor) -> Tensor {
+        let (n, p) = weight_bounds(self.bits);
+        let inner = w.inner();
+        let mut out = w.clone();
+        for ch in 0..w.c0() {
+            let s = self.steps[ch];
+            for i in ch * inner..(ch + 1) * inner {
+                let up = if rect_sigmoid(self.v.data[i]) >= 0.5 { 1.0 } else { 0.0 };
+                let g = ((w.data[i] / s).floor() + up).clamp(n, p);
+                out.data[i] = s * g;
+            }
+        }
+        out
+    }
+
+    /// Fraction of rounding variables not yet saturated (monitoring: the
+    /// β-annealed regularizer should drive this to ~0).
+    pub fn soft_fraction(&self) -> f64 {
+        let n = self.v.data.len().max(1);
+        let soft = self
+            .v
+            .data
+            .iter()
+            .filter(|&&v| {
+                let h = rect_sigmoid(v);
+                h > 0.05 && h < 0.95
+            })
+            .count();
+        soft as f64 / n as f64
+    }
+
+    /// Per-channel steps as a Tensor for executable input.
+    pub fn steps_tensor(&self) -> Tensor {
+        Tensor::new(vec![self.steps.len()], self.steps.clone())
+    }
+}
+
+/// Activation-step init: MSE search over a sample of activation values.
+pub fn act_step_init(sample: &[f32], bits: usize, signed: bool) -> f32 {
+    let (qmin, qmax) = act_bounds(bits, signed);
+    mse_step_tensor(sample, qmin, qmax)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randn(rng: &mut Rng, shape: Vec<usize>, scale: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::new(shape, (0..n).map(|_| rng.gauss() as f32 * scale).collect())
+    }
+
+    #[test]
+    fn bounds() {
+        assert_eq!(weight_bounds(2), (-2.0, 1.0));
+        assert_eq!(weight_bounds(4), (-8.0, 7.0));
+        assert_eq!(weight_bounds(8), (-128.0, 127.0));
+        assert_eq!(act_bounds(4, false), (0.0, 15.0));
+        assert_eq!(act_bounds(4, true), (-8.0, 7.0));
+    }
+
+    #[test]
+    fn rect_sigmoid_inverse_roundtrip() {
+        for h in [0.05f32, 0.3, 0.5, 0.7, 0.95] {
+            let v = rect_sigmoid_inv(h);
+            assert!((rect_sigmoid(v) - h).abs() < 1e-5, "h={h}");
+        }
+    }
+
+    #[test]
+    fn mse_step_beats_naive_maxabs() {
+        let mut rng = Rng::new(0);
+        let w = randn(&mut rng, vec![1, 512], 1.0);
+        let (n, p) = weight_bounds(4);
+        let s_opt = mse_steps_per_channel(&w, 4)[0];
+        let s_naive = w.data.iter().fold(0f32, |m, &x| m.max(x.abs())) / p;
+        let err = |s: f32| -> f64 {
+            w.data
+                .iter()
+                .map(|&x| {
+                    let d = x - round_quant(x, s, n, p);
+                    (d as f64) * (d as f64)
+                })
+                .sum()
+        };
+        assert!(err(s_opt) <= err(s_naive) * 1.0001);
+    }
+
+    #[test]
+    fn adaround_init_is_identity_like() {
+        // with h(v)=frac, soft-quantized weight == FP weight (within the
+        // clip range)
+        let mut rng = Rng::new(1);
+        let w = randn(&mut rng, vec![4, 32], 0.5);
+        let steps = mse_steps_per_channel(&w, 8);
+        let st = AdaRoundState::init(&w, &steps, 8);
+        let inner = w.inner();
+        for ch in 0..4 {
+            let s = steps[ch];
+            for i in ch * inner..(ch + 1) * inner {
+                let g = (w.data[i] / s).floor();
+                if g <= -128.0 || g >= 126.0 {
+                    continue; // MSE-optimal steps clip the extreme tail
+                }
+                let soft = s
+                    * (g + rect_sigmoid(st.v.data[i])).clamp(-128.0, 127.0);
+                assert!(
+                    (soft - w.data[i]).abs() < s * 0.05,
+                    "soft {soft} vs {}",
+                    w.data[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn commit_rounds_to_grid() {
+        let mut rng = Rng::new(2);
+        let w = randn(&mut rng, vec![3, 16], 0.3);
+        let steps = mse_steps_per_channel(&w, 2);
+        let st = AdaRoundState::init(&w, &steps, 2);
+        let q = st.commit(&w);
+        let inner = w.inner();
+        for ch in 0..3 {
+            for i in ch * inner..(ch + 1) * inner {
+                let g = q.data[i] / steps[ch];
+                assert!((g - g.round()).abs() < 1e-4);
+                assert!((-2.0..=1.0).contains(&g.round()));
+            }
+        }
+    }
+
+    #[test]
+    fn commit_within_one_step_of_nearest() {
+        // AdaRound can differ from nearest rounding by at most one grid step
+        let mut rng = Rng::new(3);
+        let w = randn(&mut rng, vec![2, 64], 0.4);
+        let steps = mse_steps_per_channel(&w, 4);
+        let st = AdaRoundState::init(&w, &steps, 4);
+        let q = st.commit(&w);
+        let nearest = quantize_nearest(&w, &steps, 4);
+        let inner = w.inner();
+        for ch in 0..2 {
+            for i in ch * inner..(ch + 1) * inner {
+                assert!(
+                    (q.data[i] - nearest.data[i]).abs()
+                        <= steps[ch] * 1.0001
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_nearest_2bit_has_4_levels() {
+        let mut rng = Rng::new(4);
+        let w = randn(&mut rng, vec![1, 256], 1.0);
+        let steps = mse_steps_per_channel(&w, 2);
+        let q = quantize_nearest(&w, &steps, 2);
+        let mut levels: Vec<i32> =
+            q.data.iter().map(|&x| (x / steps[0]).round() as i32).collect();
+        levels.sort_unstable();
+        levels.dedup();
+        assert!(levels.len() <= 4, "{levels:?}");
+    }
+
+    #[test]
+    fn act_step_positive() {
+        let mut rng = Rng::new(5);
+        let xs: Vec<f32> =
+            (0..1000).map(|_| (rng.gauss() as f32).abs()).collect();
+        let s = act_step_init(&xs, 4, false);
+        assert!(s > 0.0 && s < 1.0, "{s}");
+    }
+}

@@ -1,0 +1,564 @@
+//! The BRECQ calibration engine (paper Algorithm 1) — the L3 system core.
+//!
+//! Orchestrates, unit by unit at the chosen reconstruction granularity:
+//!
+//!   1. a FIM pass over the calibration set (squared per-sample gradients
+//!      of the task loss at every unit output — the diagonal pre-activation
+//!      Fisher of Eq. 9/10),
+//!   2. a dual activation stream: the FP stream provides reconstruction
+//!      targets z_fp; the quantized stream provides unit inputs x (the
+//!      asymmetric-reconstruction choice of the reference implementation),
+//!   3. per-unit optimization: T Adam steps on the AdaRound rounding
+//!      variables and LSQ activation steps, driven by the AOT `unit_recon`
+//!      executable (loss fwd + grads), with β-annealed rounding
+//!      regularization,
+//!   4. hard-rounding commit, then stream advance through `unit_fwd`.
+//!
+//! Per-layer bitwidths are runtime inputs to the executables, so the same
+//! artifacts serve unified 2/4/8-bit, first/last-8-bit policies and every
+//! mixed-precision configuration the GA proposes.
+
+
+use anyhow::Result;
+
+use crate::calib::CalibSet;
+use crate::model::{Manifest, ModelInfo, UnitInfo};
+use crate::optim::{Adam, BetaSchedule};
+use crate::quant::{
+    act_bounds, mse_steps_per_channel, weight_bounds, AdaRoundState,
+};
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Per-layer bit assignment (weights + activation sites).
+#[derive(Debug, Clone)]
+pub struct BitConfig {
+    pub wbits: Vec<usize>,
+    pub abits: Vec<usize>,
+    pub aq: bool, // activation quantization enabled
+}
+
+impl BitConfig {
+    /// Uniform precision, optionally keeping first & last layer at 8-bit
+    /// (the paper's default policy, §4.2).
+    pub fn uniform(
+        model: &ModelInfo,
+        wbits: usize,
+        abits: Option<usize>,
+        first_last_8: bool,
+    ) -> BitConfig {
+        let n = model.layers.len();
+        let mut w = vec![wbits; n];
+        let mut a = vec![abits.unwrap_or(8); n];
+        if first_last_8 {
+            w[model.first_layer()] = 8;
+            w[model.last_layer()] = 8;
+            a[model.first_layer()] = 8;
+            a[model.last_layer()] = 8;
+        }
+        BitConfig { wbits: w, abits: a, aq: abits.is_some() }
+    }
+
+    /// Mixed precision: explicit per-layer weight bits.
+    pub fn mixed(wbits: Vec<usize>, abits: usize, aq: bool) -> BitConfig {
+        let n = wbits.len();
+        BitConfig { wbits, abits: vec![abits; n], aq }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ReconConfig {
+    pub gran: String,
+    pub iters: usize,
+    pub batch: usize,
+    pub lr_v: f32,
+    pub lr_s: f32,
+    pub lam: f32,
+    /// FIM weighting (BRECQ). false => plain MSE (AdaRound/AdaQuant proxies)
+    pub use_fim: bool,
+    /// rounding regularizer on (AdaRound-style). false => AdaQuant-like
+    /// continuous optimization committed by thresholding.
+    pub round_reg: bool,
+    pub seed: u64,
+    pub verbose: bool,
+}
+
+impl Default for ReconConfig {
+    fn default() -> Self {
+        ReconConfig {
+            gran: "block".into(),
+            iters: 800,
+            batch: 32,
+            lr_v: 3e-3,
+            lr_s: 1e-3,
+            lam: 0.01,
+            use_fim: true,
+            round_reg: true,
+            seed: 0,
+            verbose: false,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct UnitReport {
+    pub name: String,
+    pub initial_loss: f64,
+    pub final_loss: f64,
+    pub soft_fraction_before_commit: f64,
+    pub iters: usize,
+    pub seconds: f64,
+}
+
+/// A calibrated model: hard-quantized weights + learned activation steps.
+pub struct QuantizedModel {
+    pub weights: Vec<Tensor>, // per layer, model order
+    pub biases: Vec<Tensor>,
+    pub act_steps: Vec<f32>,
+    pub bits: BitConfig,
+    pub reports: Vec<UnitReport>,
+    pub calib_seconds: f64,
+}
+
+pub struct Calibrator<'a> {
+    pub rt: &'a Runtime,
+    pub mf: &'a Manifest,
+    pub model: &'a ModelInfo,
+}
+
+impl<'a> Calibrator<'a> {
+    pub fn new(
+        rt: &'a Runtime,
+        mf: &'a Manifest,
+        model: &'a ModelInfo,
+    ) -> Calibrator<'a> {
+        Calibrator { rt, mf, model }
+    }
+
+    /// Load FP deploy weights in model-layer order.
+    pub fn fp_weights(&self) -> Result<(Vec<Tensor>, Vec<Tensor>)> {
+        let store = self.mf.load_weights(self.model)?;
+        let mut ws = Vec::new();
+        let mut bs = Vec::new();
+        for l in &self.model.layers {
+            ws.push(store.get(&format!("{}.w", l.name)).clone());
+            bs.push(store.get(&format!("{}.b", l.name)).clone());
+        }
+        Ok((ws, bs))
+    }
+
+    /// Activation-step init via the `act_obs` executable: LSQ-style
+    /// s = 2 E|x| / sqrt(qmax), observed on a few calibration batches.
+    pub fn init_act_steps(
+        &self,
+        calib: &CalibSet,
+        ws: &[Tensor],
+        bs: &[Tensor],
+        bits: &BitConfig,
+        nbatches: usize,
+    ) -> Result<Vec<f32>> {
+        let b = self.mf.calib_batch;
+        let nb = nbatches.min(calib.len() / b).max(1);
+        let nl = self.model.layers.len();
+        let mut meanabs = vec![0f64; nl];
+        let exe = &self.model.act_obs_exe;
+        for i in 0..nb {
+            let images = calib.batch(i * b, b);
+            let mut args: Vec<&Tensor> = vec![&images];
+            for l in 0..nl {
+                args.push(&ws[l]);
+                args.push(&bs[l]);
+            }
+            let out = self.rt.run(exe, &args)?;
+            for (l, t) in out.iter().enumerate() {
+                meanabs[l] += t.data[1] as f64; // [maxabs, meanabs]
+            }
+        }
+        let mut steps = Vec::with_capacity(nl);
+        for (l, layer) in self.model.layers.iter().enumerate() {
+            let (_, qmax) = act_bounds(bits.abits[l], layer.site_signed);
+            let m = (meanabs[l] / nb as f64) as f32;
+            steps.push((2.0 * m / qmax.max(1.0).sqrt()).max(1e-5));
+        }
+        Ok(steps)
+    }
+
+    /// FIM pass: squared per-sample task-loss gradients at every unit
+    /// output of the granularity (Eq. 10 weights). Returns one (K, ...)
+    /// cache per unit.
+    pub fn fim_pass(
+        &self,
+        gran: &str,
+        calib: &CalibSet,
+        ws: &[Tensor],
+        bs: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        let g = self.model.gran(gran);
+        let b = self.mf.calib_batch;
+        let k = calib.len();
+        assert!(k % b == 0, "calib size must be a multiple of {b}");
+        let classes = self.mf.dataset.classes;
+        let mut parts: Vec<Vec<Tensor>> =
+            (0..g.units.len()).map(|_| Vec::new()).collect();
+        for i in 0..k / b {
+            let images = calib.batch(i * b, b);
+            let onehot = calib.onehot(i * b, b, classes);
+            let mut args: Vec<&Tensor> = vec![&images, &onehot];
+            for l in 0..self.model.layers.len() {
+                args.push(&ws[l]);
+                args.push(&bs[l]);
+            }
+            let grads = self.rt.run(&g.fim_exe, &args)?;
+            for (u, gt) in grads.into_iter().enumerate() {
+                parts[u].push(gt.map(|x| x * x)); // diagonal FIM
+            }
+        }
+        // Normalize each unit's FIM to mean 1 and bound the weights.
+        // Only the *relative* weighting matters in Eq. 10, and raw squared
+        // batch-mean gradients are O(1/B^2) small — unnormalized they sink
+        // below Adam's epsilon and reconstruction degenerates to nearest
+        // rounding. The clamp is a substrate adaptation (documented in
+        // DESIGN.md): our FP models sit near 100% train accuracy, so
+        // per-sample CE gradients are extremely heavy-tailed — a handful of
+        // boundary samples would dominate Eq. 10 and collapse the effective
+        // calibration-set size (measured: W2 resnet_s 30% unclamped vs 94%
+        // MSE). Bounded weights keep the Fisher ordering while every sample
+        // still contributes.
+        Ok(parts
+            .iter()
+            .map(|p| {
+                let t = Tensor::stack0(p);
+                let mean = (t.data.iter().map(|&x| x as f64).sum::<f64>()
+                    / t.numel() as f64)
+                    .max(1e-30) as f32;
+                t.map(|x| (x / mean).clamp(0.25, 4.0))
+            })
+            .collect())
+    }
+
+    /// Full BRECQ calibration (Algorithm 1).
+    pub fn calibrate(
+        &self,
+        calib: &CalibSet,
+        bits: &BitConfig,
+        cfg: &ReconConfig,
+    ) -> Result<QuantizedModel> {
+        let t_start = std::time::Instant::now();
+        let (ws, bs) = self.fp_weights()?;
+        let nl = self.model.layers.len();
+        let b = self.mf.calib_batch;
+        let k = calib.len();
+        assert!(k % b == 0, "calib size {k} must be a multiple of {b}");
+        let nbatch = k / b;
+        let mut rng = Rng::new(cfg.seed);
+
+        // weight quantizer init (per-channel MSE steps + AdaRound v)
+        let mut states: Vec<AdaRoundState> = (0..nl)
+            .map(|l| {
+                let steps = mse_steps_per_channel(&ws[l], bits.wbits[l]);
+                AdaRoundState::init(&ws[l], &steps, bits.wbits[l])
+            })
+            .collect();
+
+        // activation steps (learned during recon when aq is on)
+        let mut act_steps = if bits.aq {
+            self.init_act_steps(calib, &ws, &bs, bits, 4)?
+        } else {
+            vec![1.0; nl]
+        };
+
+        // FIM caches (or unit MSE weights)
+        let gran = self.model.gran(&cfg.gran);
+        let fim = if cfg.use_fim {
+            Some(self.fim_pass(&cfg.gran, calib, &ws, &bs)?)
+        } else {
+            None
+        };
+
+        // dual activation streams over the whole calibration set
+        let mut fp_main = calib.images.clone();
+        let mut q_main = calib.images.clone();
+        let mut fp_skip: Option<Tensor> = None;
+        let mut q_skip: Option<Tensor> = None;
+
+        let mut qweights: Vec<Tensor> = ws.clone(); // committed as we go
+        let mut reports = Vec::new();
+
+        for (ui, unit) in gran.units.iter().enumerate() {
+            if unit.save_skip {
+                fp_skip = Some(fp_main.clone());
+                q_skip = Some(q_main.clone());
+            }
+            // FP targets for this unit
+            let z_fp = self.advance(
+                unit, &fp_main, fp_skip.as_ref(), &ws, &bs, &act_steps,
+                bits, false,
+            )?;
+            let unit_fim = match &fim {
+                Some(f) => f[ui].clone(),
+                None => Tensor::full(unit_out_full(unit, k), 1.0),
+            };
+
+            let report = self.reconstruct_unit(
+                unit, &q_main, q_skip.as_ref(), &z_fp, &unit_fim, &ws, &bs,
+                &mut states, &mut act_steps, bits, cfg, &mut rng, nbatch,
+            )?;
+            reports.push(report);
+
+            // commit hard-rounded weights for this unit's layers
+            for &l in &unit.layer_ids {
+                qweights[l] = states[l].commit(&ws[l]);
+            }
+            // advance both streams
+            let q_next = self.advance(
+                unit, &q_main, q_skip.as_ref(), &qweights, &bs, &act_steps,
+                bits, bits.aq,
+            )?;
+            fp_main = z_fp;
+            q_main = q_next;
+            if unit.uses_skip {
+                fp_skip = None;
+                q_skip = None;
+            }
+            if cfg.verbose {
+                let r = reports.last().unwrap();
+                eprintln!(
+                    "  [{}] unit {:<12} loss {:.3e} -> {:.3e}  ({:.1}s)",
+                    self.model.name, r.name, r.initial_loss, r.final_loss,
+                    r.seconds
+                );
+            }
+        }
+
+        Ok(QuantizedModel {
+            weights: qweights,
+            biases: bs,
+            act_steps,
+            bits: bits.clone(),
+            reports,
+            calib_seconds: t_start.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Run `unit_fwd` over the whole K-sample stream in calib batches.
+    #[allow(clippy::too_many_arguments)]
+    pub fn advance(
+        &self,
+        unit: &UnitInfo,
+        main: &Tensor,
+        skip: Option<&Tensor>,
+        ws: &[Tensor],
+        bs: &[Tensor],
+        act_steps: &[f32],
+        bits: &BitConfig,
+        aq: bool,
+    ) -> Result<Tensor> {
+        let b = self.mf.calib_batch;
+        let k = main.shape[0];
+        let mut outs = Vec::with_capacity(k / b);
+        let flag = Tensor::scalar1(if aq { 1.0 } else { 0.0 });
+        // per-site scalars
+        let scalars = self.site_scalars(unit, act_steps, bits);
+        for i in 0..k / b {
+            let xb = main.slice0(i * b, b);
+            let skb = skip.map(|s| s.slice0(i * b, b));
+            let mut args: Vec<&Tensor> = vec![&xb];
+            if unit.uses_skip {
+                args.push(skb.as_ref().unwrap());
+            }
+            for &l in &unit.layer_ids {
+                args.push(&ws[l]);
+                args.push(&bs[l]);
+            }
+            for (st, lo, hi) in &scalars {
+                args.push(st);
+                args.push(lo);
+                args.push(hi);
+            }
+            args.push(&flag);
+            let mut out = self.rt.run(&unit.fwd_exe, &args)?;
+            outs.push(out.remove(0));
+        }
+        Ok(Tensor::stack0(&outs))
+    }
+
+    fn site_scalars(
+        &self,
+        unit: &UnitInfo,
+        act_steps: &[f32],
+        bits: &BitConfig,
+    ) -> Vec<(Tensor, Tensor, Tensor)> {
+        unit.layer_ids
+            .iter()
+            .map(|&l| {
+                let layer = &self.model.layers[l];
+                let (lo, hi) = act_bounds(bits.abits[l], layer.site_signed);
+                (
+                    Tensor::scalar1(act_steps[l]),
+                    Tensor::scalar1(lo),
+                    Tensor::scalar1(hi),
+                )
+            })
+            .collect()
+    }
+
+    /// T Adam iterations on one unit (step 3 of the pipeline).
+    #[allow(clippy::too_many_arguments)]
+    fn reconstruct_unit(
+        &self,
+        unit: &UnitInfo,
+        x_cache: &Tensor,
+        skip_cache: Option<&Tensor>,
+        z_fp: &Tensor,
+        fim: &Tensor,
+        ws: &[Tensor],
+        bs: &[Tensor],
+        states: &mut [AdaRoundState],
+        act_steps: &mut [f32],
+        bits: &BitConfig,
+        cfg: &ReconConfig,
+        rng: &mut Rng,
+        _nbatch: usize,
+    ) -> Result<UnitReport> {
+        let t0 = std::time::Instant::now();
+        let bsz = cfg.batch.min(x_cache.shape[0]);
+        let nl = unit.layer_ids.len();
+        let sched = BetaSchedule::brecq_default(cfg.iters);
+
+        // trainable: v per layer, act step per site
+        let mut vs: Vec<Tensor> = unit
+            .layer_ids
+            .iter()
+            .map(|&l| states[l].v.clone())
+            .collect();
+        let mut asteps: Vec<Tensor> = unit
+            .layer_ids
+            .iter()
+            .map(|&l| Tensor::scalar1(act_steps[l]))
+            .collect();
+        let mut opt_v = Adam::for_params(
+            cfg.lr_v,
+            &vs.iter().collect::<Vec<_>>(),
+        );
+        let mut opt_s = Adam::for_params(
+            cfg.lr_s,
+            &asteps.iter().collect::<Vec<_>>(),
+        );
+
+        // frozen per-layer inputs
+        let wsteps: Vec<Tensor> = unit
+            .layer_ids
+            .iter()
+            .map(|&l| states[l].steps_tensor())
+            .collect();
+        let wbounds: Vec<(Tensor, Tensor)> = unit
+            .layer_ids
+            .iter()
+            .map(|&l| {
+                let (n, p) = weight_bounds(bits.wbits[l]);
+                (Tensor::scalar1(n), Tensor::scalar1(p))
+            })
+            .collect();
+        let abounds: Vec<(Tensor, Tensor)> = unit
+            .layer_ids
+            .iter()
+            .map(|&l| {
+                let layer = &self.model.layers[l];
+                let (lo, hi) = act_bounds(bits.abits[l], layer.site_signed);
+                (Tensor::scalar1(lo), Tensor::scalar1(hi))
+            })
+            .collect();
+        let aq_flag = Tensor::scalar1(if bits.aq { 1.0 } else { 0.0 });
+
+        let mut initial_loss = 0.0;
+        let mut final_loss = 0.0;
+        for t in 0..cfg.iters {
+            let rows = CalibSet::gather_rows_idx(x_cache.shape[0], bsz, rng);
+            let xb = CalibSet::gather_rows(x_cache, &rows);
+            let skb = skip_cache.map(|s| CalibSet::gather_rows(s, &rows));
+            let zb = CalibSet::gather_rows(z_fp, &rows);
+            let fb = CalibSet::gather_rows(fim, &rows);
+            let (beta, reg_on) = sched.at(t);
+            let lam = if cfg.round_reg && reg_on { cfg.lam } else { 0.0 };
+            let beta_t = Tensor::scalar1(beta);
+            let lam_t = Tensor::scalar1(lam);
+
+            let mut args: Vec<&Tensor> = vec![&xb];
+            if unit.uses_skip {
+                args.push(skb.as_ref().unwrap());
+            }
+            args.push(&zb);
+            args.push(&fb);
+            for (i, &l) in unit.layer_ids.iter().enumerate() {
+                args.push(&ws[l]);
+                args.push(&bs[l]);
+                args.push(&wsteps[i]);
+                args.push(&vs[i]);
+                args.push(&wbounds[i].0);
+                args.push(&wbounds[i].1);
+            }
+            for (i, _) in unit.layer_ids.iter().enumerate() {
+                args.push(&asteps[i]);
+                args.push(&abounds[i].0);
+                args.push(&abounds[i].1);
+            }
+            args.push(&beta_t);
+            args.push(&lam_t);
+            args.push(&aq_flag);
+
+            let out = self.rt.run(&unit.recon_exe, &args)?;
+            // outputs: loss, rec_loss, round_loss, gv*nl, gastep*nl
+            let rec_loss = out[1].data[0] as f64;
+            if t == 0 {
+                initial_loss = rec_loss;
+            }
+            final_loss = rec_loss;
+            let gv = &out[3..3 + nl];
+            let gs = &out[3 + nl..3 + 2 * nl];
+            {
+                let mut prefs: Vec<&mut Tensor> = vs.iter_mut().collect();
+                let grefs: Vec<&Tensor> = gv.iter().collect();
+                opt_v.step(&mut prefs, &grefs);
+            }
+            if bits.aq {
+                let mut prefs: Vec<&mut Tensor> =
+                    asteps.iter_mut().collect();
+                let grefs: Vec<&Tensor> = gs.iter().collect();
+                opt_s.step(&mut prefs, &grefs);
+                for st in asteps.iter_mut() {
+                    st.data[0] = st.data[0].max(1e-6); // keep step positive
+                }
+            }
+        }
+
+        // write back learned state
+        let mut soft = 0.0;
+        for (i, &l) in unit.layer_ids.iter().enumerate() {
+            states[l].v = vs[i].clone();
+            soft += states[l].soft_fraction();
+            act_steps[l] = asteps[i].data[0];
+        }
+        Ok(UnitReport {
+            name: unit.name.clone(),
+            initial_loss,
+            final_loss,
+            soft_fraction_before_commit: soft / nl.max(1) as f64,
+            iters: cfg.iters,
+            seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+fn unit_out_full(unit: &UnitInfo, k: usize) -> Vec<usize> {
+    let mut s = unit.out_shape.clone();
+    s[0] = k;
+    s
+}
+
+impl CalibSet {
+    /// `len` distinct row indices in [0, n) — recon batch sampler.
+    pub fn gather_rows_idx(n: usize, len: usize, rng: &mut Rng) -> Vec<usize> {
+        rng.sample_indices(n, len)
+    }
+}

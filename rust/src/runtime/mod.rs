@@ -1,0 +1,196 @@
+//! PJRT runtime: loads AOT HLO-text artifacts and executes them.
+//!
+//! This is the only module that touches the `xla` crate. The pattern
+//! (HLO text -> HloModuleProto -> XlaComputation -> compile -> execute)
+//! follows /opt/xla-example/load_hlo.rs; text is the interchange format
+//! because xla_extension 0.5.1 rejects jax>=0.5's 64-bit-id protos.
+//!
+//! Executables are compiled lazily and cached per name — experiments touch
+//! only the units they need, and repeated calibrations reuse the cache.
+//! Every call checks argument count/shape against the manifest signature so
+//! an ABI mismatch fails loudly at dispatch, not as garbage numerics.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+/// Signature of one AOT executable (from the manifest).
+#[derive(Debug, Clone)]
+pub struct ExeSig {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<(String, Vec<usize>)>,
+    pub outputs: Vec<(String, Vec<usize>)>,
+}
+
+pub struct Executable {
+    pub sig: ExeSig,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with positional tensors matching the manifest signature.
+    pub fn run(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        if args.len() != self.sig.inputs.len() {
+            bail!(
+                "{}: got {} args, signature has {}",
+                self.sig.name,
+                args.len(),
+                self.sig.inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (t, (name, shape)) in args.iter().zip(&self.sig.inputs) {
+            if &t.shape != shape {
+                bail!(
+                    "{}: input '{}' shape {:?} != expected {:?}",
+                    self.sig.name,
+                    name,
+                    t.shape,
+                    shape
+                );
+            }
+            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+            literals.push(
+                xla::Literal::vec1(&t.data)
+                    .reshape(&dims)
+                    .with_context(|| format!("reshaping input {name}"))?,
+            );
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // AOT lowering uses return_tuple=True: always a tuple literal.
+        let parts = result.to_tuple()?;
+        if parts.len() != self.sig.outputs.len() {
+            bail!(
+                "{}: got {} outputs, signature has {}",
+                self.sig.name,
+                parts.len(),
+                self.sig.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, (name, shape)) in parts.iter().zip(&self.sig.outputs) {
+            let data = lit
+                .to_vec::<f32>()
+                .with_context(|| format!("reading output {name}"))?;
+            out.push(Tensor::new(shape.clone(), data));
+        }
+        Ok(out)
+    }
+}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    sigs: HashMap<String, ExeSig>,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    /// per-executable dispatch counters (count, seconds) for the perf report
+    pub dispatches: RefCell<HashMap<String, (u64, f64)>>,
+}
+
+impl Runtime {
+    /// `dir` is the artifacts directory containing manifest.json.
+    pub fn new(dir: &Path, manifest: &Json) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        let mut sigs = HashMap::new();
+        let exes = manifest
+            .req("executables")
+            .as_obj()
+            .context("manifest: executables")?;
+        for (name, e) in exes {
+            let parse_io = |key: &str| -> Vec<(String, Vec<usize>)> {
+                e.req(key)
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|x| {
+                        (
+                            x.req("name").as_str().unwrap().to_string(),
+                            x.req("shape").usize_vec(),
+                        )
+                    })
+                    .collect()
+            };
+            sigs.insert(
+                name.clone(),
+                ExeSig {
+                    name: name.clone(),
+                    file: e.req("file").as_str().unwrap().to_string(),
+                    inputs: parse_io("inputs"),
+                    outputs: parse_io("outputs"),
+                },
+            );
+        }
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            sigs,
+            cache: RefCell::new(HashMap::new()),
+            dispatches: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn signature(&self, name: &str) -> Option<&ExeSig> {
+        self.sigs.get(name)
+    }
+
+    /// Compile (or fetch from cache) an executable by manifest name.
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let sig = self
+            .sigs
+            .get(name)
+            .with_context(|| format!("unknown executable '{name}'"))?
+            .clone();
+        let path = self.dir.join(&sig.file);
+        let proto =
+            xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .with_context(|| format!("parsing HLO {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let e = Rc::new(Executable { sig, exe });
+        self.cache.borrow_mut().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Convenience: load + run with dispatch accounting.
+    pub fn run(&self, name: &str, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let exe = self.load(name)?;
+        let t0 = std::time::Instant::now();
+        let out = exe.run(args)?;
+        let dt = t0.elapsed().as_secs_f64();
+        let mut d = self.dispatches.borrow_mut();
+        let ent = d.entry(name.to_string()).or_insert((0, 0.0));
+        ent.0 += 1;
+        ent.1 += dt;
+        Ok(out)
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Top-k dispatch hot spots: (exe, calls, total seconds).
+    pub fn hotspots(&self, k: usize) -> Vec<(String, u64, f64)> {
+        let d = self.dispatches.borrow();
+        let mut v: Vec<(String, u64, f64)> = d
+            .iter()
+            .map(|(n, (c, t))| (n.clone(), *c, *t))
+            .collect();
+        v.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+        v.truncate(k);
+        v
+    }
+}

@@ -1,0 +1,180 @@
+//! Sensitivity profiling for mixed precision (paper §3.4).
+//!
+//! The paper's loss model has a diagonal part (each layer's own sensitivity,
+//! as in HAWQ/ZeroQ) plus an *intra-block off-diagonal* part — the
+//! cross-layer terms the block-diagonal Hessian keeps. We measure both
+//! empirically on the calibration set:
+//!
+//!   s_l(b)    = L(layer l at b-bit, rest 8-bit) - L(all 8-bit)
+//!   o_{l,m}   = L(l & m at 2-bit) - L0 - s_l(2) - s_m(2)   (same block)
+//!
+//! and store them in a lookup table the GA fitness consults (the paper:
+//! "the sensitivity ... will be stored in a lookup table. When calculating
+//! the fitness value ... we will check the lookup table"). 2-bit-only pair
+//! terms, as in the paper ("we only take 2-bit permutations into
+//! consideration").
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::calib::CalibSet;
+use crate::eval::{calib_loss, EvalParams};
+use crate::model::{Manifest, ModelInfo};
+use crate::quant::{mse_steps_per_channel, quantize_nearest};
+use crate::recon::BitConfig;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone)]
+pub struct SensitivityTable {
+    /// s[layer][bit] -> loss increase (bits 2 and 4 measured; 8 = 0)
+    pub diag: Vec<HashMap<usize, f64>>,
+    /// intra-block 2-bit interaction terms keyed by (layer_lo, layer_hi)
+    pub offdiag: HashMap<(usize, usize), f64>,
+    pub base_loss: f64,
+}
+
+impl SensitivityTable {
+    /// Predicted calibration loss of a per-layer bit assignment (Eq. 11
+    /// fitness): base + Σ diag + Σ intra-block 2-bit pair terms.
+    pub fn predict(&self, wbits: &[usize]) -> f64 {
+        let mut loss = self.base_loss;
+        for (l, &b) in wbits.iter().enumerate() {
+            if b < 8 {
+                loss += self.diag[l].get(&b).copied().unwrap_or(0.0);
+            }
+        }
+        for (&(a, b), &o) in &self.offdiag {
+            if wbits[a] == 2 && wbits[b] == 2 {
+                loss += o;
+            }
+        }
+        loss
+    }
+}
+
+/// Layer pairs that share a reconstruction block (block granularity units).
+pub fn intra_block_pairs(model: &ModelInfo) -> Vec<(usize, usize)> {
+    let mut pairs = Vec::new();
+    if let Some(g) = model.grans.get("block") {
+        for u in &g.units {
+            for i in 0..u.layer_ids.len() {
+                for j in i + 1..u.layer_ids.len() {
+                    let (a, b) = (u.layer_ids[i], u.layer_ids[j]);
+                    pairs.push((a.min(b), a.max(b)));
+                }
+            }
+        }
+    }
+    pairs
+}
+
+pub struct Profiler<'a> {
+    pub rt: &'a Runtime,
+    pub mf: &'a Manifest,
+    pub model: &'a ModelInfo,
+}
+
+impl<'a> Profiler<'a> {
+    /// Measure the table. `ws`/`bs` are FP deploy weights; quantization in
+    /// the probes is nearest-rounding with per-channel MSE steps (the
+    /// paper measures sensitivity on the calibrated quantizers; nearest
+    /// rounding is the data-free proxy and preserves the ordering).
+    pub fn measure(
+        &self,
+        calib: &CalibSet,
+        ws: &[Tensor],
+        bs: &[Tensor],
+        with_offdiag: bool,
+    ) -> Result<SensitivityTable> {
+        let nl = self.model.layers.len();
+        // pre-quantize every layer at 2/4/8
+        let mut q: Vec<HashMap<usize, Tensor>> = Vec::with_capacity(nl);
+        for l in 0..nl {
+            let mut m = HashMap::new();
+            for bits in [2usize, 4, 8] {
+                let steps = mse_steps_per_channel(&ws[l], bits);
+                m.insert(bits, quantize_nearest(&ws[l], &steps, bits));
+            }
+            q.push(m);
+        }
+        let loss_with = |assign: &dyn Fn(usize) -> usize| -> Result<f64> {
+            let weights: Vec<Tensor> = (0..nl)
+                .map(|l| q[l][&assign(l)].clone())
+                .collect();
+            let p = EvalParams {
+                weights: &weights,
+                biases: bs,
+                act_steps: vec![1.0; nl],
+                bits: BitConfig::uniform(self.model, 8, None, false),
+                aq: false,
+            };
+            calib_loss(self.rt, self.mf, self.model, &p, calib)
+        };
+
+        let base_loss = loss_with(&|_| 8)?;
+        let mut diag: Vec<HashMap<usize, f64>> =
+            (0..nl).map(|_| HashMap::new()).collect();
+        for l in 0..nl {
+            for bits in [2usize, 4] {
+                let loss =
+                    loss_with(&|i| if i == l { bits } else { 8 })?;
+                diag[l].insert(bits, (loss - base_loss).max(0.0));
+            }
+        }
+
+        let mut offdiag = HashMap::new();
+        if with_offdiag {
+            for (a, b) in intra_block_pairs(self.model) {
+                let loss = loss_with(&|i| {
+                    if i == a || i == b {
+                        2
+                    } else {
+                        8
+                    }
+                })?;
+                let o = loss
+                    - base_loss
+                    - diag[a][&2]
+                    - diag[b][&2];
+                offdiag.insert((a, b), o);
+            }
+        }
+
+        Ok(SensitivityTable { diag, offdiag, base_loss })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> SensitivityTable {
+        let mut d0 = HashMap::new();
+        d0.insert(2, 1.0);
+        d0.insert(4, 0.1);
+        let mut d1 = HashMap::new();
+        d1.insert(2, 0.5);
+        d1.insert(4, 0.05);
+        let mut off = HashMap::new();
+        off.insert((0, 1), 0.25);
+        SensitivityTable { diag: vec![d0, d1], offdiag: off, base_loss: 2.0 }
+    }
+
+    #[test]
+    fn predict_diag_only() {
+        let t = table();
+        assert!((t.predict(&[8, 8]) - 2.0).abs() < 1e-12);
+        assert!((t.predict(&[4, 8]) - 2.1).abs() < 1e-12);
+        assert!((t.predict(&[2, 8]) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn predict_includes_pair_term_only_when_both_2bit() {
+        let t = table();
+        assert!((t.predict(&[2, 2]) - (2.0 + 1.0 + 0.5 + 0.25)).abs()
+            < 1e-12);
+        assert!((t.predict(&[2, 4]) - (2.0 + 1.0 + 0.05)).abs() < 1e-12);
+    }
+}

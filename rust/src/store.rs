@@ -1,0 +1,119 @@
+//! Weight/dataset binary store reader — the ABI shared with
+//! `python/compile/store.py`: `<prefix>.json` index (name -> shape/offset/
+//! size in f32 elements) over a flat little-endian f32 `<prefix>.bin`.
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+pub struct Store {
+    pub tensors: HashMap<String, Tensor>,
+}
+
+impl Store {
+    pub fn load(prefix: &Path) -> Result<Store> {
+        let idx_path = prefix.with_extension("json");
+        let bin_path = prefix.with_extension("bin");
+        let idx_text = fs::read_to_string(&idx_path)
+            .with_context(|| format!("reading {idx_path:?}"))?;
+        let idx = Json::parse(&idx_text)
+            .map_err(|e| anyhow::anyhow!("parsing {idx_path:?}: {e}"))?;
+        let raw = fs::read(&bin_path)
+            .with_context(|| format!("reading {bin_path:?}"))?;
+        if raw.len() % 4 != 0 {
+            bail!("{bin_path:?}: length not a multiple of 4");
+        }
+        let floats: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+
+        let mut tensors = HashMap::new();
+        let entries = idx
+            .req("tensors")
+            .as_obj()
+            .context("store index: 'tensors' not an object")?;
+        for (name, meta) in entries {
+            let shape = meta.req("shape").usize_vec();
+            let offset = meta.req("offset").as_usize().unwrap();
+            let size = meta.req("size").as_usize().unwrap();
+            if offset + size > floats.len() {
+                bail!("tensor {name} out of range in {bin_path:?}");
+            }
+            tensors.insert(
+                name.clone(),
+                Tensor::new(
+                    if shape.is_empty() { vec![1] } else { shape },
+                    floats[offset..offset + size].to_vec(),
+                ),
+            );
+        }
+        Ok(Store { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> &Tensor {
+        self.tensors
+            .get(name)
+            .unwrap_or_else(|| panic!("store: missing tensor '{name}'"))
+    }
+
+    pub fn try_get(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.get(name)
+    }
+}
+
+/// Raw u8 raster file loader (datasets are stored as u8 NHWC + labels).
+pub fn load_u8(path: &Path) -> Result<Vec<u8>> {
+    fs::read(path).with_context(|| format!("reading {path:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn reads_python_format() {
+        let dir = std::env::temp_dir().join("brecq_store_test");
+        fs::create_dir_all(&dir).unwrap();
+        let prefix = dir.join("s");
+        // two tensors: a (2,2) at offset 0, b (3,) at offset 4
+        let vals: Vec<f32> = vec![1., 2., 3., 4., 9., 8., 7.];
+        let bytes: Vec<u8> =
+            vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        fs::File::create(prefix.with_extension("bin"))
+            .unwrap()
+            .write_all(&bytes)
+            .unwrap();
+        fs::write(
+            prefix.with_extension("json"),
+            r#"{"tensors":{"a":{"shape":[2,2],"offset":0,"size":4},
+                           "b":{"shape":[3],"offset":4,"size":3}}}"#,
+        )
+        .unwrap();
+        let s = Store::load(&prefix).unwrap();
+        assert_eq!(s.get("a").shape, vec![2, 2]);
+        assert_eq!(s.get("a").data, vec![1., 2., 3., 4.]);
+        assert_eq!(s.get("b").data, vec![9., 8., 7.]);
+        assert!(s.try_get("missing").is_none());
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        let dir = std::env::temp_dir().join("brecq_store_test2");
+        fs::create_dir_all(&dir).unwrap();
+        let prefix = dir.join("s");
+        fs::write(prefix.with_extension("bin"), [0u8; 8]).unwrap();
+        fs::write(
+            prefix.with_extension("json"),
+            r#"{"tensors":{"a":{"shape":[4],"offset":0,"size":4}}}"#,
+        )
+        .unwrap();
+        assert!(Store::load(&prefix).is_err());
+    }
+}

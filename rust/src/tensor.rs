@@ -1,0 +1,152 @@
+//! Dense row-major f32 tensor: the host-side value type the coordinator
+//! moves between the weight store, the calibration caches and the PJRT
+//! runtime. Deliberately minimal — all heavy math lives in the AOT
+//! executables; the tensor only needs shape bookkeeping, elementwise
+//! helpers for the quantizer/optimizer, and (de)serialization.
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} != data len {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: Vec<usize>, v: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![v; n] }
+    }
+
+    pub fn scalar1(v: f32) -> Tensor {
+        Tensor { shape: vec![1], data: vec![v] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Leading-dim (out-channel) count; 1 for scalars.
+    pub fn c0(&self) -> usize {
+        self.shape.first().copied().unwrap_or(1)
+    }
+
+    /// Elements per leading-dim slice.
+    pub fn inner(&self) -> usize {
+        if self.shape.is_empty() {
+            1
+        } else {
+            self.numel() / self.shape[0]
+        }
+    }
+
+    pub fn reshaped(mut self, shape: Vec<usize>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape;
+        self
+    }
+
+    /// Rows of a (B, C) logits tensor -> argmax per row.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        assert_eq!(self.shape.len(), 2);
+        let c = self.shape[1];
+        self.data
+            .chunks(c)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap()
+            })
+            .collect()
+    }
+
+    /// Slice of the leading dimension: rows [start, start+len).
+    pub fn slice0(&self, start: usize, len: usize) -> Tensor {
+        let inner = self.inner();
+        let mut shape = self.shape.clone();
+        shape[0] = len;
+        Tensor::new(
+            shape,
+            self.data[start * inner..(start + len) * inner].to_vec(),
+        )
+    }
+
+    /// Concatenate along a new leading batch axis built from equal chunks.
+    pub fn stack0(parts: &[Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let mut shape = parts[0].shape.clone();
+        shape[0] = parts.iter().map(|p| p.shape[0]).sum();
+        let mut data = Vec::with_capacity(shape.iter().product());
+        for p in parts {
+            assert_eq!(p.shape[1..], parts[0].shape[1..]);
+            data.extend_from_slice(&p.data);
+        }
+        Tensor::new(shape, data)
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn sq_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.c0(), 2);
+        assert_eq!(t.inner(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn argmax() {
+        let t = Tensor::new(vec![2, 3], vec![0., 2., 1., 5., 4., 3.]);
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn slice_and_stack_roundtrip() {
+        let t = Tensor::new(vec![4, 2], (0..8).map(|x| x as f32).collect());
+        let a = t.slice0(0, 2);
+        let b = t.slice0(2, 2);
+        assert_eq!(Tensor::stack0(&[a, b]), t);
+    }
+
+    #[test]
+    fn scalar_and_full() {
+        assert_eq!(Tensor::scalar1(3.0).data, vec![3.0]);
+        assert_eq!(Tensor::full(vec![2, 2], 1.5).data, vec![1.5; 4]);
+    }
+}

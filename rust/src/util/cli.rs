@@ -1,0 +1,160 @@
+//! Tiny argv parser substrate (clap is unavailable offline).
+//!
+//! Grammar: `brecq <subcommand> [positional...] [--key value | --flag]`.
+//! Typed getters with defaults keep call sites short; unknown-flag detection
+//! catches typos early.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub cmd: String,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut a = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                a.cmd = it.next().unwrap().clone();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                let val = match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        it.next().unwrap().clone()
+                    }
+                    _ => "true".to_string(), // bare flag
+                };
+                a.flags.insert(key.to_string(), val);
+            } else {
+                a.positional.push(tok.clone());
+            }
+        }
+        a
+    }
+
+    pub fn from_env() -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().push(key.to_string());
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.mark(key);
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.flags.get(key).cloned()
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.mark(key);
+        self.flags
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key}: bad usize '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.mark(key);
+        self.flags
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key}: bad u64 '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn f32(&self, key: &str, default: f32) -> f32 {
+        self.mark(key);
+        self.flags
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key}: bad f32 '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        self.mark(key);
+        self.flags
+            .get(key)
+            .map(|v| matches!(v.as_str(), "true" | "1" | "yes"))
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list flag.
+    pub fn list(&self, key: &str, default: &str) -> Vec<String> {
+        self.str(key, default)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.to_string())
+            .collect()
+    }
+
+    /// Call after all getters: errors on flags nobody consumed (typos).
+    pub fn reject_unknown(&self) -> Result<(), String> {
+        let seen = self.seen.borrow();
+        let unknown: Vec<&String> = self
+            .flags
+            .keys()
+            .filter(|k| !seen.contains(k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("unknown flags: {unknown:?}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_positionals() {
+        let a = Args::parse(&argv(
+            "calibrate resnet_s --bits 2 --act-bits 4 --seed 7 --fast",
+        ));
+        assert_eq!(a.cmd, "calibrate");
+        assert_eq!(a.positional, vec!["resnet_s"]);
+        assert_eq!(a.usize("bits", 8), 2);
+        assert_eq!(a.usize("act-bits", 32), 4);
+        assert_eq!(a.u64("seed", 0), 7);
+        assert!(a.bool("fast", false));
+        assert!(a.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&argv("eval"));
+        assert_eq!(a.str("model", "resnet_s"), "resnet_s");
+        assert_eq!(a.f32("lam", 0.01), 0.01);
+        assert!(!a.bool("aq", false));
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let a = Args::parse(&argv("x --real 1 --typo 2"));
+        let _ = a.usize("real", 0);
+        assert!(a.reject_unknown().is_err());
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = Args::parse(&argv("x --models a,b,c"));
+        assert_eq!(a.list("models", ""), vec!["a", "b", "c"]);
+    }
+}

@@ -1,0 +1,197 @@
+//! Integration tests over the real artifacts (manifest + HLO + weights).
+//! Each test skips (prints a notice) when `make artifacts` hasn't run, so
+//! `cargo test` stays green on a fresh checkout.
+
+use brecq::coordinator::Env;
+use brecq::eval::{accuracy, calib_loss, forward, EvalParams};
+use brecq::quant::{mse_steps_per_channel, quantize_nearest};
+use brecq::recon::{BitConfig, Calibrator, ReconConfig};
+use brecq::tensor::Tensor;
+
+fn env() -> Option<Env> {
+    let dir = std::env::var("BRECQ_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        eprintln!("integration test skipped: no artifacts at {dir}/");
+        return None;
+    }
+    Some(Env::bootstrap(Some(dir)).expect("bootstrap"))
+}
+
+#[test]
+fn manifest_and_weights_consistent() {
+    let Some(env) = env() else { return };
+    for (name, model) in &env.mf.models {
+        let store = env.mf.load_weights(model).expect("weights");
+        for l in &model.layers {
+            let w = store.get(&format!("{}.w", l.name));
+            assert_eq!(w.shape, l.wshape, "{name}/{}", l.name);
+            let b = store.get(&format!("{}.b", l.name));
+            assert_eq!(b.shape, vec![l.cout]);
+        }
+        // every referenced executable must exist with a parseable signature
+        for g in model.grans.values() {
+            assert!(env.rt.signature(&g.fim_exe).is_some());
+            for u in &g.units {
+                assert!(env.rt.signature(&u.fwd_exe).is_some(), "{}", u.name);
+                assert!(env.rt.signature(&u.recon_exe).is_some());
+            }
+        }
+        assert!(env.rt.signature(&model.fwd_exe).is_some());
+        assert!(env.rt.signature(&model.act_obs_exe).is_some());
+    }
+}
+
+#[test]
+fn fp_eval_matches_training_reference() {
+    let Some(env) = env() else { return };
+    let model = env.model("resnet_s");
+    let cal = Calibrator::new(&env.rt, &env.mf, model);
+    let (ws, bs) = cal.fp_weights().unwrap();
+    let test = env.test_set().unwrap();
+    let acc = accuracy(&env.rt, model, &EvalParams::fp(model, &ws, &bs),
+                       &test)
+        .unwrap();
+    // the AOT eval path must reproduce the Python-side deploy accuracy
+    assert!((acc - model.fp_acc).abs() < 0.002,
+            "AOT eval {acc} vs trained {}", model.fp_acc);
+}
+
+#[test]
+fn unit_stream_stitches_to_full_forward() {
+    // advancing the unit stream with FP weights must produce the same
+    // logits as the monolithic eval executable — the stream semantics
+    // (save_skip / uses_skip) are load-bearing for the whole engine.
+    let Some(env) = env() else { return };
+    let model = env.model("resnet_s");
+    let cal = Calibrator::new(&env.rt, &env.mf, model);
+    let (ws, bs) = cal.fp_weights().unwrap();
+    let train = env.train_set().unwrap();
+    let calib = env.calib(&train, 32, 7);
+
+    for gran in ["layer", "block", "stage", "net"] {
+        let mut main = calib.images.clone();
+        let mut skip: Option<Tensor> = None;
+        let bits = BitConfig::uniform(model, 8, None, false);
+        for unit in &model.gran(gran).units {
+            if unit.save_skip {
+                skip = Some(main.clone());
+            }
+            main = cal
+                .advance(unit, &main, skip.as_ref(), &ws, &bs,
+                         &vec![1.0; ws.len()], &bits, false)
+                .unwrap();
+            if unit.uses_skip {
+                skip = None;
+            }
+        }
+        // compare against eval_fwd logits (pad batch up to eval batch)
+        let b = model.eval_batch;
+        let mut parts = vec![calib.images.clone()];
+        while parts.iter().map(|t| t.shape[0]).sum::<usize>() < b {
+            parts.push(calib.images.clone());
+        }
+        let padded = Tensor::stack0(&parts).slice0(0, b);
+        let logits = forward(&env.rt, model,
+                             &EvalParams::fp(model, &ws, &bs), &padded)
+            .unwrap();
+        for i in 0..32 * 10 {
+            assert!((main.data[i] - logits.data[i]).abs() < 2e-3,
+                    "gran={gran} logit {i}: {} vs {}", main.data[i],
+                    logits.data[i]);
+        }
+    }
+}
+
+#[test]
+fn w8_nearest_rounding_preserves_accuracy() {
+    let Some(env) = env() else { return };
+    let model = env.model("resnet_s");
+    let cal = Calibrator::new(&env.rt, &env.mf, model);
+    let (ws, bs) = cal.fp_weights().unwrap();
+    let q: Vec<Tensor> = ws
+        .iter()
+        .map(|w| {
+            let steps = mse_steps_per_channel(w, 8);
+            quantize_nearest(w, &steps, 8)
+        })
+        .collect();
+    let test = env.test_set().unwrap();
+    let p = EvalParams {
+        weights: &q,
+        biases: &bs,
+        act_steps: vec![1.0; ws.len()],
+        bits: BitConfig::uniform(model, 8, None, false),
+        aq: false,
+    };
+    let acc = accuracy(&env.rt, model, &p, &test).unwrap();
+    assert!(acc > model.fp_acc - 0.01,
+            "8-bit nearest rounding dropped accuracy: {acc}");
+}
+
+#[test]
+fn brecq_w4_beats_nearest_rounding_w2_cliff() {
+    // tiny-budget sanity: W4 BRECQ stays near FP; W2 nearest collapses
+    let Some(env) = env() else { return };
+    let model = env.model("resnet_s");
+    let cal = Calibrator::new(&env.rt, &env.mf, model);
+    let train = env.train_set().unwrap();
+    let calib = env.calib(&train, 64, 3);
+    let test = env.test_set().unwrap();
+
+    let bits4 = BitConfig::uniform(model, 4, None, true);
+    let cfg = ReconConfig { iters: 40, ..ReconConfig::default() };
+    let qm = cal.calibrate(&calib, &bits4, &cfg).unwrap();
+    let acc4 = accuracy(&env.rt, model, &EvalParams::quantized(&qm), &test)
+        .unwrap();
+    assert!(acc4 > model.fp_acc - 0.05, "W4 BRECQ too low: {acc4}");
+
+    let (ws, bs) = cal.fp_weights().unwrap();
+    let q2: Vec<Tensor> = ws
+        .iter()
+        .map(|w| {
+            let steps = mse_steps_per_channel(w, 2);
+            quantize_nearest(w, &steps, 2)
+        })
+        .collect();
+    let p2 = EvalParams {
+        weights: &q2,
+        biases: &bs,
+        act_steps: vec![1.0; ws.len()],
+        bits: BitConfig::uniform(model, 2, None, false),
+        aq: false,
+    };
+    let acc2 = accuracy(&env.rt, model, &p2, &test).unwrap();
+    assert!(acc4 > acc2 + 0.2,
+            "expected W2-nearest cliff below W4-BRECQ: {acc4} vs {acc2}");
+}
+
+#[test]
+fn calib_loss_orders_with_accuracy() {
+    let Some(env) = env() else { return };
+    let model = env.model("resnet_s");
+    let cal = Calibrator::new(&env.rt, &env.mf, model);
+    let (ws, bs) = cal.fp_weights().unwrap();
+    let train = env.train_set().unwrap();
+    let calib = env.calib(&train, 256, 1);
+    let p_fp = EvalParams::fp(model, &ws, &bs);
+    let loss_fp = calib_loss(&env.rt, &env.mf, model, &p_fp, &calib)
+        .unwrap();
+    let q2: Vec<Tensor> = ws
+        .iter()
+        .map(|w| {
+            let steps = mse_steps_per_channel(w, 2);
+            quantize_nearest(w, &steps, 2)
+        })
+        .collect();
+    let p_q = EvalParams {
+        weights: &q2,
+        biases: &bs,
+        act_steps: vec![1.0; ws.len()],
+        bits: BitConfig::uniform(model, 2, None, false),
+        aq: false,
+    };
+    let loss_q = calib_loss(&env.rt, &env.mf, model, &p_q, &calib).unwrap();
+    assert!(loss_q > loss_fp + 0.1,
+            "2-bit loss {loss_q} should exceed FP loss {loss_fp}");
+}

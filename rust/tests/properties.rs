@@ -1,0 +1,216 @@
+//! Property-based tests (hand-rolled generators over util::rng — proptest
+//! is unavailable offline). Each property runs across many random seeds;
+//! failures print the seed for replay.
+
+use brecq::quant::{
+    act_bounds, mse_steps_per_channel, quantize_nearest, rect_sigmoid,
+    rect_sigmoid_inv, weight_bounds, AdaRoundState,
+};
+use brecq::tensor::Tensor;
+use brecq::util::json::Json;
+use brecq::util::rng::Rng;
+
+fn randn(rng: &mut Rng, shape: Vec<usize>, scale: f32) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::new(shape, (0..n).map(|_| rng.gauss() as f32 * scale).collect())
+}
+
+#[test]
+fn prop_nearest_quant_idempotent() {
+    for seed in 0..30 {
+        let mut rng = Rng::new(seed);
+        let c = 1 + rng.below(8);
+        let k = 1 + rng.below(64);
+        let bits = [2, 3, 4, 8][rng.below(4)];
+        let scale = 0.1 + rng.f32();
+        let w = randn(&mut rng, vec![c, k], scale);
+        let steps = mse_steps_per_channel(&w, bits);
+        let q1 = quantize_nearest(&w, &steps, bits);
+        let q2 = quantize_nearest(&q1, &steps, bits);
+        for i in 0..q1.data.len() {
+            assert!((q1.data[i] - q2.data[i]).abs() < 1e-5,
+                    "seed {seed} idx {i}");
+        }
+    }
+}
+
+#[test]
+fn prop_nearest_quant_error_bounded_by_half_step_or_clip() {
+    for seed in 0..30 {
+        let mut rng = Rng::new(1000 + seed);
+        let c = 1 + rng.below(4);
+        let k = 8 + rng.below(64);
+        let bits = [2, 4, 8][rng.below(3)];
+        let (n, p) = weight_bounds(bits);
+        let w = randn(&mut rng, vec![c, k], 0.5);
+        let steps = mse_steps_per_channel(&w, bits);
+        let q = quantize_nearest(&w, &steps, bits);
+        let inner = w.inner();
+        for ch in 0..c {
+            let s = steps[ch];
+            for i in ch * inner..(ch + 1) * inner {
+                let clipped = (w.data[i] / s) < n || (w.data[i] / s) > p;
+                if !clipped {
+                    assert!((q.data[i] - w.data[i]).abs() <= s * 0.5 + 1e-6,
+                            "seed {seed}: err {} > s/2 {}",
+                            (q.data[i] - w.data[i]).abs(), s * 0.5);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_adaround_commit_on_grid_and_within_one_step() {
+    for seed in 0..30 {
+        let mut rng = Rng::new(2000 + seed);
+        let c = 1 + rng.below(6);
+        let k = 4 + rng.below(40);
+        let bits = [2, 3, 4][rng.below(3)];
+        let (n, p) = weight_bounds(bits);
+        let w = randn(&mut rng, vec![c, k], 0.3);
+        let steps = mse_steps_per_channel(&w, bits);
+        let mut st = AdaRoundState::init(&w, &steps, bits);
+        // random v perturbation (mid-optimization state)
+        for v in st.v.data.iter_mut() {
+            *v += rng.gauss() as f32 * 2.0;
+        }
+        let q = st.commit(&w);
+        let nearest = quantize_nearest(&w, &steps, bits);
+        let inner = w.inner();
+        for ch in 0..c {
+            let s = steps[ch];
+            for i in ch * inner..(ch + 1) * inner {
+                let g = q.data[i] / s;
+                assert!((g - g.round()).abs() < 1e-3, "grid seed {seed}");
+                assert!(g.round() >= n && g.round() <= p, "range seed {seed}");
+                assert!((q.data[i] - nearest.data[i]).abs() <= s + 1e-5,
+                        "one-step seed {seed}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_rect_sigmoid_inverse_roundtrips() {
+    for seed in 0..50 {
+        let mut rng = Rng::new(3000 + seed);
+        let h = 0.02 + 0.96 * rng.f32();
+        let v = rect_sigmoid_inv(h);
+        assert!((rect_sigmoid(v) - h).abs() < 1e-4, "seed {seed} h {h}");
+    }
+}
+
+#[test]
+fn prop_bounds_consistent() {
+    for bits in 2..=8 {
+        let (n, p) = weight_bounds(bits);
+        assert_eq!(p - n + 1.0, 2f32.powi(bits as i32));
+        let (un, up) = act_bounds(bits, false);
+        assert_eq!(un, 0.0);
+        assert_eq!(up - un + 1.0, 2f32.powi(bits as i32));
+        assert_eq!(act_bounds(bits, true), (n, p));
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_fuzz() {
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth > 3 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.f64() < 0.5),
+            2 => Json::Num((rng.gauss() * 100.0 * 8.0).round() / 8.0),
+            3 => {
+                let n = rng.below(12);
+                Json::Str(
+                    (0..n)
+                        .map(|_| {
+                            ['a', '"', '\\', '\n', 'µ', '7', ' '][rng.below(7)]
+                        })
+                        .collect(),
+                )
+            }
+            4 => Json::Arr((0..rng.below(5))
+                .map(|_| gen(rng, depth + 1))
+                .collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for seed in 0..200 {
+        let mut rng = Rng::new(4000 + seed);
+        let v = gen(&mut rng, 0);
+        let text = v.to_string();
+        let back = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+        assert_eq!(back, v, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_tensor_slice_stack_partition() {
+    for seed in 0..30 {
+        let mut rng = Rng::new(5000 + seed);
+        let rows = 2 + rng.below(20);
+        let inner = 1 + rng.below(16);
+        let t = randn(&mut rng, vec![rows, inner], 1.0);
+        // random partition of rows
+        let cut = 1 + rng.below(rows - 1);
+        let joined = Tensor::stack0(&[t.slice0(0, cut),
+                                      t.slice0(cut, rows - cut)]);
+        assert_eq!(joined, t, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_adam_descends_random_quadratics() {
+    use brecq::optim::Adam;
+    for seed in 0..10 {
+        let mut rng = Rng::new(6000 + seed);
+        let n = 1 + rng.below(16);
+        let target = randn(&mut rng, vec![n], 3.0);
+        let scale: Vec<f32> =
+            (0..n).map(|_| 0.5 + 2.0 * rng.f32()).collect();
+        let mut x = Tensor::zeros(vec![n]);
+        let mut opt = Adam::new(0.15, &[n]);
+        let loss = |x: &Tensor| -> f64 {
+            x.data
+                .iter()
+                .zip(&target.data)
+                .zip(&scale)
+                .map(|((a, b), s)| (s * (a - b)) as f64 * ((a - b) as f64))
+                .sum()
+        };
+        let l0 = loss(&x);
+        for _ in 0..600 {
+            let g = Tensor::new(
+                vec![n],
+                x.data
+                    .iter()
+                    .zip(&target.data)
+                    .zip(&scale)
+                    .map(|((a, b), s)| 2.0 * s * (a - b))
+                    .collect(),
+            );
+            opt.step(&mut [&mut x], &[&g]);
+        }
+        assert!(loss(&x) < l0 * 0.01, "seed {seed}: {} vs {}", loss(&x), l0);
+    }
+}
+
+#[test]
+fn prop_rng_streams_independent() {
+    // forked streams must not correlate trivially
+    let mut a = Rng::new(7);
+    let mut b = a.fork();
+    let mut same = 0;
+    for _ in 0..1000 {
+        if (a.f64() < 0.5) == (b.f64() < 0.5) {
+            same += 1;
+        }
+    }
+    assert!((400..600).contains(&same), "{same}");
+}
