@@ -39,10 +39,9 @@ fn main() {
     // per-dispatch cost of the hottest executable (largest recon unit)
     let units = &model.gran("block").units;
     for u in units.iter().take(3) {
-        let exe = env.rt.load(&u.recon_exe).unwrap();
+        let sig = env.rt.signature(&u.recon_exe).unwrap().clone();
         // build a correctly-shaped argument set once; reuse across iters
-        let args: Vec<brecq::tensor::Tensor> = exe
-            .sig
+        let args: Vec<brecq::tensor::Tensor> = sig
             .inputs
             .iter()
             .map(|(name, shape)| {
@@ -64,7 +63,7 @@ fn main() {
         Bench::new(&format!("unit_recon dispatch [{}]", u.name))
             .iters(10)
             .run(|| {
-                let out = exe.run(&refs).unwrap();
+                let out = env.rt.run(&u.recon_exe, &refs).unwrap();
                 std::hint::black_box(out[0].data[0]);
             });
     }

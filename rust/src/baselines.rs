@@ -31,13 +31,13 @@ use crate::calib::CalibSet;
 use crate::model::{Manifest, ModelInfo};
 use crate::quant::{mse_steps_per_channel, quantize_nearest};
 use crate::recon::{BitConfig, Calibrator, QuantizedModel, ReconConfig};
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 use crate::tensor::Tensor;
 
 /// OMSE: data-free nearest rounding with MSE-optimal per-channel steps.
 /// When `bits.aq` is set, activation steps come from calibration stats.
 pub fn omse(
-    rt: &Runtime,
+    rt: &dyn Backend,
     mf: &Manifest,
     model: &ModelInfo,
     calib: &CalibSet,
@@ -73,7 +73,7 @@ pub fn omse(
 /// layer-granularity units correcting each unit's final-layer bias by the
 /// per-channel mean output shift (quantized stream vs FP stream).
 pub fn bias_correction(
-    rt: &Runtime,
+    rt: &dyn Backend,
     mf: &Manifest,
     model: &ModelInfo,
     calib: &CalibSet,

@@ -482,7 +482,12 @@ pub fn fig3(env: &Env, o: &ExpOpts) -> Result<Table> {
             t.row(vec!["real".into(), format!("{n}"), format!("{wb}"),
                        pct(acc)]);
         }
-        // distilled data source
+        // distilled data source (needs the model's distill executable —
+        // absent e.g. in the synthetic native environment)
+        if model.distill_exe.is_none() {
+            println!("  fig3 distilled W{wb}: skipped (no distill exe)");
+            continue;
+        }
         for n in [256usize, 1024] {
             let dcal = distill::distill(&env.rt, &env.mf, model,
                                         &DistillConfig {

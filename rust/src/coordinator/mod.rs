@@ -1,34 +1,95 @@
 //! Coordinator: environment bootstrap, experiment configuration and report
 //! writing — the glue the CLI and the experiment drivers run on.
+//!
+//! Backend selection: `Env::bootstrap` loads the artifact directory when it
+//! exists and picks the backend from the manifest's `backend` hint —
+//! PJRT-targeted manifests need the `pjrt` cargo feature, `native`
+//! manifests run on the pure-Rust interpreter. With no artifacts at all it
+//! falls back to [`Env::bootstrap_synthetic`]: a deterministic, generated
+//! two-model environment on the native backend, so every CLI command and
+//! the whole test suite work on a fresh checkout with no Python/XLA.
 
 pub mod experiments;
 pub mod report;
 
 use std::path::PathBuf;
 
+#[cfg(not(feature = "pjrt"))]
+use anyhow::Context;
 use anyhow::Result;
 
 use crate::calib::{CalibSet, DataSet};
-use crate::model::{Manifest, ModelInfo};
-use crate::runtime::Runtime;
+use crate::model::{synthetic, Manifest, ModelInfo};
+use crate::runtime::native::NativeBackend;
+use crate::runtime::Backend;
 use crate::util::rng::Rng;
 
-/// Everything an experiment needs: manifest, runtime, datasets.
+/// Everything an experiment needs: manifest, backend, datasets.
 pub struct Env {
     pub mf: Manifest,
-    pub rt: Runtime,
+    pub rt: Box<dyn Backend>,
     pub dir: PathBuf,
 }
 
 impl Env {
-    /// `dir` defaults to ./artifacts (or $BRECQ_ARTIFACTS).
+    /// `dir` defaults to ./artifacts (or $BRECQ_ARTIFACTS). An explicitly
+    /// requested directory must exist — a typo'd path is a hard error, not
+    /// a silent switch to the toy environment. Only the implicit default
+    /// falls back to the hermetic synthetic environment.
     pub fn bootstrap(dir: Option<String>) -> Result<Env> {
-        let dir = PathBuf::from(
-            dir.or_else(|| std::env::var("BRECQ_ARTIFACTS").ok())
-                .unwrap_or_else(|| "artifacts".into()),
-        );
+        let explicit = dir
+            .clone()
+            .or_else(|| std::env::var("BRECQ_ARTIFACTS").ok());
+        let dir = explicit.clone().unwrap_or_else(|| "artifacts".into());
+        let path = PathBuf::from(&dir);
+        if path.join("manifest.json").exists() {
+            Env::from_dir(path)
+        } else if explicit.is_some() {
+            anyhow::bail!(
+                "no manifest.json under requested artifacts dir '{dir}' \
+                 (run `make artifacts`, or omit --artifacts/$BRECQ_ARTIFACTS \
+                 to use the generated synthetic environment)"
+            );
+        } else {
+            eprintln!(
+                "[env] no artifacts at {dir}/ — using the generated \
+                 synthetic environment (native backend)"
+            );
+            Env::bootstrap_synthetic()
+        }
+    }
+
+    /// Hermetic bootstrap: deterministic synthetic models + dataset run by
+    /// the native backend. No artifacts, Python or XLA required.
+    pub fn bootstrap_synthetic() -> Result<Env> {
+        Env::from_dir(synthetic::ensure_default()?)
+    }
+
+    /// Load an artifact directory, choosing the backend from the
+    /// manifest's `backend` hint and the compiled features.
+    pub fn from_dir(dir: PathBuf) -> Result<Env> {
         let mf = Manifest::load(&dir)?;
-        let rt = Runtime::new(&dir, &mf.json)?;
+        let hint = mf
+            .json
+            .get("backend")
+            .and_then(|v| v.as_str())
+            .unwrap_or("pjrt");
+        let rt: Box<dyn Backend> = if hint == "native" {
+            Box::new(NativeBackend::from_manifest(&mf)?)
+        } else {
+            #[cfg(feature = "pjrt")]
+            let b: Box<dyn Backend> = Box::new(
+                crate::runtime::pjrt::PjrtRuntime::new(&dir, &mf.json)?,
+            );
+            #[cfg(not(feature = "pjrt"))]
+            let b: Box<dyn Backend> =
+                Box::new(NativeBackend::from_manifest(&mf).context(
+                    "this manifest targets the PJRT backend and the native \
+                     interpreter cannot cover it — rebuild with \
+                     --features pjrt",
+                )?);
+            b
+        };
         Ok(Env { mf, rt, dir })
     }
 
@@ -44,10 +105,12 @@ impl Env {
         DataSet::load(&self.mf.dataset, "test")
     }
 
-    /// The paper's calibration protocol: `k` images from the train set.
+    /// The paper's calibration protocol: `k` images from the train set
+    /// (clamped to the train-set size — the synthetic environment is
+    /// smaller than the CLI's 1024-image default).
     pub fn calib(&self, train: &DataSet, k: usize, seed: u64)
         -> CalibSet {
         let mut rng = Rng::new(seed ^ 0xca11b);
-        train.calib_subset(k, &mut rng)
+        train.calib_subset(k.min(train.len()), &mut rng)
     }
 }

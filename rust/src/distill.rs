@@ -14,7 +14,7 @@ use crate::eval::{forward, EvalParams};
 use crate::model::{Manifest, ModelInfo};
 use crate::optim::Adam;
 use crate::recon::Calibrator;
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 use crate::store::Store;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -36,7 +36,7 @@ impl Default for DistillConfig {
 
 /// Generate a distilled calibration set.
 pub fn distill(
-    rt: &Runtime,
+    rt: &dyn Backend,
     mf: &Manifest,
     model: &ModelInfo,
     cfg: &DistillConfig,

@@ -8,7 +8,7 @@ use crate::calib::{CalibSet, DataSet};
 use crate::model::{Manifest, ModelInfo};
 use crate::quant::act_bounds;
 use crate::recon::{BitConfig, QuantizedModel};
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 use crate::tensor::Tensor;
 
 /// Full eval-forward parameterization.
@@ -44,7 +44,7 @@ impl<'t> EvalParams<'t> {
 
 /// Logits for `images` (must match the eval batch size of the model).
 pub fn forward(
-    rt: &Runtime,
+    rt: &dyn Backend,
     model: &ModelInfo,
     p: &EvalParams,
     images: &Tensor,
@@ -78,7 +78,7 @@ pub fn forward(
 /// Top-1 accuracy over a dataset (handles the trailing partial batch by
 /// padding with wraparound rows and masking them out of the count).
 pub fn accuracy(
-    rt: &Runtime,
+    rt: &dyn Backend,
     model: &ModelInfo,
     p: &EvalParams,
     data: &DataSet,
@@ -118,7 +118,7 @@ pub fn accuracy(
 
 /// Mean cross-entropy over a calibration set (sensitivity fitness signal).
 pub fn calib_loss(
-    rt: &Runtime,
+    rt: &dyn Backend,
     mf: &Manifest,
     model: &ModelInfo,
     p: &EvalParams,

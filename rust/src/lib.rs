@@ -1,13 +1,24 @@
 //! # brecq — BRECQ post-training quantization (ICLR 2021), reproduced
 //!
-//! A three-layer Rust + JAX + Pallas system: Python authors and AOT-lowers
-//! the compute (models, Pallas fake-quant kernels, reconstruction
-//! objectives) to HLO text once at build time; this crate is the entire
-//! runtime — it loads the artifacts via PJRT and drives the paper's
-//! algorithms: block reconstruction (Algorithm 1), FIM-weighted objectives
-//! (Eq. 10), sensitivity profiling, genetic mixed-precision search
-//! (Algorithm 2), the precision-scalable accelerator latency simulator and
-//! the full experiment suite.
+//! This crate is the entire runtime: it drives the paper's algorithms —
+//! block reconstruction (Algorithm 1), FIM-weighted objectives (Eq. 10),
+//! sensitivity profiling, genetic mixed-precision search (Algorithm 2),
+//! the precision-scalable accelerator latency simulator and the full
+//! experiment suite — over a pluggable executable backend
+//! ([`runtime::Backend`]):
+//!
+//! * **native** ([`runtime::native`], default) — a pure-Rust interpreter
+//!   for every executable family the manifest names (`unit_fwd`,
+//!   `unit_recon`, `eval_fwd`, `act_obs`, `fim`), ported from the
+//!   pure-jnp oracles in `python/compile/kernels/ref.py`. Paired with the
+//!   deterministic synthetic environment ([`model::synthetic`]) this makes
+//!   the whole pipeline — and the integration test suite — run hermetically
+//!   on a fresh checkout: no Python, no XLA, no artifacts.
+//! * **pjrt** ([`runtime::pjrt`], cargo feature `pjrt`) — the original
+//!   three-layer path: Python authors and AOT-lowers the compute (models,
+//!   Pallas fake-quant kernels, reconstruction objectives) to HLO text once
+//!   at build time (`make artifacts`), and this backend compiles/executes
+//!   it via the `xla` crate.
 //!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured results.

@@ -6,6 +6,8 @@
 //! signatures each unit binds to. Nothing here re-derives network structure
 //! — the Rust side is deliberately architecture-agnostic.
 
+pub mod synthetic;
+
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 

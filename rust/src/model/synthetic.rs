@@ -1,0 +1,1225 @@
+//! Deterministic synthetic environment generator: a tiny two-model
+//! manifest + weight stores + calibration dataset, written in the normal
+//! on-disk artifact format and executable by the native backend — no
+//! Python, no JAX, no network.
+//!
+//! The task is constructed, not trained, and is quantization-robust *by
+//! design* (a fully random trunk does not survive W2 weight noise — its
+//! quantized self is effectively a different random projection, and no
+//! fixed classifier head survives that):
+//!
+//! * **Prototypes** carry a per-channel density signature (each class's
+//!   3-bit id selects a high/low pixel-on probability per color channel),
+//!   so class identity lives in channel means and survives pooling,
+//!   passthrough and quantization.
+//! * **Trunks** are near-identity: every conv is a center-tap channel
+//!   passthrough plus Gaussian noise taps. Nearest rounding preserves the
+//!   dominant tap at 2 bits, while the noise taps give AdaRound/LSQ real
+//!   reconstruction work.
+//! * **Heads** are cosine classifiers: fc row c is the model's own
+//!   normalized trunk feature of prototype c (no bias), which maps
+//!   prototype c to class c by construction and is invariant to the
+//!   uniform gain shifts quantization introduces.
+//!
+//! Samples are prototypes plus pixel noise, labels are the generating
+//! cluster ids, and `fp_acc` is measured (1.0 on accepted tasks). A
+//! deterministic retry loop additionally *verifies* the headroom — FP
+//! accuracy 1.0, minimum test logit margin, nearest-rounding-W2 accuracy —
+//! for both models before a seed is accepted, so low-bit accuracy floors
+//! in the hermetic suite sit far from the noise floor.
+//!
+//! Two models are emitted, miniatures of the paper's families:
+//!  * `resnet_s` — stem + basic block (identity skip) + strided basic block
+//!    (1x1 down projection), exported at layer/block/stage/net granularity,
+//!  * `mobilenetv2_s` — stem + inverted residual (expand/depthwise/project,
+//!    linear bottleneck) + head conv, exported at layer/block granularity.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::quant::{mse_steps_per_channel, quantize_nearest};
+use crate::runtime::native::{add_bias, conv2d, fc_fwd, gap_fwd, relu_inplace};
+use crate::tensor::Tensor;
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::rng::Rng;
+
+pub const MEAN: [f32; 3] = [0.5, 0.5, 0.5];
+pub const STD: [f32; 3] = [0.25, 0.25, 0.25];
+
+/// Passthrough conv tap strength and relative noise level of the
+/// structured trunk init (see module docs).
+const TAP: f32 = 1.5;
+const TAP_NOISE: f32 = 0.25;
+
+#[derive(Debug, Clone)]
+pub struct SynthConfig {
+    pub seed: u64,
+    pub img: usize,
+    pub classes: usize,
+    pub train_n: usize,
+    pub test_n: usize,
+    pub calib_batch: usize,
+    pub eval_batch: usize,
+    /// pixel noise (u8 scale) around the class prototypes
+    pub sigma: f32,
+    /// prototype candidates scanned by the farthest-point selector
+    pub candidates: usize,
+    /// deterministic retry budget for the task-quality acceptance loop
+    pub max_tries: u64,
+}
+
+impl Default for SynthConfig {
+    fn default() -> Self {
+        SynthConfig {
+            seed: 0,
+            img: 8,
+            classes: 4,
+            train_n: 256,
+            test_n: 64,
+            // matches ReconConfig::default().batch — unit executables are
+            // declared (and ABI-checked) at this batch size
+            calib_batch: 32,
+            eval_batch: 32,
+            sigma: 8.0,
+            candidates: 16,
+            max_tries: 32,
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// Structural description of the two synthetic models
+// ------------------------------------------------------------------
+
+#[derive(Clone)]
+struct SLayer {
+    name: String,
+    kind: &'static str, // "conv" | "fc"
+    cin: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+    groups: usize,
+    relu: bool,
+    site_signed: bool,
+    h_in: usize,
+}
+
+impl SLayer {
+    fn wshape(&self) -> Vec<usize> {
+        if self.kind == "fc" {
+            vec![self.cout, self.cin]
+        } else {
+            vec![self.cout, self.cin / self.groups, self.k, self.k]
+        }
+    }
+
+    fn macs(&self) -> u64 {
+        if self.kind == "fc" {
+            (self.cin * self.cout) as u64
+        } else {
+            let o = (self.h_in + self.stride - 1) / self.stride;
+            (o * o * self.cout * (self.cin / self.groups) * self.k * self.k)
+                as u64
+        }
+    }
+
+    fn nparams(&self) -> u64 {
+        self.wshape().iter().product::<usize>() as u64 + self.cout as u64
+    }
+}
+
+#[derive(Clone)]
+enum SBlock {
+    /// relu(conv2(conv1(x)) + [down](x)) — layer indices into SModel::layers
+    Basic { c1: usize, c2: usize, down: Option<usize> },
+    /// project(dw(expand(x))) [+ x]
+    Ir { e: usize, d: usize, p: usize, res: bool },
+}
+
+struct SModel {
+    name: &'static str,
+    layers: Vec<SLayer>,
+    blocks: Vec<SBlock>,
+    head_convs: Vec<usize>,
+    fc: usize,
+    grans: Vec<&'static str>,
+}
+
+fn conv_layer(
+    name: String,
+    cin: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+    groups: usize,
+    relu: bool,
+    site_signed: bool,
+    h_in: usize,
+) -> SLayer {
+    SLayer {
+        name,
+        kind: "conv",
+        cin,
+        cout,
+        k,
+        stride,
+        groups,
+        relu,
+        site_signed,
+        h_in,
+    }
+}
+
+fn resnet_desc(cfg: &SynthConfig) -> SModel {
+    let mut layers = Vec::new();
+    let mut hw = cfg.img;
+    layers.push(conv_layer("stem".into(), 3, 8, 3, 1, 1, true, true, hw));
+    // s1.b0: 8 -> 8, stride 1, identity skip
+    layers.push(conv_layer(
+        "s1.b0.conv1".into(), 8, 8, 3, 1, 1, true, false, hw,
+    ));
+    layers.push(conv_layer(
+        "s1.b0.conv2".into(), 8, 8, 3, 1, 1, false, false, hw,
+    ));
+    let b0 = SBlock::Basic { c1: 1, c2: 2, down: None };
+    // s2.b0: 8 -> 12, stride 2, 1x1 down projection
+    layers.push(conv_layer(
+        "s2.b0.conv1".into(), 8, 12, 3, 2, 1, true, false, hw,
+    ));
+    layers.push(conv_layer(
+        "s2.b0.conv2".into(), 12, 12, 3, 1, 1, false, false, hw / 2,
+    ));
+    layers.push(conv_layer(
+        "s2.b0.down".into(), 8, 12, 1, 2, 1, false, false, hw,
+    ));
+    let b1 = SBlock::Basic { c1: 3, c2: 4, down: Some(5) };
+    hw /= 2;
+    let _ = hw;
+    layers.push(SLayer {
+        name: "head.fc".into(),
+        kind: "fc",
+        cin: 12,
+        cout: cfg.classes,
+        k: 1,
+        stride: 1,
+        groups: 1,
+        relu: false,
+        site_signed: false,
+        h_in: 1,
+    });
+    SModel {
+        name: "resnet_s",
+        layers,
+        blocks: vec![b0, b1],
+        head_convs: vec![],
+        fc: 6,
+        grans: vec!["layer", "block", "stage", "net"],
+    }
+}
+
+fn mbv2_desc(cfg: &SynthConfig) -> SModel {
+    let mut layers = Vec::new();
+    let hw = cfg.img;
+    layers.push(conv_layer("stem".into(), 3, 8, 3, 1, 1, true, true, hw));
+    // s1.b0: inverted residual 8 -> 8, t=2 (mid 16), stride 1, residual
+    layers.push(conv_layer(
+        "s1.b0.expand".into(), 8, 16, 1, 1, 1, true, false, hw,
+    ));
+    layers.push(conv_layer(
+        "s1.b0.dw".into(), 16, 16, 3, 1, 16, true, false, hw,
+    ));
+    layers.push(conv_layer(
+        "s1.b0.project".into(), 16, 8, 1, 1, 1, false, false, hw,
+    ));
+    let b0 = SBlock::Ir { e: 1, d: 2, p: 3, res: true };
+    // linear-bottleneck output is signed -> head conv sees a signed site
+    layers.push(conv_layer(
+        "head.conv".into(), 8, 16, 1, 1, 1, true, true, hw,
+    ));
+    layers.push(SLayer {
+        name: "head.fc".into(),
+        kind: "fc",
+        cin: 16,
+        cout: cfg.classes,
+        k: 1,
+        stride: 1,
+        groups: 1,
+        relu: false,
+        site_signed: false,
+        h_in: 1,
+    });
+    SModel {
+        name: "mobilenetv2_s",
+        layers,
+        blocks: vec![b0],
+        head_convs: vec![4],
+        fc: 5,
+        grans: vec!["layer", "block"],
+    }
+}
+
+// ------------------------------------------------------------------
+// Forward (generator-side; mirrors runtime::native node semantics)
+// ------------------------------------------------------------------
+
+fn apply_layer(l: &SLayer, x: &Tensor, w: &Tensor, b: &Tensor) -> Tensor {
+    let mut z = if l.kind == "fc" {
+        fc_fwd(x, w)
+    } else {
+        conv2d(x, w, l.stride, l.groups)
+    };
+    add_bias(&mut z, b);
+    if l.relu {
+        relu_inplace(&mut z);
+    }
+    z
+}
+
+fn add_t(a: &Tensor, b: &Tensor) -> Tensor {
+    let data = a.data.iter().zip(&b.data).map(|(x, y)| x + y).collect();
+    Tensor::new(a.shape.clone(), data)
+}
+
+/// Trunk features: everything up to (and including) global average pool.
+fn trunk(m: &SModel, ws: &[Tensor], bs: &[Tensor], x: &Tensor) -> Tensor {
+    let mut h = apply_layer(&m.layers[0], x, &ws[0], &bs[0]);
+    for blk in &m.blocks {
+        h = match *blk {
+            SBlock::Basic { c1, c2, down } => {
+                let h1 = apply_layer(&m.layers[c1], &h, &ws[c1], &bs[c1]);
+                let h2 = apply_layer(&m.layers[c2], &h1, &ws[c2], &bs[c2]);
+                let sc = match down {
+                    Some(d) => apply_layer(&m.layers[d], &h, &ws[d], &bs[d]),
+                    None => h.clone(),
+                };
+                let mut out = add_t(&h2, &sc);
+                relu_inplace(&mut out);
+                out
+            }
+            SBlock::Ir { e, d, p, res } => {
+                let he = apply_layer(&m.layers[e], &h, &ws[e], &bs[e]);
+                let hd = apply_layer(&m.layers[d], &he, &ws[d], &bs[d]);
+                let hp = apply_layer(&m.layers[p], &hd, &ws[p], &bs[p]);
+                if res {
+                    add_t(&hp, &h)
+                } else {
+                    hp
+                }
+            }
+        };
+    }
+    for &hc in &m.head_convs {
+        h = apply_layer(&m.layers[hc], &h, &ws[hc], &bs[hc]);
+    }
+    gap_fwd(&h)
+}
+
+fn logits(m: &SModel, ws: &[Tensor], bs: &[Tensor], x: &Tensor) -> Tensor {
+    let f = trunk(m, ws, bs, x);
+    apply_layer(&m.layers[m.fc], &f, &ws[m.fc], &bs[m.fc])
+}
+
+// ------------------------------------------------------------------
+// Weights, data, task selection
+// ------------------------------------------------------------------
+
+/// Structured trunk init: center-tap channel passthrough + noise taps.
+/// The fc head is left at zero and set from prototype features later.
+fn structured_init(m: &SModel, rng: &mut Rng) -> (Vec<Tensor>, Vec<Tensor>) {
+    let mut ws = Vec::new();
+    let mut bs = Vec::new();
+    for l in &m.layers {
+        let shape = l.wshape();
+        let n: usize = shape.iter().product();
+        let w = if l.kind == "fc" {
+            Tensor::zeros(shape)
+        } else {
+            let cpg_in = l.cin / l.groups;
+            let fan_in = cpg_in * l.k * l.k;
+            let sigma = TAP * TAP_NOISE / (fan_in as f32).sqrt();
+            let mut w = Tensor::new(
+                shape,
+                (0..n).map(|_| rng.gauss() as f32 * sigma).collect(),
+            );
+            let cc = l.k / 2;
+            let inner = cpg_in * l.k * l.k;
+            for oc in 0..l.cout {
+                let ic = oc % cpg_in;
+                w.data[oc * inner + (ic * l.k + cc) * l.k + cc] += TAP;
+            }
+            w
+        };
+        ws.push(w);
+        bs.push(Tensor::zeros(vec![l.cout]));
+    }
+    (ws, bs)
+}
+
+/// u8 NHWC raster -> standardized f32 NCHW (exactly DataSet::load's math).
+fn standardize(raw: &[u8], n: usize, img: usize) -> Tensor {
+    let mut images = vec![0f32; n * 3 * img * img];
+    for i in 0..n {
+        for h in 0..img {
+            for w in 0..img {
+                for c in 0..3 {
+                    let v = raw[((i * img + h) * img + w) * 3 + c] as f32
+                        / 255.0;
+                    let v = (v - MEAN[c]) / STD[c];
+                    images[((i * 3 + c) * img + h) * img + w] = v;
+                }
+            }
+        }
+    }
+    Tensor::new(vec![n, 3, img, img], images)
+}
+
+/// Noisy samples around `protos` (u8 NHWC) with labels = cluster ids.
+fn make_split(
+    protos: &[Vec<u8>],
+    n: usize,
+    img: usize,
+    sigma: f32,
+    rng: &mut Rng,
+) -> (Vec<u8>, Vec<u8>) {
+    let classes = protos.len();
+    let px = img * img * 3;
+    let mut raw = Vec::with_capacity(n * px);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % classes;
+        for j in 0..px {
+            let v = protos[c][j] as f32 + rng.gauss() as f32 * sigma;
+            raw.push(v.clamp(0.0, 255.0) as u8);
+        }
+        labels.push(c as u8);
+    }
+    (raw, labels)
+}
+
+/// L2-normalize each row (cosine-classifier directions).
+fn normalize_rows(rows: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    rows.iter()
+        .map(|r| {
+            let nrm = r.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-8);
+            r.iter().map(|x| x / nrm).collect()
+        })
+        .collect()
+}
+
+/// Greedy farthest-point selection of `k` rows (start at row 0).
+fn farthest_points(rows: &[Vec<f32>], k: usize) -> Vec<usize> {
+    let dist = |a: &[f32], b: &[f32]| -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f32>().sqrt()
+    };
+    let mut chosen = vec![0usize];
+    while chosen.len() < k {
+        let mut best = (f32::NEG_INFINITY, 0usize);
+        for (i, r) in rows.iter().enumerate() {
+            if chosen.contains(&i) {
+                continue;
+            }
+            let d = chosen
+                .iter()
+                .map(|&c| dist(r, &rows[c]))
+                .fold(f32::INFINITY, f32::min);
+            if d > best.0 {
+                best = (d, i);
+            }
+        }
+        chosen.push(best.1);
+    }
+    chosen
+}
+
+fn tensor_rows(t: &Tensor) -> Vec<Vec<f32>> {
+    let c = t.shape[1];
+    t.data.chunks(c).map(|r| r.to_vec()).collect()
+}
+
+struct Candidate {
+    models: Vec<(SModel, Vec<Tensor>, Vec<Tensor>)>, // (desc, ws, bs)
+    train_raw: Vec<u8>,
+    train_y: Vec<u8>,
+    test_raw: Vec<u8>,
+    test_y: Vec<u8>,
+    fp_accs: Vec<f64>,
+    score: f64,
+    accepted: bool,
+}
+
+fn accuracy_of(lg: &Tensor, labels: &[u8]) -> f64 {
+    let preds = lg.argmax_rows();
+    let hit = preds
+        .iter()
+        .zip(labels)
+        .filter(|(p, l)| **p == **l as usize)
+        .count();
+    hit as f64 / labels.len().max(1) as f64
+}
+
+fn min_margin(lg: &Tensor) -> f64 {
+    let c = lg.shape[1];
+    let mut m = f64::INFINITY;
+    for row in lg.data.chunks(c) {
+        let mut v: Vec<f32> = row.to_vec();
+        v.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        m = m.min((v[0] - v[1]) as f64);
+    }
+    m
+}
+
+fn build_candidate(cfg: &SynthConfig, try_seed: u64) -> Candidate {
+    let mut rng = Rng::new(
+        cfg.seed
+            .wrapping_mul(0x9e3779b97f4a7c15)
+            .wrapping_add(try_seed),
+    );
+    let px = cfg.img * cfg.img * 3;
+
+    // prototype candidates (u8 NHWC): each carries a per-channel density
+    // signature — a random 3-bit id selects the pixel-on probability per
+    // color channel — so class identity survives pooling and quantization
+    let cands: Vec<Vec<u8>> = (0..cfg.candidates)
+        .map(|_| {
+            let bits = rng.below(8);
+            let mut c = Vec::with_capacity(px);
+            for j in 0..px {
+                let ch = j % 3;
+                let p = if (bits >> ch) & 1 == 1 { 0.85 } else { 0.15 };
+                c.push(if rng.f64() < p { 255u8 } else { 0u8 });
+            }
+            c
+        })
+        .collect();
+
+    // structured passthrough trunks
+    let descs = vec![resnet_desc(cfg), mbv2_desc(cfg)];
+    let mut models: Vec<(SModel, Vec<Tensor>, Vec<Tensor>)> = descs
+        .into_iter()
+        .map(|m| {
+            let (ws, bs) = structured_init(&m, &mut rng);
+            (m, ws, bs)
+        })
+        .collect();
+
+    // candidate features under each trunk
+    let mut cand_raw = Vec::with_capacity(cfg.candidates * px);
+    for c in &cands {
+        cand_raw.extend_from_slice(c);
+    }
+    let cand_x = standardize(&cand_raw, cfg.candidates, cfg.img);
+    let feats: Vec<Vec<Vec<f32>>> = models
+        .iter()
+        .map(|(m, ws, bs)| tensor_rows(&trunk(m, ws, bs, &cand_x)))
+        .collect();
+
+    // prototype selection on the first model's cosine feature geometry
+    let chosen = farthest_points(&normalize_rows(&feats[0]), cfg.classes);
+    let protos: Vec<Vec<u8>> =
+        chosen.iter().map(|&i| cands[i].clone()).collect();
+
+    // cosine classifier head per model: fc row c = the model's own
+    // normalized feature of prototype c -> prototype c argmaxes class c
+    for (mi, (m, ws, _)) in models.iter_mut().enumerate() {
+        let class_feats: Vec<Vec<f32>> =
+            chosen.iter().map(|&i| feats[mi][i].clone()).collect();
+        let wrows = normalize_rows(&class_feats);
+        let d = wrows[0].len();
+        let mut data = Vec::with_capacity(cfg.classes * d);
+        for r in &wrows {
+            data.extend_from_slice(r);
+        }
+        ws[m.fc] = Tensor::new(vec![cfg.classes, d], data);
+    }
+
+    // dataset
+    let (train_raw, train_y) =
+        make_split(&protos, cfg.train_n, cfg.img, cfg.sigma, &mut rng);
+    let (test_raw, test_y) =
+        make_split(&protos, cfg.test_n, cfg.img, cfg.sigma, &mut rng);
+    let test_x = standardize(&test_raw, cfg.test_n, cfg.img);
+
+    // diagnostics per model: FP accuracy, min margin, nearest-W2 accuracy
+    let mut fp_accs = Vec::new();
+    let mut score = f64::INFINITY;
+    let mut accepted = true;
+    for (m, ws, bs) in &models {
+        let lg = logits(m, ws, bs, &test_x);
+        let fp_acc = accuracy_of(&lg, &test_y);
+        let margin = min_margin(&lg);
+        let nl = m.layers.len();
+        let wq: Vec<Tensor> = ws
+            .iter()
+            .enumerate()
+            .map(|(l, w)| {
+                let bits = if l == 0 || l == nl - 1 { 8 } else { 2 };
+                let steps = mse_steps_per_channel(w, bits);
+                quantize_nearest(w, &steps, bits)
+            })
+            .collect();
+        let lq = logits(m, &wq, bs, &test_x);
+        let near2 = accuracy_of(&lq, &test_y);
+        fp_accs.push(fp_acc);
+        accepted &= fp_acc >= 1.0 && margin >= 0.5 && near2 >= 0.95;
+        score = score.min(fp_acc + near2 + margin.min(2.0));
+    }
+
+    Candidate {
+        models,
+        train_raw,
+        train_y,
+        test_raw,
+        test_y,
+        fp_accs,
+        score,
+        accepted,
+    }
+}
+
+// ------------------------------------------------------------------
+// Manifest assembly + on-disk stores
+// ------------------------------------------------------------------
+
+fn shape_json(v: &[usize]) -> Json {
+    arr(v.iter().map(|&d| num(d as f64)).collect())
+}
+
+fn io_json(items: &[(String, Vec<usize>)]) -> Json {
+    arr(items
+        .iter()
+        .map(|(n, sh)| obj(vec![("name", s(n)), ("shape", shape_json(sh))]))
+        .collect())
+}
+
+struct SUnit {
+    name: String,
+    topo: String,
+    layer_ids: Vec<usize>,
+    uses_skip: bool,
+    save_skip: bool,
+    in_shape: Vec<usize>,
+    skip_shape: Option<Vec<usize>>,
+    out_shape: Vec<usize>,
+}
+
+fn conv_out_shape(l: &SLayer, inp: &[usize]) -> Vec<usize> {
+    let h = (inp[2] + l.stride - 1) / l.stride;
+    let w = (inp[3] + l.stride - 1) / l.stride;
+    vec![inp[0], l.cout, h, w]
+}
+
+/// Unit partition at one granularity, with stream IO shapes (batch `b`).
+fn units_of(m: &SModel, gran: &str, b: usize, cfg: &SynthConfig) -> Vec<SUnit> {
+    let mut units: Vec<SUnit> = Vec::new();
+    let mut cur = vec![b, 3, cfg.img, cfg.img];
+    let mut pending_skip: Option<Vec<usize>> = None;
+
+    let push = |units: &mut Vec<SUnit>,
+                pending_skip: &mut Option<Vec<usize>>,
+                cur: &mut Vec<usize>,
+                name: String,
+                topo: String,
+                layer_ids: Vec<usize>,
+                uses_skip: bool,
+                save_skip: bool,
+                out: Vec<usize>| {
+        if save_skip {
+            *pending_skip = Some(cur.clone());
+        }
+        let skip_shape = if uses_skip { pending_skip.clone() } else { None };
+        units.push(SUnit {
+            name,
+            topo,
+            layer_ids,
+            uses_skip,
+            save_skip,
+            in_shape: cur.clone(),
+            skip_shape,
+            out_shape: out.clone(),
+        });
+        if uses_skip {
+            *pending_skip = None;
+        }
+        *cur = out;
+    };
+
+    // stem
+    let stem_out = conv_out_shape(&m.layers[0], &cur);
+    push(
+        &mut units,
+        &mut pending_skip,
+        &mut cur,
+        "stem".into(),
+        "conv".into(),
+        vec![0],
+        false,
+        false,
+        stem_out,
+    );
+
+    match gran {
+        "layer" => {
+            for blk in &m.blocks {
+                match *blk {
+                    SBlock::Basic { c1, c2, down } => {
+                        let o1 = conv_out_shape(&m.layers[c1], &cur);
+                        push(
+                            &mut units,
+                            &mut pending_skip,
+                            &mut cur,
+                            m.layers[c1].name.clone(),
+                            "conv".into(),
+                            vec![c1],
+                            false,
+                            true,
+                            o1,
+                        );
+                        let o2 = conv_out_shape(&m.layers[c2], &cur);
+                        let mut ids = vec![c2];
+                        if let Some(d) = down {
+                            ids.push(d);
+                        }
+                        push(
+                            &mut units,
+                            &mut pending_skip,
+                            &mut cur,
+                            m.layers[c2].name.clone(),
+                            format!("basic_l2(down={})", down.is_some()),
+                            ids,
+                            true,
+                            false,
+                            o2,
+                        );
+                    }
+                    SBlock::Ir { e, d, p, res } => {
+                        let oe = conv_out_shape(&m.layers[e], &cur);
+                        push(
+                            &mut units,
+                            &mut pending_skip,
+                            &mut cur,
+                            m.layers[e].name.clone(),
+                            "conv".into(),
+                            vec![e],
+                            false,
+                            res,
+                            oe,
+                        );
+                        let od = conv_out_shape(&m.layers[d], &cur);
+                        push(
+                            &mut units,
+                            &mut pending_skip,
+                            &mut cur,
+                            m.layers[d].name.clone(),
+                            "conv".into(),
+                            vec![d],
+                            false,
+                            false,
+                            od,
+                        );
+                        let op = conv_out_shape(&m.layers[p], &cur);
+                        push(
+                            &mut units,
+                            &mut pending_skip,
+                            &mut cur,
+                            m.layers[p].name.clone(),
+                            if res { "ir_l3(res)" } else { "conv" }.into(),
+                            vec![p],
+                            res,
+                            false,
+                            op,
+                        );
+                    }
+                }
+            }
+        }
+        "block" => {
+            for (bi, blk) in m.blocks.iter().enumerate() {
+                let (name, topo, ids, out) = block_unit(m, blk, bi, &cur);
+                push(
+                    &mut units,
+                    &mut pending_skip,
+                    &mut cur,
+                    name,
+                    topo,
+                    ids,
+                    false,
+                    false,
+                    out,
+                );
+            }
+        }
+        _ => {
+            // "stage" / "net": all body blocks fused into one unit
+            let mut ids = Vec::new();
+            let mut topos = Vec::new();
+            let mut out = cur.clone();
+            for (bi, blk) in m.blocks.iter().enumerate() {
+                let (_, topo, bids, o) = block_unit(m, blk, bi, &out);
+                ids.extend(bids);
+                topos.push(topo);
+                out = o;
+            }
+            let name =
+                if gran == "net" { "net".to_string() } else { "stage1".into() };
+            push(
+                &mut units,
+                &mut pending_skip,
+                &mut cur,
+                name,
+                format!("seq({})", topos.join(",")),
+                ids,
+                false,
+                false,
+                out,
+            );
+        }
+    }
+
+    for &hc in &m.head_convs {
+        let o = conv_out_shape(&m.layers[hc], &cur);
+        push(
+            &mut units,
+            &mut pending_skip,
+            &mut cur,
+            m.layers[hc].name.clone(),
+            "conv".into(),
+            vec![hc],
+            false,
+            false,
+            o,
+        );
+    }
+    let out = vec![b, cfg.classes];
+    push(
+        &mut units,
+        &mut pending_skip,
+        &mut cur,
+        "head".into(),
+        "gap_fc".into(),
+        vec![m.fc],
+        false,
+        false,
+        out,
+    );
+    units
+}
+
+/// (name, topo, layer ids, out shape) of one whole-block unit.
+fn block_unit(
+    m: &SModel,
+    blk: &SBlock,
+    bi: usize,
+    inp: &[usize],
+) -> (String, String, Vec<usize>, Vec<usize>) {
+    match *blk {
+        SBlock::Basic { c1, c2, down } => {
+            let o1 = conv_out_shape(&m.layers[c1], inp);
+            let o2 = conv_out_shape(&m.layers[c2], &o1);
+            let mut ids = vec![c1, c2];
+            if let Some(d) = down {
+                ids.push(d);
+            }
+            (
+                format!("s{}.b0", bi + 1),
+                format!("basic(down={})", down.is_some()),
+                ids,
+                o2,
+            )
+        }
+        SBlock::Ir { e, d, p, res } => {
+            let oe = conv_out_shape(&m.layers[e], inp);
+            let od = conv_out_shape(&m.layers[d], &oe);
+            let op = conv_out_shape(&m.layers[p], &od);
+            (
+                format!("s{}.b0", bi + 1),
+                format!("ir(res={res})"),
+                vec![e, d, p],
+                op,
+            )
+        }
+    }
+}
+
+fn unit_fwd_sig(
+    u: &SUnit,
+    layers: &[SLayer],
+) -> (Vec<(String, Vec<usize>)>, Vec<(String, Vec<usize>)>) {
+    let mut inputs = vec![("x".to_string(), u.in_shape.clone())];
+    if u.uses_skip {
+        inputs.push(("skip".into(), u.skip_shape.clone().unwrap()));
+    }
+    for (i, &l) in u.layer_ids.iter().enumerate() {
+        inputs.push((format!("w{i}"), layers[l].wshape()));
+        inputs.push((format!("b{i}"), vec![layers[l].cout]));
+    }
+    for i in 0..u.layer_ids.len() {
+        inputs.push((format!("astep{i}"), vec![1]));
+        inputs.push((format!("aqmin{i}"), vec![1]));
+        inputs.push((format!("aqmax{i}"), vec![1]));
+    }
+    inputs.push(("aq_flag".into(), vec![1]));
+    (inputs, vec![("z".into(), u.out_shape.clone())])
+}
+
+fn unit_recon_sig(
+    u: &SUnit,
+    layers: &[SLayer],
+) -> (Vec<(String, Vec<usize>)>, Vec<(String, Vec<usize>)>) {
+    let mut inputs = vec![("x".to_string(), u.in_shape.clone())];
+    if u.uses_skip {
+        inputs.push(("skip".into(), u.skip_shape.clone().unwrap()));
+    }
+    inputs.push(("z_fp".into(), u.out_shape.clone()));
+    inputs.push(("fim".into(), u.out_shape.clone()));
+    for (i, &l) in u.layer_ids.iter().enumerate() {
+        inputs.push((format!("w{i}"), layers[l].wshape()));
+        inputs.push((format!("b{i}"), vec![layers[l].cout]));
+        inputs.push((format!("wstep{i}"), vec![layers[l].cout]));
+        inputs.push((format!("v{i}"), layers[l].wshape()));
+        inputs.push((format!("wn{i}"), vec![1]));
+        inputs.push((format!("wp{i}"), vec![1]));
+    }
+    for i in 0..u.layer_ids.len() {
+        inputs.push((format!("astep{i}"), vec![1]));
+        inputs.push((format!("aqmin{i}"), vec![1]));
+        inputs.push((format!("aqmax{i}"), vec![1]));
+    }
+    inputs.push(("beta".into(), vec![1]));
+    inputs.push(("lam".into(), vec![1]));
+    inputs.push(("aq_flag".into(), vec![1]));
+
+    let mut outputs = vec![
+        ("loss".to_string(), vec![1]),
+        ("rec_loss".into(), vec![1]),
+        ("round_loss".into(), vec![1]),
+    ];
+    for (i, &l) in u.layer_ids.iter().enumerate() {
+        outputs.push((format!("gv{i}"), layers[l].wshape()));
+    }
+    for i in 0..u.layer_ids.len() {
+        outputs.push((format!("gastep{i}"), vec![1]));
+    }
+    (inputs, outputs)
+}
+
+fn write_store(prefix: &Path, tensors: &[(String, &Tensor)]) -> Result<()> {
+    let mut bin: Vec<u8> = Vec::new();
+    let mut index = BTreeMap::new();
+    let mut offset = 0usize;
+    for (name, t) in tensors {
+        for v in &t.data {
+            bin.extend_from_slice(&v.to_le_bytes());
+        }
+        index.insert(
+            name.clone(),
+            obj(vec![
+                ("shape", shape_json(&t.shape)),
+                ("offset", num(offset as f64)),
+                ("size", num(t.numel() as f64)),
+            ]),
+        );
+        offset += t.numel();
+    }
+    fs::write(prefix.with_extension("bin"), &bin)?;
+    let idx = Json::Obj(
+        [("tensors".to_string(), Json::Obj(index))].into_iter().collect(),
+    );
+    fs::write(prefix.with_extension("json"), idx.to_string())?;
+    Ok(())
+}
+
+/// Generate the synthetic environment into `dir` (created if missing):
+/// manifest.json, per-model weight stores and the u8 raster dataset.
+pub fn generate(dir: &Path, cfg: &SynthConfig) -> Result<()> {
+    fs::create_dir_all(dir.join("data"))
+        .with_context(|| format!("creating {dir:?}"))?;
+
+    // deterministic task-quality retry loop
+    let mut best: Option<Candidate> = None;
+    for t in 0..cfg.max_tries {
+        let cand = build_candidate(cfg, t);
+        if cand.accepted {
+            best = Some(cand);
+            break;
+        }
+        let take = match &best {
+            Some(b) => cand.score > b.score,
+            None => true,
+        };
+        if take {
+            best = Some(cand);
+        }
+    }
+    let cand = best.context("synthetic generation produced no candidate")?;
+
+    // dataset files (u8 NHWC rasters + u8 labels)
+    let data = dir.join("data");
+    fs::write(data.join("train_x.bin"), &cand.train_raw)?;
+    fs::write(data.join("train_y.bin"), &cand.train_y)?;
+    fs::write(data.join("test_x.bin"), &cand.test_raw)?;
+    fs::write(data.join("test_y.bin"), &cand.test_y)?;
+
+    let mut exes: BTreeMap<String, Json> = BTreeMap::new();
+    let add_exe = |exes: &mut BTreeMap<String, Json>,
+                   name: &str,
+                   io: (Vec<(String, Vec<usize>)>, Vec<(String, Vec<usize>)>)| {
+        exes.insert(
+            name.to_string(),
+            obj(vec![
+                ("file", s("native")),
+                ("inputs", io_json(&io.0)),
+                ("outputs", io_json(&io.1)),
+            ]),
+        );
+    };
+
+    let mut models_json: BTreeMap<String, Json> = BTreeMap::new();
+    for ((m, ws, bs), fp_acc) in cand.models.iter().zip(&cand.fp_accs) {
+        // weight store
+        let mut tensors: Vec<(String, &Tensor)> = Vec::new();
+        for (l, layer) in m.layers.iter().enumerate() {
+            tensors.push((format!("{}.w", layer.name), &ws[l]));
+            tensors.push((format!("{}.b", layer.name), &bs[l]));
+        }
+        write_store(&dir.join(format!("weights_{}", m.name)), &tensors)?;
+
+        // layer geometry
+        let layers_json = arr(m
+            .layers
+            .iter()
+            .map(|l| {
+                obj(vec![
+                    ("name", s(&l.name)),
+                    ("kind", s(l.kind)),
+                    ("cin", num(l.cin as f64)),
+                    ("cout", num(l.cout as f64)),
+                    ("k", num(l.k as f64)),
+                    ("stride", num(l.stride as f64)),
+                    ("groups", num(l.groups as f64)),
+                    ("relu", Json::Bool(l.relu)),
+                    ("site_signed", Json::Bool(l.site_signed)),
+                    ("h_in", num(l.h_in as f64)),
+                    ("w_in", num(l.h_in as f64)),
+                    ("macs", num(l.macs() as f64)),
+                    ("nparams", num(l.nparams() as f64)),
+                    ("wshape", shape_json(&l.wshape())),
+                ])
+            })
+            .collect());
+
+        // model-level executables
+        let nl = m.layers.len();
+        let img_sh = |b: usize| vec![b, 3, cfg.img, cfg.img];
+        let fwd_exe = format!("{}.eval_fwd", m.name);
+        let mut inputs = vec![("images".to_string(), img_sh(cfg.eval_batch))];
+        for (i, l) in m.layers.iter().enumerate() {
+            inputs.push((format!("w{i}"), l.wshape()));
+            inputs.push((format!("b{i}"), vec![l.cout]));
+        }
+        for i in 0..nl {
+            inputs.push((format!("astep{i}"), vec![1]));
+            inputs.push((format!("aqmin{i}"), vec![1]));
+            inputs.push((format!("aqmax{i}"), vec![1]));
+        }
+        inputs.push(("aq_flag".into(), vec![1]));
+        add_exe(
+            &mut exes,
+            &fwd_exe,
+            (
+                inputs,
+                vec![(
+                    "logits".to_string(),
+                    vec![cfg.eval_batch, cfg.classes],
+                )],
+            ),
+        );
+
+        let act_obs_exe = format!("{}.act_obs", m.name);
+        let mut inputs = vec![("images".to_string(), img_sh(cfg.calib_batch))];
+        for (i, l) in m.layers.iter().enumerate() {
+            inputs.push((format!("w{i}"), l.wshape()));
+            inputs.push((format!("b{i}"), vec![l.cout]));
+        }
+        let outputs =
+            (0..nl).map(|i| (format!("obs{i}"), vec![2])).collect::<Vec<_>>();
+        add_exe(&mut exes, &act_obs_exe, (inputs, outputs));
+
+        // granularities
+        let mut grans_json: BTreeMap<String, Json> = BTreeMap::new();
+        for gran in &m.grans {
+            let units = units_of(m, gran, cfg.calib_batch, cfg);
+            let fim_exe = format!("{}.{}.fim", m.name, gran);
+            let mut inputs =
+                vec![("images".to_string(), img_sh(cfg.calib_batch))];
+            inputs.push((
+                "onehot".into(),
+                vec![cfg.calib_batch, cfg.classes],
+            ));
+            for (i, l) in m.layers.iter().enumerate() {
+                inputs.push((format!("w{i}"), l.wshape()));
+                inputs.push((format!("b{i}"), vec![l.cout]));
+            }
+            let outputs = units
+                .iter()
+                .enumerate()
+                .map(|(j, u)| (format!("g{j}"), u.out_shape.clone()))
+                .collect::<Vec<_>>();
+            add_exe(&mut exes, &fim_exe, (inputs, outputs));
+
+            let mut units_json = Vec::new();
+            for (ui, u) in units.iter().enumerate() {
+                let fwd = format!("{}.{}.u{}.fwd", m.name, gran, ui);
+                let rec = format!("{}.{}.u{}.recon", m.name, gran, ui);
+                add_exe(&mut exes, &fwd, unit_fwd_sig(u, &m.layers));
+                add_exe(&mut exes, &rec, unit_recon_sig(u, &m.layers));
+                units_json.push(obj(vec![
+                    ("name", s(&u.name)),
+                    ("topo", s(&u.topo)),
+                    (
+                        "layers",
+                        arr(u
+                            .layer_ids
+                            .iter()
+                            .map(|&l| s(&m.layers[l].name))
+                            .collect()),
+                    ),
+                    ("uses_skip", Json::Bool(u.uses_skip)),
+                    ("save_skip", Json::Bool(u.save_skip)),
+                    ("in_shape", shape_json(&u.in_shape)),
+                    (
+                        "skip_shape",
+                        match &u.skip_shape {
+                            Some(sh) => shape_json(sh),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("out_shape", shape_json(&u.out_shape)),
+                    ("fwd_exe", s(&fwd)),
+                    ("recon_exe", s(&rec)),
+                ]));
+            }
+            grans_json.insert(
+                gran.to_string(),
+                obj(vec![
+                    ("fim_exe", s(&fim_exe)),
+                    ("units", arr(units_json)),
+                ]),
+            );
+        }
+
+        models_json.insert(
+            m.name.to_string(),
+            obj(vec![
+                ("fp_acc", num(*fp_acc)),
+                ("weights", s(&format!("weights_{}", m.name))),
+                ("layers", layers_json),
+                ("fwd_exe", s(&fwd_exe)),
+                ("act_obs_exe", s(&act_obs_exe)),
+                ("eval_batch", num(cfg.eval_batch as f64)),
+                ("grans", Json::Obj(grans_json)),
+            ]),
+        );
+    }
+
+    let manifest = obj(vec![
+        ("backend", s("native")),
+        ("calib_batch", num(cfg.calib_batch as f64)),
+        (
+            "dataset",
+            obj(vec![
+                ("dir", s("data")),
+                ("img", num(cfg.img as f64)),
+                ("classes", num(cfg.classes as f64)),
+                ("train_n", num(cfg.train_n as f64)),
+                ("test_n", num(cfg.test_n as f64)),
+                ("mean", arr(MEAN.iter().map(|&v| num(v as f64)).collect())),
+                ("std", arr(STD.iter().map(|&v| num(v as f64)).collect())),
+            ]),
+        ),
+        ("models", Json::Obj(models_json)),
+        ("executables", Json::Obj(exes)),
+    ]);
+    fs::write(dir.join("manifest.json"), manifest.to_string())?;
+    Ok(())
+}
+
+static DEFAULT_DIR: Mutex<Option<PathBuf>> = Mutex::new(None);
+
+/// Generate (once per process) the default synthetic environment in a
+/// temp directory and return its path. Subsequent calls reuse it.
+pub fn ensure_default() -> Result<PathBuf> {
+    let mut guard = DEFAULT_DIR.lock().unwrap();
+    if let Some(p) = guard.as_ref() {
+        return Ok(p.clone());
+    }
+    let dir = std::env::temp_dir()
+        .join(format!("brecq-synth-{}", std::process::id()));
+    generate(&dir, &SynthConfig::default())?;
+    *guard = Some(dir.clone());
+    Ok(dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn farthest_points_spreads() {
+        let rows = vec![
+            vec![0.0, 0.0],
+            vec![0.1, 0.0],
+            vec![10.0, 0.0],
+            vec![0.0, 10.0],
+            vec![10.0, 10.0],
+        ];
+        let chosen = farthest_points(&rows, 4);
+        assert_eq!(chosen.len(), 4);
+        // the near-duplicate of row 0 must be the one left out
+        assert!(!chosen.contains(&1), "{chosen:?}");
+    }
+
+    #[test]
+    fn normalize_rows_unit_norm() {
+        let rows = vec![vec![1.0, 2.0, 3.0], vec![3.0, 2.0, 1.0]];
+        let cn = normalize_rows(&rows);
+        for r in &cn {
+            let n: f32 = r.iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((n - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn structured_init_has_dominant_center_taps() {
+        let cfg = SynthConfig::default();
+        let m = resnet_desc(&cfg);
+        let mut rng = Rng::new(7);
+        let (ws, bs) = structured_init(&m, &mut rng);
+        // stem: conv 3->8 k3 — center tap of the mapped input channel
+        // must dominate the noise taps
+        let stem = &ws[0];
+        let inner = 3 * 3 * 3;
+        for oc in 0..8 {
+            let ic = oc % 3;
+            let tap = stem.data[oc * inner + (ic * 3 + 1) * 3 + 1];
+            assert!(tap > TAP * 0.5, "oc {oc}: tap {tap}");
+        }
+        assert!(bs.iter().all(|b| b.data.iter().all(|&v| v == 0.0)));
+        // fc left zeroed for the classifier construction
+        assert!(ws[m.fc].data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn standardize_matches_dataset_loader_layout() {
+        // one pixel, NHWC c order -> NCHW planes
+        let raw: Vec<u8> = vec![255, 0, 127];
+        let t = standardize(&raw, 1, 1);
+        assert_eq!(t.shape, vec![1, 3, 1, 1]);
+        assert!((t.data[0] - 2.0).abs() < 1e-6); // (1.0-0.5)/0.25
+        assert!((t.data[1] + 2.0).abs() < 1e-6); // (0.0-0.5)/0.25
+    }
+}

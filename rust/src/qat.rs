@@ -14,7 +14,7 @@ use crate::model::{Manifest, ModelInfo};
 use crate::optim::Adam;
 use crate::quant::{act_bounds, mse_step_tensor, weight_bounds};
 use crate::recon::{BitConfig, Calibrator, QuantizedModel};
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -52,7 +52,7 @@ pub struct QatResult {
 /// Run LSQ QAT on the full training set; returns deployable quantized
 /// weights (hard LSQ rounding of the trained FP weights).
 pub fn train(
-    rt: &Runtime,
+    rt: &dyn Backend,
     mf: &Manifest,
     model: &ModelInfo,
     trainset: &DataSet,

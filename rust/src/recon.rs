@@ -27,7 +27,7 @@ use crate::optim::{Adam, BetaSchedule};
 use crate::quant::{
     act_bounds, mse_steps_per_channel, weight_bounds, AdaRoundState,
 };
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -122,14 +122,14 @@ pub struct QuantizedModel {
 }
 
 pub struct Calibrator<'a> {
-    pub rt: &'a Runtime,
+    pub rt: &'a dyn Backend,
     pub mf: &'a Manifest,
     pub model: &'a ModelInfo,
 }
 
 impl<'a> Calibrator<'a> {
     pub fn new(
-        rt: &'a Runtime,
+        rt: &'a dyn Backend,
         mf: &'a Manifest,
         model: &'a ModelInfo,
     ) -> Calibrator<'a> {

@@ -1,26 +1,36 @@
-//! PJRT runtime: loads AOT HLO-text artifacts and executes them.
+//! Backend-agnostic executable runtime.
 //!
-//! This is the only module that touches the `xla` crate. The pattern
-//! (HLO text -> HloModuleProto -> XlaComputation -> compile -> execute)
-//! follows /opt/xla-example/load_hlo.rs; text is the interchange format
-//! because xla_extension 0.5.1 rejects jax>=0.5's 64-bit-id protos.
+//! The coordinator drives every compute graph — `unit_fwd`, `unit_recon`,
+//! `eval_fwd`, `fim`, `act_obs`, ... — through the [`Backend`] trait:
+//! named executables with manifest-declared positional signatures. Two
+//! implementations exist:
 //!
-//! Executables are compiled lazily and cached per name — experiments touch
-//! only the units they need, and repeated calibrations reuse the cache.
-//! Every call checks argument count/shape against the manifest signature so
-//! an ABI mismatch fails loudly at dispatch, not as garbage numerics.
+//! * [`native`] — a pure-Rust interpreter that executes the executable
+//!   families directly (ports of the pure-jnp oracles in
+//!   `python/compile/kernels/ref.py`). No external toolchain; this is the
+//!   default and what the hermetic test suite runs on.
+//! * [`pjrt`] (cargo feature `pjrt`) — compiles the AOT HLO-text artifacts
+//!   produced by `python/compile/aot.py` via the `xla` crate and executes
+//!   them on PJRT. Needs the XLA toolchain and `make artifacts`.
+//!
+//! Every dispatch goes through the provided [`Backend::run`], which checks
+//! argument count/shape against the manifest signature (an ABI mismatch
+//! fails loudly at dispatch, not as garbage numerics) and records
+//! per-executable dispatch accounting for the perf report.
+
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
 use std::cell::RefCell;
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::rc::Rc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 
-/// Signature of one AOT executable (from the manifest).
+/// Signature of one executable (from the manifest).
 #[derive(Debug, Clone)]
 pub struct ExeSig {
     pub name: String,
@@ -29,168 +39,225 @@ pub struct ExeSig {
     pub outputs: Vec<(String, Vec<usize>)>,
 }
 
-pub struct Executable {
-    pub sig: ExeSig,
-    exe: xla::PjRtLoadedExecutable,
+/// Parse the manifest's `executables` table into signatures.
+pub fn parse_sigs(manifest: &Json) -> Result<HashMap<String, ExeSig>> {
+    let mut sigs = HashMap::new();
+    let exes = manifest
+        .req("executables")
+        .as_obj()
+        .context("manifest: executables")?;
+    for (name, e) in exes {
+        let parse_io = |key: &str| -> Vec<(String, Vec<usize>)> {
+            e.req(key)
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|x| {
+                    (
+                        x.req("name").as_str().unwrap().to_string(),
+                        x.req("shape").usize_vec(),
+                    )
+                })
+                .collect()
+        };
+        sigs.insert(
+            name.clone(),
+            ExeSig {
+                name: name.clone(),
+                file: e
+                    .get("file")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+                inputs: parse_io("inputs"),
+                outputs: parse_io("outputs"),
+            },
+        );
+    }
+    Ok(sigs)
 }
 
-impl Executable {
-    /// Execute with positional tensors matching the manifest signature.
-    pub fn run(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
-        if args.len() != self.sig.inputs.len() {
+fn check_inputs(sig: &ExeSig, args: &[&Tensor]) -> Result<()> {
+    if args.len() != sig.inputs.len() {
+        bail!(
+            "{}: got {} args, signature has {}",
+            sig.name,
+            args.len(),
+            sig.inputs.len()
+        );
+    }
+    for (t, (name, shape)) in args.iter().zip(&sig.inputs) {
+        if &t.shape != shape {
             bail!(
-                "{}: got {} args, signature has {}",
-                self.sig.name,
-                args.len(),
-                self.sig.inputs.len()
+                "{}: input '{}' shape {:?} != expected {:?}",
+                sig.name,
+                name,
+                t.shape,
+                shape
             );
         }
-        let mut literals = Vec::with_capacity(args.len());
-        for (t, (name, shape)) in args.iter().zip(&self.sig.inputs) {
-            if &t.shape != shape {
-                bail!(
-                    "{}: input '{}' shape {:?} != expected {:?}",
-                    self.sig.name,
-                    name,
-                    t.shape,
-                    shape
-                );
-            }
-            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
-            literals.push(
-                xla::Literal::vec1(&t.data)
-                    .reshape(&dims)
-                    .with_context(|| format!("reshaping input {name}"))?,
-            );
-        }
-        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
-            .to_literal_sync()?;
-        // AOT lowering uses return_tuple=True: always a tuple literal.
-        let parts = result.to_tuple()?;
-        if parts.len() != self.sig.outputs.len() {
+    }
+    Ok(())
+}
+
+fn check_outputs(sig: &ExeSig, out: &[Tensor]) -> Result<()> {
+    if out.len() != sig.outputs.len() {
+        bail!(
+            "{}: got {} outputs, signature has {}",
+            sig.name,
+            out.len(),
+            sig.outputs.len()
+        );
+    }
+    for (t, (name, shape)) in out.iter().zip(&sig.outputs) {
+        if &t.shape != shape {
             bail!(
-                "{}: got {} outputs, signature has {}",
-                self.sig.name,
-                parts.len(),
-                self.sig.outputs.len()
+                "{}: output '{}' shape {:?} != declared {:?}",
+                sig.name,
+                name,
+                t.shape,
+                shape
             );
         }
-        let mut out = Vec::with_capacity(parts.len());
-        for (lit, (name, shape)) in parts.iter().zip(&self.sig.outputs) {
-            let data = lit
-                .to_vec::<f32>()
-                .with_context(|| format!("reading output {name}"))?;
-            out.push(Tensor::new(shape.clone(), data));
-        }
-        Ok(out)
     }
+    Ok(())
 }
 
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    sigs: HashMap<String, ExeSig>,
-    cache: RefCell<HashMap<String, Rc<Executable>>>,
-    /// per-executable dispatch counters (count, seconds) for the perf report
-    pub dispatches: RefCell<HashMap<String, (u64, f64)>>,
+/// Per-executable dispatch accounting: (calls, total seconds). Interior
+/// mutability so backends can record through `&self`.
+#[derive(Default)]
+pub struct Dispatches {
+    inner: RefCell<HashMap<String, (u64, f64)>>,
 }
 
-impl Runtime {
-    /// `dir` is the artifacts directory containing manifest.json.
-    pub fn new(dir: &Path, manifest: &Json) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu()?;
-        let mut sigs = HashMap::new();
-        let exes = manifest
-            .req("executables")
-            .as_obj()
-            .context("manifest: executables")?;
-        for (name, e) in exes {
-            let parse_io = |key: &str| -> Vec<(String, Vec<usize>)> {
-                e.req(key)
-                    .as_arr()
-                    .unwrap()
-                    .iter()
-                    .map(|x| {
-                        (
-                            x.req("name").as_str().unwrap().to_string(),
-                            x.req("shape").usize_vec(),
-                        )
-                    })
-                    .collect()
-            };
-            sigs.insert(
-                name.clone(),
-                ExeSig {
-                    name: name.clone(),
-                    file: e.req("file").as_str().unwrap().to_string(),
-                    inputs: parse_io("inputs"),
-                    outputs: parse_io("outputs"),
-                },
-            );
-        }
-        Ok(Runtime {
-            client,
-            dir: dir.to_path_buf(),
-            sigs,
-            cache: RefCell::new(HashMap::new()),
-            dispatches: RefCell::new(HashMap::new()),
-        })
+impl Dispatches {
+    pub fn new() -> Dispatches {
+        Dispatches::default()
     }
 
-    pub fn signature(&self, name: &str) -> Option<&ExeSig> {
-        self.sigs.get(name)
-    }
-
-    /// Compile (or fetch from cache) an executable by manifest name.
-    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
-        if let Some(e) = self.cache.borrow().get(name) {
-            return Ok(e.clone());
-        }
-        let sig = self
-            .sigs
-            .get(name)
-            .with_context(|| format!("unknown executable '{name}'"))?
-            .clone();
-        let path = self.dir.join(&sig.file);
-        let proto =
-            xla::HloModuleProto::from_text_file(path.to_str().unwrap())
-                .with_context(|| format!("parsing HLO {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {name}"))?;
-        let e = Rc::new(Executable { sig, exe });
-        self.cache.borrow_mut().insert(name.to_string(), e.clone());
-        Ok(e)
-    }
-
-    /// Convenience: load + run with dispatch accounting.
-    pub fn run(&self, name: &str, args: &[&Tensor]) -> Result<Vec<Tensor>> {
-        let exe = self.load(name)?;
-        let t0 = std::time::Instant::now();
-        let out = exe.run(args)?;
-        let dt = t0.elapsed().as_secs_f64();
-        let mut d = self.dispatches.borrow_mut();
+    pub fn record(&self, name: &str, seconds: f64) {
+        let mut d = self.inner.borrow_mut();
         let ent = d.entry(name.to_string()).or_insert((0, 0.0));
         ent.0 += 1;
-        ent.1 += dt;
-        Ok(out)
+        ent.1 += seconds;
     }
 
-    pub fn compiled_count(&self) -> usize {
-        self.cache.borrow().len()
-    }
-
-    /// Top-k dispatch hot spots: (exe, calls, total seconds).
+    /// Top-k hot spots: (exe, calls, total seconds), hottest first.
     pub fn hotspots(&self, k: usize) -> Vec<(String, u64, f64)> {
-        let d = self.dispatches.borrow();
-        let mut v: Vec<(String, u64, f64)> = d
-            .iter()
-            .map(|(n, (c, t))| (n.clone(), *c, *t))
-            .collect();
+        let d = self.inner.borrow();
+        let mut v: Vec<(String, u64, f64)> =
+            d.iter().map(|(n, (c, t))| (n.clone(), *c, *t)).collect();
         v.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
         v.truncate(k);
         v
+    }
+}
+
+/// An executable provider: compiles/interprets named executables against
+/// their manifest signatures. All algorithm code takes `&dyn Backend`.
+pub trait Backend {
+    /// Short backend tag ("native" | "pjrt") for logs and reports.
+    fn kind(&self) -> &'static str;
+
+    /// Signature of a manifest executable, if it exists.
+    fn signature(&self, name: &str) -> Option<&ExeSig>;
+
+    /// Raw execution — implementors only. Callers use [`Backend::run`],
+    /// which validates the ABI and records dispatch accounting.
+    fn execute(&self, name: &str, args: &[&Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Dispatch accounting storage (one per backend instance).
+    fn dispatches(&self) -> &Dispatches;
+
+    /// Number of distinct executables prepared (compiled / instantiated).
+    fn compiled_count(&self) -> usize;
+
+    /// Validated, accounted dispatch of one executable.
+    fn run(&self, name: &str, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let sig = self
+            .signature(name)
+            .with_context(|| format!("unknown executable '{name}'"))?;
+        check_inputs(sig, args)?;
+        let t0 = std::time::Instant::now();
+        let out = self.execute(name, args)?;
+        self.dispatches().record(name, t0.elapsed().as_secs_f64());
+        check_outputs(sig, &out)?;
+        Ok(out)
+    }
+
+    /// Top-k dispatch hot spots: (exe, calls, total seconds).
+    fn hotspots(&self, k: usize) -> Vec<(String, u64, f64)> {
+        self.dispatches().hotspots(k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Echo {
+        sigs: HashMap<String, ExeSig>,
+        dispatches: Dispatches,
+    }
+
+    impl Backend for Echo {
+        fn kind(&self) -> &'static str {
+            "echo"
+        }
+        fn signature(&self, name: &str) -> Option<&ExeSig> {
+            self.sigs.get(name)
+        }
+        fn execute(&self, _name: &str, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+            Ok(vec![args[0].clone()])
+        }
+        fn dispatches(&self) -> &Dispatches {
+            &self.dispatches
+        }
+        fn compiled_count(&self) -> usize {
+            self.sigs.len()
+        }
+    }
+
+    fn echo() -> Echo {
+        let mut sigs = HashMap::new();
+        sigs.insert(
+            "id".to_string(),
+            ExeSig {
+                name: "id".into(),
+                file: String::new(),
+                inputs: vec![("x".into(), vec![2, 2])],
+                outputs: vec![("y".into(), vec![2, 2])],
+            },
+        );
+        Echo { sigs, dispatches: Dispatches::new() }
+    }
+
+    #[test]
+    fn run_validates_and_accounts() {
+        let b = echo();
+        let x = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let out = b.run("id", &[&x]).unwrap();
+        assert_eq!(out[0].data, x.data);
+        // wrong arity
+        assert!(b.run("id", &[&x, &x]).is_err());
+        // wrong shape
+        let bad = Tensor::zeros(vec![3]);
+        assert!(b.run("id", &[&bad]).is_err());
+        // unknown exe
+        assert!(b.run("nope", &[&x]).is_err());
+        let hot = b.hotspots(4);
+        assert_eq!(hot.len(), 1);
+        assert_eq!(hot[0].0, "id");
+        assert_eq!(hot[0].1, 1); // only the valid dispatch counted
+    }
+
+    #[test]
+    fn trait_object_dispatch() {
+        let b = echo();
+        let dynb: &dyn Backend = &b;
+        let x = Tensor::new(vec![2, 2], vec![0.; 4]);
+        assert!(dynb.run("id", &[&x]).is_ok());
+        assert_eq!(dynb.kind(), "echo");
+        assert_eq!(dynb.compiled_count(), 1);
     }
 }

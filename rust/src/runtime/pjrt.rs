@@ -1,0 +1,134 @@
+//! PJRT backend (cargo feature `pjrt`): loads AOT HLO-text artifacts and
+//! executes them through the `xla` crate.
+//!
+//! This is the only module that touches `xla`. The pattern
+//! (HLO text -> HloModuleProto -> XlaComputation -> compile -> execute)
+//! follows /opt/xla-example/load_hlo.rs; text is the interchange format
+//! because xla_extension 0.5.1 rejects jax>=0.5's 64-bit-id protos.
+//!
+//! Executables are compiled lazily and cached per name — experiments touch
+//! only the units they need, and repeated calibrations reuse the cache.
+//! ABI validation and dispatch accounting live in the shared
+//! [`Backend::run`](super::Backend::run) wrapper.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+use super::{parse_sigs, Backend, Dispatches, ExeSig};
+
+pub struct Executable {
+    pub sig: ExeSig,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with positional tensors (already validated against the
+    /// manifest signature by [`Backend::run`]).
+    fn run_raw(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let mut literals = Vec::with_capacity(args.len());
+        for (t, (name, _)) in args.iter().zip(&self.sig.inputs) {
+            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+            literals.push(
+                xla::Literal::vec1(&t.data)
+                    .reshape(&dims)
+                    .with_context(|| format!("reshaping input {name}"))?,
+            );
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // AOT lowering uses return_tuple=True: always a tuple literal.
+        let parts = result.to_tuple()?;
+        if parts.len() != self.sig.outputs.len() {
+            bail!(
+                "{}: got {} outputs, signature has {}",
+                self.sig.name,
+                parts.len(),
+                self.sig.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, (name, shape)) in parts.iter().zip(&self.sig.outputs) {
+            let data = lit
+                .to_vec::<f32>()
+                .with_context(|| format!("reading output {name}"))?;
+            out.push(Tensor::new(shape.clone(), data));
+        }
+        Ok(out)
+    }
+}
+
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    sigs: HashMap<String, ExeSig>,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    dispatches: Dispatches,
+}
+
+impl PjrtRuntime {
+    /// `dir` is the artifacts directory containing manifest.json.
+    pub fn new(dir: &Path, manifest: &Json) -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu()?;
+        let sigs = parse_sigs(manifest)?;
+        Ok(PjrtRuntime {
+            client,
+            dir: dir.to_path_buf(),
+            sigs,
+            cache: RefCell::new(HashMap::new()),
+            dispatches: Dispatches::new(),
+        })
+    }
+
+    /// Compile (or fetch from cache) an executable by manifest name.
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let sig = self
+            .sigs
+            .get(name)
+            .with_context(|| format!("unknown executable '{name}'"))?
+            .clone();
+        let path = self.dir.join(&sig.file);
+        let proto =
+            xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .with_context(|| format!("parsing HLO {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let e = Rc::new(Executable { sig, exe });
+        self.cache.borrow_mut().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+}
+
+impl Backend for PjrtRuntime {
+    fn kind(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn signature(&self, name: &str) -> Option<&ExeSig> {
+        self.sigs.get(name)
+    }
+
+    fn execute(&self, name: &str, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        self.load(name)?.run_raw(args)
+    }
+
+    fn dispatches(&self) -> &Dispatches {
+        &self.dispatches
+    }
+
+    fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

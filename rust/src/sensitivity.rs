@@ -23,7 +23,7 @@ use crate::eval::{calib_loss, EvalParams};
 use crate::model::{Manifest, ModelInfo};
 use crate::quant::{mse_steps_per_channel, quantize_nearest};
 use crate::recon::BitConfig;
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 use crate::tensor::Tensor;
 
 #[derive(Debug, Clone)]
@@ -71,7 +71,7 @@ pub fn intra_block_pairs(model: &ModelInfo) -> Vec<(usize, usize)> {
 }
 
 pub struct Profiler<'a> {
-    pub rt: &'a Runtime,
+    pub rt: &'a dyn Backend,
     pub mf: &'a Manifest,
     pub model: &'a ModelInfo,
 }

@@ -1,0 +1,80 @@
+//! Golden-fixture test: a small hand-written manifest under
+//! tests/fixtures/ must parse through `model::Manifest` exactly as the
+//! schema documents, and the JSON layer must round-trip it byte-equivalent
+//! at the value level.
+
+use std::path::Path;
+
+use brecq::model::Manifest;
+use brecq::runtime::parse_sigs;
+use brecq::util::json::Json;
+
+fn fixture_dir() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures")
+}
+
+#[test]
+fn golden_manifest_parses() {
+    let mf = Manifest::load(&fixture_dir()).expect("fixture manifest");
+    assert_eq!(mf.calib_batch, 4);
+    assert_eq!(mf.dataset.img, 6);
+    assert_eq!(mf.dataset.classes, 3);
+    assert_eq!(mf.dataset.train_n, 24);
+    assert_eq!(mf.dataset.mean, vec![0.5, 0.5, 0.5]);
+
+    let toy = mf.model("toy");
+    assert!((toy.fp_acc - 0.875).abs() < 1e-12);
+    assert_eq!(toy.layers.len(), 2);
+    assert_eq!(toy.layers[0].name, "stem");
+    assert_eq!(toy.layers[0].kind, "conv");
+    assert_eq!(toy.layers[0].wshape, vec![4, 3, 3, 3]);
+    assert!(toy.layers[0].site_signed);
+    assert_eq!(toy.layers[1].kind, "fc");
+    assert!(!toy.layers[1].relu);
+    assert_eq!(toy.first_layer(), 0);
+    assert_eq!(toy.last_layer(), 1);
+    assert_eq!(toy.total_weight_params(), 4 * 3 * 3 * 3 + 3 * 4);
+    assert_eq!(toy.eval_batch, 4);
+    assert!(toy.qat_exe.is_none());
+    assert!(toy.distill_exe.is_none());
+
+    let g = toy.gran("layer");
+    assert_eq!(g.fim_exe, "toy.layer.fim");
+    assert_eq!(g.units.len(), 2);
+    assert_eq!(g.units[0].name, "stem");
+    assert_eq!(g.units[0].layer_ids, vec![0]);
+    assert!(g.units[0].skip_shape.is_none());
+    assert_eq!(g.units[1].topo, "gap_fc");
+    assert_eq!(g.units[1].in_shape, vec![4, 4, 6, 6]);
+    assert_eq!(g.units[1].out_shape, vec![4, 3]);
+
+    // executable signatures parse through the shared runtime path
+    let sigs = parse_sigs(&mf.json).expect("sigs");
+    let sig = sigs.get("toy.layer.u0.fwd").expect("exe sig");
+    assert_eq!(sig.inputs.len(), 7);
+    assert_eq!(sig.inputs[0].0, "x");
+    assert_eq!(sig.inputs[0].1, vec![4, 3, 6, 6]);
+    assert_eq!(sig.outputs[0].1, vec![4, 4, 6, 6]);
+}
+
+#[test]
+fn golden_manifest_roundtrips_through_json() {
+    let text =
+        std::fs::read_to_string(fixture_dir().join("manifest.json")).unwrap();
+    let parsed = Json::parse(&text).expect("parse fixture");
+    let rendered = parsed.to_string();
+    let reparsed = Json::parse(&rendered).expect("reparse rendered");
+    assert_eq!(parsed, reparsed, "Json writer must round-trip the manifest");
+    // spot-check a deep path survives the round trip
+    let shape = reparsed
+        .req("models")
+        .req("toy")
+        .req("grans")
+        .req("layer")
+        .req("units")
+        .as_arr()
+        .unwrap()[1]
+        .req("out_shape")
+        .usize_vec();
+    assert_eq!(shape, vec![4, 3]);
+}

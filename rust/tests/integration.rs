@@ -1,26 +1,37 @@
-//! Integration tests over the real artifacts (manifest + HLO + weights).
-//! Each test skips (prints a notice) when `make artifacts` hasn't run, so
-//! `cargo test` stays green on a fresh checkout.
+//! Hermetic end-to-end integration tests.
+//!
+//! These run against the deterministic synthetic environment executed by
+//! the pure-Rust native backend — no artifacts, Python or XLA — and they
+//! never skip. They exercise the full BRECQ pipeline: manifest/weights
+//! consistency, FP evaluation, unit-stream semantics at every granularity,
+//! Algorithm 1 (block reconstruction with FIM weighting and AdaRound/LSQ
+//! optimization) at W4A8 and W2A8, the baselines, and Algorithm 2 (the GA
+//! mixed-precision search over the sensitivity LUT).
+//!
+//! The artifact-backed PJRT path still exists behind the `pjrt` cargo
+//! feature + `BRECQ_ARTIFACTS` (see the module at the bottom).
 
 use brecq::coordinator::Env;
 use brecq::eval::{accuracy, calib_loss, forward, EvalParams};
+use brecq::hwsim::{HwMeasure, ModelSize};
+use brecq::mp::{GaConfig, GeneticSearch};
 use brecq::quant::{mse_steps_per_channel, quantize_nearest};
 use brecq::recon::{BitConfig, Calibrator, ReconConfig};
+use brecq::sensitivity::Profiler;
 use brecq::tensor::Tensor;
 
-fn env() -> Option<Env> {
-    let dir = std::env::var("BRECQ_ARTIFACTS")
-        .unwrap_or_else(|_| "artifacts".into());
-    if !std::path::Path::new(&dir).join("manifest.json").exists() {
-        eprintln!("integration test skipped: no artifacts at {dir}/");
-        return None;
-    }
-    Some(Env::bootstrap(Some(dir)).expect("bootstrap"))
+fn env() -> Env {
+    Env::bootstrap_synthetic().expect("synthetic environment")
 }
 
 #[test]
 fn manifest_and_weights_consistent() {
-    let Some(env) = env() else { return };
+    let env = env();
+    assert!(
+        env.mf.models.contains_key("resnet_s")
+            && env.mf.models.contains_key("mobilenetv2_s"),
+        "synthetic manifest must name both models"
+    );
     for (name, model) in &env.mf.models {
         let store = env.mf.load_weights(model).expect("weights");
         for l in &model.layers {
@@ -40,143 +51,216 @@ fn manifest_and_weights_consistent() {
         assert!(env.rt.signature(&model.fwd_exe).is_some());
         assert!(env.rt.signature(&model.act_obs_exe).is_some());
     }
+    assert_eq!(env.rt.kind(), "native");
 }
 
 #[test]
-fn fp_eval_matches_training_reference() {
-    let Some(env) = env() else { return };
-    let model = env.model("resnet_s");
-    let cal = Calibrator::new(&env.rt, &env.mf, model);
-    let (ws, bs) = cal.fp_weights().unwrap();
+fn fp_eval_matches_generated_reference() {
+    let env = env();
     let test = env.test_set().unwrap();
-    let acc = accuracy(&env.rt, model, &EvalParams::fp(model, &ws, &bs),
-                       &test)
-        .unwrap();
-    // the AOT eval path must reproduce the Python-side deploy accuracy
-    assert!((acc - model.fp_acc).abs() < 0.002,
-            "AOT eval {acc} vs trained {}", model.fp_acc);
+    for name in ["resnet_s", "mobilenetv2_s"] {
+        let model = env.model(name);
+        let cal = Calibrator::new(&env.rt, &env.mf, model);
+        let (ws, bs) = cal.fp_weights().unwrap();
+        let acc =
+            accuracy(&env.rt, model, &EvalParams::fp(model, &ws, &bs), &test)
+                .unwrap();
+        // the generator measures fp_acc with the same kernels; the task
+        // acceptance loop requires a perfectly separable task
+        assert!(
+            (acc - model.fp_acc).abs() < 1e-9,
+            "{name}: eval {acc} vs manifest {}",
+            model.fp_acc
+        );
+        assert!(acc > 0.99, "{name}: synthetic task must be separable");
+    }
 }
 
 #[test]
 fn unit_stream_stitches_to_full_forward() {
     // advancing the unit stream with FP weights must produce the same
-    // logits as the monolithic eval executable — the stream semantics
-    // (save_skip / uses_skip) are load-bearing for the whole engine.
-    let Some(env) = env() else { return };
-    let model = env.model("resnet_s");
-    let cal = Calibrator::new(&env.rt, &env.mf, model);
-    let (ws, bs) = cal.fp_weights().unwrap();
+    // logits as the monolithic eval executable at EVERY granularity — the
+    // stream semantics (save_skip / uses_skip) are load-bearing for the
+    // whole engine.
+    let env = env();
     let train = env.train_set().unwrap();
-    let calib = env.calib(&train, 32, 7);
-
-    for gran in ["layer", "block", "stage", "net"] {
-        let mut main = calib.images.clone();
-        let mut skip: Option<Tensor> = None;
+    for name in ["resnet_s", "mobilenetv2_s"] {
+        let model = env.model(name);
+        let cal = Calibrator::new(&env.rt, &env.mf, model);
+        let (ws, bs) = cal.fp_weights().unwrap();
+        let calib = env.calib(&train, model.eval_batch, 7);
         let bits = BitConfig::uniform(model, 8, None, false);
-        for unit in &model.gran(gran).units {
-            if unit.save_skip {
-                skip = Some(main.clone());
+        let logits = forward(
+            &env.rt,
+            model,
+            &EvalParams::fp(model, &ws, &bs),
+            &calib.images,
+        )
+        .unwrap();
+        let mut grans: Vec<&String> = model.grans.keys().collect();
+        grans.sort();
+        assert!(!grans.is_empty());
+        let unit_steps = vec![1.0f32; ws.len()];
+        for gran in grans {
+            let gran = gran.as_str();
+            let mut main = calib.images.clone();
+            let mut skip: Option<Tensor> = None;
+            for unit in &model.gran(gran).units {
+                if unit.save_skip {
+                    skip = Some(main.clone());
+                }
+                main = cal
+                    .advance(unit, &main, skip.as_ref(), &ws, &bs,
+                             &unit_steps, &bits, false)
+                    .unwrap();
+                if unit.uses_skip {
+                    skip = None;
+                }
             }
-            main = cal
-                .advance(unit, &main, skip.as_ref(), &ws, &bs,
-                         &vec![1.0; ws.len()], &bits, false)
-                .unwrap();
-            if unit.uses_skip {
-                skip = None;
+            assert_eq!(main.shape, logits.shape);
+            for i in 0..main.data.len() {
+                assert!(
+                    (main.data[i] - logits.data[i]).abs() < 1e-3,
+                    "{name} gran={gran} logit {i}: {} vs {}",
+                    main.data[i],
+                    logits.data[i]
+                );
             }
-        }
-        // compare against eval_fwd logits (pad batch up to eval batch)
-        let b = model.eval_batch;
-        let mut parts = vec![calib.images.clone()];
-        while parts.iter().map(|t| t.shape[0]).sum::<usize>() < b {
-            parts.push(calib.images.clone());
-        }
-        let padded = Tensor::stack0(&parts).slice0(0, b);
-        let logits = forward(&env.rt, model,
-                             &EvalParams::fp(model, &ws, &bs), &padded)
-            .unwrap();
-        for i in 0..32 * 10 {
-            assert!((main.data[i] - logits.data[i]).abs() < 2e-3,
-                    "gran={gran} logit {i}: {} vs {}", main.data[i],
-                    logits.data[i]);
         }
     }
 }
 
+/// The headline acceptance test: full Algorithm 1 on the native backend at
+/// W4A8 and W2A8. Reconstruction loss must decrease on every unit that
+/// actually quantizes below 8 bits, and the committed model must clear a
+/// seeded accuracy floor on the held-out set.
 #[test]
-fn w8_nearest_rounding_preserves_accuracy() {
-    let Some(env) = env() else { return };
-    let model = env.model("resnet_s");
-    let cal = Calibrator::new(&env.rt, &env.mf, model);
-    let (ws, bs) = cal.fp_weights().unwrap();
-    let q: Vec<Tensor> = ws
-        .iter()
-        .map(|w| {
-            let steps = mse_steps_per_channel(w, 8);
-            quantize_nearest(w, &steps, 8)
-        })
-        .collect();
-    let test = env.test_set().unwrap();
-    let p = EvalParams {
-        weights: &q,
-        biases: &bs,
-        act_steps: vec![1.0; ws.len()],
-        bits: BitConfig::uniform(model, 8, None, false),
-        aq: false,
-    };
-    let acc = accuracy(&env.rt, model, &p, &test).unwrap();
-    assert!(acc > model.fp_acc - 0.01,
-            "8-bit nearest rounding dropped accuracy: {acc}");
-}
-
-#[test]
-fn brecq_w4_beats_nearest_rounding_w2_cliff() {
-    // tiny-budget sanity: W4 BRECQ stays near FP; W2 nearest collapses
-    let Some(env) = env() else { return };
+fn brecq_e2e_calibration_w4a8_and_w2a8() {
+    let env = env();
     let model = env.model("resnet_s");
     let cal = Calibrator::new(&env.rt, &env.mf, model);
     let train = env.train_set().unwrap();
-    let calib = env.calib(&train, 64, 3);
     let test = env.test_set().unwrap();
+    // K == batch == calib_batch: full-batch optimization, deterministic
+    // loss curve, and the unit-executable ABI (declared at calib_batch)
+    // holds exactly
+    let calib = env.calib(&train, 32, 3);
+    let units = &model.gran("block").units;
 
-    let bits4 = BitConfig::uniform(model, 4, None, true);
-    let cfg = ReconConfig { iters: 40, ..ReconConfig::default() };
-    let qm = cal.calibrate(&calib, &bits4, &cfg).unwrap();
-    let acc4 = accuracy(&env.rt, model, &EvalParams::quantized(&qm), &test)
-        .unwrap();
-    assert!(acc4 > model.fp_acc - 0.05, "W4 BRECQ too low: {acc4}");
+    for (wbits, floor) in [(4usize, 0.85f64), (2, 0.6)] {
+        let bits = BitConfig::uniform(model, wbits, Some(8), true);
+        let cfg = ReconConfig {
+            iters: 48,
+            batch: 32,
+            seed: 0,
+            ..ReconConfig::default()
+        };
+        let qm = cal.calibrate(&calib, &bits, &cfg).unwrap();
 
-    let (ws, bs) = cal.fp_weights().unwrap();
-    let q2: Vec<Tensor> = ws
-        .iter()
-        .map(|w| {
-            let steps = mse_steps_per_channel(w, 2);
-            quantize_nearest(w, &steps, 2)
-        })
-        .collect();
-    let p2 = EvalParams {
-        weights: &q2,
-        biases: &bs,
-        act_steps: vec![1.0; ws.len()],
-        bits: BitConfig::uniform(model, 2, None, false),
-        aq: false,
+        assert_eq!(qm.reports.len(), units.len());
+        for (unit, r) in units.iter().zip(&qm.reports) {
+            let low_bit =
+                unit.layer_ids.iter().any(|&l| bits.wbits[l] < 8);
+            if low_bit {
+                assert!(
+                    r.final_loss < r.initial_loss,
+                    "W{wbits} unit {}: loss did not decrease \
+                     ({:.4e} -> {:.4e})",
+                    r.name,
+                    r.initial_loss,
+                    r.final_loss
+                );
+            } else {
+                // 8-bit units sit at the noise floor; they must not blow up
+                assert!(
+                    r.final_loss <= r.initial_loss * 1.5 + 1e-6,
+                    "W{wbits} unit {}: 8-bit unit regressed \
+                     ({:.4e} -> {:.4e})",
+                    r.name,
+                    r.initial_loss,
+                    r.final_loss
+                );
+            }
+        }
+
+        let acc =
+            accuracy(&env.rt, model, &EvalParams::quantized(&qm), &test)
+                .unwrap();
+        assert!(
+            acc >= floor,
+            "W{wbits}A8 top-1 {acc:.3} below the seeded floor {floor}"
+        );
+    }
+}
+
+#[test]
+fn mbv2_block_recon_smoke() {
+    // inverted-residual path (depthwise conv, linear bottleneck, identity
+    // residual) through the same engine at W4A8
+    let env = env();
+    let model = env.model("mobilenetv2_s");
+    let cal = Calibrator::new(&env.rt, &env.mf, model);
+    let train = env.train_set().unwrap();
+    let test = env.test_set().unwrap();
+    let calib = env.calib(&train, 32, 5);
+    let bits = BitConfig::uniform(model, 4, Some(8), true);
+    let cfg = ReconConfig {
+        iters: 32,
+        batch: 32,
+        seed: 0,
+        ..ReconConfig::default()
     };
-    let acc2 = accuracy(&env.rt, model, &p2, &test).unwrap();
-    assert!(acc4 > acc2 + 0.2,
-            "expected W2-nearest cliff below W4-BRECQ: {acc4} vs {acc2}");
+    let qm = cal.calibrate(&calib, &bits, &cfg).unwrap();
+    for r in &qm.reports {
+        assert!(
+            r.final_loss <= r.initial_loss * 1.5 + 1e-6,
+            "unit {}: {:.4e} -> {:.4e}",
+            r.name,
+            r.initial_loss,
+            r.final_loss
+        );
+    }
+    let acc = accuracy(&env.rt, model, &EvalParams::quantized(&qm), &test)
+        .unwrap();
+    assert!(acc >= 0.8, "mbv2 W4A8 top-1 {acc:.3}");
+}
+
+#[test]
+fn baselines_run_hermetically() {
+    let env = env();
+    let model = env.model("resnet_s");
+    let train = env.train_set().unwrap();
+    let test = env.test_set().unwrap();
+    let calib = env.calib(&train, 64, 1);
+    let bits = BitConfig::uniform(model, 4, None, true);
+
+    let qm = brecq::baselines::omse(&env.rt, &env.mf, model, &calib, &bits)
+        .unwrap();
+    let acc_omse =
+        accuracy(&env.rt, model, &EvalParams::quantized(&qm), &test).unwrap();
+    assert!(acc_omse >= 0.75, "OMSE W4 top-1 {acc_omse:.3}");
+
+    // bias correction walks the layer-granularity unit stream
+    let qm = brecq::baselines::bias_correction(
+        &env.rt, &env.mf, model, &calib, &bits,
+    )
+    .unwrap();
+    let acc_bc =
+        accuracy(&env.rt, model, &EvalParams::quantized(&qm), &test).unwrap();
+    assert!(acc_bc >= 0.75, "bias-corr W4 top-1 {acc_bc:.3}");
 }
 
 #[test]
 fn calib_loss_orders_with_accuracy() {
-    let Some(env) = env() else { return };
+    let env = env();
     let model = env.model("resnet_s");
     let cal = Calibrator::new(&env.rt, &env.mf, model);
     let (ws, bs) = cal.fp_weights().unwrap();
     let train = env.train_set().unwrap();
-    let calib = env.calib(&train, 256, 1);
+    let calib = env.calib(&train, 64, 1);
     let p_fp = EvalParams::fp(model, &ws, &bs);
-    let loss_fp = calib_loss(&env.rt, &env.mf, model, &p_fp, &calib)
-        .unwrap();
+    let loss_fp =
+        calib_loss(&env.rt, &env.mf, model, &p_fp, &calib).unwrap();
     let q2: Vec<Tensor> = ws
         .iter()
         .map(|w| {
@@ -192,6 +276,172 @@ fn calib_loss_orders_with_accuracy() {
         aq: false,
     };
     let loss_q = calib_loss(&env.rt, &env.mf, model, &p_q, &calib).unwrap();
-    assert!(loss_q > loss_fp + 0.1,
-            "2-bit loss {loss_q} should exceed FP loss {loss_fp}");
+    // measured across accepted synthetic tasks: FP CE ~1e-4..0.07, all-2-bit
+    // CE ~0.1..0.7 — assert a conservative separation
+    assert!(
+        loss_q > loss_fp + 0.02,
+        "all-2-bit loss {loss_q} should exceed FP loss {loss_fp}"
+    );
+}
+
+/// Algorithm 2 end-to-end: sensitivity LUT (diagonal + intra-block pair
+/// terms) -> GA search under a model-size budget -> calibrate the winning
+/// mixed-precision assignment and evaluate it.
+#[test]
+fn ga_mixed_precision_search_e2e() {
+    let env = env();
+    let model = env.model("resnet_s");
+    let cal = Calibrator::new(&env.rt, &env.mf, model);
+    let train = env.train_set().unwrap();
+    let test = env.test_set().unwrap();
+    let calib = env.calib(&train, 32, 2);
+    let (ws, bs) = cal.fp_weights().unwrap();
+
+    let prof = Profiler { rt: &env.rt, mf: &env.mf, model };
+    let table = prof.measure(&calib, &ws, &bs, true).unwrap();
+    assert!(table.base_loss.is_finite());
+
+    let nl = model.layers.len();
+    let size = ModelSize;
+    let pinned = |b: usize| -> Vec<usize> {
+        let mut w = vec![b; nl];
+        w[0] = 8;
+        w[nl - 1] = 8;
+        w
+    };
+    let c4 = size.measure(model, &pinned(4), 8);
+    let c2 = size.measure(model, &pinned(2), 8);
+    let budget = (c4 + c2) / 2.0;
+
+    let ga = GeneticSearch { model, table: &table, hw: &size, abits: 8,
+                             budget };
+    let res = ga
+        .run(&GaConfig { iters: 30, seed: 0, ..GaConfig::default() })
+        .unwrap();
+    assert!(res.hw_cost <= budget, "{} > {budget}", res.hw_cost);
+    assert_eq!(res.wbits[0], 8);
+    assert_eq!(res.wbits[nl - 1], 8);
+    assert!(res.wbits.iter().all(|b| [2, 4, 8].contains(b)));
+
+    let bits = BitConfig::mixed(res.wbits.clone(), 8, true);
+    let cfg = ReconConfig {
+        iters: 32,
+        batch: 32,
+        seed: 0,
+        ..ReconConfig::default()
+    };
+    let qm = cal.calibrate(&calib, &bits, &cfg).unwrap();
+    let acc = accuracy(&env.rt, model, &EvalParams::quantized(&qm), &test)
+        .unwrap();
+    assert!(acc >= 0.6, "GA mixed config top-1 {acc:.3}");
+}
+
+#[test]
+fn dispatch_accounting_populates() {
+    let env = env();
+    let model = env.model("resnet_s");
+    let cal = Calibrator::new(&env.rt, &env.mf, model);
+    let (ws, bs) = cal.fp_weights().unwrap();
+    let test = env.test_set().unwrap();
+    accuracy(&env.rt, model, &EvalParams::fp(model, &ws, &bs), &test)
+        .unwrap();
+    let hot = env.rt.hotspots(4);
+    assert!(!hot.is_empty());
+    assert!(hot[0].1 >= 1);
+}
+
+// ------------------------------------------------------------------
+// Artifact-backed path (PJRT): opt-in via the `pjrt` feature and
+// BRECQ_ARTIFACTS pointing at a `make artifacts` output directory.
+// ------------------------------------------------------------------
+
+#[cfg(feature = "pjrt")]
+mod pjrt_artifacts {
+    use super::*;
+
+    fn artifact_env() -> Option<Env> {
+        let dir = std::env::var("BRECQ_ARTIFACTS").ok()?;
+        if !std::path::Path::new(&dir).join("manifest.json").exists() {
+            eprintln!("pjrt artifact test skipped: no artifacts at {dir}/");
+            return None;
+        }
+        Some(Env::bootstrap(Some(dir)).expect("bootstrap"))
+    }
+
+    #[test]
+    fn artifacts_fp_eval_matches_training_reference() {
+        let Some(env) = artifact_env() else { return };
+        let model = env.model("resnet_s");
+        let cal = Calibrator::new(&env.rt, &env.mf, model);
+        let (ws, bs) = cal.fp_weights().unwrap();
+        let test = env.test_set().unwrap();
+        let acc =
+            accuracy(&env.rt, model, &EvalParams::fp(model, &ws, &bs), &test)
+                .unwrap();
+        assert!((acc - model.fp_acc).abs() < 0.002,
+                "AOT eval {acc} vs trained {}", model.fp_acc);
+    }
+
+    #[test]
+    fn artifacts_w8_nearest_rounding_preserves_accuracy() {
+        let Some(env) = artifact_env() else { return };
+        let model = env.model("resnet_s");
+        let cal = Calibrator::new(&env.rt, &env.mf, model);
+        let (ws, bs) = cal.fp_weights().unwrap();
+        let q: Vec<Tensor> = ws
+            .iter()
+            .map(|w| {
+                let steps = mse_steps_per_channel(w, 8);
+                quantize_nearest(w, &steps, 8)
+            })
+            .collect();
+        let test = env.test_set().unwrap();
+        let p = EvalParams {
+            weights: &q,
+            biases: &bs,
+            act_steps: vec![1.0; ws.len()],
+            bits: BitConfig::uniform(model, 8, None, false),
+            aq: false,
+        };
+        let acc = accuracy(&env.rt, model, &p, &test).unwrap();
+        assert!(acc > model.fp_acc - 0.01,
+                "8-bit nearest rounding dropped accuracy: {acc}");
+    }
+
+    #[test]
+    fn artifacts_brecq_w4_beats_nearest_w2_cliff() {
+        let Some(env) = artifact_env() else { return };
+        let model = env.model("resnet_s");
+        let cal = Calibrator::new(&env.rt, &env.mf, model);
+        let train = env.train_set().unwrap();
+        let calib = env.calib(&train, 64, 3);
+        let test = env.test_set().unwrap();
+
+        let bits4 = BitConfig::uniform(model, 4, None, true);
+        let cfg = ReconConfig { iters: 40, ..ReconConfig::default() };
+        let qm = cal.calibrate(&calib, &bits4, &cfg).unwrap();
+        let acc4 =
+            accuracy(&env.rt, model, &EvalParams::quantized(&qm), &test)
+                .unwrap();
+        assert!(acc4 > model.fp_acc - 0.05, "W4 BRECQ too low: {acc4}");
+
+        let (ws, bs) = cal.fp_weights().unwrap();
+        let q2: Vec<Tensor> = ws
+            .iter()
+            .map(|w| {
+                let steps = mse_steps_per_channel(w, 2);
+                quantize_nearest(w, &steps, 2)
+            })
+            .collect();
+        let p2 = EvalParams {
+            weights: &q2,
+            biases: &bs,
+            act_steps: vec![1.0; ws.len()],
+            bits: BitConfig::uniform(model, 2, None, false),
+            aq: false,
+        };
+        let acc2 = accuracy(&env.rt, model, &p2, &test).unwrap();
+        assert!(acc4 > acc2 + 0.2,
+                "expected W2-nearest cliff below W4-BRECQ: {acc4} vs {acc2}");
+    }
 }

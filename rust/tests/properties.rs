@@ -4,8 +4,9 @@
 
 use brecq::quant::{
     act_bounds, mse_steps_per_channel, quantize_nearest, rect_sigmoid,
-    rect_sigmoid_inv, weight_bounds, AdaRoundState,
+    rect_sigmoid_inv, round_quant, weight_bounds, AdaRoundState,
 };
+use brecq::runtime::native;
 use brecq::tensor::Tensor;
 use brecq::util::json::Json;
 use brecq::util::rng::Rng;
@@ -198,6 +199,160 @@ fn prop_adam_descends_random_quadratics() {
             opt.step(&mut [&mut x], &[&g]);
         }
         assert!(loss(&x) < l0 * 0.01, "seed {seed}: {} vs {}", loss(&x), l0);
+    }
+}
+
+// ------------------------------------------------------------------
+// Native-backend kernel properties: the runtime::native ports must agree
+// with the quant.rs host-side primitives to 1e-5 on randomized inputs.
+// ------------------------------------------------------------------
+
+#[test]
+fn prop_native_rect_sigmoid_matches_host() {
+    for seed in 0..50 {
+        let mut rng = Rng::new(9000 + seed);
+        let v = (rng.gauss() * 4.0) as f32;
+        assert!(
+            (native::rect_sigmoid(v) - rect_sigmoid(v)).abs() < 1e-5,
+            "seed {seed} v {v}"
+        );
+        // inverse round-trip through the native forward
+        let h = 0.02 + 0.96 * rng.f32();
+        let vi = rect_sigmoid_inv(h);
+        assert!(
+            (native::rect_sigmoid(vi) - h).abs() < 1e-4,
+            "seed {seed} h {h}"
+        );
+    }
+}
+
+#[test]
+fn prop_native_round_ste_matches_quantize_nearest() {
+    // native round_ste with per-channel MSE steps must reproduce the
+    // host-side quantize_nearest elementwise
+    for seed in 0..30 {
+        let mut rng = Rng::new(9100 + seed);
+        let c = 1 + rng.below(6);
+        let k = 4 + rng.below(48);
+        let bits = [2, 3, 4, 8][rng.below(4)];
+        let (n, p) = weight_bounds(bits);
+        let w = randn(&mut rng, vec![c, k], 0.2 + rng.f32());
+        let steps = mse_steps_per_channel(&w, bits);
+        let q = quantize_nearest(&w, &steps, bits);
+        let inner = w.inner();
+        for ch in 0..c {
+            for i in ch * inner..(ch + 1) * inner {
+                let native_q = native::round_ste(w.data[i], steps[ch], n, p);
+                assert!(
+                    (native_q - q.data[i]).abs() < 1e-5,
+                    "seed {seed} ch {ch} i {i}"
+                );
+                // and both agree with the scalar host primitive
+                let host_q = round_quant(w.data[i], steps[ch], n, p);
+                assert!((native_q - host_q).abs() < 1e-5);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_native_lsq_grad_piecewise_cases() {
+    // Eq. 18: dxhat/ds = qmin below, qmax above, round(x/s)-x/s inside;
+    // dxhat/dx = STE indicator of the clip range
+    for seed in 0..50 {
+        let mut rng = Rng::new(9200 + seed);
+        let bits = [2, 4, 8][rng.below(3)];
+        let signed = rng.f64() < 0.5;
+        let (qmin, qmax) = act_bounds(bits, signed);
+        let step = 0.05 + rng.f32() * 0.5;
+        let gout = (rng.gauss() as f32) + 0.1;
+
+        // below the range
+        let x_lo = (qmin - 1.5) * step;
+        let (gx, gs) = native::lsq_grads(x_lo, step, qmin, qmax, gout);
+        assert_eq!(gx, 0.0, "seed {seed}");
+        assert!((gs - gout * qmin).abs() < 1e-5, "seed {seed}");
+
+        // above the range
+        let x_hi = (qmax + 1.5) * step;
+        let (gx, gs) = native::lsq_grads(x_hi, step, qmin, qmax, gout);
+        assert_eq!(gx, 0.0, "seed {seed}");
+        assert!((gs - gout * qmax).abs() < 1e-5, "seed {seed}");
+
+        // strictly interior, away from the rounding boundary
+        let mid = (qmin + qmax) / 2.0;
+        let frac = 0.1 + 0.3 * rng.f32(); // keep |frac - 0.5| >= 0.1
+        let xs = mid.floor() + frac;
+        if xs > qmin && xs < qmax {
+            let x = xs * step;
+            let (gx, gs) = native::lsq_grads(x, step, qmin, qmax, gout);
+            assert!((gx - gout).abs() < 1e-6, "seed {seed}");
+            let expect = gout * (xs.round() - xs);
+            assert!((gs - expect).abs() < 1e-4, "seed {seed}");
+            // forward consistency at the same point
+            let fwd = native::lsq(x, step, qmin, qmax);
+            let host = round_quant(x, step, qmin, qmax);
+            assert!((fwd - host).abs() < 1e-5, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_native_adaround_hard_commit_matches_nearest_when_saturated() {
+    // when h(v) saturates toward the nearest-rounding direction, the hard
+    // commit IS nearest rounding — elementwise and through AdaRoundState
+    for seed in 0..30 {
+        let mut rng = Rng::new(9300 + seed);
+        let c = 1 + rng.below(4);
+        let k = 4 + rng.below(32);
+        let bits = [2, 3, 4][rng.below(3)];
+        let (n, p) = weight_bounds(bits);
+        let w = randn(&mut rng, vec![c, k], 0.4);
+        let steps = mse_steps_per_channel(&w, bits);
+        let mut st = AdaRoundState::init(&w, &steps, bits);
+        let inner = w.inner();
+        for ch in 0..c {
+            let s = steps[ch];
+            for i in ch * inner..(ch + 1) * inner {
+                let frac = w.data[i] / s - (w.data[i] / s).floor();
+                // saturate h to 0/1 toward the nearest grid point
+                st.v.data[i] = if frac >= 0.5 { 10.0 } else { -10.0 };
+                let hard =
+                    native::adaround_hard(w.data[i], s, st.v.data[i], n, p);
+                let nearest = round_quant(w.data[i], s, n, p);
+                assert!(
+                    (hard - nearest).abs() < 1e-5,
+                    "seed {seed}: {hard} vs {nearest}"
+                );
+            }
+        }
+        let committed = st.commit(&w);
+        let nearest = quantize_nearest(&w, &steps, bits);
+        for i in 0..committed.data.len() {
+            assert!(
+                (committed.data[i] - nearest.data[i]).abs() < 1e-5,
+                "seed {seed} idx {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_native_adaround_soft_matches_host_formula() {
+    // the native soft fake-quant equals s*clip(floor(w/s)+h(v), n, p) with
+    // the host rect_sigmoid
+    for seed in 0..50 {
+        let mut rng = Rng::new(9400 + seed);
+        let bits = [2, 4][rng.below(2)];
+        let (n, p) = weight_bounds(bits);
+        let w = rng.gauss() as f32;
+        let s = 0.05 + rng.f32() * 0.3;
+        let v = (rng.gauss() * 3.0) as f32;
+        let expect = s * ((w / s).floor() + rect_sigmoid(v)).clamp(n, p);
+        assert!(
+            (native::adaround(w, s, v, n, p) - expect).abs() < 1e-5,
+            "seed {seed}"
+        );
     }
 }
 
