@@ -4,20 +4,18 @@
 
 mod harness;
 
-use brecq::coordinator::Env;
 use brecq::hwsim::{ArmCpu, HwMeasure, ModelSize, Systolic};
-use harness::Bench;
+use harness::Harness;
 
 fn main() {
-    if !harness::artifacts_ready() {
-        return;
-    }
-    let env = Env::bootstrap(None).unwrap();
+    let mut h = Harness::from_args("bench_hwsim");
+    let env = harness::bench_env();
     let model = env.model("resnet_s");
     let wbits = vec![4usize; model.layers.len()];
 
     let sim = Systolic::default();
-    Bench::new("systolic.model_ms x1000").iters(20).run(|| {
+    let iters = h.iters(20);
+    h.run("systolic.model_ms x1000", iters, || {
         let mut acc = 0.0;
         for _ in 0..1000 {
             acc += sim.measure(model, &wbits, 8);
@@ -27,7 +25,8 @@ fn main() {
 
     let arm = ArmCpu::default();
     if ArmCpu::supports(model) {
-        Bench::new("armcpu.model_ms x1000").iters(20).run(|| {
+        let iters = h.iters(20);
+        h.run("armcpu.model_ms x1000", iters, || {
             let mut acc = 0.0;
             for _ in 0..1000 {
                 acc += arm.measure(model, &wbits, 8);
@@ -37,11 +36,14 @@ fn main() {
     }
 
     let size = ModelSize;
-    Bench::new("model_size x1000").iters(20).run(|| {
+    let iters = h.iters(20);
+    h.run("model_size x1000", iters, || {
         let mut acc = 0.0;
         for _ in 0..1000 {
             acc += size.measure(model, &wbits, 8);
         }
         std::hint::black_box(acc);
     });
+
+    h.finish();
 }

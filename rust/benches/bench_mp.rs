@@ -7,17 +7,14 @@ mod harness;
 
 use std::collections::HashMap;
 
-use brecq::coordinator::Env;
 use brecq::hwsim::{HwMeasure, ModelSize, Systolic};
 use brecq::mp::{GaConfig, GeneticSearch};
 use brecq::sensitivity::{intra_block_pairs, SensitivityTable};
-use harness::Bench;
+use harness::Harness;
 
 fn main() {
-    if !harness::artifacts_ready() {
-        return;
-    }
-    let env = Env::bootstrap(None).unwrap();
+    let mut h = Harness::from_args("bench_mp");
+    let env = harness::bench_env();
     let model = env.model("resnet_s");
 
     // synthetic-but-shaped LUT (measuring the real one needs calibration
@@ -40,7 +37,8 @@ fn main() {
     let full = size.measure(model, &vec![8; model.layers.len()], 8);
     let ga = GeneticSearch { model, table: &table, hw: &size, abits: 8,
                              budget: full * 0.5 };
-    Bench::new("ga.search pop=50 iters=100").iters(5).run(|| {
+    let iters = h.iters(5);
+    h.run("ga.search pop=50 iters=100", iters, || {
         let r = ga.run(&GaConfig::default()).unwrap();
         std::hint::black_box(r.predicted_loss);
     });
@@ -49,13 +47,17 @@ fn main() {
     let t8 = sim.measure(model, &vec![8; model.layers.len()], 8);
     let ga2 = GeneticSearch { model, table: &table, hw: &sim, abits: 8,
                               budget: t8 * 0.6 };
-    Bench::new("ga.search fpga-constrained").iters(5).run(|| {
+    let iters = h.iters(5);
+    h.run("ga.search fpga-constrained", iters, || {
         let r = ga2.run(&GaConfig::default()).unwrap();
         std::hint::black_box(r.predicted_loss);
     });
 
-    Bench::new("pareto_greedy").iters(5).run(|| {
+    let iters = h.iters(5);
+    h.run("pareto_greedy", iters, || {
         let r = ga.pareto_greedy().unwrap();
         std::hint::black_box(r.predicted_loss);
     });
+
+    h.finish();
 }

@@ -1,42 +1,42 @@
 //! Bench: the reconstruction step and a full mini-calibration — the paper's
 //! headline production-cost claim (Table 4: ResNet-18 calibrated in 0.4 GPU
 //! hours vs 100 for QAT; §3.3: "a quantized ResNet-18 within 20 minutes").
-//! This regenerates the cost side of Table 4 on our substrate: calibration
-//! wall-clock per model/config.
+//! This regenerates the cost side of Table 4 on our substrate, and also
+//! measures the worker-pool speedup (1 vs 4 threads) on the same
+//! end-to-end unit reconstruction — losses must be bit-identical (the
+//! pool's determinism contract) and the speedup is what CI gates through
+//! `scripts/check_bench.sh`.
 
 mod harness;
 
-use brecq::coordinator::Env;
 use brecq::recon::{BitConfig, Calibrator, ReconConfig};
-use harness::Bench;
+use brecq::util::pool;
+use harness::Harness;
 
 fn main() {
-    if !harness::artifacts_ready() {
-        return;
-    }
-    let env = Env::bootstrap(None).unwrap();
+    let mut h = Harness::from_args("bench_recon");
+    let env = harness::bench_env();
     let model = env.model("resnet_s");
     let train = env.train_set().unwrap();
     let calib = env.calib(&train, 64, 0);
     let cal = Calibrator::new(&env.rt, &env.mf, model);
 
-    // end-to-end mini-calibration (8 units x 20 iters, 64 calib images)
-    for (name, gran) in [("block", "block"), ("layer", "layer")] {
+    // end-to-end mini-calibration (20 iters/unit, 64 calib images)
+    for gran in ["block", "layer"] {
         let bits = BitConfig::uniform(model, 4, None, true);
         let cfg = ReconConfig {
-            gran: gran.into(),
+            gran: gran.to_string(),
             iters: 20,
             ..ReconConfig::default()
         };
-        Bench::new(&format!("calibrate 20it/unit gran={name}"))
-            .iters(2)
-            .run(|| {
-                let qm = cal.calibrate(&calib, &bits, &cfg).unwrap();
-                std::hint::black_box(qm.weights.len());
-            });
+        let iters = h.iters(2);
+        h.run(&format!("calibrate 20it/unit gran={gran}"), iters, || {
+            let qm = cal.calibrate(&calib, &bits, &cfg).unwrap();
+            std::hint::black_box(qm.weights.len());
+        });
     }
 
-    // per-dispatch cost of the hottest executable (largest recon unit)
+    // per-dispatch cost of the hottest executable (largest recon units)
     let units = &model.gran("block").units;
     for u in units.iter().take(3) {
         let sig = env.rt.signature(&u.recon_exe).unwrap().clone();
@@ -60,11 +60,43 @@ fn main() {
             })
             .collect();
         let refs: Vec<&brecq::tensor::Tensor> = args.iter().collect();
-        Bench::new(&format!("unit_recon dispatch [{}]", u.name))
-            .iters(10)
-            .run(|| {
-                let out = env.rt.run(&u.recon_exe, &refs).unwrap();
-                std::hint::black_box(out[0].data[0]);
-            });
+        let iters = h.iters(10);
+        h.run(&format!("unit_recon dispatch [{}]", u.name), iters, || {
+            let out = env.rt.run(&u.recon_exe, &refs).unwrap();
+            std::hint::black_box(out[0].data[0]);
+        });
     }
+
+    // worker-pool speedup: identical end-to-end reconstruction at 1 vs 4
+    // threads. Bit-identical losses are asserted, wall-clocks recorded.
+    let bits = BitConfig::uniform(model, 4, None, true);
+    let cfg = ReconConfig {
+        iters: if h.quick { 10 } else { 20 },
+        ..ReconConfig::default()
+    };
+    let runs = if h.quick { 2 } else { 3 };
+    let time_at = |nt: usize| -> (f64, Vec<u64>) {
+        pool::set_threads(nt);
+        let mut best = f64::INFINITY;
+        let mut losses = Vec::new();
+        for _ in 0..runs {
+            let t0 = std::time::Instant::now();
+            let qm = cal.calibrate(&calib, &bits, &cfg).unwrap();
+            best = best.min(t0.elapsed().as_secs_f64());
+            losses = qm
+                .reports
+                .iter()
+                .map(|r| r.final_loss.to_bits())
+                .collect();
+        }
+        (best, losses)
+    };
+    let (t1, l1) = time_at(1);
+    let (t4, l4) = time_at(4);
+    pool::set_threads(0);
+    assert_eq!(l1, l4, "thread count changed reconstruction losses");
+    h.note("recon_wall_s_1t", t1);
+    h.note("recon_wall_s_4t", t4);
+    h.note("recon_speedup_4t_over_1t", t1 / t4);
+    h.finish();
 }

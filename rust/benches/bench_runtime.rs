@@ -1,22 +1,19 @@
-//! Bench: PJRT dispatch hot path. The reconstruction loop issues one
+//! Bench: backend dispatch hot path. The reconstruction loop issues one
 //! `unit_recon` dispatch per Adam step; its latency bounds the whole
 //! calibration wall-clock (paper: 20 min for ResNet-18 on a 1080TI).
 //! Also measures the fwd/eval paths and the literal marshalling overhead.
 
 mod harness;
 
-use brecq::coordinator::Env;
 use brecq::eval::{forward, EvalParams};
 use brecq::quant::mse_steps_per_channel;
 use brecq::recon::{BitConfig, Calibrator};
 use brecq::tensor::Tensor;
-use harness::Bench;
+use harness::Harness;
 
 fn main() {
-    if !harness::artifacts_ready() {
-        return;
-    }
-    let env = Env::bootstrap(None).unwrap();
+    let mut h = Harness::from_args("bench_runtime");
+    let env = harness::bench_env();
     let model = env.model("resnet_s");
     let cal = Calibrator::new(&env.rt, &env.mf, model);
     let (ws, bs) = cal.fp_weights().unwrap();
@@ -25,7 +22,6 @@ fn main() {
 
     // eval forward (batch = eval_batch)
     let p = EvalParams::fp(model, &ws, &bs);
-    let images = calib.images.slice0(0, 32);
     let eval_imgs = {
         // tile the 64-image calib set up to the eval batch
         let mut parts = Vec::new();
@@ -35,7 +31,8 @@ fn main() {
         }
         Tensor::stack0(&parts).slice0(0, b)
     };
-    Bench::new("eval_fwd batch=200").iters(10).run(|| {
+    let iters = h.iters(10);
+    h.run("eval_fwd batch=eval", iters, || {
         let out = forward(&env.rt, model, &p, &eval_imgs).unwrap();
         std::hint::black_box(out.data[0]);
     });
@@ -43,39 +40,39 @@ fn main() {
     // unit_fwd advance of one block over 64 samples
     let unit = &model.gran("block").units[3];
     let bits = BitConfig::uniform(model, 4, None, true);
-    Bench::new("unit_fwd s2.b0 batch=32 x2").iters(10).run(|| {
+    let adv_imgs = images_for(unit, &calib.images);
+    let iters = h.iters(10);
+    h.run("unit_fwd s2.b0 batch=32 x2", iters, || {
         let z = cal
-            .advance(unit, &images_for(unit, &calib.images), None, &ws, &bs,
-                     &vec![1.0; ws.len()], &bits, false)
+            .advance(unit, &adv_imgs, None, &ws, &bs, &vec![1.0; ws.len()],
+                     &bits, false)
             .unwrap();
         std::hint::black_box(z.data[0]);
     });
 
     // FIM pass over 64 samples (2 batches)
-    Bench::new("fim_pass block 64 imgs").iters(3).run(|| {
+    let iters = h.iters(3);
+    h.run("fim_pass block 64 imgs", iters, || {
         let f = cal.fim_pass("block", &calib, &ws, &bs).unwrap();
         std::hint::black_box(f.len());
     });
 
     // literal marshalling: weight steps init (pure rust, no dispatch)
-    Bench::new("mse_steps_per_channel all layers").iters(10).run(|| {
+    let iters = h.iters(10);
+    h.run("mse_steps_per_channel all layers", iters, || {
         for w in &ws {
             std::hint::black_box(mse_steps_per_channel(w, 4));
         }
     });
 
-    let _ = images;
+    h.finish();
 }
 
 /// The stream advance needs a main-activation tensor whose trailing shape
-/// matches the unit input; for s2.b0 that is the stage-1 output, so we run
-/// the real stem+stage1 prefix to produce it.
+/// matches the unit input; to keep the bench self-contained we synthesize
+/// a correctly-shaped activation (values don't matter for timing).
 fn images_for(unit: &brecq::model::UnitInfo,
               images: &brecq::tensor::Tensor) -> brecq::tensor::Tensor {
-    // unit.in_shape = [32, C, H, W]; tile/crop channels of the raw images
-    // is wrong — instead run the actual prefix once per bench setup. To
-    // keep the bench self-contained we synthesize a correctly-shaped
-    // activation (values don't matter for timing).
     let mut shape = unit.in_shape.clone();
     shape[0] = images.shape[0];
     brecq::tensor::Tensor::zeros(shape)

@@ -7,18 +7,15 @@
 mod harness;
 
 use brecq::coordinator::experiments::{quantize_with, ExpOpts, Method};
-use brecq::coordinator::Env;
 use brecq::eval::{accuracy, EvalParams};
 use brecq::recon::BitConfig;
-use brecq::sensitivity::Profiler;
 use brecq::recon::Calibrator;
-use harness::Bench;
+use brecq::sensitivity::Profiler;
+use harness::Harness;
 
 fn main() {
-    if !harness::artifacts_ready() {
-        return;
-    }
-    let env = Env::bootstrap(None).unwrap();
+    let mut h = Harness::from_args("bench_tables");
+    let env = harness::bench_env();
     let train = env.train_set().unwrap();
     let test = env.test_set().unwrap();
     let o = ExpOpts { iters: 30, calib_n: 64, ..ExpOpts::default() };
@@ -26,7 +23,8 @@ fn main() {
 
     // Table 1 cell: one granularity run (block, W2)
     let model = env.model("resnet_s");
-    Bench::new("table1-cell brecq block W2").iters(3).run(|| {
+    let iters = h.iters(3);
+    h.run("table1-cell brecq block W2", iters, || {
         let bits = BitConfig::uniform(model, 2, None, true);
         let qm = quantize_with(&env, "resnet_s", Method::Brecq, &calib,
                                &bits, &o)
@@ -38,7 +36,8 @@ fn main() {
     });
 
     // Table 2 cell: one baseline run (OMSE W4 — data-free, fast path)
-    Bench::new("table2-cell omse W4").iters(3).run(|| {
+    let iters = h.iters(3);
+    h.run("table2-cell omse W4", iters, || {
         let bits = BitConfig::uniform(model, 4, None, true);
         let qm = quantize_with(&env, "resnet_s", Method::Omse, &calib,
                                &bits, &o)
@@ -47,7 +46,8 @@ fn main() {
     });
 
     // Table 3 cell: fully quantized run (W4A4)
-    Bench::new("table3-cell brecq W4A4").iters(3).run(|| {
+    let iters = h.iters(3);
+    h.run("table3-cell brecq W4A4", iters, || {
         let bits = BitConfig::uniform(model, 4, Some(4), true);
         let qm = quantize_with(&env, "resnet_s", Method::Brecq, &calib,
                                &bits, &o)
@@ -59,9 +59,12 @@ fn main() {
     // full run)
     let cal = Calibrator::new(&env.rt, &env.mf, model);
     let (ws, bs) = cal.fp_weights().unwrap();
-    Bench::new("fig2-stage sensitivity diag").iters(3).run(|| {
+    let iters = h.iters(3);
+    h.run("fig2-stage sensitivity diag", iters, || {
         let prof = Profiler { rt: &env.rt, mf: &env.mf, model };
         let t = prof.measure(&calib, &ws, &bs, false).unwrap();
         std::hint::black_box(t.base_loss);
     });
+
+    h.finish();
 }

@@ -1,51 +1,144 @@
 //! Minimal bench harness (criterion is unavailable offline): warmup +
-//! timed iterations, reporting mean/p50/p95/min via util::stats. Used by
-//! every `[[bench]]` target with `harness = false`.
+//! timed iterations reporting mean/p50/p95/min via util::stats, a
+//! `--quick` mode for CI smoke runs, and machine-readable JSON output
+//! (`--json out.json`) consumed by the perf-regression gate
+//! (`scripts/check_bench.sh` against the committed `BENCH_native.json`).
+//!
+//! Benches never skip: [`bench_env`] uses real artifacts when present
+//! (`./artifacts` or `$BRECQ_ARTIFACTS`) and otherwise falls back to the
+//! same hermetic synthetic environment the test suite runs on. A minimal
+//! example of the artifact manifest format lives at
+//! `rust/tests/fixtures/manifest.json`.
+
+// Shared by every `[[bench]]` binary via `mod harness;` — not every
+// binary uses every helper.
+#![allow(dead_code)]
 
 use std::time::Instant;
 
-use brecq::util::stats;
+use brecq::coordinator::Env;
+use brecq::util::json::{arr, num, obj, s, Json};
+use brecq::util::{pool, stats};
 
-pub struct Bench {
-    pub name: String,
-    pub warmup: usize,
-    pub iters: usize,
+pub struct Harness {
+    bench: String,
+    pub quick: bool,
+    json_path: Option<String>,
+    /// (name, iters, per-iter milliseconds)
+    results: Vec<(String, usize, Vec<f64>)>,
+    notes: Vec<(String, f64)>,
 }
 
-impl Bench {
-    pub fn new(name: &str) -> Bench {
-        Bench { name: name.to_string(), warmup: 2, iters: 10 }
+impl Harness {
+    /// Parse bench argv: `--quick` and `--json PATH`; everything else
+    /// (e.g. the `--bench` flag cargo forwards) is ignored.
+    pub fn from_args(bench: &str) -> Harness {
+        let mut quick = false;
+        let mut json_path = None;
+        let mut args = std::env::args().skip(1);
+        while let Some(a) = args.next() {
+            match a.as_str() {
+                "--quick" => quick = true,
+                "--json" => json_path = args.next(),
+                _ => {}
+            }
+        }
+        Harness {
+            bench: bench.to_string(),
+            quick,
+            json_path,
+            results: Vec::new(),
+            notes: Vec::new(),
+        }
     }
 
-    pub fn iters(mut self, n: usize) -> Bench {
-        self.iters = n;
-        self
+    /// Iteration count for one bench: `full` normally, reduced in --quick.
+    pub fn iters(&self, full: usize) -> usize {
+        if self.quick {
+            (full / 3).max(1)
+        } else {
+            full
+        }
     }
 
-    /// Times `f` and prints a summary line; returns per-iter seconds.
-    pub fn run<F: FnMut()>(&self, mut f: F) -> Vec<f64> {
-        for _ in 0..self.warmup {
+    /// Time `f` over `iters` iterations (plus warmup); prints a summary
+    /// line, records the samples for the JSON report, and returns the
+    /// per-iter milliseconds.
+    pub fn run<F: FnMut()>(
+        &mut self,
+        name: &str,
+        iters: usize,
+        mut f: F,
+    ) -> Vec<f64> {
+        let warmup = if self.quick { 1 } else { 2 };
+        for _ in 0..warmup {
             f();
         }
-        let mut samples = Vec::with_capacity(self.iters);
-        for _ in 0..self.iters {
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
             let t0 = Instant::now();
             f();
             samples.push(t0.elapsed().as_secs_f64() * 1e3); // ms
         }
-        println!("bench {:<40} {} ms", self.name, stats::summary(&samples));
+        println!("bench {:<44} {} ms", name, stats::summary(&samples));
+        self.results.push((name.to_string(), iters, samples.clone()));
         samples
+    }
+
+    /// Record a named scalar (speedups, wall-clock seconds) for the JSON
+    /// report.
+    pub fn note(&mut self, key: &str, v: f64) {
+        println!("note  {key:<44} {v:.4}");
+        self.notes.push((key.to_string(), v));
+    }
+
+    /// Write the JSON report if `--json` was given.
+    pub fn finish(self) {
+        let Some(path) = self.json_path else { return };
+        let results: Vec<Json> = self
+            .results
+            .iter()
+            .map(|(name, iters, ms)| {
+                let min = ms.iter().cloned().fold(f64::INFINITY, f64::min);
+                obj(vec![
+                    ("name", s(name)),
+                    ("iters", num(*iters as f64)),
+                    ("mean_ms", num(stats::mean(ms))),
+                    ("p50_ms", num(stats::percentile(ms, 50.0))),
+                    ("min_ms", num(min)),
+                ])
+            })
+            .collect();
+        let notes: Vec<(&str, Json)> = self
+            .notes
+            .iter()
+            .map(|(k, v)| (k.as_str(), num(*v)))
+            .collect();
+        let doc = obj(vec![
+            ("schema", num(1.0)),
+            ("bench", s(&self.bench)),
+            ("calibrated", Json::Bool(true)),
+            ("quick", Json::Bool(self.quick)),
+            ("threads", num(pool::threads() as f64)),
+            ("host_threads", num(host_threads() as f64)),
+            ("results", arr(results)),
+            ("notes", obj(notes)),
+        ]);
+        std::fs::write(&path, doc.to_string()).expect("write bench json");
+        println!("bench json -> {path}");
     }
 }
 
-/// Skip (but report) when artifacts are missing — benches must not fail the
-/// build on a fresh checkout.
-pub fn artifacts_ready() -> bool {
-    let dir = std::env::var("BRECQ_ARTIFACTS")
-        .unwrap_or_else(|_| "artifacts".into());
-    let ok = std::path::Path::new(&dir).join("manifest.json").exists();
-    if !ok {
-        println!("bench SKIPPED: no artifacts at {dir}/ (run `make artifacts`)");
-    }
-    ok
+/// Hardware threads on this host (recorded so the perf gate can skip
+/// speedup checks on under-provisioned machines).
+pub fn host_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Bench environment: real artifacts when present, otherwise the hermetic
+/// synthetic environment — benches always run on a fresh checkout.
+pub fn bench_env() -> Env {
+    Env::bootstrap(None).expect("bench environment")
 }

@@ -47,8 +47,9 @@ impl Env {
         } else if explicit.is_some() {
             anyhow::bail!(
                 "no manifest.json under requested artifacts dir '{dir}' \
-                 (run `make artifacts`, or omit --artifacts/$BRECQ_ARTIFACTS \
-                 to use the generated synthetic environment)"
+                 (omit --artifacts/$BRECQ_ARTIFACTS to use the generated \
+                 synthetic environment; rust/tests/fixtures/manifest.json \
+                 is a minimal example of the manifest format)"
             );
         } else {
             eprintln!(

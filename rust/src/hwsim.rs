@@ -25,8 +25,10 @@
 
 use crate::model::{LayerInfo, ModelInfo};
 
-/// A hardware measurement function H(c) (Eq. 11).
-pub trait HwMeasure {
+/// A hardware measurement function H(c) (Eq. 11). `Sync` because the GA
+/// evaluates populations concurrently on the worker pool; all simulators
+/// are stateless geometry functions, so this is free.
+pub trait HwMeasure: Sync {
     /// Cost of the model under per-layer weight bits `wbits` and uniform
     /// activation bits `abits`. Units: bytes (size) or milliseconds.
     fn measure(&self, model: &ModelInfo, wbits: &[usize], abits: usize)

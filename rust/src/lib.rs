@@ -26,6 +26,7 @@
 pub mod util {
     pub mod cli;
     pub mod json;
+    pub mod pool;
     pub mod rng;
     pub mod stats;
 }

@@ -44,6 +44,12 @@ fn opts(a: &Args) -> ExpOpts {
 fn run() -> Result<()> {
     let a = Args::from_env();
     let artifacts = a.opt_str("artifacts");
+    // worker-pool size: --threads beats $BRECQ_THREADS beats autodetect;
+    // results are identical at any setting (see util::pool)
+    let threads = a.usize("threads", 0);
+    if threads > 0 {
+        brecq::util::pool::set_threads(threads);
+    }
     match a.cmd.as_str() {
         "eval" => {
             let env = Env::bootstrap(artifacts)?;
@@ -292,4 +298,6 @@ USAGE: brecq <cmd> [--flags]
   exp         <table1|table2|table3|table4|table6|fig2|fig3|fig4|all>
               [--models a,b,c] [--iters N] [--seeds S] [--qat-steps N]
 
-Global: --artifacts DIR (default ./artifacts or $BRECQ_ARTIFACTS)";
+Global: --artifacts DIR (default ./artifacts or $BRECQ_ARTIFACTS)
+        --threads N   worker-pool size (default $BRECQ_THREADS or auto);
+                      results are bit-identical at any thread count";

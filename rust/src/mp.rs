@@ -15,6 +15,7 @@ use anyhow::Result;
 use crate::hwsim::HwMeasure;
 use crate::model::ModelInfo;
 use crate::sensitivity::SensitivityTable;
+use crate::util::pool;
 use crate::util::rng::Rng;
 
 pub const BIT_CHOICES: [usize; 3] = [2, 4, 8];
@@ -79,6 +80,17 @@ impl<'a> GeneticSearch<'a> {
         self.table.predict(&assemble(self.model, genes))
     }
 
+    /// Fitness of every individual, evaluated concurrently on the worker
+    /// pool (LUT predictions are independent pure functions; results come
+    /// back in population order, so the search stays deterministic). The
+    /// work estimate keeps toy populations inline — fan-out only pays off
+    /// once population x layer count is large enough.
+    fn eval_population(&self, pop: &[Vec<usize>]) -> Vec<f64> {
+        let per = self.model.layers.len() * (1 + self.table.offdiag.len());
+        let work = pop.len().saturating_mul(per * 64);
+        pool::par_fill(pop.len(), 4, work, |i| self.fitness(&pop[i]))
+    }
+
     /// Algorithm 2. Returns the best feasible assignment found.
     pub fn run(&self, cfg: &GaConfig) -> Result<SearchResult> {
         let t0 = std::time::Instant::now();
@@ -112,9 +124,9 @@ impl<'a> GeneticSearch<'a> {
 
         let mut topk: Vec<(f64, Vec<usize>)> = Vec::new();
         for _t in 0..cfg.iters {
-            // evaluate fitness, update TopK
-            for ind in &pop {
-                let f = self.fitness(ind);
+            // evaluate fitness concurrently, update TopK in order
+            let fits = self.eval_population(&pop);
+            for (ind, f) in pop.iter().zip(fits) {
                 evaluated += 1;
                 if !topk.iter().any(|(_, g)| g == ind) {
                     topk.push((f, ind.clone()));
@@ -162,8 +174,8 @@ impl<'a> GeneticSearch<'a> {
                 pop.push(topk[0].1.clone());
             }
         }
-        for ind in &pop {
-            let f = self.fitness(ind);
+        let fits = self.eval_population(&pop);
+        for (ind, f) in pop.iter().zip(fits) {
             evaluated += 1;
             if !topk.iter().any(|(_, g)| g == ind) {
                 topk.push((f, ind.clone()));

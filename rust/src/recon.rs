@@ -17,7 +17,12 @@
 //! Per-layer bitwidths are runtime inputs to the executables, so the same
 //! artifacts serve unified 2/4/8-bit, first/last-8-bit policies and every
 //! mixed-precision configuration the GA proposes.
-
+//!
+//! The whole-calibration-set passes — the dual activation streams
+//! (`advance`), the FIM pass and the act-obs step init — dispatch their
+//! independent calibration batches concurrently on [`crate::util::pool`]
+//! (`Backend` is `Sync`). Batch results are stitched in index order, so
+//! calibration is bit-identical at any `BRECQ_THREADS` value.
 
 use anyhow::Result;
 
@@ -29,6 +34,7 @@ use crate::quant::{
 };
 use crate::runtime::Backend;
 use crate::tensor::Tensor;
+use crate::util::pool;
 use crate::util::rng::Rng;
 
 /// Per-layer bit assignment (weights + activation sites).
@@ -149,7 +155,8 @@ impl<'a> Calibrator<'a> {
     }
 
     /// Activation-step init via the `act_obs` executable: LSQ-style
-    /// s = 2 E|x| / sqrt(qmax), observed on a few calibration batches.
+    /// s = 2 E|x| / sqrt(qmax), observed on a few calibration batches
+    /// (dispatched concurrently; per-batch stats fold in batch order).
     pub fn init_act_steps(
         &self,
         calib: &CalibSet,
@@ -163,16 +170,23 @@ impl<'a> Calibrator<'a> {
         let nl = self.model.layers.len();
         let mut meanabs = vec![0f64; nl];
         let exe = &self.model.act_obs_exe;
-        for i in 0..nb {
-            let images = calib.batch(i * b, b);
-            let mut args: Vec<&Tensor> = vec![&images];
-            for l in 0..nl {
-                args.push(&ws[l]);
-                args.push(&bs[l]);
-            }
-            let out = self.rt.run(exe, &args)?;
-            for (l, t) in out.iter().enumerate() {
-                meanabs[l] += t.data[1] as f64; // [maxabs, meanabs]
+        let work = self.model_work(nb * b);
+        let per_batch =
+            pool::par_fill(nb, 1, work, |i| -> Result<Vec<f64>> {
+                let images = calib.batch(i * b, b);
+                let mut args: Vec<&Tensor> = vec![&images];
+                for l in 0..nl {
+                    args.push(&ws[l]);
+                    args.push(&bs[l]);
+                }
+                let out = self.rt.run(exe, &args)?;
+                // [maxabs, meanabs] per layer
+                Ok(out.iter().map(|t| t.data[1] as f64).collect())
+            });
+        for r in per_batch {
+            let batch_means: Vec<f64> = r?;
+            for (l, m) in batch_means.into_iter().enumerate() {
+                meanabs[l] += m;
             }
         }
         let mut steps = Vec::with_capacity(nl);
@@ -186,7 +200,8 @@ impl<'a> Calibrator<'a> {
 
     /// FIM pass: squared per-sample task-loss gradients at every unit
     /// output of the granularity (Eq. 10 weights). Returns one (K, ...)
-    /// cache per unit.
+    /// cache per unit. Calibration batches are independent, so they
+    /// dispatch concurrently and stitch in batch order.
     pub fn fim_pass(
         &self,
         gran: &str,
@@ -201,17 +216,23 @@ impl<'a> Calibrator<'a> {
         let classes = self.mf.dataset.classes;
         let mut parts: Vec<Vec<Tensor>> =
             (0..g.units.len()).map(|_| Vec::new()).collect();
-        for i in 0..k / b {
-            let images = calib.batch(i * b, b);
-            let onehot = calib.onehot(i * b, b, classes);
-            let mut args: Vec<&Tensor> = vec![&images, &onehot];
-            for l in 0..self.model.layers.len() {
-                args.push(&ws[l]);
-                args.push(&bs[l]);
-            }
-            let grads = self.rt.run(&g.fim_exe, &args)?;
-            for (u, gt) in grads.into_iter().enumerate() {
-                parts[u].push(gt.map(|x| x * x)); // diagonal FIM
+        let work = self.model_work(k).saturating_mul(3);
+        let per_batch =
+            pool::par_fill(k / b, 1, work, |i| -> Result<Vec<Tensor>> {
+                let images = calib.batch(i * b, b);
+                let onehot = calib.onehot(i * b, b, classes);
+                let mut args: Vec<&Tensor> = vec![&images, &onehot];
+                for l in 0..self.model.layers.len() {
+                    args.push(&ws[l]);
+                    args.push(&bs[l]);
+                }
+                let grads = self.rt.run(&g.fim_exe, &args)?;
+                // diagonal FIM: elementwise squared gradients
+                Ok(grads.into_iter().map(|gt| gt.map(|x| x * x)).collect())
+            });
+        for r in per_batch {
+            for (u, gt) in r?.into_iter().enumerate() {
+                parts[u].push(gt);
             }
         }
         // Normalize each unit's FIM to mean 1 and bound the weights.
@@ -342,6 +363,9 @@ impl<'a> Calibrator<'a> {
     }
 
     /// Run `unit_fwd` over the whole K-sample stream in calib batches.
+    /// Batches are independent, so they dispatch concurrently on the
+    /// worker pool and stitch in batch order — bit-identical to the
+    /// sequential walk.
     #[allow(clippy::too_many_arguments)]
     pub fn advance(
         &self,
@@ -356,31 +380,53 @@ impl<'a> Calibrator<'a> {
     ) -> Result<Tensor> {
         let b = self.mf.calib_batch;
         let k = main.shape[0];
-        let mut outs = Vec::with_capacity(k / b);
         let flag = Tensor::scalar1(if aq { 1.0 } else { 0.0 });
         // per-site scalars
         let scalars = self.site_scalars(unit, act_steps, bits);
-        for i in 0..k / b {
-            let xb = main.slice0(i * b, b);
-            let skb = skip.map(|s| s.slice0(i * b, b));
-            let mut args: Vec<&Tensor> = vec![&xb];
-            if unit.uses_skip {
-                args.push(skb.as_ref().unwrap());
-            }
-            for &l in &unit.layer_ids {
-                args.push(&ws[l]);
-                args.push(&bs[l]);
-            }
-            for (st, lo, hi) in &scalars {
-                args.push(st);
-                args.push(lo);
-                args.push(hi);
-            }
-            args.push(&flag);
-            let mut out = self.rt.run(&unit.fwd_exe, &args)?;
-            outs.push(out.remove(0));
+        let work = self.unit_work(unit, k);
+        let per_batch =
+            pool::par_fill(k / b, 1, work, |i| -> Result<Tensor> {
+                let xb = main.slice0(i * b, b);
+                let skb = skip.map(|s| s.slice0(i * b, b));
+                let mut args: Vec<&Tensor> = vec![&xb];
+                if unit.uses_skip {
+                    args.push(skb.as_ref().unwrap());
+                }
+                for &l in &unit.layer_ids {
+                    args.push(&ws[l]);
+                    args.push(&bs[l]);
+                }
+                for (st, lo, hi) in &scalars {
+                    args.push(st);
+                    args.push(lo);
+                    args.push(hi);
+                }
+                args.push(&flag);
+                let mut out = self.rt.run(&unit.fwd_exe, &args)?;
+                Ok(out.remove(0))
+            });
+        let mut outs = Vec::with_capacity(k / b);
+        for r in per_batch {
+            outs.push(r?);
         }
         Ok(Tensor::stack0(&outs))
+    }
+
+    /// Scalar-work estimate for streaming `samples` images through the
+    /// whole model (pool fan-out heuristic).
+    fn model_work(&self, samples: usize) -> usize {
+        let macs: u64 = self.model.layers.iter().map(|l| l.macs).sum();
+        (macs as usize).saturating_mul(samples)
+    }
+
+    /// Scalar-work estimate for one unit over `samples` images.
+    fn unit_work(&self, unit: &UnitInfo, samples: usize) -> usize {
+        let macs: u64 = unit
+            .layer_ids
+            .iter()
+            .map(|&l| self.model.layers[l].macs)
+            .sum();
+        (macs as usize).saturating_mul(samples)
     }
 
     fn site_scalars(

@@ -22,8 +22,8 @@ pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
-use std::cell::RefCell;
 use std::collections::HashMap;
+use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
@@ -124,10 +124,12 @@ fn check_outputs(sig: &ExeSig, out: &[Tensor]) -> Result<()> {
 }
 
 /// Per-executable dispatch accounting: (calls, total seconds). Interior
-/// mutability so backends can record through `&self`.
+/// mutability so backends can record through `&self`; a `Mutex` (not
+/// `RefCell`) because the worker pool dispatches executables concurrently
+/// from `util::pool` threads.
 #[derive(Default)]
 pub struct Dispatches {
-    inner: RefCell<HashMap<String, (u64, f64)>>,
+    inner: Mutex<HashMap<String, (u64, f64)>>,
 }
 
 impl Dispatches {
@@ -136,7 +138,7 @@ impl Dispatches {
     }
 
     pub fn record(&self, name: &str, seconds: f64) {
-        let mut d = self.inner.borrow_mut();
+        let mut d = self.inner.lock().unwrap();
         let ent = d.entry(name.to_string()).or_insert((0, 0.0));
         ent.0 += 1;
         ent.1 += seconds;
@@ -144,7 +146,7 @@ impl Dispatches {
 
     /// Top-k hot spots: (exe, calls, total seconds), hottest first.
     pub fn hotspots(&self, k: usize) -> Vec<(String, u64, f64)> {
-        let d = self.inner.borrow();
+        let d = self.inner.lock().unwrap();
         let mut v: Vec<(String, u64, f64)> =
             d.iter().map(|(n, (c, t))| (n.clone(), *c, *t)).collect();
         v.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
@@ -155,7 +157,11 @@ impl Dispatches {
 
 /// An executable provider: compiles/interprets named executables against
 /// their manifest signatures. All algorithm code takes `&dyn Backend`.
-pub trait Backend {
+///
+/// `Sync` is a supertrait: the calibration engine shares one backend
+/// across `util::pool` workers (parallel stream advancement, sensitivity
+/// probes), so implementations must be safe to dispatch concurrently.
+pub trait Backend: Sync {
     /// Short backend tag ("native" | "pjrt") for logs and reports.
     fn kind(&self) -> &'static str;
 

@@ -18,6 +18,15 @@
 //! layer list. Unsupported topologies (e.g. `xblock` from the full PJRT
 //! export) fail loudly at backend construction — use the `pjrt` feature for
 //! those artifacts.
+//!
+//! The hot paths run on the [`crate::util::pool`] worker pool: conv2d and
+//! its backward fan out over ownership-partitioned output chunks, and the
+//! model-level executables (`eval_fwd`, `act_obs`, `fim`) split their
+//! batch into per-sample chunks. Every parallel path is **bit-identical**
+//! to the scalar walk at any `BRECQ_THREADS` value — work is partitioned
+//! so that no floating-point accumulator is ever shared or reassociated
+//! across jobs (see the pool module's determinism contract and
+//! `tests/parallel.rs`).
 
 // Kernel loops index several buffers with shared offset arithmetic; the
 // iterator forms clippy suggests obscure the stencil math.
@@ -29,6 +38,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::model::{LayerInfo, Manifest, ModelInfo, UnitInfo};
 use crate::tensor::Tensor;
+use crate::util::pool;
 
 use super::{parse_sigs, Backend, Dispatches, ExeSig};
 
@@ -145,6 +155,11 @@ fn same_pads(h: usize, k: usize, s: usize) -> (usize, i64) {
 }
 
 /// Grouped NCHW x OIHW convolution with SAME padding (no bias).
+///
+/// Parallelized over (batch, out-channel) output rows: every output
+/// element is produced by exactly one pool job, with the scalar loop's
+/// inner accumulation order, so the result is bit-identical at any
+/// thread count.
 pub fn conv2d(x: &Tensor, w: &Tensor, stride: usize, groups: usize) -> Tensor {
     let (b, cin, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let (cout, cpg_in, k) = (w.shape[0], w.shape[1], w.shape[2]);
@@ -153,45 +168,56 @@ pub fn conv2d(x: &Tensor, w: &Tensor, stride: usize, groups: usize) -> Tensor {
     let (ho, pad_h) = same_pads(h, k, stride);
     let (wo, pad_w) = same_pads(wd, k, stride);
     let mut out = vec![0f32; b * cout * ho * wo];
-    for bi in 0..b {
-        for oc in 0..cout {
-            let gi = oc / cpg_out;
-            let wbase = oc * cpg_in * k * k;
-            for oh in 0..ho {
-                let ih0 = (oh * stride) as i64 - pad_h;
-                for ow in 0..wo {
-                    let iw0 = (ow * stride) as i64 - pad_w;
-                    let mut acc = 0f32;
-                    for ic in 0..cpg_in {
-                        let ci = gi * cpg_in + ic;
-                        let xb = (bi * cin + ci) * h;
-                        let wb = wbase + ic * k * k;
-                        for kh in 0..k {
-                            let ih = ih0 + kh as i64;
-                            if ih < 0 || ih >= h as i64 {
+    let row = ho * wo;
+    let work = out.len().saturating_mul(cpg_in * k * k);
+    pool::par_chunks_mut(&mut out, row, work, |idx, orow| {
+        let (bi, oc) = (idx / cout, idx % cout);
+        let gi = oc / cpg_out;
+        let wbase = oc * cpg_in * k * k;
+        for oh in 0..ho {
+            let ih0 = (oh * stride) as i64 - pad_h;
+            for ow in 0..wo {
+                let iw0 = (ow * stride) as i64 - pad_w;
+                let mut acc = 0f32;
+                for ic in 0..cpg_in {
+                    let ci = gi * cpg_in + ic;
+                    let xb = (bi * cin + ci) * h;
+                    let wb = wbase + ic * k * k;
+                    for kh in 0..k {
+                        let ih = ih0 + kh as i64;
+                        if ih < 0 || ih >= h as i64 {
+                            continue;
+                        }
+                        let xrow = (xb + ih as usize) * wd;
+                        let wrow = wb + kh * k;
+                        for kw in 0..k {
+                            let iw = iw0 + kw as i64;
+                            if iw < 0 || iw >= wd as i64 {
                                 continue;
                             }
-                            let xrow = (xb + ih as usize) * wd;
-                            let wrow = wb + kh * k;
-                            for kw in 0..k {
-                                let iw = iw0 + kw as i64;
-                                if iw < 0 || iw >= wd as i64 {
-                                    continue;
-                                }
-                                acc += x.data[xrow + iw as usize]
-                                    * w.data[wrow + kw];
-                            }
+                            acc += x.data[xrow + iw as usize]
+                                * w.data[wrow + kw];
                         }
                     }
-                    out[((bi * cout + oc) * ho + oh) * wo + ow] = acc;
                 }
+                orow[oh * wo + ow] = acc;
             }
         }
-    }
+    });
     Tensor::new(vec![b, cout, ho, wo], out)
 }
 
 /// Backward of [`conv2d`]: gradients wrt input and weights.
+///
+/// When the pool fans out: two ownership-partitioned passes instead of
+/// one fused loop — `gx` chunked per batch sample (a sample's input grad
+/// only reads its own `gout` rows) and `gw` per out-channel (a weight
+/// element only accumulates from its own out-channel). Within a chunk
+/// the loop nest visits every accumulator in the fused scalar loop's
+/// order, so both outputs are bit-identical to the fused loop at any
+/// thread count — there is no cross-thread reduction to reassociate.
+/// Below the fan-out threshold the original fused single pass runs
+/// instead (same bits, no duplicate traversal cost).
 pub fn conv2d_bwd(
     x: &Tensor,
     w: &Tensor,
@@ -206,7 +232,57 @@ pub fn conv2d_bwd(
     let (wo, pad_w) = same_pads(wd, k, stride);
     let mut gx = vec![0f32; x.data.len()];
     let mut gw = vec![0f32; w.data.len()];
-    for bi in 0..b {
+    let work = gout.data.len().saturating_mul(cpg_in * k * k);
+    if !pool::active(work) {
+        // fused sequential pass (the parity tests pin the two-pass
+        // parallel form bitwise against exactly this loop)
+        for bi in 0..b {
+            for oc in 0..cout {
+                let gi = oc / cpg_out;
+                let wbase = oc * cpg_in * k * k;
+                for oh in 0..ho {
+                    let ih0 = (oh * stride) as i64 - pad_h;
+                    for ow in 0..wo {
+                        let iw0 = (ow * stride) as i64 - pad_w;
+                        let g = gout.data
+                            [((bi * cout + oc) * ho + oh) * wo + ow];
+                        if g == 0.0 {
+                            continue;
+                        }
+                        for ic in 0..cpg_in {
+                            let ci = gi * cpg_in + ic;
+                            let xb = (bi * cin + ci) * h;
+                            let wb = wbase + ic * k * k;
+                            for kh in 0..k {
+                                let ih = ih0 + kh as i64;
+                                if ih < 0 || ih >= h as i64 {
+                                    continue;
+                                }
+                                let xrow = (xb + ih as usize) * wd;
+                                let wrow = wb + kh * k;
+                                for kw in 0..k {
+                                    let iw = iw0 + kw as i64;
+                                    if iw < 0 || iw >= wd as i64 {
+                                        continue;
+                                    }
+                                    gx[xrow + iw as usize] +=
+                                        w.data[wrow + kw] * g;
+                                    gw[wrow + kw] +=
+                                        x.data[xrow + iw as usize] * g;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        return (
+            Tensor::new(x.shape.clone(), gx),
+            Tensor::new(w.shape.clone(), gw),
+        );
+    }
+    let sample = cin * h * wd;
+    pool::par_chunks_mut(&mut gx, sample, work, |bi, gxs| {
         for oc in 0..cout {
             let gi = oc / cpg_out;
             let wbase = oc * cpg_in * k * k;
@@ -220,8 +296,43 @@ pub fn conv2d_bwd(
                     }
                     for ic in 0..cpg_in {
                         let ci = gi * cpg_in + ic;
-                        let xb = (bi * cin + ci) * h;
                         let wb = wbase + ic * k * k;
+                        for kh in 0..k {
+                            let ih = ih0 + kh as i64;
+                            if ih < 0 || ih >= h as i64 {
+                                continue;
+                            }
+                            let xrow = (ci * h + ih as usize) * wd;
+                            let wrow = wb + kh * k;
+                            for kw in 0..k {
+                                let iw = iw0 + kw as i64;
+                                if iw < 0 || iw >= wd as i64 {
+                                    continue;
+                                }
+                                gxs[xrow + iw as usize] +=
+                                    w.data[wrow + kw] * g;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    });
+    pool::par_chunks_mut(&mut gw, cpg_in * k * k, work, |oc, gws| {
+        let gi = oc / cpg_out;
+        for bi in 0..b {
+            for oh in 0..ho {
+                let ih0 = (oh * stride) as i64 - pad_h;
+                for ow in 0..wo {
+                    let iw0 = (ow * stride) as i64 - pad_w;
+                    let g = gout.data[((bi * cout + oc) * ho + oh) * wo + ow];
+                    if g == 0.0 {
+                        continue;
+                    }
+                    for ic in 0..cpg_in {
+                        let ci = gi * cpg_in + ic;
+                        let xb = (bi * cin + ci) * h;
+                        let wb = ic * k * k;
                         for kh in 0..k {
                             let ih = ih0 + kh as i64;
                             if ih < 0 || ih >= h as i64 {
@@ -234,9 +345,7 @@ pub fn conv2d_bwd(
                                 if iw < 0 || iw >= wd as i64 {
                                     continue;
                                 }
-                                gx[xrow + iw as usize] +=
-                                    w.data[wrow + kw] * g;
-                                gw[wrow + kw] +=
+                                gws[wrow + kw] +=
                                     x.data[xrow + iw as usize] * g;
                             }
                         }
@@ -244,7 +353,7 @@ pub fn conv2d_bwd(
                 }
             }
         }
-    }
+    });
     (
         Tensor::new(x.shape.clone(), gx),
         Tensor::new(w.shape.clone(), gw),
@@ -1147,6 +1256,56 @@ impl NativeBackend {
         Ok((main, kept))
     }
 
+    /// Per-batch work estimate (scalar MACs) for one stream pass.
+    fn stream_work(units: &[UnitProg], b: usize) -> usize {
+        let macs: u64 = units
+            .iter()
+            .flat_map(|u| u.layers.iter())
+            .map(|l| l.macs)
+            .sum();
+        (macs as usize).saturating_mul(b)
+    }
+
+    /// Contiguous sample ranges (start, len) covering `0..b`, sized for
+    /// the worker pool (about two chunks per thread). Chunk boundaries
+    /// never affect results: every layer family treats sample rows
+    /// independently.
+    fn sample_chunks(b: usize) -> Vec<(usize, usize)> {
+        let grain = b.div_ceil(pool::threads().max(1) * 2).max(1);
+        (0..b)
+            .step_by(grain)
+            .map(|s| (s, grain.min(b - s)))
+            .collect()
+    }
+
+    /// Forward the unit stream, splitting the batch into sample chunks
+    /// across the worker pool. The stitched logits are bit-identical to
+    /// the single-batch walk.
+    fn stream_fwd_par(
+        units: &[UnitProg],
+        images: &Tensor,
+        ws: &[&Tensor],
+        bs: &[&Tensor],
+        aq: &[Option<AqParams>],
+    ) -> Result<Tensor> {
+        let b = images.shape[0];
+        if b <= 1 || !pool::active(Self::stream_work(units, b)) {
+            let (out, _) = Self::stream(units, images, ws, bs, aq, false)?;
+            return Ok(out);
+        }
+        let chunks = Self::sample_chunks(b);
+        let outs = pool::par_fill(chunks.len(), 1, usize::MAX, |ci| {
+            let (start, len) = chunks[ci];
+            let xb = images.slice0(start, len);
+            Self::stream(units, &xb, ws, bs, aq, false).map(|(out, _)| out)
+        });
+        let mut parts = Vec::with_capacity(outs.len());
+        for r in outs {
+            parts.push(r?);
+        }
+        Ok(Tensor::stack0(&parts))
+    }
+
     fn parse_model_args<'a>(
         c: &mut Cursor<'a>,
         nl: usize,
@@ -1181,7 +1340,7 @@ impl NativeBackend {
             .iter()
             .map(|p| if aq_on { Some(*p) } else { None })
             .collect();
-        let (logits, _) = Self::stream(units, images, &ws, &bs, &aq, false)?;
+        let logits = Self::stream_fwd_par(units, images, &ws, &bs, &aq)?;
         Ok(vec![logits])
     }
 
@@ -1195,43 +1354,66 @@ impl NativeBackend {
         let images = c.next();
         let (ws, bs) = Self::parse_model_args(&mut c, nl);
         let aq = vec![None; nl];
-        let (_, kept) = Self::stream(units, images, &ws, &bs, &aq, true)?;
-        let mut obs = vec![[0f32, 0f32]; nl];
-        for (u, (_, tapes)) in units.iter().zip(kept.iter()) {
-            for (li, tape) in layer_tapes(&u.nodes, tapes) {
-                let m = u.model_ids[li];
-                let n = tape.x.data.len().max(1);
-                let mut maxabs = 0f32;
-                let mut sum = 0f64;
-                for &v in &tape.x.data {
-                    let a = v.abs();
-                    maxabs = maxabs.max(a);
-                    sum += a as f64;
+        let b = images.shape[0];
+        // Forward tapes per sample chunk on the pool; the statistics walk
+        // below runs on this thread in chunk order, so every per-layer
+        // accumulator sees elements in exactly the batched linear order —
+        // results are bit-identical at any thread count.
+        let chunks = if b > 1 && pool::active(Self::stream_work(units, b)) {
+            Self::sample_chunks(b)
+        } else {
+            vec![(0, b)]
+        };
+        let kept_chunks = pool::par_fill(chunks.len(), 1, usize::MAX, |ci| {
+            let (start, len) = chunks[ci];
+            let xb = images.slice0(start, len);
+            Self::stream(units, &xb, &ws, &bs, &aq, true)
+                .map(|(_, kept)| kept)
+        });
+        let mut maxabs = vec![0f32; nl];
+        let mut sums = vec![0f64; nl];
+        let mut counts = vec![0usize; nl];
+        for kc in kept_chunks {
+            let kept = kc?;
+            for (u, (_, tapes)) in units.iter().zip(kept.iter()) {
+                for (li, tape) in layer_tapes(&u.nodes, tapes) {
+                    let m = u.model_ids[li];
+                    counts[m] += tape.x.data.len();
+                    for &v in &tape.x.data {
+                        let a = v.abs();
+                        maxabs[m] = maxabs[m].max(a);
+                        sums[m] += a as f64;
+                    }
                 }
-                obs[m] = [maxabs, (sum / n as f64) as f32];
             }
         }
-        Ok(obs
-            .into_iter()
-            .map(|o| Tensor::new(vec![2], vec![o[0], o[1]]))
+        Ok((0..nl)
+            .map(|m| {
+                let mean = (sums[m] / counts[m].max(1) as f64) as f32;
+                Tensor::new(vec![2], vec![maxabs[m], mean])
+            })
             .collect())
     }
 
-    fn exec_fim(
-        &self,
+    /// One FIM walk over `images`: forward the stream (keeping tapes),
+    /// seed d(cross-entropy)/d(logits) with the batch-mean divisor
+    /// `denom`, then reverse the stream recording the grad at every unit
+    /// output. Sample rows are independent end to end (the per-unit
+    /// weight/step grads this computes on the side are discarded), so
+    /// chunked calls stitched along dim 0 reproduce the single-batch walk
+    /// bitwise.
+    fn fim_walk(
         units: &[UnitProg],
-        nl: usize,
-        args: &[&Tensor],
+        images: &Tensor,
+        onehot: &Tensor,
+        ws: &[&Tensor],
+        bs: &[&Tensor],
+        aq: &[Option<AqParams>],
+        denom: f32,
     ) -> Result<Vec<Tensor>> {
-        let mut c = Cursor { v: args, i: 0 };
-        let images = c.next();
-        let onehot = c.next();
-        let (ws, bs) = Self::parse_model_args(&mut c, nl);
-        let aq = vec![None; nl];
-        let (logits, kept) =
-            Self::stream(units, images, &ws, &bs, &aq, true)?;
+        let (logits, kept) = Self::stream(units, images, ws, bs, aq, true)?;
 
-        // d(mean-batch cross-entropy)/d(logits) = (softmax - onehot)/B
+        // d(mean-batch cross-entropy)/d(logits) = (softmax - onehot)/denom
         let (b, classes) = (logits.shape[0], logits.shape[1]);
         let mut g = vec![0f32; b * classes];
         for bi in 0..b {
@@ -1242,7 +1424,7 @@ impl NativeBackend {
             for ci in 0..classes {
                 g[bi * classes + ci] = (exps[ci] / z
                     - onehot.data[bi * classes + ci])
-                    / b as f32;
+                    / denom;
             }
         }
         let mut g_main = Tensor::new(vec![b, classes], g);
@@ -1283,6 +1465,41 @@ impl NativeBackend {
             }
         }
         Ok(out_grads.into_iter().map(|g| g.unwrap()).collect())
+    }
+
+    fn exec_fim(
+        &self,
+        units: &[UnitProg],
+        nl: usize,
+        args: &[&Tensor],
+    ) -> Result<Vec<Tensor>> {
+        let mut c = Cursor { v: args, i: 0 };
+        let images = c.next();
+        let onehot = c.next();
+        let (ws, bs) = Self::parse_model_args(&mut c, nl);
+        let aq = vec![None; nl];
+        let b = images.shape[0];
+        let denom = b as f32;
+        // forward + backward: roughly 3x one forward pass
+        let work = Self::stream_work(units, b).saturating_mul(3);
+        if b <= 1 || !pool::active(work) {
+            return Self::fim_walk(units, images, onehot, &ws, &bs, &aq, denom);
+        }
+        let chunks = Self::sample_chunks(b);
+        let per_chunk = pool::par_fill(chunks.len(), 1, usize::MAX, |ci| {
+            let (start, len) = chunks[ci];
+            let xb = images.slice0(start, len);
+            let ob = onehot.slice0(start, len);
+            Self::fim_walk(units, &xb, &ob, &ws, &bs, &aq, denom)
+        });
+        let mut per_unit: Vec<Vec<Tensor>> =
+            (0..units.len()).map(|_| Vec::new()).collect();
+        for r in per_chunk {
+            for (u, g) in r?.into_iter().enumerate() {
+                per_unit[u].push(g);
+            }
+        }
+        Ok(per_unit.into_iter().map(|p| Tensor::stack0(&p)).collect())
     }
 }
 

@@ -11,10 +11,9 @@
 //! ABI validation and dispatch accounting live in the shared
 //! [`Backend::run`](super::Backend::run) wrapper.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
@@ -68,7 +67,9 @@ pub struct PjrtRuntime {
     client: xla::PjRtClient,
     dir: PathBuf,
     sigs: HashMap<String, ExeSig>,
-    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    // Mutex/Arc (not RefCell/Rc): `Backend: Sync` since the worker pool
+    // dispatches executables concurrently.
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
     dispatches: Dispatches,
 }
 
@@ -81,14 +82,14 @@ impl PjrtRuntime {
             client,
             dir: dir.to_path_buf(),
             sigs,
-            cache: RefCell::new(HashMap::new()),
+            cache: Mutex::new(HashMap::new()),
             dispatches: Dispatches::new(),
         })
     }
 
     /// Compile (or fetch from cache) an executable by manifest name.
-    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
-        if let Some(e) = self.cache.borrow().get(name) {
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
             return Ok(e.clone());
         }
         let sig = self
@@ -105,8 +106,11 @@ impl PjrtRuntime {
             .client
             .compile(&comp)
             .with_context(|| format!("compiling {name}"))?;
-        let e = Rc::new(Executable { sig, exe });
-        self.cache.borrow_mut().insert(name.to_string(), e.clone());
+        let e = Arc::new(Executable { sig, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), e.clone());
         Ok(e)
     }
 }
@@ -129,6 +133,6 @@ impl Backend for PjrtRuntime {
     }
 
     fn compiled_count(&self) -> usize {
-        self.cache.borrow().len()
+        self.cache.lock().unwrap().len()
     }
 }

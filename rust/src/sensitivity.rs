@@ -25,6 +25,7 @@ use crate::quant::{mse_steps_per_channel, quantize_nearest};
 use crate::recon::BitConfig;
 use crate::runtime::Backend;
 use crate::tensor::Tensor;
+use crate::util::pool;
 
 #[derive(Debug, Clone)]
 pub struct SensitivityTable {
@@ -116,29 +117,33 @@ impl<'a> Profiler<'a> {
         let base_loss = loss_with(&|_| 8)?;
         let mut diag: Vec<HashMap<usize, f64>> =
             (0..nl).map(|_| HashMap::new()).collect();
-        for l in 0..nl {
-            for bits in [2usize, 4] {
-                let loss =
-                    loss_with(&|i| if i == l { bits } else { 8 })?;
-                diag[l].insert(bits, (loss - base_loss).max(0.0));
-            }
+        // every probe is an independent eval stream over the frozen
+        // pre-quantized weights — dispatch them concurrently on the pool
+        // and fold results in probe order (deterministic LUT)
+        let macs: u64 = self.model.layers.iter().map(|l| l.macs).sum();
+        let probe_work = (macs as usize).saturating_mul(calib.len());
+        let probes: Vec<(usize, usize)> =
+            (0..nl).flat_map(|l| [(l, 2usize), (l, 4)]).collect();
+        let work = probe_work.saturating_mul(probes.len());
+        let per = pool::par_fill(probes.len(), 1, work, |i| {
+            let (l, bits) = probes[i];
+            loss_with(&|j| if j == l { bits } else { 8 })
+        });
+        for ((l, bits), r) in probes.iter().zip(per) {
+            diag[*l].insert(*bits, (r? - base_loss).max(0.0));
         }
 
         let mut offdiag = HashMap::new();
         if with_offdiag {
-            for (a, b) in intra_block_pairs(self.model) {
-                let loss = loss_with(&|i| {
-                    if i == a || i == b {
-                        2
-                    } else {
-                        8
-                    }
-                })?;
-                let o = loss
-                    - base_loss
-                    - diag[a][&2]
-                    - diag[b][&2];
-                offdiag.insert((a, b), o);
+            let pairs = intra_block_pairs(self.model);
+            let work = probe_work.saturating_mul(pairs.len());
+            let per = pool::par_fill(pairs.len(), 1, work, |i| {
+                let (a, b) = pairs[i];
+                loss_with(&|j| if j == a || j == b { 2 } else { 8 })
+            });
+            for ((a, b), r) in pairs.iter().zip(per) {
+                let o = r? - base_loss - diag[*a][&2] - diag[*b][&2];
+                offdiag.insert((*a, *b), o);
             }
         }
 

@@ -1,0 +1,256 @@
+//! Dependency-free scoped worker pool for the native backend's hot paths.
+//!
+//! Vendored parallelism substrate (crates.io is unavailable offline):
+//! `std::thread::scope` workers draining a chunked atomic work queue. The
+//! pool size comes from `BRECQ_THREADS` (unset or `0` = auto-detect via
+//! `available_parallelism`) and can be overridden at runtime with
+//! [`set_threads`] — the CLI's `--threads` flag and the bench/test
+//! harnesses use that.
+//!
+//! # Determinism contract
+//!
+//! Every helper here guarantees **bit-identical results at any thread
+//! count, including 1**. Work is partitioned by *ownership*: each output
+//! element is computed entirely by one job, with exactly the same inner
+//! arithmetic order as the scalar loop, and job outputs land at fixed
+//! indices. No reduction ever races or reassociates floating-point sums
+//! across jobs — callers that need a cross-job reduction fold the per-job
+//! partials on the calling thread in job-index order. `tests/parallel.rs`
+//! enforces this bitwise against scalar references at 1/2/8 threads.
+//!
+//! # Scheduling
+//!
+//! Fan-out only happens when (a) the pool has more than one thread,
+//! (b) the estimated work clears [`MIN_PAR_WORK`] (scoped thread spawns
+//! cost tens of microseconds — tiny kernels stay inline), and (c) the
+//! caller is not already inside a pool worker (nested regions run inline
+//! on their worker, so a parallel `advance` over calibration batches does
+//! not multiply threads with the parallel conv kernels it dispatches).
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Minimum estimated scalar-op count before a region fans out. Below this
+/// the scoped-spawn overhead outweighs the parallel win.
+pub const MIN_PAR_WORK: usize = 1 << 16;
+
+/// 0 = not yet initialized (read `BRECQ_THREADS` / autodetect on first use).
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static IN_POOL: Cell<bool> = Cell::new(false);
+}
+
+fn auto_threads() -> usize {
+    let env = std::env::var("BRECQ_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok());
+    match env {
+        Some(n) if n >= 1 => n,
+        _ => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+    }
+}
+
+/// Current pool size (threads used by parallel regions).
+pub fn threads() -> usize {
+    let t = THREADS.load(Ordering::Relaxed);
+    if t != 0 {
+        return t;
+    }
+    let t = auto_threads().max(1);
+    THREADS.store(t, Ordering::Relaxed);
+    t
+}
+
+/// Override the pool size at runtime; `0` re-reads `BRECQ_THREADS` /
+/// autodetect. Results are unaffected by construction (see the
+/// determinism contract), so this is safe to flip mid-run.
+pub fn set_threads(n: usize) {
+    let t = if n == 0 { auto_threads().max(1) } else { n };
+    THREADS.store(t, Ordering::Relaxed);
+}
+
+/// True when the calling thread is a pool worker (nested regions inline).
+pub fn in_worker() -> bool {
+    IN_POOL.with(|c| c.get())
+}
+
+/// Would a region with `work` estimated scalar ops actually fan out?
+pub fn active(work: usize) -> bool {
+    threads() > 1 && work >= MIN_PAR_WORK && !in_worker()
+}
+
+/// Run `job(j)` for every `j in 0..njobs`. Jobs are claimed from an atomic
+/// queue in chunks of `grain`; with fan-out disabled (small `work`, one
+/// thread, or a nested call) the loop runs inline in index order — the
+/// same jobs either way, so results are identical by construction.
+pub fn run_jobs(njobs: usize, grain: usize, work: usize, job: &(dyn Fn(usize) + Sync)) {
+    let grain = grain.max(1);
+    if njobs <= 1 || !active(work) {
+        for j in 0..njobs {
+            job(j);
+        }
+        return;
+    }
+    // Cap spawned threads by both the chunk count and the work size so a
+    // barely-above-threshold region does not pay for a full fan-out.
+    let nchunks = njobs.div_ceil(grain);
+    let by_work = 1 + work / MIN_PAR_WORK;
+    let nt = threads().min(nchunks).min(by_work).max(2);
+    let next = AtomicUsize::new(0);
+    let worker = || {
+        IN_POOL.with(|c| c.set(true));
+        // Reset on scope exit even if a job panics: a leaked true flag
+        // would silently disable fan-out on this thread forever after a
+        // caught panic (e.g. libtest's catch_unwind).
+        struct FlagGuard;
+        impl Drop for FlagGuard {
+            fn drop(&mut self) {
+                IN_POOL.with(|c| c.set(false));
+            }
+        }
+        let _guard = FlagGuard;
+        loop {
+            let start = next.fetch_add(grain, Ordering::Relaxed);
+            if start >= njobs {
+                break;
+            }
+            let end = (start + grain).min(njobs);
+            for j in start..end {
+                job(j);
+            }
+        }
+    };
+    std::thread::scope(|s| {
+        for _ in 1..nt {
+            s.spawn(worker);
+        }
+        worker();
+    });
+}
+
+/// Raw-pointer wrapper so disjoint chunk writes can cross the scope
+/// boundary. Safety rests on the chunk partition below being disjoint.
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Split `data` into consecutive chunks of `chunk` elements (last one
+/// short) and run `f(chunk_index, chunk_slice)` over them on the pool.
+/// Each element belongs to exactly one chunk, so writes never overlap.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk: usize, work: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let chunk = chunk.max(1);
+    let len = data.len();
+    let nchunks = len.div_ceil(chunk);
+    let ptr = SendPtr(data.as_mut_ptr());
+    run_jobs(nchunks, 1, work, &|ci| {
+        let start = ci * chunk;
+        let end = (start + chunk).min(len);
+        // SAFETY: chunks [start, end) are pairwise disjoint across chunk
+        // indices, every index is claimed by exactly one job, and `data`
+        // outlives the scoped workers inside `run_jobs`.
+        let slice = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(start), end - start) };
+        f(ci, slice);
+    });
+}
+
+/// Compute `f(i)` for `i in 0..n` on the pool and return the results in
+/// index order. `grain` consecutive indices form one queue item.
+pub fn par_fill<T, F>(n: usize, grain: usize, work: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let grain = grain.max(1);
+    let mut out: Vec<Option<T>> = Vec::new();
+    out.resize_with(n, || None);
+    par_chunks_mut(&mut out, grain, work, |ci, slots| {
+        for (j, slot) in slots.iter_mut().enumerate() {
+            *slot = Some(f(ci * grain + j));
+        }
+    });
+    out.into_iter()
+        .map(|o| o.expect("par_fill: unfilled slot"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    /// The pool size is process-global and libtest runs tests
+    /// concurrently — serialize every test that calls `set_threads` so
+    /// they cannot stomp each other's configuration mid-assertion.
+    static GLOBAL: Mutex<()> = Mutex::new(());
+
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        GLOBAL.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn par_fill_preserves_index_order() {
+        let _g = lock();
+        for nt in [1usize, 2, 8] {
+            set_threads(nt);
+            for grain in [1usize, 3, 64] {
+                let v = par_fill(100, grain, usize::MAX, |i| i * i);
+                assert_eq!(v, (0..100).map(|i| i * i).collect::<Vec<_>>());
+            }
+        }
+        set_threads(0);
+    }
+
+    #[test]
+    fn par_chunks_mut_partitions_disjointly() {
+        let _g = lock();
+        set_threads(4);
+        let mut data = vec![0usize; 103];
+        par_chunks_mut(&mut data, 10, usize::MAX, |ci, chunk| {
+            for (j, v) in chunk.iter_mut().enumerate() {
+                *v = ci * 10 + j;
+            }
+        });
+        assert_eq!(data, (0..103).collect::<Vec<_>>());
+        set_threads(0);
+    }
+
+    #[test]
+    fn nested_regions_run_inline() {
+        let _g = lock();
+        set_threads(4);
+        let outer = par_fill(8, 1, usize::MAX, |i| {
+            // nested call must not spawn (and must still be correct)
+            let inner = par_fill(5, 1, usize::MAX, move |j| i * 10 + j);
+            inner.iter().sum::<usize>()
+        });
+        let expect: Vec<usize> =
+            (0..8).map(|i| (0..5).map(|j| i * 10 + j).sum()).collect();
+        assert_eq!(outer, expect);
+        set_threads(0);
+    }
+
+    #[test]
+    fn small_work_stays_sequential_but_correct() {
+        let _g = lock();
+        set_threads(8);
+        assert!(!active(10));
+        let v = par_fill(4, 1, 10, |i| i + 1);
+        assert_eq!(v, vec![1, 2, 3, 4]);
+        set_threads(0);
+    }
+
+    #[test]
+    fn set_threads_round_trips() {
+        let _g = lock();
+        set_threads(3);
+        assert_eq!(threads(), 3);
+        set_threads(0);
+        assert!(threads() >= 1);
+    }
+}

@@ -1,0 +1,291 @@
+//! Parallel-execution parity properties: the pool-backed kernels and the
+//! calibration pipeline must be **bit-identical** to scalar references at
+//! 1/2/8 threads — the determinism contract documented in `util::pool`
+//! and the README threading section.
+//!
+//! `pool::set_threads` is process-global, so these tests can interleave
+//! with the rest of the suite; that is exactly the property under test —
+//! results must not depend on the pool size in effect at any moment.
+
+use std::sync::Mutex;
+
+use brecq::coordinator::Env;
+use brecq::eval::{accuracy, EvalParams};
+use brecq::recon::{BitConfig, Calibrator, ReconConfig};
+use brecq::runtime::native::{conv2d, conv2d_bwd};
+use brecq::tensor::Tensor;
+use brecq::util::pool;
+use brecq::util::rng::Rng;
+
+/// `pool::set_threads` is process-global and libtest runs tests
+/// concurrently: serialize every test in this binary so the "run at N
+/// threads" phases really execute at N threads (otherwise a sibling test
+/// could flip the pool size mid-run and the invariance assertions would
+/// compare two same-thread-count runs).
+static POOL_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock_pool() -> std::sync::MutexGuard<'static, ()> {
+    POOL_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn randn(rng: &mut Rng, shape: Vec<usize>, scale: f32) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::new(shape, (0..n).map(|_| rng.gauss() as f32 * scale).collect())
+}
+
+fn bits_of(t: &Tensor) -> Vec<u32> {
+    t.data.iter().map(|v| v.to_bits()).collect()
+}
+
+/// TF/XLA 'SAME' padding (mirrors the private helper in runtime::native).
+fn same_pads(h: usize, k: usize, s: usize) -> (usize, i64) {
+    let out = (h + s - 1) / s;
+    let total = ((out - 1) * s + k).saturating_sub(h);
+    (out, (total / 2) as i64)
+}
+
+/// Scalar reference convolution: the fused single-threaded loop the
+/// parallel kernel must reproduce bit-for-bit.
+fn conv2d_ref(x: &Tensor, w: &Tensor, stride: usize, groups: usize)
+    -> Tensor {
+    let (b, cin, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (cout, cpg_in, k) = (w.shape[0], w.shape[1], w.shape[2]);
+    let cpg_out = cout / groups;
+    let (ho, pad_h) = same_pads(h, k, stride);
+    let (wo, pad_w) = same_pads(wd, k, stride);
+    let mut out = vec![0f32; b * cout * ho * wo];
+    for bi in 0..b {
+        for oc in 0..cout {
+            let gi = oc / cpg_out;
+            let wbase = oc * cpg_in * k * k;
+            for oh in 0..ho {
+                let ih0 = (oh * stride) as i64 - pad_h;
+                for ow in 0..wo {
+                    let iw0 = (ow * stride) as i64 - pad_w;
+                    let mut acc = 0f32;
+                    for ic in 0..cpg_in {
+                        let ci = gi * cpg_in + ic;
+                        let xb = (bi * cin + ci) * h;
+                        let wb = wbase + ic * k * k;
+                        for kh in 0..k {
+                            let ih = ih0 + kh as i64;
+                            if ih < 0 || ih >= h as i64 {
+                                continue;
+                            }
+                            let xrow = (xb + ih as usize) * wd;
+                            let wrow = wb + kh * k;
+                            for kw in 0..k {
+                                let iw = iw0 + kw as i64;
+                                if iw < 0 || iw >= wd as i64 {
+                                    continue;
+                                }
+                                acc += x.data[xrow + iw as usize]
+                                    * w.data[wrow + kw];
+                            }
+                        }
+                    }
+                    out[((bi * cout + oc) * ho + oh) * wo + ow] = acc;
+                }
+            }
+        }
+    }
+    Tensor::new(vec![b, cout, ho, wo], out)
+}
+
+/// Scalar reference backward: the fused loop updating both grads in one
+/// traversal (the pre-pool implementation).
+fn conv2d_bwd_ref(
+    x: &Tensor,
+    w: &Tensor,
+    stride: usize,
+    groups: usize,
+    gout: &Tensor,
+) -> (Tensor, Tensor) {
+    let (b, cin, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (cout, cpg_in, k) = (w.shape[0], w.shape[1], w.shape[2]);
+    let cpg_out = cout / groups;
+    let (ho, pad_h) = same_pads(h, k, stride);
+    let (wo, pad_w) = same_pads(wd, k, stride);
+    let mut gx = vec![0f32; x.data.len()];
+    let mut gw = vec![0f32; w.data.len()];
+    for bi in 0..b {
+        for oc in 0..cout {
+            let gi = oc / cpg_out;
+            let wbase = oc * cpg_in * k * k;
+            for oh in 0..ho {
+                let ih0 = (oh * stride) as i64 - pad_h;
+                for ow in 0..wo {
+                    let iw0 = (ow * stride) as i64 - pad_w;
+                    let g = gout.data[((bi * cout + oc) * ho + oh) * wo + ow];
+                    if g == 0.0 {
+                        continue;
+                    }
+                    for ic in 0..cpg_in {
+                        let ci = gi * cpg_in + ic;
+                        let xb = (bi * cin + ci) * h;
+                        let wb = wbase + ic * k * k;
+                        for kh in 0..k {
+                            let ih = ih0 + kh as i64;
+                            if ih < 0 || ih >= h as i64 {
+                                continue;
+                            }
+                            let xrow = (xb + ih as usize) * wd;
+                            let wrow = wb + kh * k;
+                            for kw in 0..k {
+                                let iw = iw0 + kw as i64;
+                                if iw < 0 || iw >= wd as i64 {
+                                    continue;
+                                }
+                                gx[xrow + iw as usize] +=
+                                    w.data[wrow + kw] * g;
+                                gw[wrow + kw] +=
+                                    x.data[xrow + iw as usize] * g;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (
+        Tensor::new(x.shape.clone(), gx),
+        Tensor::new(w.shape.clone(), gw),
+    )
+}
+
+/// (b, cin, cout, k, stride, groups, h, w) — the larger cases clear the
+/// pool's MIN_PAR_WORK threshold so fan-out actually engages; the tiny
+/// one exercises the inline path.
+const CASES: [(usize, usize, usize, usize, usize, usize, usize, usize); 4] = [
+    (4, 8, 8, 3, 1, 1, 12, 12),
+    (2, 16, 16, 3, 2, 1, 16, 16),
+    (4, 16, 16, 3, 1, 16, 16, 16), // depthwise
+    (1, 3, 4, 1, 1, 1, 5, 5),      // tiny: inline path
+];
+
+#[test]
+fn prop_parallel_conv2d_bitwise_matches_scalar_reference() {
+    let _g = lock_pool();
+    for seed in 0..6 {
+        for &(b, cin, cout, k, stride, groups, h, w) in &CASES {
+            let mut rng = Rng::new(7000 + seed);
+            let x = randn(&mut rng, vec![b, cin, h, w], 1.0);
+            let wt = randn(&mut rng, vec![cout, cin / groups, k, k], 0.3);
+            let want = conv2d_ref(&x, &wt, stride, groups);
+            for nt in [1usize, 2, 8] {
+                pool::set_threads(nt);
+                let got = conv2d(&x, &wt, stride, groups);
+                assert_eq!(got.shape, want.shape);
+                assert_eq!(
+                    bits_of(&got),
+                    bits_of(&want),
+                    "seed {seed} nt {nt} case {b}x{cin}->{cout} \
+                     k{k} s{stride} g{groups}"
+                );
+            }
+            pool::set_threads(0);
+        }
+    }
+}
+
+#[test]
+fn prop_parallel_conv2d_bwd_bitwise_matches_scalar_reference() {
+    let _g = lock_pool();
+    for seed in 0..6 {
+        for &(b, cin, cout, k, stride, groups, h, w) in &CASES {
+            let mut rng = Rng::new(8000 + seed);
+            let x = randn(&mut rng, vec![b, cin, h, w], 1.0);
+            let wt = randn(&mut rng, vec![cout, cin / groups, k, k], 0.3);
+            let gout = {
+                let probe = conv2d_ref(&x, &wt, stride, groups);
+                randn(&mut rng, probe.shape.clone(), 1.0)
+            };
+            let (gx_ref, gw_ref) =
+                conv2d_bwd_ref(&x, &wt, stride, groups, &gout);
+            for nt in [1usize, 2, 8] {
+                pool::set_threads(nt);
+                let (gx, gw) = conv2d_bwd(&x, &wt, stride, groups, &gout);
+                assert_eq!(
+                    bits_of(&gx),
+                    bits_of(&gx_ref),
+                    "gx seed {seed} nt {nt} case {b}x{cin}->{cout} \
+                     k{k} s{stride} g{groups}"
+                );
+                assert_eq!(
+                    bits_of(&gw),
+                    bits_of(&gw_ref),
+                    "gw seed {seed} nt {nt} case {b}x{cin}->{cout} \
+                     k{k} s{stride} g{groups}"
+                );
+            }
+            pool::set_threads(0);
+        }
+    }
+}
+
+/// The model-level executables (eval_fwd, act_obs via init_act_steps,
+/// fim) must produce bit-identical outputs at 1 vs 4 threads.
+#[test]
+fn model_executables_bitwise_invariant_across_thread_counts() {
+    let _g = lock_pool();
+    let env = Env::bootstrap_synthetic().expect("synthetic environment");
+    let model = env.model("resnet_s");
+    let cal = Calibrator::new(&env.rt, &env.mf, model);
+    let (ws, bs) = cal.fp_weights().unwrap();
+    let train = env.train_set().unwrap();
+    let test = env.test_set().unwrap();
+    let calib = env.calib(&train, 64, 9);
+    let bits = BitConfig::uniform(model, 4, Some(8), true);
+
+    let mut runs = Vec::new();
+    for nt in [1usize, 4] {
+        pool::set_threads(nt);
+        let fim = cal.fim_pass("block", &calib, &ws, &bs).unwrap();
+        let steps = cal.init_act_steps(&calib, &ws, &bs, &bits, 2).unwrap();
+        let acc =
+            accuracy(&env.rt, model, &EvalParams::fp(model, &ws, &bs), &test)
+                .unwrap();
+        runs.push((
+            fim.iter().map(bits_of).collect::<Vec<_>>(),
+            steps.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            acc.to_bits(),
+        ));
+    }
+    pool::set_threads(0);
+    assert_eq!(runs[0], runs[1], "fim/act_obs/eval depend on thread count");
+}
+
+/// Full Algorithm 1 must be bit-identical at 1 vs 4 threads: identical
+/// per-unit loss curves, committed weights and learned act steps.
+#[test]
+fn reconstruction_bitwise_invariant_across_thread_counts() {
+    let _g = lock_pool();
+    let env = Env::bootstrap_synthetic().expect("synthetic environment");
+    let model = env.model("resnet_s");
+    let cal = Calibrator::new(&env.rt, &env.mf, model);
+    let train = env.train_set().unwrap();
+    let calib = env.calib(&train, 32, 3);
+    let bits = BitConfig::uniform(model, 4, Some(8), true);
+    let cfg = ReconConfig {
+        iters: 12,
+        batch: 32,
+        seed: 0,
+        ..ReconConfig::default()
+    };
+
+    let mut runs = Vec::new();
+    for nt in [1usize, 4] {
+        pool::set_threads(nt);
+        let qm = cal.calibrate(&calib, &bits, &cfg).unwrap();
+        runs.push((
+            qm.reports
+                .iter()
+                .map(|r| (r.initial_loss.to_bits(), r.final_loss.to_bits()))
+                .collect::<Vec<_>>(),
+            qm.weights.iter().map(bits_of).collect::<Vec<_>>(),
+            qm.act_steps.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        ));
+    }
+    pool::set_threads(0);
+    assert_eq!(runs[0], runs[1], "calibration depends on thread count");
+}

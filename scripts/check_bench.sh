@@ -1,0 +1,98 @@
+#!/usr/bin/env bash
+# Perf-regression gate over the bench harness's JSON output.
+#
+# usage: scripts/check_bench.sh NEW.json [BASELINE.json]
+#   BASELINE.json defaults to BENCH_native.json at the repo root.
+#
+# Fails (exit 1) when (all checks arm only once a calibrated baseline
+# is committed):
+#   * any benchmark's min_ms regresses more than 25% vs the baseline, or
+#   * a baseline entry has no matching result (bench renamed/deleted), or
+#   * the 4-thread reconstruction speedup falls below $BENCH_MIN_SPEEDUP
+#     (default 1.5x; speedup checks need >= 4 host hw threads), or
+#   * the speedup drops below 75% of the baseline's recorded speedup.
+#
+# A missing baseline, or one marked `"calibrated": false` (the committed
+# placeholder), passes in bootstrap mode: commit the CI-produced JSON as
+# BENCH_native.json to arm the gate.
+set -euo pipefail
+
+new=${1:?usage: check_bench.sh NEW.json [BASELINE.json]}
+base=${2:-BENCH_native.json}
+
+python3 - "$new" "$base" <<'PY'
+import json, os, sys
+
+new_path, base_path = sys.argv[1], sys.argv[2]
+with open(new_path) as f:
+    new = json.load(f)
+host = int(new.get("host_threads", 0))
+notes = new.get("notes", {}) or {}
+min_speedup = float(os.environ.get("BENCH_MIN_SPEEDUP", "1.5"))
+failures = []
+
+speedup = notes.get("recon_speedup_4t_over_1t")
+if speedup is not None:
+    print(f"measured 4-thread recon speedup: {speedup:.2f}x "
+          f"(host has {host} hw threads)")
+
+base = None
+try:
+    with open(base_path) as f:
+        base = json.load(f)
+except FileNotFoundError:
+    print(f"no baseline at {base_path}: bootstrap pass "
+          f"(commit {new_path} as {base_path} to arm the gate)")
+if base is not None and not base.get("calibrated", True):
+    print(f"baseline {base_path} is an uncalibrated placeholder: "
+          f"bootstrap pass (commit {new_path} as {base_path})")
+    base = None
+
+if base is not None:
+    old = {r["name"]: r for r in base.get("results", [])}
+    seen = set()
+    for r in new.get("results", []):
+        seen.add(r["name"])
+        o = old.get(r["name"])
+        if o is None:
+            print(f"new   {r['name']}: {r['min_ms']:.1f}ms (no baseline; "
+                  f"rebase {base_path} to start tracking it)")
+            continue
+        if r["min_ms"] > o["min_ms"] * 1.25:
+            failures.append(
+                f"{r['name']}: min {r['min_ms']:.1f}ms vs baseline "
+                f"{o['min_ms']:.1f}ms (> 25% regression)")
+        else:
+            print(f"ok    {r['name']}: {r['min_ms']:.1f}ms "
+                  f"(baseline {o['min_ms']:.1f}ms)")
+    # a baseline entry with no matching result means a bench was renamed
+    # or deleted — fail loudly instead of silently disarming the gate
+    for name in old:
+        if name not in seen:
+            failures.append(
+                f"baseline entry '{name}' missing from {new_path} "
+                f"(bench renamed/removed? rebase {base_path})")
+    # speedup checks arm only once a calibrated baseline exists (so the
+    # documented bootstrap mode really is a pass) and only on hosts with
+    # enough hardware threads to make 4-thread numbers meaningful
+    if speedup is not None and host >= 4:
+        if speedup < min_speedup:
+            failures.append(
+                f"4-thread recon speedup {speedup:.2f}x "
+                f"< {min_speedup}x floor")
+        base_speedup = \
+            (base.get("notes") or {}).get("recon_speedup_4t_over_1t")
+        if base_speedup and speedup < 0.75 * base_speedup:
+            failures.append(
+                f"speedup {speedup:.2f}x < 75% of baseline "
+                f"{base_speedup:.2f}x")
+    elif speedup is not None:
+        print("host has < 4 hw threads: skipping the speedup checks")
+
+if failures:
+    print("PERF REGRESSION:")
+    for f in failures:
+        print(f"  - {f}")
+    sys.exit(1)
+print("bench gate: PASS")
+PY
