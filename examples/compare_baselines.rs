@@ -1,38 +1,64 @@
 //! Baseline bake-off on one model (a single Table-2-style column): run
-//! every PTQ method at 4/3/2-bit weights and print the accuracy cliff.
-//! Demonstrates the `Method` registry of the experiment layer as a library
-//! API (the `exp table2` subcommand drives the full grid).
+//! every PTQ method at 4/3/2-bit weights as one batch and print the
+//! accuracy cliff.
+//!
+//! Demonstrates `Session::run_many`: the 15 jobs execute concurrently on
+//! the worker pool and share one artifact cache, so FP weights and the
+//! calibration subset are loaded once instead of 15 times — check the
+//! cache stats printed at the end.
 
 use anyhow::Result;
 
-use brecq::coordinator::experiments::{quantize_with, ExpOpts, Method};
 use brecq::coordinator::Env;
-use brecq::eval::{accuracy, EvalParams};
-use brecq::recon::BitConfig;
+use brecq::pipeline::{JobSpec, Method, Session};
 
 fn main() -> Result<()> {
-    let env = Env::bootstrap(None)?;
+    let session = Session::new(Env::bootstrap(None)?);
     let mname = std::env::args().nth(1)
         .unwrap_or_else(|| "resnet_s".into());
-    let model = env.model(&mname);
-    let train = env.train_set()?;
-    let test = env.test_set()?;
-    let o = ExpOpts { iters: 150, calib_n: 256, ..ExpOpts::default() };
-    let calib = env.calib(&train, o.calib_n, o.seed);
+    println!("{mname}: FP {:.2}%",
+             session.model(&mname)?.fp_acc * 100.0);
 
-    println!("{mname}: FP {:.2}%", model.fp_acc * 100.0);
+    let methods = [Method::BiasCorr, Method::Omse, Method::AdaRoundLayer,
+                   Method::AdaQuantLike, Method::Brecq];
+    let wbit_grid = [4usize, 3, 2];
+    let mut specs = Vec::new();
+    for &method in &methods {
+        for &wbits in &wbit_grid {
+            specs.push(JobSpec {
+                model: mname.clone(),
+                method,
+                wbits,
+                abits: None,
+                iters: 80,
+                calib_n: 256,
+                ..JobSpec::default()
+            });
+        }
+    }
+    let results = session.run_many(&specs);
+
     println!("{:<22} {:>6} {:>6} {:>6}", "method", "W4", "W3", "W2");
-    for method in [Method::BiasCorr, Method::Omse, Method::AdaRoundLayer,
-                   Method::AdaQuantLike, Method::Brecq] {
+    let mut i = 0;
+    for method in methods {
         let mut row = format!("{:<22}", method.name());
-        for wbits in [4usize, 3, 2] {
-            let bits = BitConfig::uniform(model, wbits, None, true);
-            let qm = quantize_with(&env, &mname, method, &calib, &bits, &o)?;
-            let acc = accuracy(&env.rt, model,
-                               &EvalParams::quantized(&qm), &test)?;
-            row.push_str(&format!(" {:>6.2}", acc * 100.0));
+        for _ in wbit_grid {
+            match &results[i] {
+                Ok(out) => row.push_str(&format!(
+                    " {:>6.2}",
+                    out.accuracy.unwrap_or(0.0) * 100.0
+                )),
+                Err(e) => {
+                    row.push_str(" err   ");
+                    eprintln!("job {i} failed: {e}");
+                }
+            }
+            i += 1;
         }
         println!("{row}");
     }
+    let (hits, misses) = session.cache().stats();
+    println!("(artifact cache: {hits} hits / {misses} misses — FP weights \
+              and the calib subset were computed once for all 15 jobs)");
     Ok(())
 }

@@ -1,63 +1,63 @@
 //! Mixed-precision deployment scenario (paper §3.4 / Fig. 2): a model must
 //! fit a hardware latency budget on the precision-scalable accelerator.
 //!
-//! Pipeline: sensitivity profiling (diagonal + intra-block off-diagonal)
-//! -> genetic bitwidth search under the systolic simulator's H(c)
-//! -> BRECQ calibration of the winning configuration -> evaluation,
-//! compared against the unified-precision alternative at the same budget.
+//! One `JobSpec` with `search` set runs the whole pipeline —
+//! fp-weights -> calib -> sensitivity -> mp-search -> reconstruct ->
+//! eval -> hw-report — and a second spec calibrates the unified-precision
+//! alternative at the same budget. Both run as one batch; the sensitivity
+//! LUT and calibration artifacts are computed once and shared.
 
 use anyhow::Result;
 
+use brecq::pipeline::{Hardware, HwBudget, JobSpec, Method, Session};
 use brecq::coordinator::Env;
-use brecq::eval::{accuracy, EvalParams};
-use brecq::hwsim::{HwMeasure, Systolic};
-use brecq::mp::{GaConfig, GeneticSearch};
-use brecq::recon::{BitConfig, Calibrator, ReconConfig};
-use brecq::sensitivity::Profiler;
 
 fn main() -> Result<()> {
-    let env = Env::bootstrap(None)?;
-    let model = env.model("resnet_s");
-    let train = env.train_set()?;
-    let test = env.test_set()?;
-    let calib = env.calib(&train, 256, 0);
-    let cal = Calibrator::new(&env.rt, &env.mf, model);
-    let (ws, bs) = cal.fp_weights()?;
+    let session = Session::new(Env::bootstrap(None)?);
+    let model = session.model("resnet_s")?;
+    let nl = model.layers.len();
 
-    let sim = Systolic::default();
-    let t8 = sim.measure(model, &vec![8; model.layers.len()], 8);
-    let t2 = sim.measure(model, &vec![2; model.layers.len()], 8);
     // budget: 60% of the way from all-8-bit down to all-2-bit latency
+    let fpga = Hardware::Fpga.measurer();
+    let t8 = fpga.measure(model, &vec![8; nl], 8);
+    let t2 = fpga.measure(model, &vec![2; nl], 8);
     let budget = t2 + (t8 - t2) * 0.4;
     println!("systolic latency: all-8 {t8:.2}ms, all-2 {t2:.2}ms, \
               budget {budget:.2}ms");
 
-    // sensitivity LUT with the paper's intra-block 2-bit pair terms
-    let prof = Profiler { rt: &env.rt, mf: &env.mf, model };
-    let table = prof.measure(&calib, &ws, &bs, true)?;
+    let mixed = JobSpec {
+        model: "resnet_s".into(),
+        method: Method::Brecq,
+        abits: Some(8),
+        iters: 150,
+        calib_n: 256,
+        search: Some(HwBudget {
+            hw: Hardware::Fpga,
+            budget,
+            relative: false,
+        }),
+        hw_report: true,
+        ..JobSpec::default()
+    };
+    let unified = JobSpec { search: None, wbits: 2, ..mixed.clone() };
+    let mut results = session.run_many(&[mixed, unified]);
+    let uni = results.pop().unwrap()?;
+    let mix = results.pop().unwrap()?;
 
-    let ga = GeneticSearch { model, table: &table, hw: &sim, abits: 8,
-                             budget };
-    let res = ga.run(&GaConfig::default())?;
+    let res = mix.search.as_ref().expect("search job carries GA result");
     println!("GA ({} configs, {:.2}s): H(c) = {:.2}ms", res.evaluated,
              res.seconds, res.hw_cost);
     for (l, layer) in model.layers.iter().enumerate() {
-        println!("  {:<16} {}-bit", layer.name, res.wbits[l]);
+        println!("  {:<16} {}-bit", layer.name, mix.wbits[l]);
     }
+    println!("mixed-precision model: {:.2}% top-1 at {:.2}ms",
+             mix.accuracy.unwrap_or(0.0) * 100.0, res.hw_cost);
+    let hw = mix.hw.as_ref().expect("hw_report requested");
+    println!("  deploy: {:.3} MB, FPGA {:.2}ms", hw.size_mb, hw.fpga_ms);
 
-    // calibrate + evaluate the mixed configuration
-    let bits = BitConfig::mixed(res.wbits.clone(), 8, true);
-    let cfg = ReconConfig { iters: 150, ..ReconConfig::default() };
-    let qm = cal.calibrate(&calib, &bits, &cfg)?;
-    let acc = accuracy(&env.rt, model, &EvalParams::quantized(&qm), &test)?;
-    println!("mixed-precision model: {:.2}% top-1 at {:.2}ms", acc * 100.0,
-             res.hw_cost);
-
-    // unified-precision point that fits the same budget (w=2 everywhere)
-    let ubits = BitConfig::uniform(model, 2, Some(8), true);
-    let qm2 = cal.calibrate(&calib, &ubits, &cfg)?;
-    let acc2 = accuracy(&env.rt, model, &EvalParams::quantized(&qm2), &test)?;
+    let uhw = uni.hw.as_ref().expect("hw_report requested");
     println!("unified 2-bit at {:.2}ms: {:.2}% top-1  (mixed wins: {})",
-             sim.measure(model, &ubits.wbits, 8), acc2 * 100.0, acc > acc2);
+             uhw.fpga_ms, uni.accuracy.unwrap_or(0.0) * 100.0,
+             mix.accuracy > uni.accuracy);
     Ok(())
 }

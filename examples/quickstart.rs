@@ -1,44 +1,52 @@
 //! Quickstart: post-training-quantize a pretrained model to 4-bit weights /
 //! 4-bit activations with BRECQ block reconstruction, then evaluate it.
 //!
-//!     make artifacts                       # once: trains + AOT-lowers
 //!     cargo run --release --example quickstart
 //!
-//! This is the full public-API surface a downstream user touches: bootstrap
-//! an `Env` from the artifacts, pick a `BitConfig`, run the `Calibrator`,
-//! evaluate the `QuantizedModel`.
+//! Works out of the box on the generated synthetic environment; point
+//! `BRECQ_ARTIFACTS` at a `make artifacts` export for the full models.
+//!
+//! This is the whole public API surface a downstream user touches: build a
+//! `Session` over an `Env`, describe the job as a typed `JobSpec`, and
+//! `run` it — the session compiles the spec into its stage DAG
+//! (fp-weights -> calib -> reconstruct -> eval) and caches every shared
+//! intermediate for later jobs.
 
 use anyhow::Result;
 
 use brecq::coordinator::Env;
-use brecq::eval::{accuracy, EvalParams};
-use brecq::recon::{BitConfig, Calibrator, ReconConfig};
+use brecq::pipeline::{JobSpec, Method, Session};
 
 fn main() -> Result<()> {
-    // 1. load artifacts (manifest + PJRT runtime + datasets)
-    let env = Env::bootstrap(None)?;
-    let model = env.model("resnet_s");
+    // 1. one session per environment; jobs share its artifact cache
+    let session = Session::new(Env::bootstrap(None)?);
+    let model = session.model("resnet_s")?;
     println!("model {} — FP reference accuracy {:.2}%",
              model.name, model.fp_acc * 100.0);
 
-    // 2. the paper's calibration protocol: 1024 images from the train set
-    let train = env.train_set()?;
-    let calib = env.calib(&train, 256, /*seed=*/ 0);
+    // 2. W4A4 BRECQ at block granularity, first & last layer kept at
+    //    8-bit (paper §4.2 policy) — all JobSpec defaults except the knobs
+    //    we care about
+    let spec = JobSpec {
+        model: "resnet_s".into(),
+        method: Method::Brecq,
+        wbits: 4,
+        abits: Some(4),
+        iters: 150,
+        calib_n: 256,
+        verbose: true,
+        ..JobSpec::default()
+    };
+    println!("stages: {}", spec.describe_stages());
 
-    // 3. W4A4, first & last layer kept at 8-bit (paper §4.2 policy)
-    let bits = BitConfig::uniform(model, 4, Some(4), true);
-
-    // 4. BRECQ block reconstruction (Algorithm 1)
-    let cal = Calibrator::new(&env.rt, &env.mf, model);
-    let cfg = ReconConfig { iters: 150, verbose: true,
-                            ..ReconConfig::default() };
-    let qm = cal.calibrate(&calib, &bits, &cfg)?;
-    println!("calibrated in {:.1}s", qm.calib_seconds);
-
-    // 5. evaluate the quantized model on the held-out test set
-    let test = env.test_set()?;
-    let acc = accuracy(&env.rt, model, &EvalParams::quantized(&qm), &test)?;
-    println!("W4A4 top-1: {:.2}%  (FP {:.2}%)", acc * 100.0,
-             model.fp_acc * 100.0);
+    // 3. run the job (Algorithm 1 + held-out evaluation)
+    let out = session.run(&spec)?;
+    println!("calibrated in {:.1}s", out.calib_seconds());
+    for r in out.reports() {
+        println!("  unit {:<14} loss {:.3e} -> {:.3e}",
+                 r.name, r.initial_loss, r.final_loss);
+    }
+    println!("W4A4 top-1: {:.2}%  (FP {:.2}%)",
+             out.accuracy.unwrap_or(0.0) * 100.0, out.fp_acc * 100.0);
     Ok(())
 }

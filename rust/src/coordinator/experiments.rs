@@ -14,12 +14,16 @@ use crate::coordinator::report::{pct, Table};
 use crate::coordinator::Env;
 use crate::distill::{self, DistillConfig};
 use crate::eval::{accuracy, EvalParams};
-use crate::hwsim::{size_mb, ArmCpu, HwMeasure, ModelSize, Systolic};
+use crate::hwsim::{size_mb, ArmCpu, HwMeasure, Systolic};
 use crate::mp::{GaConfig, GeneticSearch};
 use crate::qat::{self, QatConfig};
 use crate::recon::{BitConfig, Calibrator, QuantizedModel, ReconConfig};
 use crate::sensitivity::Profiler;
 use crate::util::stats;
+
+// The method registry lives in the typed pipeline API now; the drivers
+// re-export it so table code and downstream callers keep one name.
+pub use crate::pipeline::{Hardware, Method};
 
 /// Shared experiment options (CLI-tunable).
 #[derive(Clone)]
@@ -47,27 +51,6 @@ fn base_cfg(o: &ExpOpts) -> ReconConfig {
     }
 }
 
-#[derive(Clone, Copy, PartialEq, Debug)]
-pub enum Method {
-    BiasCorr,
-    Omse,
-    AdaRoundLayer,
-    AdaQuantLike,
-    Brecq,
-}
-
-impl Method {
-    pub fn name(&self) -> &'static str {
-        match self {
-            Method::BiasCorr => "Bias Correction*",
-            Method::Omse => "OMSE",
-            Method::AdaRoundLayer => "AdaRound (layer)*",
-            Method::AdaQuantLike => "AdaQuant-like*",
-            Method::Brecq => "BRECQ (ours)",
-        }
-    }
-}
-
 /// Quantize `model` with one method at the given bit config.
 pub fn quantize_with(
     env: &Env,
@@ -81,6 +64,9 @@ pub fn quantize_with(
     let cal = Calibrator::new(&env.rt, &env.mf, model);
     let cfg = base_cfg(o);
     match method {
+        Method::Fp => anyhow::bail!(
+            "quantize_with: 'fp' is not a quantization method"
+        ),
         Method::BiasCorr => {
             baselines::bias_correction(&env.rt, &env.mf, model, calib, bits)
         }
@@ -334,7 +320,7 @@ pub fn mixed_precision(
     env: &Env,
     o: &ExpOpts,
     model_name: &str,
-    hw_kind: &str, // "size" | "fpga" | "arm"
+    hw_kind: Hardware,
 ) -> Result<Table> {
     let model = env.model(model_name);
     let train = env.train_set()?;
@@ -346,19 +332,12 @@ pub fn mixed_precision(
     let prof = Profiler { rt: &env.rt, mf: &env.mf, model };
     let table = prof.measure(&calib, &ws, &bs, true)?;
 
-    let systolic = Systolic::default();
-    let arm = ArmCpu::default();
-    let size = ModelSize;
-    let hw: &dyn HwMeasure = match hw_kind {
-        "size" => &size,
-        "fpga" => &systolic,
-        "arm" => {
-            anyhow::ensure!(ArmCpu::supports(model),
-                "ARM GEMM model supports normal conv only (paper B.4.3)");
-            &arm
-        }
-        _ => anyhow::bail!("unknown hw '{hw_kind}'"),
-    };
+    if hw_kind == Hardware::Arm {
+        anyhow::ensure!(ArmCpu::supports(model),
+            "ARM GEMM model supports normal conv only (paper B.4.3)");
+    }
+    let measurer = hw_kind.measurer();
+    let hw: &dyn HwMeasure = measurer.as_ref();
     let abits = 8usize; // the paper keeps A8 in the MP study
 
     let mut t = Table::new(

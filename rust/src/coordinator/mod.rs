@@ -1,6 +1,12 @@
 //! Coordinator: environment bootstrap, experiment configuration and report
 //! writing — the glue the CLI and the experiment drivers run on.
 //!
+//! An [`Env`] is the raw substrate (manifest + backend + datasets). The
+//! typed front door for running quantization work on it is
+//! [`crate::pipeline::Session`], which wraps one `Env` with a shared
+//! artifact cache — CLI subcommands and examples construct `Env` only to
+//! hand it to a session.
+//!
 //! Backend selection: `Env::bootstrap` loads the artifact directory when it
 //! exists and picks the backend from the manifest's `backend` hint —
 //! PJRT-targeted manifests need the `pjrt` cargo feature, `native`
@@ -96,6 +102,12 @@ impl Env {
 
     pub fn model(&self, name: &str) -> &ModelInfo {
         self.mf.model(name)
+    }
+
+    /// Non-panicking membership check (the pipeline's typed
+    /// `UnknownModel` error is built on this).
+    pub fn has_model(&self, name: &str) -> bool {
+        self.mf.models.contains_key(name)
     }
 
     pub fn train_set(&self) -> Result<DataSet> {

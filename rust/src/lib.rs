@@ -20,8 +20,14 @@
 //!   at build time (`make artifacts`), and this backend compiles/executes
 //!   it via the `xla` crate.
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
-//! paper-vs-measured results.
+//! The public front door is [`pipeline`]: a typed, cache-aware session API
+//! (`Session` + `JobSpec`) that compiles each quantization job into an
+//! explicit stage DAG and shares expensive intermediates (FP weights,
+//! calibration subsets, sensitivity LUTs) across jobs. The CLI
+//! (`src/main.rs`) and every example are thin views over it.
+//!
+//! See DESIGN.md (repo root) for the system inventory and EXPERIMENTS.md
+//! for the paper-vs-measured results.
 
 pub mod util {
     pub mod cli;
@@ -47,3 +53,4 @@ pub mod baselines;
 pub mod qat;
 pub mod distill;
 pub mod coordinator;
+pub mod pipeline;

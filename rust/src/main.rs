@@ -1,4 +1,4 @@
-//! brecq CLI — the leader entrypoint.
+//! brecq CLI — every subcommand is a thin view over [`brecq::pipeline`].
 //!
 //! Subcommands:
 //!   calibrate  — run BRECQ (or a baseline) on one model and report accuracy
@@ -7,21 +7,23 @@
 //!   mp-search  — GA mixed-precision search under a hardware budget
 //!   hwsim      — latency/size of a model at a uniform precision
 //!   distill    — generate ZeroQ-style distilled calibration data
-//!   exp        — regenerate a paper table/figure (table1..table6, fig2,
-//!                fig3, fig4, all)
+//!   run        — execute a JSON batch of JobSpecs through one
+//!                cache-aware session (see examples/jobs.json)
+//!   exp        — regenerate a paper table/figure; `exp list` enumerates
+//!                the available outputs
+//!
+//! The CLI owns flag parsing and printing only; method/granularity/
+//! hardware dispatch, stage ordering and artifact reuse all live in the
+//! typed pipeline (`Session` + `JobSpec`).
 
 use anyhow::Result;
 
-use brecq::baselines;
-use brecq::coordinator::experiments::{self as exp, ExpOpts, Method};
+use brecq::coordinator::experiments::{self as exp, ExpOpts};
 use brecq::coordinator::report::Table;
 use brecq::coordinator::Env;
 use brecq::distill::DistillConfig;
-use brecq::eval::{accuracy, EvalParams};
-use brecq::hwsim::{size_mb, ArmCpu, HwMeasure, ModelSize, Systolic};
-use brecq::mp::{GaConfig, GeneticSearch};
-use brecq::recon::{BitConfig, Calibrator};
-use brecq::sensitivity::Profiler;
+use brecq::pipeline::{self, DataSource, Granularity, Hardware, JobSpec,
+                      Method, Session};
 use brecq::util::cli::Args;
 
 fn main() {
@@ -41,6 +43,10 @@ fn opts(a: &Args) -> ExpOpts {
     }
 }
 
+fn session(artifacts: Option<String>) -> Result<Session> {
+    Ok(Session::new(Env::bootstrap(artifacts)?))
+}
+
 fn run() -> Result<()> {
     let a = Args::from_env();
     let artifacts = a.opt_str("artifacts");
@@ -52,75 +58,60 @@ fn run() -> Result<()> {
     }
     match a.cmd.as_str() {
         "eval" => {
-            let env = Env::bootstrap(artifacts)?;
+            let s = session(artifacts)?;
             let mname = a.str("model", "resnet_s");
-            let model = env.model(&mname);
-            let cal = Calibrator::new(&env.rt, &env.mf, model);
-            let (ws, bs) = cal.fp_weights()?;
-            let test = env.test_set()?;
-            let acc = accuracy(&env.rt, model,
-                               &EvalParams::fp(model, &ws, &bs), &test)?;
-            println!("{mname}: FP top-1 {:.2}% (train-time reference {:.2}%)",
-                     acc * 100.0, model.fp_acc * 100.0);
+            let spec = JobSpec {
+                model: mname.clone(),
+                method: Method::Fp,
+                ..JobSpec::default()
+            };
+            let out = s.run(&spec)?;
+            println!(
+                "{mname}: FP top-1 {:.2}% (train-time reference {:.2}%)",
+                out.accuracy.unwrap_or(0.0) * 100.0,
+                out.fp_acc * 100.0
+            );
         }
         "calibrate" => {
-            let env = Env::bootstrap(artifacts)?;
+            let s = session(artifacts)?;
             let o = opts(&a);
-            let mname = a.str("model", "resnet_s");
-            let wbits = a.usize("bits", 4);
             let abits = a.usize("act-bits", 0);
-            let method = match a.str("method", "brecq").as_str() {
-                "brecq" => Method::Brecq,
-                "adaround" => Method::AdaRoundLayer,
-                "adaquant" => Method::AdaQuantLike,
-                "omse" => Method::Omse,
-                "biascorr" => Method::BiasCorr,
-                m => anyhow::bail!("unknown method {m}"),
+            let spec = JobSpec {
+                model: a.str("model", "resnet_s"),
+                method: Method::parse(&a.str("method", "brecq"))?,
+                gran: Granularity::parse(&a.str("gran", "block"))?,
+                wbits: a.usize("bits", 4),
+                abits: if abits == 0 { None } else { Some(abits) },
+                first_last_8: !a.bool("quantize-first-last", false),
+                iters: o.iters,
+                calib_n: o.calib_n,
+                seed: o.seed,
+                source: DataSource::parse(&a.str("data", "train"))?,
+                verbose: o.verbose,
+                ..JobSpec::default()
             };
-            let gran = a.str("gran", "block");
-            let model = env.model(&mname);
-            let bits = BitConfig::uniform(
-                model, wbits,
-                if abits == 0 { None } else { Some(abits) },
-                !a.bool("quantize-first-last", false));
-            let train = env.train_set()?;
-            let calib = env.calib(&train, o.calib_n, o.seed);
-            let qm = if method == Method::Brecq && gran != "block" {
-                let cal = Calibrator::new(&env.rt, &env.mf, model);
-                let cfg = baselines::brecq_cfg(
-                    &brecq::recon::ReconConfig {
-                        iters: o.iters, seed: o.seed, verbose: o.verbose,
-                        ..Default::default()
-                    }, &gran);
-                cal.calibrate(&calib, &bits, &cfg)?
-            } else {
-                exp::quantize_with(&env, &mname, method, &calib, &bits, &o)?
-            };
-            let test = env.test_set()?;
-            let acc = accuracy(&env.rt, model, &EvalParams::quantized(&qm),
-                               &test)?;
+            let out = s.run(&spec)?;
             println!(
-                "{mname} {} W{wbits}A{}: top-1 {:.2}% (FP {:.2}%), \
-                 calibrated in {:.1}s",
-                a.str("method", "brecq"),
-                if abits == 0 { "FP".into() } else { abits.to_string() },
-                acc * 100.0, model.fp_acc * 100.0, qm.calib_seconds);
-            for r in &qm.reports {
+                "{} {} {}: top-1 {:.2}% (FP {:.2}%), calibrated in {:.1}s",
+                spec.model,
+                spec.method.as_str(),
+                out.bits_label(),
+                out.accuracy.unwrap_or(0.0) * 100.0,
+                out.fp_acc * 100.0,
+                out.calib_seconds()
+            );
+            for r in out.reports() {
                 println!("  unit {:<14} loss {:.3e} -> {:.3e} ({} iters)",
                          r.name, r.initial_loss, r.final_loss, r.iters);
             }
         }
         "sensitivity" => {
-            let env = Env::bootstrap(artifacts)?;
+            let s = session(artifacts)?;
             let o = opts(&a);
             let mname = a.str("model", "resnet_s");
-            let model = env.model(&mname);
-            let train = env.train_set()?;
-            let calib = env.calib(&train, o.calib_n, o.seed);
-            let cal = Calibrator::new(&env.rt, &env.mf, model);
-            let (ws, bs) = cal.fp_weights()?;
-            let prof = Profiler { rt: &env.rt, mf: &env.mf, model };
-            let t = prof.measure(&calib, &ws, &bs, true)?;
+            let t = s.sensitivity(&mname, DataSource::Train, o.calib_n,
+                                  o.seed)?;
+            let model = s.model(&mname)?;
             println!("base calib loss: {:.4}", t.base_loss);
             let mut tab = Table::new(
                 &format!("Sensitivity LUT — {mname}"),
@@ -138,91 +129,126 @@ fn run() -> Result<()> {
             }
         }
         "mp-search" => {
-            let env = Env::bootstrap(artifacts)?;
+            let s = session(artifacts)?;
             let o = opts(&a);
             let mname = a.str("model", "resnet_s");
-            let model = env.model(&mname);
-            let hw_kind = a.str("hw", "size");
+            let hw = Hardware::parse(&a.str("hw", "size"))?;
             let budget = a.f32("budget", 0.0) as f64;
-            anyhow::ensure!(budget > 0.0, "--budget required");
-            let train = env.train_set()?;
-            let calib = env.calib(&train, o.calib_n, o.seed);
-            let cal = Calibrator::new(&env.rt, &env.mf, model);
-            let (ws, bs) = cal.fp_weights()?;
-            let prof = Profiler { rt: &env.rt, mf: &env.mf, model };
-            let table = prof.measure(&calib, &ws, &bs, true)?;
-            let systolic = Systolic::default();
-            let arm = ArmCpu::default();
-            let size = ModelSize;
-            let hw: &dyn HwMeasure = match hw_kind.as_str() {
-                "size" => &size,
-                "fpga" => &systolic,
-                "arm" => &arm,
-                _ => anyhow::bail!("--hw must be size|fpga|arm"),
-            };
-            let ga = GeneticSearch { model, table: &table, hw, abits: 8,
-                                     budget };
-            let res = ga.run(&GaConfig { seed: o.seed,
-                                         ..Default::default() })?;
+            let res = s.mp_search(&mname, hw, budget, o.calib_n, o.seed)?;
+            let model = s.model(&mname)?;
             println!("GA best ({} evals, {:.2}s): H(c)={:.4} {}",
-                     res.evaluated, res.seconds, res.hw_cost, hw.unit());
+                     res.evaluated, res.seconds, res.hw_cost,
+                     hw.measurer().unit());
             for (l, layer) in model.layers.iter().enumerate() {
                 println!("  {:<16} {} bits", layer.name, res.wbits[l]);
             }
         }
         "hwsim" => {
-            let env = Env::bootstrap(artifacts)?;
+            let s = session(artifacts)?;
             let mname = a.str("model", "resnet_s");
-            let model = env.model(&mname);
+            let model = s.model(&mname)?;
             let abits = a.usize("act-bits", 8);
             let mut tab = Table::new(
                 &format!("hwsim — {mname} (A{abits})"),
                 &["W-bits", "Size (MB)", "FPGA (ms)", "ARM (ms)"]);
-            let systolic = Systolic::default();
-            let arm_ok = ArmCpu::supports(model);
-            let arm = ArmCpu::default();
             for wb in [8usize, 4, 2] {
                 let wbits = vec![wb; model.layers.len()];
+                let r = pipeline::hw_report(model, &wbits, abits);
                 tab.row(vec![
                     format!("{wb}"),
-                    format!("{:.3}", size_mb(model, &wbits)),
-                    format!("{:.2}", systolic.model_ms(model, &wbits,
-                                                       abits)),
-                    if arm_ok {
-                        format!("{:.2}", arm.model_ms(model, &wbits, abits))
-                    } else {
-                        "n/a (group/dw conv)".into()
+                    format!("{:.3}", r.size_mb),
+                    format!("{:.2}", r.fpga_ms),
+                    match r.arm_ms {
+                        Some(ms) => format!("{ms:.2}"),
+                        None => "n/a (group/dw conv)".into(),
                     },
                 ]);
             }
             tab.print();
         }
         "distill" => {
-            let env = Env::bootstrap(artifacts)?;
+            let s = session(artifacts)?;
             let o = opts(&a);
             let mname = a.str("model", "resnet_s");
-            let model = env.model(&mname);
-            let dcal = brecq::distill::distill(
-                &env.rt, &env.mf, model,
-                &DistillConfig {
-                    total: a.usize("n", 256),
-                    iters: a.usize("distill-iters", 160),
-                    seed: o.seed,
-                    verbose: o.verbose,
-                    ..Default::default()
-                })?;
+            let dcal = s.distill(&mname, &DistillConfig {
+                total: a.usize("n", 256),
+                iters: a.usize("distill-iters", 160),
+                seed: o.seed,
+                verbose: o.verbose,
+                ..Default::default()
+            })?;
             println!("distilled {} images; label histogram:", dcal.len());
-            let mut hist = vec![0usize; env.mf.dataset.classes];
+            let mut hist = vec![0usize; s.env().mf.dataset.classes];
             for &l in &dcal.labels {
                 hist[l] += 1;
             }
             println!("  {hist:?}");
         }
+        "run" => {
+            let path = a.positional.first().cloned().ok_or_else(|| {
+                anyhow::anyhow!("usage: brecq run <jobs.json>\n{HELP}")
+            })?;
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+            let specs = JobSpec::parse_jobs(&text)?;
+            let s = session(artifacts)?;
+            println!("[run] {} jobs from {path} (threads: {})",
+                     specs.len(), brecq::util::pool::threads());
+            let results = s.run_many(&specs);
+            let mut tab = Table::new(
+                &format!("brecq run — {path}"),
+                &["#", "Model", "Method", "Bits", "Top-1 %", "H(c)",
+                  "Seconds"]);
+            let mut failed = 0usize;
+            for (i, r) in results.iter().enumerate() {
+                match r {
+                    Ok(out) => tab.row(vec![
+                        format!("{i}"),
+                        out.spec.model.clone(),
+                        out.spec.method.as_str().into(),
+                        out.bits_label(),
+                        match out.accuracy {
+                            Some(acc) => format!("{:.2}", acc * 100.0),
+                            None => "-".into(),
+                        },
+                        match &out.search {
+                            Some(res) => format!("{:.4}", res.hw_cost),
+                            None => "-".into(),
+                        },
+                        format!("{:.1}", out.seconds),
+                    ]),
+                    Err(e) => {
+                        failed += 1;
+                        tab.row(vec![
+                            format!("{i}"),
+                            specs[i].model.clone(),
+                            specs[i].method.as_str().into(),
+                            "-".into(),
+                            format!("error: {e}"),
+                            "-".into(),
+                            "-".into(),
+                        ])
+                    }
+                }
+            }
+            tab.print();
+            let (hits, misses) = s.cache().stats();
+            println!("artifact cache: {hits} hits / {misses} misses");
+            anyhow::ensure!(
+                failed == 0,
+                "{failed} of {} jobs failed",
+                specs.len()
+            );
+        }
         "exp" => {
-            let env = Env::bootstrap(artifacts)?;
-            let o = opts(&a);
             let which = a.positional.first().cloned()
                 .unwrap_or_else(|| "all".into());
+            if which == "list" {
+                print_exp_list();
+                return Ok(());
+            }
+            let env = Env::bootstrap(artifacts)?;
+            let o = opts(&a);
             let models = a.list(
                 "models", "resnet_s,mobilenetv2_s,regnet_s,mnasnet_s");
             run_exp(&env, &o, &which, &models, &a)?;
@@ -238,6 +264,40 @@ fn run() -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// `exp list`: every runnable output, plus what is intentionally absent.
+fn print_exp_list() {
+    let mut tab = Table::new(
+        "exp — available outputs (paper tables & figures)",
+        &["Id", "Paper", "Regenerates"]);
+    for (id, paper, what) in [
+        ("table1", "Table 1",
+         "granularity ablation at 2-bit weights (layer/block/stage/net)"),
+        ("table2", "Table 2",
+         "weight-only PTQ comparison, W4/W3/W2, activations FP"),
+        ("table3", "Table 3",
+         "fully quantized PTQ comparison, W4A4 and W2A4"),
+        ("table4", "Table 4",
+         "PTQ vs LSQ-QAT: accuracy, data need and wall-clock"),
+        ("table6", "Table 6 / B.1",
+         "first/last-layer 8-bit policy ablation"),
+        ("fig2", "Fig. 2",
+         "mixed precision under model-size and FPGA latency budgets"),
+        ("fig3", "Fig. 3 / B.2",
+         "calibration-set size and real-vs-distilled data source"),
+        ("fig4", "Fig. 4",
+         "mixed precision under ARM CPU latency budgets (ResNet only)"),
+        ("all", "—", "everything above, in order"),
+    ] {
+        tab.row(vec![id.into(), paper.into(), what.into()]);
+    }
+    tab.print();
+    println!(
+        "not runnable: the paper's Table 5 (object detection on MS COCO \
+         with Faster R-CNN backbones) has no runner — this substrate only \
+         exports classification models and losses. See EXPERIMENTS.md."
+    );
 }
 
 fn run_exp(env: &Env, o: &ExpOpts, which: &str, models: &[String],
@@ -260,16 +320,16 @@ fn run_exp(env: &Env, o: &ExpOpts, which: &str, models: &[String],
             for m in ["resnet_s", "mobilenetv2_s", "regnet_s"] {
                 if models.iter().any(|x| x == m)
                     && env.mf.models.contains_key(m) {
-                    save(exp::mixed_precision(env, o, m, "size")?,
+                    save(exp::mixed_precision(env, o, m, Hardware::Size)?,
                          &format!("fig2_size_{m}"))?;
-                    save(exp::mixed_precision(env, o, m, "fpga")?,
+                    save(exp::mixed_precision(env, o, m, Hardware::Fpga)?,
                          &format!("fig2_fpga_{m}"))?;
                 }
             }
         }
         "fig3" => save(exp::fig3(env, o)?, "fig3")?,
         "fig4" => {
-            save(exp::mixed_precision(env, o, "resnet_s", "arm")?,
+            save(exp::mixed_precision(env, o, "resnet_s", Hardware::Arm)?,
                  "fig4_arm_resnet_s")?
         }
         "all" => {
@@ -278,7 +338,9 @@ fn run_exp(env: &Env, o: &ExpOpts, which: &str, models: &[String],
                 run_exp(env, o, w, models, a)?;
             }
         }
-        other => anyhow::bail!("unknown experiment '{other}'"),
+        other => anyhow::bail!(
+            "unknown experiment '{other}' (try `brecq exp list`)"
+        ),
     }
     Ok(())
 }
@@ -288,15 +350,22 @@ const HELP: &str = "brecq — BRECQ post-training quantization (ICLR 2021)
 USAGE: brecq <cmd> [--flags]
 
   eval        --model M
-  calibrate   --model M --bits B [--act-bits A] [--method brecq|adaround|
-              adaquant|omse|biascorr] [--gran layer|block|stage|net]
-              [--iters N] [--calib K] [--seed S] [--verbose]
+  calibrate   --model M --bits B [--act-bits A] [--method fp|brecq|
+              adaround|adaquant|omse|biascorr] [--gran layer|block|
+              stage|net] [--data train|distilled] [--iters N] [--calib K]
+              [--seed S] [--verbose]
   sensitivity --model M
   mp-search   --model M --hw size|fpga|arm --budget X
   hwsim       --model M [--act-bits A]
   distill     --model M --n K
-  exp         <table1|table2|table3|table4|table6|fig2|fig3|fig4|all>
+  run         <jobs.json>   batch mode: a JSON array of job specs runs
+              through one cache-aware pipeline session (shared FP weights,
+              calib sets and sensitivity LUTs); see examples/jobs.json
+  exp         <list|table1|table2|table3|table4|table6|fig2|fig3|fig4|all>
               [--models a,b,c] [--iters N] [--seeds S] [--qat-steps N]
+              `exp list` shows what each id regenerates. The paper's
+              Table 5 (MS COCO object detection) has no runner: this
+              substrate is classification-only (see EXPERIMENTS.md).
 
 Global: --artifacts DIR (default ./artifacts or $BRECQ_ARTIFACTS)
         --threads N   worker-pool size (default $BRECQ_THREADS or auto);

@@ -9,6 +9,11 @@
 //! A ZeroQ-style Pareto-greedy searcher is included as the baseline the
 //! paper compares against conceptually (integer-programming/Pareto methods
 //! that ignore the off-diagonal terms).
+//!
+//! Callers reach this through [`crate::pipeline`]: a `JobSpec` with
+//! `search: Some(HwBudget { .. })` runs the GA as the `MpSearch` stage
+//! (over the session-cached sensitivity LUT), and
+//! `Session::mp_search` exposes the stage standalone for the CLI.
 
 use anyhow::Result;
 

@@ -1,0 +1,165 @@
+//! Content-keyed artifact cache backing a [`super::Session`].
+//!
+//! Every stage artifact the pipeline produces — FP deploy weights,
+//! calibration subsets, distilled data, sensitivity LUTs, the datasets
+//! themselves — is a *deterministic* function of its cache key (all
+//! producing computations are seeded), so two jobs that agree on a key can
+//! share one artifact with no effect on results. That is what makes
+//! [`super::Session::run_many`] bit-identical to sequential execution:
+//! whichever job populates a slot first, the value is the same.
+//!
+//! Concurrency: one mutex guards the key→slot map and a second, per-slot
+//! mutex guards each value. A builder runs while *holding its own slot's
+//! lock*, so two jobs racing for the same artifact serialize and the
+//! second gets a hit instead of recomputing — the compute-once guarantee
+//! the cache-hit tests pin down via backend dispatch accounting. Builders
+//! never re-enter the cache (dependencies are fetched *before* a slot is
+//! claimed), so slot locks are never nested and cannot deadlock.
+
+use std::any::Any;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::Error;
+
+/// One cache slot: the artifact, type-erased. The slot-level mutex is the
+/// compute-once serialization point for that key.
+struct Slot {
+    value: Mutex<Option<Arc<dyn Any + Send + Sync>>>,
+}
+
+/// Key→artifact store shared by every job a session runs.
+#[derive(Default)]
+pub struct ArtifactCache {
+    slots: Mutex<HashMap<String, Arc<Slot>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl ArtifactCache {
+    pub fn new() -> ArtifactCache {
+        ArtifactCache::default()
+    }
+
+    /// Fetch the artifact under `key`, building it with `build` on the
+    /// first request. Concurrent requests for the same key block on the
+    /// slot and observe the first builder's value. A failed build leaves
+    /// the slot empty, so a later request retries.
+    pub fn get_or_try_insert<T, F>(&self, key: &str, build: F)
+        -> Result<Arc<T>, Error>
+    where
+        T: Any + Send + Sync,
+        F: FnOnce() -> Result<T, Error>,
+    {
+        let slot = {
+            let mut slots =
+                self.slots.lock().unwrap_or_else(|e| e.into_inner());
+            slots
+                .entry(key.to_string())
+                .or_insert_with(|| {
+                    Arc::new(Slot { value: Mutex::new(None) })
+                })
+                .clone()
+        };
+        let mut value =
+            slot.value.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(v) = value.as_ref() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return v.clone().downcast::<T>().map_err(|_| {
+                Error::Spec(format!(
+                    "artifact cache type mismatch for key '{key}'"
+                ))
+            });
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let built = Arc::new(build()?);
+        *value = Some(built.clone());
+        Ok(built)
+    }
+
+    /// (hits, misses) since the session started.
+    pub fn stats(&self) -> (usize, usize) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Number of populated or in-flight keys.
+    pub fn len(&self) -> usize {
+        self.slots.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn computes_once_and_hits_after() {
+        let c = ArtifactCache::new();
+        let mut calls = 0usize;
+        let a: Arc<Vec<u32>> = c
+            .get_or_try_insert("k", || {
+                calls += 1;
+                Ok(vec![1, 2, 3])
+            })
+            .unwrap();
+        let b: Arc<Vec<u32>> = c
+            .get_or_try_insert("k", || {
+                calls += 1;
+                Ok(vec![9, 9, 9])
+            })
+            .unwrap();
+        assert_eq!(calls, 1);
+        assert_eq!(*a, vec![1, 2, 3]);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(c.stats(), (1, 1));
+    }
+
+    #[test]
+    fn failed_build_retries() {
+        let c = ArtifactCache::new();
+        let r: Result<Arc<u32>, Error> =
+            c.get_or_try_insert("k", || Err(Error::Spec("boom".into())));
+        assert!(r.is_err());
+        let v: Arc<u32> = c.get_or_try_insert("k", || Ok(7)).unwrap();
+        assert_eq!(*v, 7);
+        // both attempts were misses (the failure cached nothing)
+        assert_eq!(c.stats(), (0, 2));
+    }
+
+    #[test]
+    fn type_mismatch_is_a_typed_error() {
+        let c = ArtifactCache::new();
+        let _: Arc<u32> = c.get_or_try_insert("k", || Ok(1)).unwrap();
+        let r: Result<Arc<String>, Error> =
+            c.get_or_try_insert("k", || Ok("x".to_string()));
+        assert!(matches!(r, Err(Error::Spec(_))));
+    }
+
+    #[test]
+    fn concurrent_same_key_builds_once() {
+        let c = ArtifactCache::new();
+        let built = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    let v: Arc<usize> = c
+                        .get_or_try_insert("shared", || {
+                            built.fetch_add(1, Ordering::Relaxed);
+                            Ok(42)
+                        })
+                        .unwrap();
+                    assert_eq!(*v, 42);
+                });
+            }
+        });
+        assert_eq!(built.load(Ordering::Relaxed), 1);
+    }
+}

@@ -1,0 +1,439 @@
+//! Job execution: [`Session`] compiles a [`JobSpec`] into its stage DAG
+//! and runs the stages against the session's artifact cache.
+//!
+//! A session owns one [`Env`] (manifest + backend + datasets) and one
+//! [`ArtifactCache`]. The cached stage accessors (`fp_weights`,
+//! `calib_set`, `sensitivity`, ...) are public so CLI views that need a
+//! single stage (the `sensitivity` subcommand, for instance) go through
+//! exactly the same cache as full jobs.
+//!
+//! Determinism: every artifact is a seeded, deterministic function of its
+//! cache key, and every per-job computation (reconstruction, GA search)
+//! seeds its own RNG from the spec — so [`Session::run_many`], which
+//! executes jobs concurrently on [`crate::util::pool`], returns results
+//! bit-identical to running the same specs sequentially, at any thread
+//! count. `rust/tests/pipeline.rs` enforces this bitwise.
+
+use std::sync::Arc;
+
+use crate::baselines;
+use crate::calib::{CalibSet, DataSet};
+use crate::coordinator::Env;
+use crate::distill::{self, DistillConfig};
+use crate::eval::{accuracy, EvalParams};
+use crate::model::ModelInfo;
+use crate::mp::{GaConfig, GeneticSearch, SearchResult};
+use crate::recon::{BitConfig, Calibrator, QuantizedModel, ReconConfig,
+                   UnitReport};
+use crate::sensitivity::{Profiler, SensitivityTable};
+use crate::util::pool;
+
+use super::cache::ArtifactCache;
+use super::{hw_report, DataSource, Error, HwBudget, HwReport, JobSpec,
+            Method};
+
+/// FP deploy weights + biases in model-layer order (the `FpWeights`
+/// stage's artifact).
+pub struct FpWeights {
+    pub ws: Vec<crate::tensor::Tensor>,
+    pub bs: Vec<crate::tensor::Tensor>,
+}
+
+/// Everything a finished job produced. Heavyweight artifacts that later
+/// stages or callers may want (the quantized model itself) ride along;
+/// cached intermediates stay in the session.
+pub struct JobOutput {
+    pub spec: JobSpec,
+    /// Train-time FP reference accuracy from the manifest.
+    pub fp_acc: f64,
+    /// Final per-layer weight bits (uniform policy or GA assignment).
+    pub wbits: Vec<usize>,
+    /// Top-1 on the held-out test set (when `spec.eval`).
+    pub accuracy: Option<f64>,
+    /// GA outcome (when `spec.search`).
+    pub search: Option<SearchResult>,
+    /// Size/latency of the final assignment (when `spec.hw_report`).
+    pub hw: Option<HwReport>,
+    /// The calibrated model (absent for `Method::Fp`).
+    pub quantized: Option<QuantizedModel>,
+    /// Whole-job wall-clock, including cache hits.
+    pub seconds: f64,
+}
+
+impl JobOutput {
+    pub fn reports(&self) -> &[UnitReport] {
+        self.quantized
+            .as_ref()
+            .map(|q| q.reports.as_slice())
+            .unwrap_or(&[])
+    }
+
+    pub fn calib_seconds(&self) -> f64 {
+        self.quantized
+            .as_ref()
+            .map(|q| q.calib_seconds)
+            .unwrap_or(0.0)
+    }
+
+    /// `W4A8` / `W2AFP` / `Wmixed A8` / `FP` — the bit label for
+    /// summaries.
+    pub fn bits_label(&self) -> String {
+        if self.spec.method == Method::Fp && self.spec.search.is_none() {
+            return "FP".into();
+        }
+        let w = if self.spec.search.is_some() {
+            "mixed".to_string()
+        } else {
+            self.spec.wbits.to_string()
+        };
+        let a = match self.spec.abits {
+            Some(a) => a.to_string(),
+            None => "FP".into(),
+        };
+        format!("W{w}A{a}")
+    }
+}
+
+/// A PTQ session: one environment, one artifact cache, any number of
+/// jobs. The typed front door for every crate consumer.
+pub struct Session {
+    env: Env,
+    cache: ArtifactCache,
+}
+
+impl Session {
+    pub fn new(env: Env) -> Session {
+        Session { env, cache: ArtifactCache::new() }
+    }
+
+    pub fn env(&self) -> &Env {
+        &self.env
+    }
+
+    pub fn cache(&self) -> &ArtifactCache {
+        &self.cache
+    }
+
+    /// Typed model lookup (the panicking `Env::model` stays internal).
+    pub fn model(&self, name: &str) -> Result<&ModelInfo, Error> {
+        if !self.env.has_model(name) {
+            return Err(Error::UnknownModel(name.to_string()));
+        }
+        Ok(self.env.model(name))
+    }
+
+    // ---- cached stage accessors -----------------------------------------
+
+    pub fn train_set(&self) -> Result<Arc<DataSet>, Error> {
+        self.cache.get_or_try_insert("dataset/train", || {
+            self.env.train_set().map_err(Error::from)
+        })
+    }
+
+    pub fn test_set(&self) -> Result<Arc<DataSet>, Error> {
+        self.cache.get_or_try_insert("dataset/test", || {
+            self.env.test_set().map_err(Error::from)
+        })
+    }
+
+    /// `FpWeights` stage: deploy weights in model order, loaded once per
+    /// model per session.
+    pub fn fp_weights(&self, model: &str) -> Result<Arc<FpWeights>, Error> {
+        let mi = self.model(model)?;
+        let key = format!("fp/{model}");
+        self.cache.get_or_try_insert(&key, || {
+            let cal = Calibrator::new(&self.env.rt, &self.env.mf, mi);
+            let (ws, bs) = cal.fp_weights()?;
+            Ok(FpWeights { ws, bs })
+        })
+    }
+
+    /// `Calib` stage: the calibration working set. Train-sourced subsets
+    /// are model-independent (jobs on different models share them);
+    /// distilled sets are per-model.
+    pub fn calib_set(
+        &self,
+        model: &str,
+        source: DataSource,
+        n: usize,
+        seed: u64,
+    ) -> Result<Arc<CalibSet>, Error> {
+        match source {
+            DataSource::Train => {
+                let train = self.train_set()?;
+                let key = format!("calib/train/{n}/{seed}");
+                self.cache.get_or_try_insert(&key, || {
+                    Ok(self.env.calib(&train, n, seed))
+                })
+            }
+            DataSource::Distilled => self.distill(
+                model,
+                &DistillConfig { total: n, seed, ..Default::default() },
+            ),
+        }
+    }
+
+    /// ZeroQ-style distilled calibration data (cached per config).
+    pub fn distill(
+        &self,
+        model: &str,
+        cfg: &DistillConfig,
+    ) -> Result<Arc<CalibSet>, Error> {
+        let mi = self.model(model)?;
+        if mi.distill_exe.is_none() {
+            return Err(Error::Spec(format!(
+                "model '{model}' has no distill executable in this \
+                 environment (required for source=distilled)"
+            )));
+        }
+        let key = format!(
+            "distill/{model}/{}/{}/{}/{}",
+            cfg.total, cfg.iters, cfg.seed, cfg.lr
+        );
+        self.cache.get_or_try_insert(&key, || {
+            distill::distill(&self.env.rt, &self.env.mf, mi, cfg)
+                .map_err(Error::from)
+        })
+    }
+
+    /// `Sensitivity` stage: the mixed-precision LUT (diagonal + intra-block
+    /// off-diagonal terms), computed once per (model, data) and shared by
+    /// every search job in the session.
+    pub fn sensitivity(
+        &self,
+        model: &str,
+        source: DataSource,
+        calib_n: usize,
+        seed: u64,
+    ) -> Result<Arc<SensitivityTable>, Error> {
+        let mi = self.model(model)?;
+        let fpw = self.fp_weights(model)?;
+        let calib = self.calib_set(model, source, calib_n, seed)?;
+        let key = format!(
+            "sens/{model}/{}/{calib_n}/{seed}",
+            source.as_str()
+        );
+        self.cache.get_or_try_insert(&key, || {
+            let prof =
+                Profiler { rt: &self.env.rt, mf: &self.env.mf, model: mi };
+            prof.measure(&calib, &fpw.ws, &fpw.bs, true)
+                .map_err(Error::from)
+        })
+    }
+
+    /// `MpSearch` stage as a standalone call (the `mp-search` subcommand):
+    /// GA over the cached sensitivity LUT under an absolute budget.
+    pub fn mp_search(
+        &self,
+        model: &str,
+        hw: super::Hardware,
+        budget: f64,
+        calib_n: usize,
+        seed: u64,
+    ) -> Result<SearchResult, Error> {
+        let spec = JobSpec {
+            model: model.to_string(),
+            method: Method::Fp,
+            calib_n,
+            seed,
+            eval: false,
+            search: Some(HwBudget { hw, budget, relative: false }),
+            ..JobSpec::default()
+        };
+        let out = self.run(&spec)?;
+        Ok(out
+            .search
+            .expect("a search job always produces a search result"))
+    }
+
+    // ---- job execution ---------------------------------------------------
+
+    /// Execute one job through its stage DAG.
+    pub fn run(&self, spec: &JobSpec) -> Result<JobOutput, Error> {
+        let t0 = std::time::Instant::now();
+        let model = self.model(&spec.model)?;
+        spec.validate(model)?;
+        if spec.verbose {
+            eprintln!(
+                "[pipeline] {} {}: {}",
+                spec.model,
+                spec.method.as_str(),
+                spec.describe_stages()
+            );
+        }
+
+        // FpWeights
+        let fpw = self.fp_weights(&spec.model)?;
+        // Calib
+        let calib = if spec.needs_calib() {
+            Some(self.calib_set(
+                &spec.model,
+                spec.source,
+                spec.calib_n,
+                spec.seed,
+            )?)
+        } else {
+            None
+        };
+        // Sensitivity + MpSearch
+        let ga_abits = spec.abits.unwrap_or(8);
+        let search = match &spec.search {
+            Some(hb) => Some(self.search_stage(model, spec, hb, ga_abits)?),
+            None => None,
+        };
+        // bit assignment: GA result, the uniform policy, or — for an Fp
+        // job without a search — the full-precision reference (reported
+        // as all-8, the convention of `EvalParams::fp` and the hw
+        // simulators' base cost)
+        let bits = match &search {
+            Some(res) => BitConfig::mixed(
+                res.wbits.clone(),
+                ga_abits,
+                spec.abits.is_some(),
+            ),
+            None if spec.method == Method::Fp => {
+                BitConfig::uniform(model, 8, None, false)
+            }
+            None => BitConfig::uniform(
+                model,
+                spec.wbits,
+                spec.abits,
+                spec.first_last_8,
+            ),
+        };
+        // Reconstruct
+        let quantized = if spec.method == Method::Fp {
+            None
+        } else {
+            let calib = calib
+                .as_ref()
+                .expect("reconstruction always has a calibration set");
+            Some(self.reconstruct(model, spec, calib, &bits)?)
+        };
+        // Eval
+        let acc = if spec.eval {
+            let test = self.test_set()?;
+            let a = match &quantized {
+                Some(qm) => accuracy(
+                    &self.env.rt,
+                    model,
+                    &EvalParams::quantized(qm),
+                    &test,
+                )?,
+                None => accuracy(
+                    &self.env.rt,
+                    model,
+                    &EvalParams::fp(model, &fpw.ws, &fpw.bs),
+                    &test,
+                )?,
+            };
+            Some(a)
+        } else {
+            None
+        };
+        // HwReport
+        let hw = if spec.hw_report {
+            Some(hw_report(model, &bits.wbits, ga_abits))
+        } else {
+            None
+        };
+
+        Ok(JobOutput {
+            spec: spec.clone(),
+            fp_acc: model.fp_acc,
+            wbits: bits.wbits.clone(),
+            accuracy: acc,
+            search,
+            hw,
+            quantized,
+            seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Execute a batch of jobs concurrently on the worker pool. Results
+    /// come back in spec order and are bit-identical to calling
+    /// [`Session::run`] sequentially (see the module docs).
+    pub fn run_many(
+        &self,
+        specs: &[JobSpec],
+    ) -> Vec<Result<JobOutput, Error>> {
+        pool::par_fill(specs.len(), 1, usize::MAX, |i| self.run(&specs[i]))
+    }
+
+    fn search_stage(
+        &self,
+        model: &ModelInfo,
+        spec: &JobSpec,
+        hb: &HwBudget,
+        abits: usize,
+    ) -> Result<SearchResult, Error> {
+        let table = self.sensitivity(
+            &spec.model,
+            spec.source,
+            spec.calib_n,
+            spec.seed,
+        )?;
+        let measurer = hb.hw.measurer();
+        let budget = hb.resolve(model, measurer.as_ref(), abits);
+        let ga = GeneticSearch {
+            model,
+            table: &table,
+            hw: measurer.as_ref(),
+            abits,
+            budget,
+        };
+        Ok(ga.run(&GaConfig { seed: spec.seed, ..GaConfig::default() })?)
+    }
+
+    /// `Reconstruct` stage: method dispatch over the shared engine. BRECQ
+    /// honors the spec's granularity directly — there is no special-cased
+    /// non-block path anymore.
+    fn reconstruct(
+        &self,
+        model: &ModelInfo,
+        spec: &JobSpec,
+        calib: &CalibSet,
+        bits: &BitConfig,
+    ) -> Result<QuantizedModel, Error> {
+        let cal = Calibrator::new(&self.env.rt, &self.env.mf, model);
+        let base = ReconConfig {
+            iters: spec.iters,
+            seed: spec.seed,
+            verbose: spec.verbose,
+            ..ReconConfig::default()
+        };
+        let qm = match spec.method {
+            Method::Fp => unreachable!("Fp skips the Reconstruct stage"),
+            Method::Brecq => cal.calibrate(
+                calib,
+                bits,
+                &baselines::brecq_cfg(&base, spec.gran.as_str()),
+            )?,
+            Method::AdaRoundLayer => cal.calibrate(
+                calib,
+                bits,
+                &baselines::adaround_layer_cfg(&base),
+            )?,
+            Method::AdaQuantLike => cal.calibrate(
+                calib,
+                bits,
+                &baselines::adaquant_like_cfg(&base),
+            )?,
+            Method::Omse => baselines::omse(
+                &self.env.rt,
+                &self.env.mf,
+                model,
+                calib,
+                bits,
+            )?,
+            Method::BiasCorr => baselines::bias_correction(
+                &self.env.rt,
+                &self.env.mf,
+                model,
+                calib,
+                bits,
+            )?,
+        };
+        Ok(qm)
+    }
+}

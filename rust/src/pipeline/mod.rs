@@ -1,0 +1,815 @@
+//! `brecq::pipeline` — the typed, cache-aware PTQ session API.
+//!
+//! Every consumer of this crate (the CLI subcommands, the examples, batch
+//! drivers) describes work as a [`JobSpec`] — typed enums for the method,
+//! reconstruction granularity, hardware model and data source, plus the
+//! numeric knobs — and executes it through a [`Session`]. A session
+//! compiles each job into an explicit DAG of stages,
+//!
+//! ```text
+//!   FpWeights → Calib → Sensitivity? → MpSearch? → Reconstruct → Eval? → HwReport?
+//! ```
+//!
+//! and runs the stages against a content-keyed [`cache::ArtifactCache`],
+//! so two jobs sharing a model reuse FP weights, calibration subsets and
+//! sensitivity LUTs instead of recomputing them. [`Session::run_many`]
+//! executes a batch of jobs concurrently on [`crate::util::pool`] with
+//! results **bit-identical** to sequential execution (every cached
+//! artifact is a deterministic, seeded function of its key — see
+//! `rust/tests/pipeline.rs` for the enforcement).
+//!
+//! Specs round-trip through [`crate::util::json`] (`JobSpec::to_json` /
+//! `JobSpec::from_json`), which is what the `brecq run jobs.json` batch
+//! subcommand and `examples/jobs.json` are built on. Errors at this API
+//! boundary are the typed [`Error`] — unknown methods, granularities,
+//! hardware targets and data sources are distinct variants, not ad-hoc
+//! strings.
+//!
+//! See DESIGN.md (repo root) for the module inventory and the full DAG
+//! discussion.
+
+pub mod cache;
+pub mod job;
+
+pub use cache::ArtifactCache;
+pub use job::{FpWeights, JobOutput, Session};
+
+use std::fmt;
+
+use crate::hwsim::{size_mb, ArmCpu, HwMeasure, ModelSize, Systolic};
+use crate::model::ModelInfo;
+use crate::util::json::{self, Json};
+
+// ---------------------------------------------------------------------
+// Typed error at the API boundary
+// ---------------------------------------------------------------------
+
+/// Pipeline errors. The `Unknown*` variants replace the stringly-typed
+/// `anyhow::bail!` dispatch the CLI used to do; `Spec` covers structural
+/// problems in a job description (bad JSON, out-of-range knobs,
+/// model/granularity mismatches); `Exec` wraps failures bubbling up from
+/// the engine underneath.
+#[derive(Debug)]
+pub enum Error {
+    UnknownModel(String),
+    UnknownMethod(String),
+    UnknownGranularity(String),
+    UnknownHardware(String),
+    UnknownDataSource(String),
+    /// Structurally invalid job spec (bad JSON shape, bad knob values,
+    /// spec/model mismatches).
+    Spec(String),
+    /// Execution failure from the engine below the API boundary.
+    Exec(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::UnknownModel(m) => {
+                write!(f, "unknown model '{m}'")
+            }
+            Error::UnknownMethod(m) => write!(
+                f,
+                "unknown method '{m}' (expected \
+                 fp|brecq|adaround|adaquant|omse|biascorr)"
+            ),
+            Error::UnknownGranularity(g) => write!(
+                f,
+                "unknown granularity '{g}' (expected layer|block|stage|net)"
+            ),
+            Error::UnknownHardware(h) => write!(
+                f,
+                "unknown hardware '{h}' (expected size|fpga|arm)"
+            ),
+            Error::UnknownDataSource(s) => write!(
+                f,
+                "unknown data source '{s}' (expected train|distilled)"
+            ),
+            Error::Spec(m) => write!(f, "invalid job spec: {m}"),
+            Error::Exec(m) => write!(f, "pipeline execution: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<anyhow::Error> for Error {
+    fn from(e: anyhow::Error) -> Error {
+        Error::Exec(e.to_string())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Typed vocabulary: method / granularity / hardware / data source
+// ---------------------------------------------------------------------
+
+/// PTQ method registry. `Fp` means "no quantization": the job evaluates
+/// (or mixed-precision-searches) the full-precision model and skips the
+/// `Reconstruct` stage entirely.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    Fp,
+    BiasCorr,
+    Omse,
+    AdaRoundLayer,
+    AdaQuantLike,
+    Brecq,
+}
+
+impl Method {
+    pub const ALL: [Method; 6] = [
+        Method::Fp,
+        Method::BiasCorr,
+        Method::Omse,
+        Method::AdaRoundLayer,
+        Method::AdaQuantLike,
+        Method::Brecq,
+    ];
+
+    /// Stable machine name (CLI flag / JSON value).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Method::Fp => "fp",
+            Method::BiasCorr => "biascorr",
+            Method::Omse => "omse",
+            Method::AdaRoundLayer => "adaround",
+            Method::AdaQuantLike => "adaquant",
+            Method::Brecq => "brecq",
+        }
+    }
+
+    /// Pretty name for report tables (matches the paper's rows).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Fp => "Full Prec.",
+            Method::BiasCorr => "Bias Correction*",
+            Method::Omse => "OMSE",
+            Method::AdaRoundLayer => "AdaRound (layer)*",
+            Method::AdaQuantLike => "AdaQuant-like*",
+            Method::Brecq => "BRECQ (ours)",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Method, Error> {
+        Method::ALL
+            .iter()
+            .copied()
+            .find(|m| m.as_str() == s)
+            .ok_or_else(|| Error::UnknownMethod(s.to_string()))
+    }
+}
+
+/// Reconstruction granularity (paper Table 1's ablation axis). Only
+/// `Brecq` honors it — the AdaRound/AdaQuant baselines are layer-wise by
+/// definition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Granularity {
+    Layer,
+    Block,
+    Stage,
+    Net,
+}
+
+impl Granularity {
+    pub const ALL: [Granularity; 4] = [
+        Granularity::Layer,
+        Granularity::Block,
+        Granularity::Stage,
+        Granularity::Net,
+    ];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Granularity::Layer => "layer",
+            Granularity::Block => "block",
+            Granularity::Stage => "stage",
+            Granularity::Net => "net",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Granularity, Error> {
+        Granularity::ALL
+            .iter()
+            .copied()
+            .find(|g| g.as_str() == s)
+            .ok_or_else(|| Error::UnknownGranularity(s.to_string()))
+    }
+}
+
+/// Hardware measurement model H(c) for mixed-precision search and the
+/// `HwReport` stage (paper Appendix B.4.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Hardware {
+    Size,
+    Fpga,
+    Arm,
+}
+
+impl Hardware {
+    pub const ALL: [Hardware; 3] =
+        [Hardware::Size, Hardware::Fpga, Hardware::Arm];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Hardware::Size => "size",
+            Hardware::Fpga => "fpga",
+            Hardware::Arm => "arm",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Hardware, Error> {
+        Hardware::ALL
+            .iter()
+            .copied()
+            .find(|h| h.as_str() == s)
+            .ok_or_else(|| Error::UnknownHardware(s.to_string()))
+    }
+
+    /// Instantiate the measurement function (default geometry).
+    pub fn measurer(&self) -> Box<dyn HwMeasure> {
+        match self {
+            Hardware::Size => Box::new(ModelSize),
+            Hardware::Fpga => Box::new(Systolic::default()),
+            Hardware::Arm => Box::new(ArmCpu::default()),
+        }
+    }
+}
+
+/// Where the calibration images come from: the train split (the paper's
+/// default protocol) or ZeroQ-style BN-statistics distillation (zero-shot;
+/// needs the model's distill executable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataSource {
+    Train,
+    Distilled,
+}
+
+impl DataSource {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DataSource::Train => "train",
+            DataSource::Distilled => "distilled",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<DataSource, Error> {
+        match s {
+            "train" => Ok(DataSource::Train),
+            "distilled" => Ok(DataSource::Distilled),
+            _ => Err(Error::UnknownDataSource(s.to_string())),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Job description
+// ---------------------------------------------------------------------
+
+/// Mixed-precision search request: presence turns on the `Sensitivity` and
+/// `MpSearch` stages, and the GA's per-layer assignment replaces the
+/// uniform `wbits`. `relative: true` interprets `budget` as a fraction of
+/// the all-8-bit cost of the model under `hw` — the portable form for
+/// committed job files that must work on any environment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HwBudget {
+    pub hw: Hardware,
+    pub budget: f64,
+    pub relative: bool,
+}
+
+impl HwBudget {
+    /// Absolute budget in the measurer's unit.
+    pub fn resolve(&self, model: &ModelInfo, hw: &dyn HwMeasure,
+                   abits: usize) -> f64 {
+        if self.relative {
+            let full =
+                hw.measure(model, &vec![8; model.layers.len()], abits);
+            self.budget * full
+        } else {
+            self.budget
+        }
+    }
+}
+
+/// One unit of pipeline work: quantize (and/or search, evaluate, report
+/// on) one model. Serde-round-trippable via [`crate::util::json`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    pub model: String,
+    pub method: Method,
+    /// Reconstruction granularity (BRECQ only; baselines fix their own).
+    pub gran: Granularity,
+    /// Uniform weight bits; superseded by the GA assignment when `search`
+    /// is set.
+    pub wbits: usize,
+    /// Activation bits; `None` keeps activations full-precision.
+    pub abits: Option<usize>,
+    /// Keep first & last layer at 8-bit (the paper's §4.2 policy).
+    pub first_last_8: bool,
+    pub iters: usize,
+    pub calib_n: usize,
+    pub seed: u64,
+    pub source: DataSource,
+    pub search: Option<HwBudget>,
+    /// Evaluate top-1 on the held-out test set after the job.
+    pub eval: bool,
+    /// Attach a size/latency report for the final bit assignment.
+    pub hw_report: bool,
+    pub verbose: bool,
+}
+
+impl Default for JobSpec {
+    fn default() -> Self {
+        JobSpec {
+            model: "resnet_s".into(),
+            method: Method::Brecq,
+            gran: Granularity::Block,
+            wbits: 4,
+            abits: None,
+            first_last_8: true,
+            iters: 250,
+            calib_n: 1024,
+            seed: 0,
+            source: DataSource::Train,
+            search: None,
+            eval: true,
+            hw_report: false,
+            verbose: false,
+        }
+    }
+}
+
+/// The stages a job compiles into, in execution order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    FpWeights,
+    Calib,
+    Sensitivity,
+    MpSearch,
+    Reconstruct,
+    Eval,
+    HwReport,
+}
+
+impl Stage {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::FpWeights => "fp-weights",
+            Stage::Calib => "calib",
+            Stage::Sensitivity => "sensitivity",
+            Stage::MpSearch => "mp-search",
+            Stage::Reconstruct => "reconstruct",
+            Stage::Eval => "eval",
+            Stage::HwReport => "hw-report",
+        }
+    }
+}
+
+impl JobSpec {
+    /// Does this job touch calibration data at all?
+    pub fn needs_calib(&self) -> bool {
+        self.method != Method::Fp || self.search.is_some()
+    }
+
+    /// Compile the spec into its stage DAG (execution order).
+    pub fn stages(&self) -> Vec<Stage> {
+        let mut s = vec![Stage::FpWeights];
+        if self.needs_calib() {
+            s.push(Stage::Calib);
+        }
+        if self.search.is_some() {
+            s.push(Stage::Sensitivity);
+            s.push(Stage::MpSearch);
+        }
+        if self.method != Method::Fp {
+            s.push(Stage::Reconstruct);
+        }
+        if self.eval {
+            s.push(Stage::Eval);
+        }
+        if self.hw_report {
+            s.push(Stage::HwReport);
+        }
+        s
+    }
+
+    /// "fp-weights -> calib -> reconstruct -> eval" (logging / --verbose).
+    pub fn describe_stages(&self) -> String {
+        self.stages()
+            .iter()
+            .map(|s| s.name())
+            .collect::<Vec<_>>()
+            .join(" -> ")
+    }
+
+    /// Structural validation against the target model. Called by
+    /// [`Session::run`]; exposed for early checks on batch files.
+    pub fn validate(&self, model: &ModelInfo) -> Result<(), Error> {
+        if !(1..=8).contains(&self.wbits) {
+            return Err(Error::Spec(format!(
+                "wbits {} out of range 1..=8",
+                self.wbits
+            )));
+        }
+        if let Some(a) = self.abits {
+            if !(1..=16).contains(&a) {
+                return Err(Error::Spec(format!(
+                    "abits {a} out of range 1..=16"
+                )));
+            }
+        }
+        let need_gran = match self.method {
+            Method::Brecq => Some(self.gran.as_str()),
+            Method::AdaRoundLayer
+            | Method::AdaQuantLike
+            | Method::BiasCorr => Some("layer"),
+            Method::Fp | Method::Omse => None,
+        };
+        if let Some(g) = need_gran {
+            if !model.grans.contains_key(g) {
+                return Err(Error::Spec(format!(
+                    "granularity '{g}' is not exported for model '{}'",
+                    model.name
+                )));
+            }
+        }
+        if let Some(hb) = &self.search {
+            if !hb.budget.is_finite() || hb.budget <= 0.0 {
+                return Err(Error::Spec(
+                    "search budget must be a finite value > 0".into(),
+                ));
+            }
+            if hb.hw == Hardware::Arm && !ArmCpu::supports(model) {
+                return Err(Error::Spec(format!(
+                    "ARM GEMM latency model supports normal convolution \
+                     only and '{}' has depthwise/group conv (paper B.4.3)",
+                    model.name
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    // ---- JSON round-trip -------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let abits = match self.abits {
+            Some(a) => json::num(a as f64),
+            None => Json::Null,
+        };
+        let search = match &self.search {
+            Some(hb) => json::obj(vec![
+                ("hw", json::s(hb.hw.as_str())),
+                ("budget", json::num(hb.budget)),
+                ("relative", json::b(hb.relative)),
+            ]),
+            None => Json::Null,
+        };
+        json::obj(vec![
+            ("model", json::s(&self.model)),
+            ("method", json::s(self.method.as_str())),
+            ("gran", json::s(self.gran.as_str())),
+            ("wbits", json::num(self.wbits as f64)),
+            ("abits", abits),
+            ("first_last_8", json::b(self.first_last_8)),
+            ("iters", json::num(self.iters as f64)),
+            ("calib_n", json::num(self.calib_n as f64)),
+            ("seed", json::num(self.seed as f64)),
+            ("source", json::s(self.source.as_str())),
+            ("search", search),
+            ("eval", json::b(self.eval)),
+            ("hw_report", json::b(self.hw_report)),
+            ("verbose", json::b(self.verbose)),
+        ])
+    }
+
+    /// Parse one job object. Absent keys take [`JobSpec::default`] values
+    /// (except the required `model`); unknown keys are rejected so typos
+    /// fail loudly instead of silently running the default.
+    pub fn from_json(v: &Json) -> Result<JobSpec, Error> {
+        let o = v.as_obj().ok_or_else(|| {
+            Error::Spec("job must be a JSON object".into())
+        })?;
+        const KEYS: [&str; 14] = [
+            "model", "method", "gran", "wbits", "abits", "first_last_8",
+            "iters", "calib_n", "seed", "source", "search", "eval",
+            "hw_report", "verbose",
+        ];
+        for k in o.keys() {
+            if !KEYS.contains(&k.as_str()) {
+                return Err(Error::Spec(format!(
+                    "unknown key '{k}' in job object"
+                )));
+            }
+        }
+        let d = JobSpec::default();
+        let model = j_str(v, "model")?
+            .ok_or_else(|| {
+                Error::Spec("missing required key 'model'".into())
+            })?
+            .to_string();
+        let method = match j_str(v, "method")? {
+            Some(m) => Method::parse(m)?,
+            None => d.method,
+        };
+        let gran = match j_str(v, "gran")? {
+            Some(g) => Granularity::parse(g)?,
+            None => d.gran,
+        };
+        let source = match j_str(v, "source")? {
+            Some(s) => DataSource::parse(s)?,
+            None => d.source,
+        };
+        // `abits: 0` and `abits: null` both mean full-precision acts (the
+        // CLI uses 0 for "off", JSON-minded callers use null)
+        let abits = match v.get("abits") {
+            None | Some(Json::Null) => d.abits,
+            Some(x) => match x.as_usize() {
+                Some(0) => None,
+                Some(a) => Some(a),
+                None => {
+                    return Err(Error::Spec(
+                        "'abits' must be a number or null".into(),
+                    ))
+                }
+            },
+        };
+        let search = match v.get("search") {
+            None | Some(Json::Null) => None,
+            Some(x) => Some(parse_search(x)?),
+        };
+        Ok(JobSpec {
+            model,
+            method,
+            gran,
+            wbits: j_usize(v, "wbits", d.wbits)?,
+            abits,
+            first_last_8: j_bool(v, "first_last_8", d.first_last_8)?,
+            iters: j_usize(v, "iters", d.iters)?,
+            calib_n: j_usize(v, "calib_n", d.calib_n)?,
+            seed: j_u64(v, "seed", d.seed)?,
+            source,
+            search,
+            eval: j_bool(v, "eval", d.eval)?,
+            hw_report: j_bool(v, "hw_report", d.hw_report)?,
+            verbose: j_bool(v, "verbose", d.verbose)?,
+        })
+    }
+
+    /// Parse a batch file: a JSON array of job objects, or an object with
+    /// a `jobs` array (room for batch-level settings later).
+    pub fn parse_jobs(text: &str) -> Result<Vec<JobSpec>, Error> {
+        let v = Json::parse(text).map_err(Error::Spec)?;
+        let jobs = match v.get("jobs") {
+            Some(j) => j.as_arr(),
+            None => v.as_arr(),
+        }
+        .ok_or_else(|| {
+            Error::Spec(
+                "expected a JSON array of jobs (or {\"jobs\": [...]})"
+                    .into(),
+            )
+        })?;
+        if jobs.is_empty() {
+            return Err(Error::Spec("batch file has no jobs".into()));
+        }
+        jobs.iter().map(JobSpec::from_json).collect()
+    }
+}
+
+fn parse_search(v: &Json) -> Result<HwBudget, Error> {
+    let o = v.as_obj().ok_or_else(|| {
+        Error::Spec("'search' must be an object or null".into())
+    })?;
+    for k in o.keys() {
+        if !["hw", "budget", "relative"].contains(&k.as_str()) {
+            return Err(Error::Spec(format!(
+                "unknown key '{k}' in search object"
+            )));
+        }
+    }
+    let hw = Hardware::parse(j_str(v, "hw")?.ok_or_else(|| {
+        Error::Spec("search object needs 'hw'".into())
+    })?)?;
+    let budget = v
+        .get("budget")
+        .and_then(|x| x.as_f64())
+        .ok_or_else(|| {
+            Error::Spec("search object needs a numeric 'budget'".into())
+        })?;
+    Ok(HwBudget { hw, budget, relative: j_bool(v, "relative", false)? })
+}
+
+fn j_str<'a>(v: &'a Json, k: &str) -> Result<Option<&'a str>, Error> {
+    match v.get(k) {
+        None | Some(Json::Null) => Ok(None),
+        Some(x) => x.as_str().map(Some).ok_or_else(|| {
+            Error::Spec(format!("'{k}' must be a string"))
+        }),
+    }
+}
+
+fn j_usize(v: &Json, k: &str, default: usize) -> Result<usize, Error> {
+    match v.get(k) {
+        None => Ok(default),
+        Some(x) => x.as_usize().ok_or_else(|| {
+            Error::Spec(format!("'{k}' must be a number"))
+        }),
+    }
+}
+
+fn j_u64(v: &Json, k: &str, default: u64) -> Result<u64, Error> {
+    match v.get(k) {
+        None => Ok(default),
+        Some(x) => x
+            .as_f64()
+            .map(|n| n as u64)
+            .ok_or_else(|| Error::Spec(format!("'{k}' must be a number"))),
+    }
+}
+
+fn j_bool(v: &Json, k: &str, default: bool) -> Result<bool, Error> {
+    match v.get(k) {
+        None => Ok(default),
+        Some(x) => x.as_bool().ok_or_else(|| {
+            Error::Spec(format!("'{k}' must be a bool"))
+        }),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Hardware report (HwReport stage + the `hwsim` subcommand)
+// ---------------------------------------------------------------------
+
+/// Deployment cost of one bit assignment across all simulators. `arm_ms`
+/// is `None` for models the ARM GEMM kernel cannot serve (depthwise/group
+/// conv — why the paper's Fig. 4 only shows ResNets).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HwReport {
+    pub size_mb: f64,
+    pub fpga_ms: f64,
+    pub arm_ms: Option<f64>,
+}
+
+/// Measure one per-layer bit assignment on every hardware model.
+pub fn hw_report(model: &ModelInfo, wbits: &[usize], abits: usize)
+    -> HwReport {
+    HwReport {
+        size_mb: size_mb(model, wbits),
+        fpga_ms: Systolic::default().model_ms(model, wbits, abits),
+        arm_ms: if ArmCpu::supports(model) {
+            Some(ArmCpu::default().model_ms(model, wbits, abits))
+        } else {
+            None
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_round_trips_through_strings() {
+        for m in Method::ALL {
+            assert_eq!(Method::parse(m.as_str()).unwrap(), m);
+        }
+        for g in Granularity::ALL {
+            assert_eq!(Granularity::parse(g.as_str()).unwrap(), g);
+        }
+        for h in Hardware::ALL {
+            assert_eq!(Hardware::parse(h.as_str()).unwrap(), h);
+        }
+        for s in [DataSource::Train, DataSource::Distilled] {
+            assert_eq!(DataSource::parse(s.as_str()).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn unknown_names_are_typed_errors() {
+        assert!(matches!(
+            Method::parse("quantum"),
+            Err(Error::UnknownMethod(_))
+        ));
+        assert!(matches!(
+            Granularity::parse("half-block"),
+            Err(Error::UnknownGranularity(_))
+        ));
+        assert!(matches!(
+            Hardware::parse("tpu"),
+            Err(Error::UnknownHardware(_))
+        ));
+        assert!(matches!(
+            DataSource::parse("imagenet"),
+            Err(Error::UnknownDataSource(_))
+        ));
+    }
+
+    #[test]
+    fn stage_dag_follows_spec_shape() {
+        use Stage::*;
+        let d = JobSpec::default();
+        assert_eq!(d.stages(), vec![FpWeights, Calib, Reconstruct, Eval]);
+        let fp_eval = JobSpec { method: Method::Fp, ..d.clone() };
+        assert_eq!(fp_eval.stages(), vec![FpWeights, Eval]);
+        let mp_only = JobSpec {
+            method: Method::Fp,
+            eval: false,
+            search: Some(HwBudget {
+                hw: Hardware::Size,
+                budget: 0.5,
+                relative: true,
+            }),
+            ..d.clone()
+        };
+        assert_eq!(
+            mp_only.stages(),
+            vec![FpWeights, Calib, Sensitivity, MpSearch]
+        );
+        let full = JobSpec {
+            search: Some(HwBudget {
+                hw: Hardware::Fpga,
+                budget: 1.0,
+                relative: false,
+            }),
+            hw_report: true,
+            ..d
+        };
+        assert_eq!(
+            full.stages(),
+            vec![
+                FpWeights, Calib, Sensitivity, MpSearch, Reconstruct,
+                Eval, HwReport
+            ]
+        );
+    }
+
+    #[test]
+    fn jobspec_json_round_trip_exact() {
+        let spec = JobSpec {
+            model: "resnet_s".into(),
+            method: Method::AdaRoundLayer,
+            gran: Granularity::Layer,
+            wbits: 3,
+            abits: Some(4),
+            first_last_8: false,
+            iters: 17,
+            calib_n: 96,
+            seed: 9,
+            source: DataSource::Train,
+            search: Some(HwBudget {
+                hw: Hardware::Fpga,
+                budget: 1.25,
+                relative: false,
+            }),
+            eval: false,
+            hw_report: true,
+            verbose: true,
+        };
+        let text = spec.to_json().to_string();
+        let back =
+            JobSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn jobspec_defaults_fill_in() {
+        let v = Json::parse(r#"{"model":"m"}"#).unwrap();
+        let got = JobSpec::from_json(&v).unwrap();
+        assert_eq!(got, JobSpec { model: "m".into(), ..JobSpec::default() });
+        // abits: 0 and abits: null both mean FP activations
+        let v = Json::parse(r#"{"model":"m","abits":0}"#).unwrap();
+        assert_eq!(JobSpec::from_json(&v).unwrap().abits, None);
+    }
+
+    #[test]
+    fn jobspec_rejects_unknown_and_missing_keys() {
+        let v = Json::parse(r#"{"model":"m","wbitz":4}"#).unwrap();
+        assert!(matches!(JobSpec::from_json(&v), Err(Error::Spec(_))));
+        let v = Json::parse(r#"{"wbits":4}"#).unwrap();
+        assert!(matches!(JobSpec::from_json(&v), Err(Error::Spec(_))));
+        let v = Json::parse(r#"{"model":"m","method":"magic"}"#).unwrap();
+        assert!(matches!(
+            JobSpec::from_json(&v),
+            Err(Error::UnknownMethod(_))
+        ));
+        let v = Json::parse(
+            r#"{"model":"m","search":{"hw":"size","budget":1,"frac":true}}"#,
+        )
+        .unwrap();
+        assert!(matches!(JobSpec::from_json(&v), Err(Error::Spec(_))));
+    }
+
+    #[test]
+    fn parse_jobs_accepts_array_and_wrapper() {
+        let a = JobSpec::parse_jobs(r#"[{"model":"m"}]"#).unwrap();
+        assert_eq!(a.len(), 1);
+        let b = JobSpec::parse_jobs(r#"{"jobs":[{"model":"m"},{"model":"n"}]}"#)
+            .unwrap();
+        assert_eq!(b.len(), 2);
+        assert_eq!(b[1].model, "n");
+        assert!(JobSpec::parse_jobs("[]").is_err());
+        assert!(JobSpec::parse_jobs("{nope").is_err());
+    }
+}

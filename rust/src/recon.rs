@@ -23,6 +23,12 @@
 //! independent calibration batches concurrently on [`crate::util::pool`]
 //! (`Backend` is `Sync`). Batch results are stitched in index order, so
 //! calibration is bit-identical at any `BRECQ_THREADS` value.
+//!
+//! This module is the engine; the typed front door is
+//! [`crate::pipeline`] — the CLI and examples never construct a
+//! [`Calibrator`] directly, they submit a `JobSpec` to a `Session`, which
+//! drives this engine and caches the shared inputs (FP weights,
+//! calibration sets) across jobs.
 
 use anyhow::Result;
 
@@ -240,7 +246,8 @@ impl<'a> Calibrator<'a> {
         // batch-mean gradients are O(1/B^2) small — unnormalized they sink
         // below Adam's epsilon and reconstruction degenerates to nearest
         // rounding. The clamp is a substrate adaptation (documented in
-        // DESIGN.md): our FP models sit near 100% train accuracy, so
+        // DESIGN.md §Substrate adaptations, repo root): our FP models sit
+        // near 100% train accuracy, so
         // per-sample CE gradients are extremely heavy-tailed — a handful of
         // boundary samples would dominate Eq. 10 and collapse the effective
         // calibration-set size (measured: W2 resnet_s 30% unclamped vs 94%

@@ -13,6 +13,12 @@
 //! the fitness value ... we will check the lookup table"). 2-bit-only pair
 //! terms, as in the paper ("we only take 2-bit permutations into
 //! consideration").
+//!
+//! Measuring the LUT is the most expensive stage of a mixed-precision job
+//! (2·L diagonal + intra-block pair probes over the calibration set), so
+//! [`crate::pipeline::Session`] caches it content-keyed — every search job
+//! in a session that agrees on (model, data source, calib size, seed)
+//! shares one measurement.
 
 use std::collections::HashMap;
 

@@ -1,7 +1,8 @@
 //! Minimal JSON parser/serializer (substrate: serde is unavailable offline).
 //!
 //! Covers the full JSON grammar we exchange with the Python build path
-//! (manifest.json, weight-store indexes, experiment reports): objects,
+//! (manifest.json, weight-store indexes, experiment reports) and the
+//! pipeline's `JobSpec` batch files (`brecq run jobs.json`): objects,
 //! arrays, strings with escapes, numbers, bools, null. Numbers are kept as
 //! f64; the manifest never needs more than 2^53 integer precision.
 
@@ -348,6 +349,10 @@ pub fn num(n: f64) -> Json {
 
 pub fn s(v: &str) -> Json {
     Json::Str(v.to_string())
+}
+
+pub fn b(v: bool) -> Json {
+    Json::Bool(v)
 }
 
 pub fn arr(v: Vec<Json>) -> Json {

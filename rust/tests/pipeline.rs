@@ -1,0 +1,307 @@
+//! Pipeline API tests: JobSpec JSON round-trips, typed errors at the API
+//! boundary, artifact-cache sharing (the sensitivity LUT is computed once
+//! across jobs — pinned via backend dispatch accounting), and
+//! batch-vs-sequential **bit-identity** of `Session::run_many` at
+//! `BRECQ_THREADS` 1 and 4.
+//!
+//! Everything runs on the hermetic synthetic environment (native backend,
+//! no artifacts).
+
+use std::sync::Mutex;
+
+use brecq::coordinator::Env;
+use brecq::pipeline::{DataSource, Error, Granularity, Hardware, HwBudget,
+                      JobOutput, JobSpec, Method, Session};
+use brecq::util::json::Json;
+use brecq::util::pool;
+
+/// `pool::set_threads` is process-global and libtest runs tests
+/// concurrently: serialize the tests that pin a thread count.
+static POOL_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock_pool() -> std::sync::MutexGuard<'static, ()> {
+    POOL_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn session() -> Session {
+    Session::new(Env::bootstrap_synthetic().expect("synthetic environment"))
+}
+
+#[test]
+fn jobspec_round_trips_through_util_json_text() {
+    // full spec: every non-default field exercised through actual text
+    let spec = JobSpec {
+        model: "mobilenetv2_s".into(),
+        method: Method::AdaQuantLike,
+        gran: Granularity::Layer,
+        wbits: 3,
+        abits: Some(4),
+        first_last_8: false,
+        iters: 17,
+        calib_n: 96,
+        seed: 9,
+        source: DataSource::Train,
+        search: Some(HwBudget {
+            hw: Hardware::Fpga,
+            budget: 1.25,
+            relative: true,
+        }),
+        eval: false,
+        hw_report: true,
+        verbose: true,
+    };
+    let text = spec.to_json().to_string();
+    let back = JobSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back, spec);
+
+    // a whole batch file round-trips
+    let batch =
+        format!("[{text},{}]", JobSpec::default().to_json().to_string());
+    let specs = JobSpec::parse_jobs(&batch).unwrap();
+    assert_eq!(specs.len(), 2);
+    assert_eq!(specs[0], spec);
+    assert_eq!(specs[1], JobSpec::default());
+}
+
+#[test]
+fn unknown_model_and_bad_specs_are_typed_errors() {
+    let s = session();
+    let r = s.run(&JobSpec { model: "nope".into(), ..JobSpec::default() });
+    assert!(matches!(r, Err(Error::UnknownModel(_))));
+
+    // zero-budget search is rejected before any work happens
+    let r = s.run(&JobSpec {
+        search: Some(HwBudget {
+            hw: Hardware::Size,
+            budget: 0.0,
+            relative: false,
+        }),
+        ..JobSpec::default()
+    });
+    assert!(matches!(r, Err(Error::Spec(_))));
+
+    // ARM latency model rejects the depthwise-conv model (typed, not a
+    // panic deep in the simulator)
+    let r = s.run(&JobSpec {
+        model: "mobilenetv2_s".into(),
+        method: Method::Fp,
+        eval: false,
+        search: Some(HwBudget {
+            hw: Hardware::Arm,
+            budget: 0.9,
+            relative: true,
+        }),
+        ..JobSpec::default()
+    });
+    assert!(matches!(r, Err(Error::Spec(_))));
+
+    // out-of-range bits
+    let r = s.run(&JobSpec { wbits: 0, ..JobSpec::default() });
+    assert!(matches!(r, Err(Error::Spec(_))));
+}
+
+/// Dispatch count of the model-eval executables (the sensitivity probes'
+/// workhorse) since the session's backend was created.
+fn eval_fwd_calls(s: &Session) -> u64 {
+    s.env()
+        .rt
+        .hotspots(usize::MAX)
+        .iter()
+        .filter(|(name, _, _)| name.ends_with("eval_fwd"))
+        .map(|(_, calls, _)| *calls)
+        .sum()
+}
+
+#[test]
+fn sensitivity_lut_computed_once_across_jobs() {
+    let _g = lock_pool();
+    pool::set_threads(1);
+    let s = session();
+    let model = s.model("resnet_s").unwrap();
+    let nl = model.layers.len();
+
+    // budgets above the pinned-8-bit all-2 floor, measured not guessed
+    let meas = Hardware::Size.measurer();
+    let full = meas.measure(model, &vec![8; nl], 8);
+    let mut floor_bits = vec![2usize; nl];
+    floor_bits[0] = 8;
+    floor_bits[nl - 1] = 8;
+    let floor = meas.measure(model, &floor_bits, 8) / full;
+    let frac = |t: f64| floor + (1.0 - floor) * t;
+
+    let mp_job = |t: f64| JobSpec {
+        model: "resnet_s".into(),
+        method: Method::Fp,
+        eval: false,
+        calib_n: 32,
+        seed: 2,
+        search: Some(HwBudget {
+            hw: Hardware::Size,
+            budget: frac(t),
+            relative: true,
+        }),
+        ..JobSpec::default()
+    };
+
+    let loose = s.run(&mp_job(0.6)).unwrap();
+    let calls_after_first = eval_fwd_calls(&s);
+    assert!(
+        calls_after_first > 0,
+        "sensitivity probes must dispatch eval_fwd"
+    );
+
+    // second job: different budget, same (model, data) key — the LUT and
+    // every upstream artifact must come from the cache, so not a single
+    // additional eval_fwd dispatch is allowed
+    let tight = s.run(&mp_job(0.25)).unwrap();
+    let calls_after_second = eval_fwd_calls(&s);
+    assert_eq!(
+        calls_after_first, calls_after_second,
+        "second search job recomputed the sensitivity LUT"
+    );
+    let (hits, misses) = s.cache().stats();
+    assert!(hits >= 3, "expected cache hits (got {hits}/{misses})");
+
+    // both jobs are real searches over the shared LUT
+    let l = loose.search.unwrap();
+    let t = tight.search.unwrap();
+    assert!(l.hw_cost <= frac(0.6) * full + 1e-9);
+    assert!(t.hw_cost <= frac(0.25) * full + 1e-9);
+    // a looser budget can only help the predicted loss
+    assert!(l.predicted_loss <= t.predicted_loss + 1e-12);
+    pool::set_threads(0);
+}
+
+#[test]
+fn fp_job_matches_manifest_reference() {
+    let s = session();
+    let out = s
+        .run(&JobSpec { method: Method::Fp, ..JobSpec::default() })
+        .unwrap();
+    let acc = out.accuracy.expect("eval stage ran");
+    assert!(
+        (acc - out.fp_acc).abs() < 1e-9,
+        "FP eval {acc} vs manifest {}",
+        out.fp_acc
+    );
+    assert!(out.quantized.is_none());
+    assert!(out.wbits.iter().all(|&b| b == 8));
+}
+
+#[test]
+fn brecq_honors_non_block_granularity() {
+    // the CLI's old `--gran != block` special case is gone: the pipeline
+    // routes any granularity through the same engine path
+    let s = session();
+    let out = s
+        .run(&JobSpec {
+            gran: Granularity::Layer,
+            wbits: 4,
+            abits: Some(8),
+            iters: 8,
+            calib_n: 32,
+            ..JobSpec::default()
+        })
+        .unwrap();
+    let model = s.model("resnet_s").unwrap();
+    assert_eq!(
+        out.reports().len(),
+        model.gran("layer").units.len(),
+        "layer granularity must reconstruct layer units"
+    );
+}
+
+/// Everything result-bearing a job produced, as exact bits.
+fn fingerprint(outs: &[JobOutput]) -> Vec<(
+    Option<u64>,
+    Vec<usize>,
+    Option<Vec<u32>>,
+    Option<Vec<u32>>,
+    Option<(Vec<usize>, u64)>,
+)> {
+    outs.iter()
+        .map(|o| {
+            (
+                o.accuracy.map(|a| a.to_bits()),
+                o.wbits.clone(),
+                o.quantized.as_ref().map(|q| {
+                    q.weights
+                        .iter()
+                        .flat_map(|t| t.data.iter().map(|v| v.to_bits()))
+                        .collect()
+                }),
+                o.quantized.as_ref().map(|q| {
+                    q.act_steps.iter().map(|v| v.to_bits()).collect()
+                }),
+                o.search.as_ref().map(|r| {
+                    (r.wbits.clone(), r.predicted_loss.to_bits())
+                }),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn run_many_bit_identical_to_sequential_at_1_and_4_threads() {
+    let _g = lock_pool();
+    let specs = vec![
+        JobSpec {
+            model: "resnet_s".into(),
+            wbits: 4,
+            abits: Some(8),
+            iters: 12,
+            calib_n: 32,
+            seed: 0,
+            ..JobSpec::default()
+        },
+        JobSpec {
+            model: "resnet_s".into(),
+            method: Method::Omse,
+            wbits: 4,
+            abits: None,
+            calib_n: 32,
+            seed: 0,
+            ..JobSpec::default()
+        },
+        JobSpec {
+            model: "mobilenetv2_s".into(),
+            wbits: 4,
+            abits: Some(8),
+            iters: 8,
+            calib_n: 32,
+            seed: 1,
+            ..JobSpec::default()
+        },
+    ];
+
+    let mut per_thread_prints = Vec::new();
+    for nt in [1usize, 4] {
+        pool::set_threads(nt);
+        // sequential: fresh session, jobs one by one
+        let s1 = session();
+        let seq: Vec<JobOutput> =
+            specs.iter().map(|sp| s1.run(sp).unwrap()).collect();
+        // batched: fresh session, all jobs through the pool
+        let s2 = session();
+        let many: Vec<JobOutput> = s2
+            .run_many(&specs)
+            .into_iter()
+            .map(|r| r.unwrap())
+            .collect();
+        assert_eq!(
+            fingerprint(&seq),
+            fingerprint(&many),
+            "run_many differs from sequential at {nt} threads"
+        );
+        // batching shares artifacts: fewer misses than 3 independent
+        // loads of (train set, test set, fp weights, calib)
+        let (hits, _misses) = s2.cache().stats();
+        assert!(hits > 0, "batch run must hit the shared cache");
+        per_thread_prints.push(fingerprint(&seq));
+    }
+    pool::set_threads(0);
+    assert_eq!(
+        per_thread_prints[0], per_thread_prints[1],
+        "results depend on the thread count"
+    );
+}
