@@ -93,10 +93,19 @@ fn main() {
     };
     let (t1, l1) = time_at(1);
     let (t4, l4) = time_at(4);
+    // zero-alloc steady state, end to end: with the arenas warm from the
+    // timed runs, one more full calibration must serve every scratch
+    // request from recycled buffers (tests/parallel.rs asserts the same
+    // property per kernel; this reports it for Algorithm 1 whole).
+    let (a0, _) = pool::scratch_counters();
+    let qm = cal.calibrate(&calib, &bits, &cfg).unwrap();
+    std::hint::black_box(qm.weights.len());
+    let (a1, _) = pool::scratch_counters();
     pool::set_threads(0);
     assert_eq!(l1, l4, "thread count changed reconstruction losses");
     h.note("recon_wall_s_1t", t1);
     h.note("recon_wall_s_4t", t4);
     h.note("recon_speedup_4t_over_1t", t1 / t4);
+    h.note("steady_state_scratch_allocs", (a1 - a0) as f64);
     h.finish();
 }

@@ -1,13 +1,21 @@
 //! Bench: backend dispatch hot path. The reconstruction loop issues one
 //! `unit_recon` dispatch per Adam step; its latency bounds the whole
 //! calibration wall-clock (paper: 20 min for ResNet-18 on a 1080TI).
-//! Also measures the fwd/eval paths and the literal marshalling overhead.
+//! Also measures the fwd/eval paths, the literal marshalling overhead,
+//! and — so speedups are attributable per kernel rather than only
+//! end-to-end — each distinct conv/fc geometry of both synthetic models
+//! through the GEMM-backed kernels (fwd and bwd), plus the raw GEMM
+//! micro-kernel and its panel-packing cost.
 
 mod harness;
+
+use std::collections::HashSet;
 
 use brecq::eval::{forward, EvalParams};
 use brecq::quant::mse_steps_per_channel;
 use brecq::recon::{BitConfig, Calibrator};
+use brecq::runtime::gemm;
+use brecq::runtime::native::{conv2d, conv2d_bwd, fc_bwd, fc_fwd};
 use brecq::tensor::Tensor;
 use harness::Harness;
 
@@ -65,6 +73,109 @@ fn main() {
         }
     });
 
+    // ---- per-kernel micro benches -----------------------------------
+    // Every distinct conv/fc geometry of both synthetic models at the
+    // calibration batch size, forward and backward, so a regression (or
+    // win) is attributable to one kernel shape.
+    const KB: usize = 32; // calibration batch
+    let mut seen: HashSet<(String, usize, usize, usize, usize, usize, usize)> =
+        HashSet::new();
+    for mname in ["resnet_s", "mobilenetv2_s"] {
+        if !env.has_model(mname) {
+            continue;
+        }
+        for l in &env.model(mname).layers {
+            let key = (
+                l.kind.clone(),
+                l.cin,
+                l.cout,
+                l.k,
+                l.stride,
+                l.groups,
+                l.h_in,
+            );
+            if !seen.insert(key) {
+                continue;
+            }
+            let iters = h.iters(30);
+            if l.kind == "fc" {
+                let x = Tensor::full(vec![KB, l.cin], 0.5);
+                let w = Tensor::full(vec![l.cout, l.cin], 0.1);
+                let g = Tensor::full(vec![KB, l.cout], 0.3);
+                h.run(
+                    &format!("fc_fwd {}x{} b{KB}", l.cin, l.cout),
+                    iters,
+                    || {
+                        std::hint::black_box(fc_fwd(&x, &w));
+                    },
+                );
+                h.run(
+                    &format!("fc_bwd {}x{} b{KB}", l.cin, l.cout),
+                    iters,
+                    || {
+                        std::hint::black_box(fc_bwd(&x, &w, &g));
+                    },
+                );
+            } else {
+                let x = Tensor::full(vec![KB, l.cin, l.h_in, l.w_in], 0.5);
+                let w = Tensor::full(
+                    vec![l.cout, l.cin / l.groups, l.k, l.k],
+                    0.1,
+                );
+                let gout = {
+                    let probe = conv2d(&x, &w, l.stride, l.groups);
+                    Tensor::full(probe.shape.clone(), 0.3)
+                };
+                let tag = format!(
+                    "{}-{}c k{} s{} g{} {}px b{KB}",
+                    l.cin, l.cout, l.k, l.stride, l.groups, l.h_in
+                );
+                h.run(&format!("conv_fwd {tag}"), iters, || {
+                    std::hint::black_box(conv2d(&x, &w, l.stride, l.groups));
+                });
+                h.run(&format!("conv_bwd {tag}"), iters, || {
+                    std::hint::black_box(conv2d_bwd(
+                        &x, &w, l.stride, l.groups, &gout,
+                    ));
+                });
+            }
+        }
+    }
+
+    // raw micro-kernel + packing, at a shape representative of the
+    // per-sample conv GEMMs (M=cout, K=cin*k*k, N=out pixels)
+    {
+        let (m, n, k) = (64usize, 256usize, 576usize);
+        let a = vec![0.25f32; m * k];
+        let b = vec![0.5f32; k * n];
+        let mut c = vec![0f32; m * n];
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        let iters = h.iters(50);
+        h.run(&format!("gemm {m}x{n}x{k}"), iters, || {
+            c.iter_mut().for_each(|v| *v = 0.0);
+            gemm::gemm(
+                m, n, k, &a, k, 1, &b, n, 1, &mut c, n, &mut pa, &mut pb,
+            );
+            std::hint::black_box(c[0]);
+        });
+        let kc = k.min(gemm::KC);
+        let mut packed_b =
+            vec![0f32; n.min(gemm::NC).div_ceil(gemm::NR) * gemm::NR * kc];
+        let mut packed_a =
+            vec![0f32; m.min(gemm::MC).div_ceil(gemm::MR) * gemm::MR * kc];
+        let iters = h.iters(50);
+        h.run(&format!("gemm pack_b {k}x{n} panel"), iters, || {
+            gemm::pack_b(&b, n, 1, 0, kc, 0, n.min(gemm::NC), &mut packed_b);
+            std::hint::black_box(packed_b[0]);
+        });
+        h.run(&format!("gemm pack_a {m}x{k} panel"), iters, || {
+            gemm::pack_a(&a, k, 1, 0, m.min(gemm::MC), 0, kc, &mut packed_a);
+            std::hint::black_box(packed_a[0]);
+        });
+    }
+
+    // scratch-arena health (allocs/reuses) is appended to the JSON notes
+    // by Harness::finish for every bench binary.
     h.finish();
 }
 

@@ -30,7 +30,10 @@ pub struct Harness {
 }
 
 impl Harness {
-    /// Parse bench argv: `--quick` and `--json PATH`; everything else
+    /// Parse bench argv: `--quick`, `--json PATH` and `--threads N`
+    /// (pin the worker pool for ad-hoc runs; benches that measure
+    /// specific thread counts — e.g. bench_recon's speedup section —
+    /// still override it with `pool::set_threads`). Everything else
     /// (e.g. the `--bench` flag cargo forwards) is ignored.
     pub fn from_args(bench: &str) -> Harness {
         let mut quick = false;
@@ -40,6 +43,13 @@ impl Harness {
             match a.as_str() {
                 "--quick" => quick = true,
                 "--json" => json_path = args.next(),
+                "--threads" => {
+                    let n = args
+                        .next()
+                        .and_then(|v| v.parse::<usize>().ok())
+                        .unwrap_or(0);
+                    pool::set_threads(n);
+                }
                 _ => {}
             }
         }
@@ -92,8 +102,15 @@ impl Harness {
         self.notes.push((key.to_string(), v));
     }
 
-    /// Write the JSON report if `--json` was given.
-    pub fn finish(self) {
+    /// Write the JSON report if `--json` was given. Scratch-arena
+    /// counters are appended to the notes automatically so every bench
+    /// binary reports whether the kernels ran zero-alloc.
+    pub fn finish(mut self) {
+        let (allocs, reuses) = pool::scratch_counters();
+        self.notes
+            .push(("scratch_allocs_total".to_string(), allocs as f64));
+        self.notes
+            .push(("scratch_reuses_total".to_string(), reuses as f64));
         let Some(path) = self.json_path else { return };
         let results: Vec<Json> = self
             .results

@@ -1,0 +1,328 @@
+//! Shared cache-blocked, register-tiled f32 matmul micro-kernel — the
+//! single compute primitive behind the native backend's conv/fc forward
+//! and backward paths (im2col + GEMM; see `runtime::native`).
+//!
+//! # Determinism contract
+//!
+//! Every output element `C[i,j]` is produced by **one** accumulator that
+//! walks the reduction dimension `k` in strictly ascending order:
+//!
+//! * the micro-kernel keeps an `MR x NR` register tile and advances all
+//!   of its accumulators one `k` step at a time (lane-parallel across the
+//!   tile, sequential along `k` — no split accumulators, no `mul_add`
+//!   contraction, so each lane performs exactly the two IEEE roundings
+//!   of the scalar loop `acc += a*b`);
+//! * `KC` blocking stores the tile back to `C` between `k` blocks and
+//!   reloads it for the next, which extends the same sequential chain —
+//!   association is unchanged;
+//! * panel edges are zero-padded in the packed operands; the padded lanes
+//!   compute `acc += 0.0 * x` into lanes that are never stored.
+//!
+//! Consequently a `gemm` call is bit-identical to the naive ordered
+//! triple loop for any blocking parameters, and callers that partition
+//! `C` across pool workers (ownership-partitioned rows) get bit-identical
+//! results at any thread count. `tests/parallel.rs` pins this against the
+//! retained scalar reference loops.
+//!
+//! Operands are described by (base slice, row stride, col stride) so the
+//! packing routines absorb transposed and sub-matrix views; the packed
+//! panels live in [`pool::Scratch`] buffers, so steady-state calls do no
+//! heap allocation.
+
+// Packing and micro-kernel loops index several buffers through shared
+// offset arithmetic; iterator forms would obscure the panel math (same
+// rationale as runtime::native).
+#![allow(clippy::needless_range_loop)]
+
+use crate::util::pool;
+
+/// Micro-tile rows (register blocking in M).
+pub const MR: usize = 4;
+/// Micro-tile columns (register blocking in N; two 8-lane vectors).
+pub const NR: usize = 16;
+/// Reduction-dimension cache block (packed panels stay L1/L2 resident).
+pub const KC: usize = 256;
+/// Row cache block.
+pub const MC: usize = 128;
+/// Column cache block.
+pub const NC: usize = 512;
+
+/// Pack an `mc x kc` block of A (element `(i, k)` at `i*rs + k*cs` from
+/// `base`) into MR-row panels: `out[(ip*kc + kk)*MR + i]`, zero-padding
+/// the last panel's rows. Panel-major so the micro-kernel streams it.
+#[allow(clippy::too_many_arguments)]
+pub fn pack_a(
+    a: &[f32],
+    rs: usize,
+    cs: usize,
+    i0: usize,
+    mc: usize,
+    k0: usize,
+    kc: usize,
+    out: &mut [f32],
+) {
+    let npanels = mc.div_ceil(MR);
+    for ip in 0..npanels {
+        let ibase = i0 + ip * MR;
+        let mr = MR.min(i0 + mc - ibase);
+        for kk in 0..kc {
+            let o = (ip * kc + kk) * MR;
+            let col = (k0 + kk) * cs;
+            for i in 0..mr {
+                out[o + i] = a[(ibase + i) * rs + col];
+            }
+            for i in mr..MR {
+                out[o + i] = 0.0;
+            }
+        }
+    }
+}
+
+/// Pack a `kc x nc` block of B (element `(k, j)` at `k*rs + j*cs` from
+/// `base`) into NR-column panels: `out[(jp*kc + kk)*NR + j]`, zero-padding
+/// the last panel's columns.
+#[allow(clippy::too_many_arguments)]
+pub fn pack_b(
+    b: &[f32],
+    rs: usize,
+    cs: usize,
+    k0: usize,
+    kc: usize,
+    j0: usize,
+    nc: usize,
+    out: &mut [f32],
+) {
+    let npanels = nc.div_ceil(NR);
+    for jp in 0..npanels {
+        let jbase = j0 + jp * NR;
+        let nr = NR.min(j0 + nc - jbase);
+        for kk in 0..kc {
+            let o = (jp * kc + kk) * NR;
+            let row = (k0 + kk) * rs;
+            for j in 0..nr {
+                out[o + j] = b[row + (jbase + j) * cs];
+            }
+            for j in nr..NR {
+                out[o + j] = 0.0;
+            }
+        }
+    }
+}
+
+/// MR x NR register-tile micro-kernel over one packed A panel and one
+/// packed B panel: loads the live `mr x nr` sub-tile of C, advances every
+/// accumulator through `kc` reduction steps in order, stores it back.
+#[inline]
+fn kern(
+    kc: usize,
+    ap: &[f32],
+    bp: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+    mr: usize,
+    nr: usize,
+) {
+    let mut acc = [[0f32; NR]; MR];
+    for i in 0..mr {
+        for j in 0..nr {
+            acc[i][j] = c[i * ldc + j];
+        }
+    }
+    for kk in 0..kc {
+        let a: &[f32; MR] = ap[kk * MR..kk * MR + MR].try_into().unwrap();
+        let b: &[f32; NR] = bp[kk * NR..kk * NR + NR].try_into().unwrap();
+        for i in 0..MR {
+            let ai = a[i];
+            for j in 0..NR {
+                // deliberately not f32::mul_add: the scalar reference
+                // loops round the product and the sum separately
+                acc[i][j] += ai * b[j];
+            }
+        }
+    }
+    for i in 0..mr {
+        for j in 0..nr {
+            c[i * ldc + j] = acc[i][j];
+        }
+    }
+}
+
+/// `C[m x n] += A[m x k] * B[k x n]`, bit-identical to the ordered naive
+/// triple loop (see the module docs). `C` is row-major with leading
+/// dimension `ldc` and is **accumulated into** — callers start from a
+/// zeroed output (or a previous partial sum, extending the reduction
+/// chain, e.g. the weight-gradient's ordered fold over batch samples).
+/// `pa`/`pb` are packing scratch, typically the calling worker's
+/// [`pool::Scratch`] slots.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    rs_a: usize,
+    cs_a: usize,
+    b: &[f32],
+    rs_b: usize,
+    cs_b: usize,
+    c: &mut [f32],
+    ldc: usize,
+    pa: &mut Vec<f32>,
+    pb: &mut Vec<f32>,
+) {
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    debug_assert!(c.len() >= (m - 1) * ldc + n, "gemm: C too small");
+    debug_assert!(
+        a.len() > (m - 1) * rs_a + (k - 1) * cs_a,
+        "gemm: A too small"
+    );
+    debug_assert!(
+        b.len() > (k - 1) * rs_b + (n - 1) * cs_b,
+        "gemm: B too small"
+    );
+    let kc_max = k.min(KC);
+    let pbs = pool::grab_dirty(pb, n.min(NC).div_ceil(NR) * NR * kc_max);
+    let pas = pool::grab_dirty(pa, m.min(MC).div_ceil(MR) * MR * kc_max);
+    for j0 in (0..n).step_by(NC) {
+        let nc = NC.min(n - j0);
+        // K blocks strictly ascending: each C element's reduction chain
+        // continues where the previous block stored it.
+        for k0 in (0..k).step_by(KC) {
+            let kc = KC.min(k - k0);
+            pack_b(b, rs_b, cs_b, k0, kc, j0, nc, pbs);
+            for i0 in (0..m).step_by(MC) {
+                let mc = MC.min(m - i0);
+                pack_a(a, rs_a, cs_a, i0, mc, k0, kc, pas);
+                for jp in 0..nc.div_ceil(NR) {
+                    let nr = NR.min(nc - jp * NR);
+                    let bp = &pbs[jp * kc * NR..(jp + 1) * kc * NR];
+                    for ip in 0..mc.div_ceil(MR) {
+                        let mr = MR.min(mc - ip * MR);
+                        let ap = &pas[ip * kc * MR..(ip + 1) * kc * MR];
+                        let coff = (i0 + ip * MR) * ldc + j0 + jp * NR;
+                        kern(kc, ap, bp, &mut c[coff..], ldc, mr, nr);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Naive ordered triple loop — the bit-level ground truth.
+    fn gemm_ref(
+        m: usize,
+        n: usize,
+        k: usize,
+        a: &[f32],
+        rs_a: usize,
+        cs_a: usize,
+        b: &[f32],
+        rs_b: usize,
+        cs_b: usize,
+        c: &mut [f32],
+        ldc: usize,
+    ) {
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = c[i * ldc + j];
+                for kk in 0..k {
+                    acc += a[i * rs_a + kk * cs_a] * b[kk * rs_b + j * cs_b];
+                }
+                c[i * ldc + j] = acc;
+            }
+        }
+    }
+
+    fn randv(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len)
+            .map(|i| {
+                // sprinkle exact and negative zeros between gaussians
+                match i % 17 {
+                    3 => 0.0,
+                    11 => -0.0,
+                    _ => rng.gauss() as f32,
+                }
+            })
+            .collect()
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn gemm_matches_ordered_reference_bitwise() {
+        let mut rng = Rng::new(42);
+        // sizes straddling the MR/NR/KC boundaries, incl. degenerate ones
+        let cases = [
+            (1usize, 1usize, 1usize),
+            (3, 5, 7),
+            (4, 16, 256),
+            (5, 17, 300),
+            (13, 40, 9),
+            (2, 500 + 30, 61),
+            (MR * 2, NR * 2, KC + 3),
+        ];
+        for &(m, n, k) in &cases {
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, k * n);
+            let mut c = vec![0f32; m * n];
+            let mut c_ref = c.clone();
+            let (mut pa, mut pb) = (Vec::new(), Vec::new());
+            gemm(m, n, k, &a, k, 1, &b, n, 1, &mut c, n, &mut pa, &mut pb);
+            gemm_ref(m, n, k, &a, k, 1, &b, n, 1, &mut c_ref, n);
+            assert_eq!(bits(&c), bits(&c_ref), "m={m} n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn gemm_handles_transposed_operand_views() {
+        let mut rng = Rng::new(7);
+        let (m, n, k) = (6, 19, 33);
+        // A stored transposed (k x m), B stored transposed (n x k)
+        let at = randv(&mut rng, k * m);
+        let bt = randv(&mut rng, n * k);
+        let mut c = vec![0f32; m * n];
+        let mut c_ref = c.clone();
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        gemm(m, n, k, &at, 1, m, &bt, 1, k, &mut c, n, &mut pa, &mut pb);
+        gemm_ref(m, n, k, &at, 1, m, &bt, 1, k, &mut c_ref, n);
+        assert_eq!(bits(&c), bits(&c_ref));
+    }
+
+    #[test]
+    fn gemm_accumulates_into_existing_c() {
+        let mut rng = Rng::new(9);
+        let (m, n, k) = (5, 9, 12);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let mut c = randv(&mut rng, m * n);
+        let mut c_ref = c.clone();
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        // two chained calls extend one reduction per element
+        gemm(m, n, k, &a, k, 1, &b, n, 1, &mut c, n, &mut pa, &mut pb);
+        gemm(m, n, k, &a, k, 1, &b, n, 1, &mut c, n, &mut pa, &mut pb);
+        gemm_ref(m, n, k, &a, k, 1, &b, n, 1, &mut c_ref, n);
+        gemm_ref(m, n, k, &a, k, 1, &b, n, 1, &mut c_ref, n);
+        assert_eq!(bits(&c), bits(&c_ref));
+    }
+
+    #[test]
+    fn empty_dims_are_noops() {
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        let a = vec![1.0f32; 4];
+        let b = vec![1.0f32; 4];
+        let mut c = vec![7.0f32; 4];
+        gemm(0, 2, 2, &a, 2, 1, &b, 2, 1, &mut c, 2, &mut pa, &mut pb);
+        gemm(2, 0, 2, &a, 2, 1, &b, 2, 1, &mut c, 2, &mut pa, &mut pb);
+        gemm(2, 2, 0, &a, 2, 1, &b, 2, 1, &mut c, 2, &mut pa, &mut pb);
+        assert_eq!(c, vec![7.0; 4]);
+    }
+}

@@ -18,6 +18,7 @@
 //! fails loudly at dispatch, not as garbage numerics) and records
 //! per-executable dispatch accounting for the perf report.
 
+pub mod gemm;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;

@@ -6,7 +6,7 @@
 //! The quantizer math is a direct port of the pure-jnp oracles in
 //! `python/compile/kernels/ref.py` (the kernels' correctness ground truth):
 //! rectified-sigmoid AdaRound (Eq. 16), LSQ with STE gradients (Eq. 18) and
-//! the FIM-weighted reconstruction loss (Eq. 10). Layer compute is plain
+//! the FIM-weighted reconstruction loss (Eq. 10). Layer semantics are
 //! NCHW/OIHW grouped convolution with TF-style SAME padding — matching
 //! `jax.lax.conv_general_dilated(..., 'SAME')` in `python/compile/nets.py`
 //! — plus fc, global-average-pool and softmax cross-entropy, each with a
@@ -19,14 +19,24 @@
 //! export) fail loudly at backend construction — use the `pjrt` feature for
 //! those artifacts.
 //!
-//! The hot paths run on the [`crate::util::pool`] worker pool: conv2d and
-//! its backward fan out over ownership-partitioned output chunks, and the
-//! model-level executables (`eval_fwd`, `act_obs`, `fim`) split their
-//! batch into per-sample chunks. Every parallel path is **bit-identical**
-//! to the scalar walk at any `BRECQ_THREADS` value — work is partitioned
-//! so that no floating-point accumulator is ever shared or reassociated
-//! across jobs (see the pool module's determinism contract and
-//! `tests/parallel.rs`).
+//! Layer compute is GEMM-ified: `conv2d` runs as per-sample im2col +
+//! the shared blocked micro-kernel ([`super::gemm`]), `conv2d_bwd` as a
+//! flipped-weight GEMM over gathered gradient columns (`gx`) plus an
+//! ordered batch fold of `gout x im2col^T` GEMMs (`gw`), and `fc` both
+//! ways through the same kernel. All scratch (im2col panels, packed
+//! operands, the shared transposed-col slab) comes from the recycling
+//! arenas in [`crate::util::pool`], so steady-state reconstruction steps
+//! allocate nothing beyond their output tensors.
+//!
+//! The hot paths run on the [`crate::util::pool`] worker pool: conv2d
+//! fans out per sample, its backward per sample (`gx`) and per
+//! out-channel block (`gw`), and the model-level executables
+//! (`eval_fwd`, `act_obs`, `fim`) split their batch into per-sample
+//! chunks. Every parallel path is **bit-identical** to the retained
+//! scalar reference loops at any `BRECQ_THREADS` value — work is
+//! partitioned by ownership and each output element's reduction runs in
+//! the scalar loop's order (see the im2col parity note below, the gemm
+//! module's determinism contract and `tests/parallel.rs`).
 
 // Kernel loops index several buffers with shared offset arithmetic; the
 // iterator forms clippy suggests obscure the stencil math.
@@ -40,7 +50,7 @@ use crate::model::{LayerInfo, Manifest, ModelInfo, UnitInfo};
 use crate::tensor::Tensor;
 use crate::util::pool;
 
-use super::{parse_sigs, Backend, Dispatches, ExeSig};
+use super::{gemm, parse_sigs, Backend, Dispatches, ExeSig};
 
 pub const ZETA: f32 = 1.1;
 pub const GAMMA: f32 = -0.1;
@@ -154,12 +164,165 @@ fn same_pads(h: usize, k: usize, s: usize) -> (usize, i64) {
     (out, (total / 2) as i64)
 }
 
-/// Grouped NCHW x OIHW convolution with SAME padding (no bias).
+// ------------------------------------------------------------------
+// im2col layouts feeding the shared GEMM micro-kernel (runtime::gemm)
+//
+// Bit-parity argument: the scalar reference loop accumulates each
+// output element's taps with a single f32 accumulator in (ic, kh, kw)
+// order, skipping out-of-image taps. The im2col buffers below order the
+// GEMM reduction dimension identically and hold +0.0 at every padded
+// tap; folding those zeros in order is bit-neutral because an f32
+// `acc += p` chain starting from +0.0 can never produce a -0.0
+// accumulator (x + (-x) rounds to +0.0), and IEEE addition of ±0.0 to a
+// non-(-0.0) value is exact identity. `tests/parallel.rs` pins this —
+// including inputs seeded with -0.0 and denormals — against the
+// retained scalar loops.
+// ------------------------------------------------------------------
+
+/// Valid `ow` range `[lo, hi)` such that `iw = ow*stride - pad_w + kw`
+/// lies in `[0, wd)`.
+fn ow_range(
+    wo: usize,
+    wd: usize,
+    stride: usize,
+    pad_w: i64,
+    kw: usize,
+) -> (usize, usize) {
+    let s = stride as i64;
+    let off = pad_w - kw as i64; // iw = ow*stride - off
+    let lo = if off > 0 { ((off + s - 1) / s) as usize } else { 0 };
+    let hi_i = wd as i64 - 1 + off;
+    let hi = if hi_i < 0 { 0 } else { (hi_i / s + 1) as usize };
+    (lo.min(wo), hi.min(wo))
+}
+
+/// Scatter one `(cin, h, wd)` sample into im2col layout with a strided
+/// output: element `(r, n)` — row `r = (ci, kh, kw)` (ascending, the
+/// scalar loop's tap order), column `n = (oh, ow)` — lands at
+/// `r*rs_out + n*cs_out`. `(rs_out, cs_out) = (ho*wo, 1)` gives the
+/// forward GEMM's B operand; `(1, cin*k*k)` gives the transposed slab
+/// the weight-gradient reduction reads. `out` must be pre-zeroed; padded
+/// taps stay +0.0.
+#[allow(clippy::too_many_arguments)]
+fn im2col(
+    x: &[f32],
+    cin: usize,
+    h: usize,
+    wd: usize,
+    k: usize,
+    stride: usize,
+    ho: usize,
+    wo: usize,
+    pad_h: i64,
+    pad_w: i64,
+    rs_out: usize,
+    cs_out: usize,
+    out: &mut [f32],
+) {
+    for ci in 0..cin {
+        for kh in 0..k {
+            for kw in 0..k {
+                let r = (ci * k + kh) * k + kw;
+                let (lo, hi) = ow_range(wo, wd, stride, pad_w, kw);
+                for oh in 0..ho {
+                    let ih = (oh * stride) as i64 - pad_h + kh as i64;
+                    if ih < 0 || ih >= h as i64 {
+                        continue;
+                    }
+                    let xrow = (ci * h + ih as usize) * wd;
+                    let obase = r * rs_out + oh * wo * cs_out;
+                    for ow in lo..hi {
+                        let iw = (ow * stride) as i64 - pad_w + kw as i64;
+                        out[obase + ow * cs_out] = x[xrow + iw as usize];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Gather one sample's output-gradient into the transposed-convolution
+/// im2col layout: row `r = (oc, khf, kwf)` over the **flipped** kernel
+/// index (`kh = k-1-khf`), column `n = (ih, iw)`. Flipping makes the
+/// GEMM's ascending reduction order `(oc, khf, kwf)` coincide with the
+/// fused scalar loop's `(oc, oh, ow)` order for every input-gradient
+/// element (ascending `khf` is ascending `oh`). `cols` pre-zeroed;
+/// stride-hole and out-of-range taps stay +0.0.
+#[allow(clippy::too_many_arguments)]
+fn gx_cols(
+    g: &[f32],
+    cout: usize,
+    ho: usize,
+    wo: usize,
+    k: usize,
+    stride: usize,
+    h: usize,
+    wd: usize,
+    pad_h: i64,
+    pad_w: i64,
+    cols: &mut [f32],
+) {
+    let n_in = h * wd;
+    for oc in 0..cout {
+        for khf in 0..k {
+            let kh = k - 1 - khf;
+            for kwf in 0..k {
+                let kw = k - 1 - kwf;
+                let r = (oc * k + khf) * k + kwf;
+                let (lo, hi) = ow_range(wo, wd, stride, pad_w, kw);
+                for oh in 0..ho {
+                    let ih = (oh * stride) as i64 - pad_h + kh as i64;
+                    if ih < 0 || ih >= h as i64 {
+                        continue;
+                    }
+                    let grow = (oc * ho + oh) * wo;
+                    let crow = r * n_in + ih as usize * wd;
+                    for ow in lo..hi {
+                        let iw = (ow * stride) as i64 - pad_w + kw as i64;
+                        cols[crow + iw as usize] = g[grow + ow];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Flip + transpose one group's weights into the input-gradient GEMM's
+/// A operand: `out[ci][(ocl, khf, kwf)] = w[gbase+ocl][ci][k-1-khf][k-1-kwf]`.
+/// Fully overwritten — no pre-zeroing needed.
+fn pack_wflip(
+    w: &[f32],
+    gi: usize,
+    cpg_out: usize,
+    cpg_in: usize,
+    k: usize,
+    out: &mut [f32],
+) {
+    let kk = k * k;
+    let krows = cpg_out * kk;
+    for ci in 0..cpg_in {
+        for ocl in 0..cpg_out {
+            let wbase = ((gi * cpg_out + ocl) * cpg_in + ci) * kk;
+            let obase = ci * krows + ocl * kk;
+            for khf in 0..k {
+                for kwf in 0..k {
+                    out[obase + khf * k + kwf] =
+                        w[wbase + (k - 1 - khf) * k + (k - 1 - kwf)];
+                }
+            }
+        }
+    }
+}
+
+/// Grouped NCHW x OIHW convolution with SAME padding (no bias), computed
+/// as per-sample im2col + GEMM on the shared micro-kernel.
 ///
-/// Parallelized over (batch, out-channel) output rows: every output
-/// element is produced by exactly one pool job, with the scalar loop's
-/// inner accumulation order, so the result is bit-identical at any
-/// thread count.
+/// Parallelized over batch samples: every output element is produced by
+/// exactly one pool job, and the GEMM accumulates its `(ic, kh, kw)` taps
+/// in the scalar loop's order (see the im2col parity note above), so the
+/// result is bit-identical to the scalar reference at any thread count.
+/// 1x1 stride-1 convolutions skip im2col entirely — the sample already
+/// is its own column matrix.
 pub fn conv2d(x: &Tensor, w: &Tensor, stride: usize, groups: usize) -> Tensor {
     let (b, cin, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let (cout, cpg_in, k) = (w.shape[0], w.shape[1], w.shape[2]);
@@ -167,57 +330,203 @@ pub fn conv2d(x: &Tensor, w: &Tensor, stride: usize, groups: usize) -> Tensor {
     let cpg_out = cout / groups;
     let (ho, pad_h) = same_pads(h, k, stride);
     let (wo, pad_w) = same_pads(wd, k, stride);
-    let mut out = vec![0f32; b * cout * ho * wo];
-    let row = ho * wo;
-    let work = out.len().saturating_mul(cpg_in * k * k);
-    pool::par_chunks_mut(&mut out, row, work, |idx, orow| {
-        let (bi, oc) = (idx / cout, idx % cout);
-        let gi = oc / cpg_out;
-        let wbase = oc * cpg_in * k * k;
-        for oh in 0..ho {
-            let ih0 = (oh * stride) as i64 - pad_h;
-            for ow in 0..wo {
-                let iw0 = (ow * stride) as i64 - pad_w;
-                let mut acc = 0f32;
-                for ic in 0..cpg_in {
-                    let ci = gi * cpg_in + ic;
-                    let xb = (bi * cin + ci) * h;
-                    let wb = wbase + ic * k * k;
-                    for kh in 0..k {
-                        let ih = ih0 + kh as i64;
-                        if ih < 0 || ih >= h as i64 {
-                            continue;
-                        }
-                        let xrow = (xb + ih as usize) * wd;
-                        let wrow = wb + kh * k;
-                        for kw in 0..k {
-                            let iw = iw0 + kw as i64;
-                            if iw < 0 || iw >= wd as i64 {
-                                continue;
-                            }
-                            acc += x.data[xrow + iw as usize]
-                                * w.data[wrow + kw];
-                        }
-                    }
-                }
-                orow[oh * wo + ow] = acc;
+    let n = ho * wo;
+    let kw_g = cpg_in * k * k;
+    let mut out = vec![0f32; b * cout * n];
+    let work = out.len().saturating_mul(kw_g);
+    pool::par_chunks_mut(&mut out, cout * n, work, |bi, orow| {
+        pool::with_scratch(|s| {
+            let xs = x.row0(bi);
+            let built;
+            let cols: &[f32] = if k == 1 && stride == 1 {
+                xs // rows = ci, cols = (h, wd): x's own layout
+            } else {
+                built = pool::grab(&mut s.im2col, cin * k * k * n);
+                im2col(
+                    xs, cin, h, wd, k, stride, ho, wo, pad_h, pad_w, n, 1,
+                    built,
+                );
+                built
+            };
+            for gi in 0..groups {
+                gemm::gemm(
+                    cpg_out,
+                    n,
+                    kw_g,
+                    &w.data[gi * cpg_out * kw_g..],
+                    kw_g,
+                    1,
+                    &cols[gi * kw_g * n..],
+                    n,
+                    1,
+                    &mut orow[gi * cpg_out * n..],
+                    n,
+                    &mut s.pack_a,
+                    &mut s.pack_b,
+                );
             }
-        }
+        });
     });
     Tensor::new(vec![b, cout, ho, wo], out)
 }
 
-/// Backward of [`conv2d`]: gradients wrt input and weights.
+/// Geometry of one backward call, shared by the sequential and parallel
+/// paths.
+#[derive(Clone, Copy)]
+struct BwdGeom {
+    b: usize,
+    cin: usize,
+    h: usize,
+    wd: usize,
+    cout: usize,
+    cpg_in: usize,
+    cpg_out: usize,
+    k: usize,
+    stride: usize,
+    groups: usize,
+    ho: usize,
+    wo: usize,
+    pad_h: i64,
+    pad_w: i64,
+}
+
+impl BwdGeom {
+    fn n(&self) -> usize {
+        self.ho * self.wo
+    }
+    fn hw_in(&self) -> usize {
+        self.h * self.wd
+    }
+    fn kw_g(&self) -> usize {
+        self.cpg_in * self.k * self.k
+    }
+    fn kw_all(&self) -> usize {
+        self.cin * self.k * self.k
+    }
+    /// 1x1 stride-1 convs read their operands directly (no col buffers).
+    fn direct(&self) -> bool {
+        self.k == 1 && self.stride == 1
+    }
+}
+
+/// Input gradient of one sample: flipped-weight GEMM over the gathered
+/// output-gradient columns. `gxs` is the sample's pre-zeroed slice;
+/// `wf_all` is the flipped/transposed weight operand for all groups,
+/// packed **once per backward call** by the caller (empty — and unread —
+/// for direct 1x1 convs, which use a strided view of `w` instead).
+#[allow(clippy::too_many_arguments)]
+fn gx_sample(
+    gs: &[f32],
+    w: &Tensor,
+    wf_all: &[f32],
+    g: BwdGeom,
+    gxs: &mut [f32],
+    gcols_buf: &mut Vec<f32>,
+    pa: &mut Vec<f32>,
+    pb: &mut Vec<f32>,
+) {
+    let kk = g.k * g.k;
+    if g.direct() {
+        // gcols degenerates to the gradient sample itself and the
+        // flipped weights to a plain transposed view — zero packing.
+        for gi in 0..g.groups {
+            gemm::gemm(
+                g.cpg_in,
+                g.hw_in(),
+                g.cpg_out,
+                &w.data[gi * g.cpg_out * g.cpg_in..],
+                1,
+                g.cpg_in,
+                &gs[gi * g.cpg_out * g.n()..],
+                g.n(),
+                1,
+                &mut gxs[gi * g.cpg_in * g.hw_in()..],
+                g.hw_in(),
+                pa,
+                pb,
+            );
+        }
+        return;
+    }
+    let gcols = pool::grab(gcols_buf, g.cout * kk * g.hw_in());
+    gx_cols(
+        gs, g.cout, g.ho, g.wo, g.k, g.stride, g.h, g.wd, g.pad_h, g.pad_w,
+        gcols,
+    );
+    let gsz = g.cpg_in * g.cpg_out * kk;
+    for gi in 0..g.groups {
+        gemm::gemm(
+            g.cpg_in,
+            g.hw_in(),
+            g.cpg_out * kk,
+            &wf_all[gi * gsz..],
+            g.cpg_out * kk,
+            1,
+            &gcols[gi * g.cpg_out * kk * g.hw_in()..],
+            g.hw_in(),
+            1,
+            &mut gxs[gi * g.cpg_in * g.hw_in()..],
+            g.hw_in(),
+            pa,
+            pb,
+        );
+    }
+}
+
+/// One sample's weight-gradient contribution, accumulated into `gw` rows
+/// `[oc0, oc0+m)` (all inside one group `gi`): GEMM with the reduction
+/// over this sample's spatial positions, extending each element's chain.
+#[allow(clippy::too_many_arguments)]
+fn gw_accum(
+    gs_sample: &[f32],
+    cols_t_or_x: &[f32],
+    rs_b: usize,
+    cs_b: usize,
+    g: BwdGeom,
+    oc0: usize,
+    m: usize,
+    gw_rows: &mut [f32],
+    pa: &mut Vec<f32>,
+    pb: &mut Vec<f32>,
+) {
+    gemm::gemm(
+        m,
+        g.kw_g(),
+        g.n(),
+        &gs_sample[oc0 * g.n()..],
+        g.n(),
+        1,
+        cols_t_or_x,
+        rs_b,
+        cs_b,
+        gw_rows,
+        g.kw_g(),
+        pa,
+        pb,
+    );
+}
+
+/// Backward of [`conv2d`]: gradients wrt input and weights, both via the
+/// shared GEMM micro-kernel.
 ///
-/// When the pool fans out: two ownership-partitioned passes instead of
-/// one fused loop — `gx` chunked per batch sample (a sample's input grad
-/// only reads its own `gout` rows) and `gw` per out-channel (a weight
-/// element only accumulates from its own out-channel). Within a chunk
-/// the loop nest visits every accumulator in the fused scalar loop's
-/// order, so both outputs are bit-identical to the fused loop at any
-/// thread count — there is no cross-thread reduction to reassociate.
-/// Below the fan-out threshold the original fused single pass runs
-/// instead (same bits, no duplicate traversal cost).
+/// * `gx` — per sample: gather `gout` into flipped-kernel columns
+///   ([`gx_cols`]) and multiply by the flipped/transposed weights. The
+///   reduction order `(oc, khf, kwf)` equals the fused scalar loop's
+///   `(oc, oh, ow)` accumulation order per element.
+/// * `gw` — reduction over `(bi, oh, ow)` ascending: an ordered fold of
+///   per-sample GEMMs over the transposed im2col slab ([`im2col`] with
+///   a `(1, cin*k*k)` output stride),
+///   exactly the fused loop's order per weight element.
+///
+/// The parallel form partitions `gx` per sample and `gw` per
+/// out-channel block (ownership-partitioned, no shared accumulators);
+/// the sub-threshold sequential form walks samples in order with the
+/// same GEMMs. Both are bit-identical to the retained scalar reference
+/// at any thread count. Neither form takes the scalar reference's
+/// `g == 0.0` shortcut; that skip is bit-neutral (an `acc += w*g` chain
+/// never holds -0.0, so adding the skipped ±0.0 products changes no
+/// bits) and `tests/parallel.rs` pins the equivalence on gradients
+/// containing exact zeros and -0.0.
 pub fn conv2d_bwd(
     x: &Tensor,
     w: &Tensor,
@@ -230,167 +539,343 @@ pub fn conv2d_bwd(
     let cpg_out = cout / groups;
     let (ho, pad_h) = same_pads(h, k, stride);
     let (wo, pad_w) = same_pads(wd, k, stride);
+    let g = BwdGeom {
+        b,
+        cin,
+        h,
+        wd,
+        cout,
+        cpg_in,
+        cpg_out,
+        k,
+        stride,
+        groups,
+        ho,
+        wo,
+        pad_h,
+        pad_w,
+    };
+    let (n, hw_in, kw_g, kw_all) = (g.n(), g.hw_in(), g.kw_g(), g.kw_all());
+    let kk = k * k;
+    let gsz = cpg_in * cpg_out * kk;
     let mut gx = vec![0f32; x.data.len()];
     let mut gw = vec![0f32; w.data.len()];
-    let work = gout.data.len().saturating_mul(cpg_in * k * k);
+    let work = gout.data.len().saturating_mul(kw_g);
+
     if !pool::active(work) {
-        // fused sequential pass (the parity tests pin the two-pass
-        // parallel form bitwise against exactly this loop)
-        for bi in 0..b {
-            for oc in 0..cout {
-                let gi = oc / cpg_out;
-                let wbase = oc * cpg_in * k * k;
-                for oh in 0..ho {
-                    let ih0 = (oh * stride) as i64 - pad_h;
-                    for ow in 0..wo {
-                        let iw0 = (ow * stride) as i64 - pad_w;
-                        let g = gout.data
-                            [((bi * cout + oc) * ho + oh) * wo + ow];
-                        if g == 0.0 {
-                            continue;
-                        }
-                        for ic in 0..cpg_in {
-                            let ci = gi * cpg_in + ic;
-                            let xb = (bi * cin + ci) * h;
-                            let wb = wbase + ic * k * k;
-                            for kh in 0..k {
-                                let ih = ih0 + kh as i64;
-                                if ih < 0 || ih >= h as i64 {
-                                    continue;
-                                }
-                                let xrow = (xb + ih as usize) * wd;
-                                let wrow = wb + kh * k;
-                                for kw in 0..k {
-                                    let iw = iw0 + kw as i64;
-                                    if iw < 0 || iw >= wd as i64 {
-                                        continue;
-                                    }
-                                    gx[xrow + iw as usize] +=
-                                        w.data[wrow + kw] * g;
-                                    gw[wrow + kw] +=
-                                        x.data[xrow + iw as usize] * g;
-                                }
-                            }
-                        }
+        // sequential: same GEMMs, batch samples walked in order
+        pool::with_scratch(|s| {
+            let pool::Scratch {
+                im2col: gcols_buf,
+                cols_t,
+                wpack,
+                pack_a,
+                pack_b,
+            } = s;
+            let wf_all: &[f32] = if g.direct() {
+                &[]
+            } else {
+                let wf = pool::grab_dirty(wpack, w.data.len());
+                for gi in 0..groups {
+                    pack_wflip(
+                        &w.data,
+                        gi,
+                        cpg_out,
+                        cpg_in,
+                        k,
+                        &mut wf[gi * gsz..],
+                    );
+                }
+                wf
+            };
+            for bi in 0..b {
+                let gs = gout.row0(bi);
+                let xs = x.row0(bi);
+                gx_sample(
+                    gs,
+                    w,
+                    wf_all,
+                    g,
+                    &mut gx[bi * cin * hw_in..],
+                    gcols_buf,
+                    pack_a,
+                    pack_b,
+                );
+                if g.direct() {
+                    for gi in 0..groups {
+                        gw_accum(
+                            gs,
+                            &xs[gi * cpg_in * hw_in..],
+                            1,
+                            hw_in,
+                            g,
+                            gi * cpg_out,
+                            cpg_out,
+                            &mut gw[gi * cpg_out * kw_g..],
+                            pack_a,
+                            pack_b,
+                        );
+                    }
+                } else {
+                    let ct = pool::grab(cols_t, n * kw_all);
+                    im2col(
+                        xs, cin, h, wd, k, stride, ho, wo, pad_h, pad_w, 1,
+                        kw_all, ct,
+                    );
+                    for gi in 0..groups {
+                        gw_accum(
+                            gs,
+                            &ct[gi * kw_g..],
+                            kw_all,
+                            1,
+                            g,
+                            gi * cpg_out,
+                            cpg_out,
+                            &mut gw[gi * cpg_out * kw_g..],
+                            pack_a,
+                            pack_b,
+                        );
                     }
                 }
             }
-        }
+        });
         return (
             Tensor::new(x.shape.clone(), gx),
             Tensor::new(w.shape.clone(), gw),
         );
     }
-    let sample = cin * h * wd;
-    pool::par_chunks_mut(&mut gx, sample, work, |bi, gxs| {
-        for oc in 0..cout {
-            let gi = oc / cpg_out;
-            let wbase = oc * cpg_in * k * k;
-            for oh in 0..ho {
-                let ih0 = (oh * stride) as i64 - pad_h;
-                for ow in 0..wo {
-                    let iw0 = (ow * stride) as i64 - pad_w;
-                    let g = gout.data[((bi * cout + oc) * ho + oh) * wo + ow];
-                    if g == 0.0 {
-                        continue;
-                    }
-                    for ic in 0..cpg_in {
-                        let ci = gi * cpg_in + ic;
-                        let wb = wbase + ic * k * k;
-                        for kh in 0..k {
-                            let ih = ih0 + kh as i64;
-                            if ih < 0 || ih >= h as i64 {
-                                continue;
-                            }
-                            let xrow = (ci * h + ih as usize) * wd;
-                            let wrow = wb + kh * k;
-                            for kw in 0..k {
-                                let iw = iw0 + kw as i64;
-                                if iw < 0 || iw >= wd as i64 {
-                                    continue;
-                                }
-                                gxs[xrow + iw as usize] +=
-                                    w.data[wrow + kw] * g;
-                            }
+
+    // Parallel form, in batch chunks so the shared transposed-im2col
+    // slab is bounded (~SLAB_CAP f32s) regardless of batch size. Chunks
+    // run in batch order and phase B accumulates into `gw` across them,
+    // so every weight-gradient element still folds its samples strictly
+    // ascending — the fused scalar loop's order, bit-for-bit.
+    //
+    // The flipped-weight operand is packed once, up front, and shared
+    // read-only by every phase-A job.
+    const SLAB_CAP: usize = 1 << 24; // f32 elements (~64 MB)
+    let wf_all = if g.direct() {
+        Vec::new()
+    } else {
+        let mut v = pool::take_shared(w.data.len());
+        for gi in 0..groups {
+            pack_wflip(&w.data, gi, cpg_out, cpg_in, k, &mut v[gi * gsz..]);
+        }
+        v
+    };
+    let bc = if g.direct() {
+        b
+    } else {
+        (SLAB_CAP / (n * kw_all).max(1)).clamp(1, b)
+    };
+    // Zeroed once: the padded-tap positions of the slab are the same for
+    // every sample, so later chunks only ever overwrite live entries.
+    let mut cols_t = if g.direct() {
+        Vec::new()
+    } else {
+        pool::take_shared(bc * n * kw_all)
+    };
+    for c0 in (0..b).step_by(bc) {
+        let clen = bc.min(b - c0);
+        // Phase A — per-sample jobs: gx GEMM, plus (when needed) this
+        // sample's transposed-im2col slab slot for phase B.
+        let gx_chunk = &mut gx[c0 * cin * hw_in..(c0 + clen) * cin * hw_in];
+        if g.direct() {
+            pool::par_chunks_mut(gx_chunk, cin * hw_in, work, |ci, gxs| {
+                pool::with_scratch(|s| {
+                    let gs = gout.row0(c0 + ci);
+                    gx_sample(
+                        gs,
+                        w,
+                        &wf_all,
+                        g,
+                        gxs,
+                        &mut s.im2col,
+                        &mut s.pack_a,
+                        &mut s.pack_b,
+                    );
+                });
+            });
+        } else {
+            pool::par_chunks2_mut(
+                gx_chunk,
+                cin * hw_in,
+                &mut cols_t[..clen * n * kw_all],
+                n * kw_all,
+                work,
+                |ci, gxs, ct| {
+                    pool::with_scratch(|s| {
+                        let gs = gout.row0(c0 + ci);
+                        let xs = x.row0(c0 + ci);
+                        gx_sample(
+                            gs,
+                            w,
+                            &wf_all,
+                            g,
+                            gxs,
+                            &mut s.im2col,
+                            &mut s.pack_a,
+                            &mut s.pack_b,
+                        );
+                        im2col(
+                            xs, cin, h, wd, k, stride, ho, wo, pad_h, pad_w,
+                            1, kw_all, ct,
+                        );
+                    });
+                },
+            );
+        }
+
+        // Phase B — gw in out-channel blocks: each job owns a row block
+        // and folds this chunk's samples in ascending order (the scalar
+        // order, continued across chunks).
+        pool::par_chunks_mut(&mut gw, gemm::MR * kw_g, work, |ci, gwr| {
+            pool::with_scratch(|s| {
+                let o0 = ci * gemm::MR;
+                let mrows = gwr.len() / kw_g;
+                let mut r = 0;
+                while r < mrows {
+                    let oc = o0 + r;
+                    let gi = oc / cpg_out;
+                    let m = ((gi + 1) * cpg_out - oc).min(mrows - r);
+                    for bl in 0..clen {
+                        let gs = gout.row0(c0 + bl);
+                        if g.direct() {
+                            let xs = x.row0(c0 + bl);
+                            gw_accum(
+                                gs,
+                                &xs[gi * cpg_in * hw_in..],
+                                1,
+                                hw_in,
+                                g,
+                                oc,
+                                m,
+                                &mut gwr[r * kw_g..],
+                                &mut s.pack_a,
+                                &mut s.pack_b,
+                            );
+                        } else {
+                            gw_accum(
+                                gs,
+                                &cols_t[bl * n * kw_all + gi * kw_g..],
+                                kw_all,
+                                1,
+                                g,
+                                oc,
+                                m,
+                                &mut gwr[r * kw_g..],
+                                &mut s.pack_a,
+                                &mut s.pack_b,
+                            );
                         }
                     }
+                    r += m;
                 }
-            }
-        }
-    });
-    pool::par_chunks_mut(&mut gw, cpg_in * k * k, work, |oc, gws| {
-        let gi = oc / cpg_out;
-        for bi in 0..b {
-            for oh in 0..ho {
-                let ih0 = (oh * stride) as i64 - pad_h;
-                for ow in 0..wo {
-                    let iw0 = (ow * stride) as i64 - pad_w;
-                    let g = gout.data[((bi * cout + oc) * ho + oh) * wo + ow];
-                    if g == 0.0 {
-                        continue;
-                    }
-                    for ic in 0..cpg_in {
-                        let ci = gi * cpg_in + ic;
-                        let xb = (bi * cin + ci) * h;
-                        let wb = ic * k * k;
-                        for kh in 0..k {
-                            let ih = ih0 + kh as i64;
-                            if ih < 0 || ih >= h as i64 {
-                                continue;
-                            }
-                            let xrow = (xb + ih as usize) * wd;
-                            let wrow = wb + kh * k;
-                            for kw in 0..k {
-                                let iw = iw0 + kw as i64;
-                                if iw < 0 || iw >= wd as i64 {
-                                    continue;
-                                }
-                                gws[wrow + kw] +=
-                                    x.data[xrow + iw as usize] * g;
-                            }
-                        }
-                    }
-                }
-            }
-        }
-    });
+            });
+        });
+    }
+    if !g.direct() {
+        pool::give_shared(cols_t);
+        pool::give_shared(wf_all);
+    }
     (
         Tensor::new(x.shape.clone(), gx),
         Tensor::new(w.shape.clone(), gw),
     )
 }
 
-/// x (B, Cin) @ w (Cout, Cin)^T.
-pub(crate) fn fc_fwd(x: &Tensor, w: &Tensor) -> Tensor {
+/// Per-job row count for partitioning a (B, ...) matrix across the pool:
+/// about two chunks per thread.
+fn row_grain(rows: usize) -> usize {
+    rows.div_ceil(pool::threads().max(1) * 2).max(1)
+}
+
+/// x (B, Cin) @ w (Cout, Cin)^T — GEMM with `w` viewed transposed.
+/// Reduction over `Cin` ascending: the scalar loop's order.
+pub fn fc_fwd(x: &Tensor, w: &Tensor) -> Tensor {
     let (b, cin) = (x.shape[0], x.shape[1]);
     let cout = w.shape[0];
     let mut out = vec![0f32; b * cout];
-    for bi in 0..b {
-        for oc in 0..cout {
-            let mut acc = 0f32;
-            for i in 0..cin {
-                acc += x.data[bi * cin + i] * w.data[oc * cin + i];
-            }
-            out[bi * cout + oc] = acc;
-        }
-    }
+    let work = out.len().saturating_mul(cin);
+    let rows = row_grain(b);
+    pool::par_chunks_mut(&mut out, rows * cout, work, |ci, orows| {
+        pool::with_scratch(|s| {
+            let r0 = ci * rows;
+            let m = orows.len() / cout;
+            gemm::gemm(
+                m,
+                cout,
+                cin,
+                &x.data[r0 * cin..],
+                cin,
+                1,
+                &w.data,
+                1,
+                cin,
+                orows,
+                cout,
+                &mut s.pack_a,
+                &mut s.pack_b,
+            );
+        });
+    });
     Tensor::new(vec![b, cout], out)
 }
 
-fn fc_bwd(x: &Tensor, w: &Tensor, gout: &Tensor) -> (Tensor, Tensor) {
+/// Backward of [`fc_fwd`]: `gx = g @ w` (reduction over `Cout`
+/// ascending) and `gw = g^T @ x` (reduction over the batch ascending) —
+/// both exactly the fused scalar loop's per-element accumulation order,
+/// partitioned over output rows.
+pub fn fc_bwd(x: &Tensor, w: &Tensor, gout: &Tensor) -> (Tensor, Tensor) {
     let (b, cin) = (x.shape[0], x.shape[1]);
     let cout = w.shape[0];
     let mut gx = vec![0f32; b * cin];
     let mut gw = vec![0f32; cout * cin];
-    for bi in 0..b {
-        for oc in 0..cout {
-            let g = gout.data[bi * cout + oc];
-            for i in 0..cin {
-                gx[bi * cin + i] += g * w.data[oc * cin + i];
-                gw[oc * cin + i] += g * x.data[bi * cin + i];
-            }
-        }
-    }
+    let work = (b * cout).saturating_mul(cin);
+    let rows = row_grain(b);
+    pool::par_chunks_mut(&mut gx, rows * cin, work, |ci, gxr| {
+        pool::with_scratch(|s| {
+            let r0 = ci * rows;
+            let m = gxr.len() / cin;
+            gemm::gemm(
+                m,
+                cin,
+                cout,
+                &gout.data[r0 * cout..],
+                cout,
+                1,
+                &w.data,
+                cin,
+                1,
+                gxr,
+                cin,
+                &mut s.pack_a,
+                &mut s.pack_b,
+            );
+        });
+    });
+    let orows = row_grain(cout);
+    pool::par_chunks_mut(&mut gw, orows * cin, work, |ci, gwr| {
+        pool::with_scratch(|s| {
+            let o0 = ci * orows;
+            let m = gwr.len() / cin;
+            gemm::gemm(
+                m,
+                cin,
+                b,
+                &gout.data[o0..],
+                1,
+                cout,
+                &x.data,
+                cin,
+                1,
+                gwr,
+                cin,
+                &mut s.pack_a,
+                &mut s.pack_b,
+            );
+        });
+    });
     (
         Tensor::new(x.shape.clone(), gx),
         Tensor::new(w.shape.clone(), gw),

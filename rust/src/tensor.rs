@@ -76,6 +76,13 @@ impl Tensor {
             .collect()
     }
 
+    /// Borrow row `i` of the leading dimension (no copy) — the native
+    /// kernels' per-sample view.
+    pub fn row0(&self, i: usize) -> &[f32] {
+        let inner = self.inner();
+        &self.data[i * inner..(i + 1) * inner]
+    }
+
     /// Slice of the leading dimension: rows [start, start+len).
     pub fn slice0(&self, start: usize, len: usize) -> Tensor {
         let inner = self.inner();
@@ -142,6 +149,13 @@ mod tests {
         let a = t.slice0(0, 2);
         let b = t.slice0(2, 2);
         assert_eq!(Tensor::stack0(&[a, b]), t);
+    }
+
+    #[test]
+    fn row0_borrows_leading_rows() {
+        let t = Tensor::new(vec![3, 2], (0..6).map(|x| x as f32).collect());
+        assert_eq!(t.row0(0), &[0.0, 1.0]);
+        assert_eq!(t.row0(2), &[4.0, 5.0]);
     }
 
     #[test]

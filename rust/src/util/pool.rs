@@ -27,8 +27,9 @@
 //! on their worker, so a parallel `advance` over calibration batches does
 //! not multiply threads with the parallel conv kernels it dispatches).
 
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Minimum estimated scalar-op count before a region fans out. Below this
 /// the scoped-spawn overhead outweighs the parallel win.
@@ -159,6 +160,51 @@ where
     });
 }
 
+/// Like [`par_chunks_mut`] but over two buffers partitioned in lockstep:
+/// job `i` receives chunk `i` of `a` (chunks of `ca` elements) and chunk
+/// `i` of `b` (chunks of `cb` elements). Both partitions must produce the
+/// same number of chunks. The kernels use this to fill an output tensor
+/// and a shared scratch slab (e.g. per-sample im2col panels) in one
+/// ownership-partitioned region.
+pub fn par_chunks2_mut<T, U, F>(
+    a: &mut [T],
+    ca: usize,
+    b: &mut [U],
+    cb: usize,
+    work: usize,
+    f: F,
+) where
+    T: Send,
+    U: Send,
+    F: Fn(usize, &mut [T], &mut [U]) + Sync,
+{
+    let ca = ca.max(1);
+    let cb = cb.max(1);
+    let (la, lb) = (a.len(), b.len());
+    let nchunks = la.div_ceil(ca);
+    assert_eq!(
+        nchunks,
+        lb.div_ceil(cb),
+        "par_chunks2_mut: chunk counts differ"
+    );
+    let pa = SendPtr(a.as_mut_ptr());
+    let pb = SendPtr(b.as_mut_ptr());
+    run_jobs(nchunks, 1, work, &|ci| {
+        let (sa, ea) = (ci * ca, (ci * ca + ca).min(la));
+        let (sb, eb) = (ci * cb, (ci * cb + cb).min(lb));
+        // SAFETY: as in `par_chunks_mut` — chunk ranges are pairwise
+        // disjoint per buffer, each claimed by exactly one job, and both
+        // buffers outlive the scoped workers inside `run_jobs`.
+        let (sl_a, sl_b) = unsafe {
+            (
+                std::slice::from_raw_parts_mut(pa.0.add(sa), ea - sa),
+                std::slice::from_raw_parts_mut(pb.0.add(sb), eb - sb),
+            )
+        };
+        f(ci, sl_a, sl_b);
+    });
+}
+
 /// Compute `f(i)` for `i in 0..n` on the pool and return the results in
 /// index order. `grain` consecutive indices form one queue item.
 pub fn par_fill<T, F>(n: usize, grain: usize, work: usize, f: F) -> Vec<T>
@@ -179,10 +225,167 @@ where
         .collect()
 }
 
+// ------------------------------------------------------------------
+// Per-worker scratch arenas
+// ------------------------------------------------------------------
+
+/// Reusable f32 scratch buffers for the GEMM-backed kernels, one set per
+/// thread (see [`with_scratch`]). Field names describe the typical role;
+/// any kernel may repurpose a slot as long as it holds at most one live
+/// [`grab`] borrow per slot at a time (the borrow checker enforces this
+/// through the destructured fields).
+#[derive(Default)]
+pub struct Scratch {
+    /// im2col panels (forward cols / backward gradient cols).
+    pub im2col: Vec<f32>,
+    /// Transposed im2col slab (weight-gradient reduction operand).
+    pub cols_t: Vec<f32>,
+    /// Packed/flipped weight operand.
+    pub wpack: Vec<f32>,
+    /// GEMM packed A panels.
+    pub pack_a: Vec<f32>,
+    /// GEMM packed B panels.
+    pub pack_b: Vec<f32>,
+}
+
+/// Scratch sets recycled across pool regions. Workers are scoped threads
+/// that die at the end of every parallel region, so a plain `thread_local`
+/// would re-allocate its buffers on each region; instead each thread
+/// checks a `Scratch` out of this arena on first use and its thread-local
+/// destructor returns it when the thread exits. Steady state: the arena
+/// holds one warm set per historical worker and no `grab` ever allocates.
+static RECYCLE: Mutex<Vec<Scratch>> = Mutex::new(Vec::new());
+
+/// Shared (cross-worker) f32 slabs, checked out with [`take_shared`] and
+/// returned with [`give_shared`] — used for buffers one region fills and
+/// a later region reads (disjoint-chunk writes, shared reads).
+static SHARED: Mutex<Vec<Vec<f32>>> = Mutex::new(Vec::new());
+
+/// Scratch requests served without growing a buffer (capacity hit).
+static SCRATCH_REUSES: AtomicUsize = AtomicUsize::new(0);
+/// Scratch requests that had to allocate or grow a buffer.
+static SCRATCH_ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+/// Caps on the recycle arenas so a pathological thread storm cannot pin
+/// unbounded memory; excess sets are simply dropped.
+const RECYCLE_CAP: usize = 64;
+const SHARED_CAP: usize = 8;
+
+struct ScratchCell(RefCell<Option<Scratch>>);
+
+impl Drop for ScratchCell {
+    fn drop(&mut self) {
+        if let Some(s) = self.0.borrow_mut().take() {
+            let mut r = RECYCLE.lock().unwrap_or_else(|e| e.into_inner());
+            if r.len() < RECYCLE_CAP {
+                r.push(s);
+            }
+        }
+    }
+}
+
+thread_local! {
+    static SCRATCH: ScratchCell = ScratchCell(RefCell::new(None));
+}
+
+/// Run `f` with this thread's [`Scratch`] set (checked out of the recycle
+/// arena on first use). Do not call re-entrantly from inside `f` — each
+/// kernel entry point takes the scratch exactly once per job.
+pub fn with_scratch<R>(f: impl FnOnce(&mut Scratch) -> R) -> R {
+    SCRATCH.with(|cell| {
+        let mut slot = cell.0.borrow_mut();
+        if slot.is_none() {
+            let recycled = RECYCLE
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .pop()
+                .unwrap_or_default();
+            *slot = Some(recycled);
+        }
+        f(slot.as_mut().expect("scratch checked out above"))
+    })
+}
+
+/// Resize `buf` to exactly `len` zeroed elements and hand it out as a
+/// slice, counting whether the request was served from existing capacity
+/// (reuse) or had to allocate. Callers that fully overwrite the buffer
+/// pay one memset; callers that need a zero background rely on it.
+pub fn grab(buf: &mut Vec<f32>, len: usize) -> &mut [f32] {
+    if buf.capacity() >= len {
+        SCRATCH_REUSES.fetch_add(1, Ordering::Relaxed);
+    } else {
+        SCRATCH_ALLOCS.fetch_add(1, Ordering::Relaxed);
+    }
+    buf.clear();
+    buf.resize(len, 0.0);
+    &mut buf[..]
+}
+
+/// Like [`grab`] but without the zeroing pass: contents are stale from
+/// the previous use. Only for callers that overwrite every element they
+/// read (e.g. the GEMM panel packers, which zero their own pad lanes).
+pub fn grab_dirty(buf: &mut Vec<f32>, len: usize) -> &mut [f32] {
+    if buf.capacity() >= len {
+        SCRATCH_REUSES.fetch_add(1, Ordering::Relaxed);
+    } else {
+        SCRATCH_ALLOCS.fetch_add(1, Ordering::Relaxed);
+    }
+    if buf.len() < len {
+        buf.resize(len, 0.0);
+    }
+    &mut buf[..len]
+}
+
+/// Check a zeroed `len`-element slab out of the shared arena (the
+/// best-fitting warm buffer, or a fresh allocation). Pair with
+/// [`give_shared`].
+pub fn take_shared(len: usize) -> Vec<f32> {
+    let mut pool = SHARED.lock().unwrap_or_else(|e| e.into_inner());
+    // prefer the smallest buffer that already fits
+    let mut pick: Option<usize> = None;
+    for (i, b) in pool.iter().enumerate() {
+        if b.capacity() >= len
+            && pick.is_none_or(|p| b.capacity() < pool[p].capacity())
+        {
+            pick = Some(i);
+        }
+    }
+    let mut buf = match pick {
+        Some(i) => pool.swap_remove(i),
+        None => pool.pop().unwrap_or_default(),
+    };
+    drop(pool);
+    if buf.capacity() >= len {
+        SCRATCH_REUSES.fetch_add(1, Ordering::Relaxed);
+    } else {
+        SCRATCH_ALLOCS.fetch_add(1, Ordering::Relaxed);
+    }
+    buf.clear();
+    buf.resize(len, 0.0);
+    buf
+}
+
+/// Return a slab taken with [`take_shared`] to the arena.
+pub fn give_shared(buf: Vec<f32>) {
+    let mut pool = SHARED.lock().unwrap_or_else(|e| e.into_inner());
+    if pool.len() < SHARED_CAP {
+        pool.push(buf);
+    }
+}
+
+/// (allocations, capacity-hits) across every scratch request since process
+/// start. `tests/parallel.rs` asserts the alloc counter stops moving once
+/// the kernels are warm — the zero-steady-state-allocation guarantee.
+pub fn scratch_counters() -> (usize, usize) {
+    (
+        SCRATCH_ALLOCS.load(Ordering::Relaxed),
+        SCRATCH_REUSES.load(Ordering::Relaxed),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::Mutex;
 
     /// The pool size is process-global and libtest runs tests
     /// concurrently — serialize every test that calls `set_threads` so
@@ -243,6 +446,62 @@ mod tests {
         let v = par_fill(4, 1, 10, |i| i + 1);
         assert_eq!(v, vec![1, 2, 3, 4]);
         set_threads(0);
+    }
+
+    #[test]
+    fn par_chunks2_partitions_both_buffers_in_lockstep() {
+        let _g = lock();
+        set_threads(4);
+        let mut a = vec![0usize; 10];
+        let mut b = vec![0usize; 25];
+        par_chunks2_mut(&mut a, 2, &mut b, 5, usize::MAX, |ci, ca, cb| {
+            for v in ca.iter_mut() {
+                *v = ci + 1;
+            }
+            for v in cb.iter_mut() {
+                *v = 10 * (ci + 1);
+            }
+        });
+        assert_eq!(a, vec![1, 1, 2, 2, 3, 3, 4, 4, 5, 5]);
+        assert_eq!(b[0..5], [10; 5]);
+        assert_eq!(b[20..25], [50; 5]);
+        set_threads(0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn par_chunks2_rejects_mismatched_chunk_counts() {
+        let mut a = vec![0usize; 10]; // 5 chunks of 2
+        let mut b = vec![0usize; 9]; // 3 chunks of 3
+        par_chunks2_mut(&mut a, 2, &mut b, 3, 0, |_, _, _| {});
+    }
+
+    /// Note: the strict "warm kernels allocate zero" property is asserted
+    /// in `tests/parallel.rs`, where the counters are serialized; here
+    /// (concurrent lib tests share the globals) only monotone facts hold.
+    #[test]
+    fn scratch_grab_reuses_capacity() {
+        let (a0, r0) = scratch_counters();
+        let mut buf = Vec::new();
+        let s = grab(&mut buf, 64);
+        s[0] = 1.0;
+        // second grab of the same size: capacity hit, zeroed contents
+        let s = grab(&mut buf, 64);
+        assert_eq!(s[0], 0.0, "grab must re-zero");
+        let (a1, r1) = scratch_counters();
+        assert!(a1 > a0, "first grab must allocate");
+        assert!(r1 > r0, "warm grab must count as a reuse");
+    }
+
+    #[test]
+    fn shared_slabs_recycle() {
+        let buf = take_shared(128);
+        assert_eq!(buf.len(), 128);
+        give_shared(buf);
+        let buf = take_shared(100);
+        assert!(buf.capacity() >= 128, "warm slab should be reused");
+        assert!(buf.iter().all(|&v| v == 0.0));
+        give_shared(buf);
     }
 
     #[test]

@@ -12,7 +12,7 @@ use std::sync::Mutex;
 use brecq::coordinator::Env;
 use brecq::eval::{accuracy, EvalParams};
 use brecq::recon::{BitConfig, Calibrator, ReconConfig};
-use brecq::runtime::native::{conv2d, conv2d_bwd};
+use brecq::runtime::native::{conv2d, conv2d_bwd, fc_bwd, fc_fwd};
 use brecq::tensor::Tensor;
 use brecq::util::pool;
 use brecq::util::rng::Rng;
@@ -31,6 +31,20 @@ fn lock_pool() -> std::sync::MutexGuard<'static, ()> {
 fn randn(rng: &mut Rng, shape: Vec<usize>, scale: f32) -> Tensor {
     let n: usize = shape.iter().product();
     Tensor::new(shape, (0..n).map(|_| rng.gauss() as f32 * scale).collect())
+}
+
+/// Overwrite a deterministic sprinkling of elements with the IEEE edge
+/// values the GEMM paths must fold bit-exactly: ±0.0 and ±denormals.
+fn inject_specials(t: &mut Tensor) {
+    for (i, v) in t.data.iter_mut().enumerate() {
+        match i % 13 {
+            2 => *v = 0.0,
+            5 => *v = -0.0,
+            7 => *v = 1e-42,   // subnormal
+            11 => *v = -1e-42, // negative subnormal
+            _ => {}
+        }
+    }
 }
 
 fn bits_of(t: &Tensor) -> Vec<u32> {
@@ -155,12 +169,18 @@ fn conv2d_bwd_ref(
 
 /// (b, cin, cout, k, stride, groups, h, w) — the larger cases clear the
 /// pool's MIN_PAR_WORK threshold so fan-out actually engages; the tiny
-/// one exercises the inline path.
-const CASES: [(usize, usize, usize, usize, usize, usize, usize, usize); 4] = [
+/// one exercises the inline path. The GEMM rewrite adds: k=1 above the
+/// fan-out threshold (the direct no-im2col path), grouped stride-2, and
+/// a group width that is not a multiple of the micro-tile (the gw
+/// phase's row chunks then straddle group boundaries).
+const CASES: [(usize, usize, usize, usize, usize, usize, usize, usize); 7] = [
     (4, 8, 8, 3, 1, 1, 12, 12),
     (2, 16, 16, 3, 2, 1, 16, 16),
     (4, 16, 16, 3, 1, 16, 16, 16), // depthwise
     (1, 3, 4, 1, 1, 1, 5, 5),      // tiny: inline path
+    (4, 16, 16, 1, 1, 1, 16, 16),  // k=1 s1: direct path, above threshold
+    (4, 16, 16, 3, 2, 2, 17, 17),  // grouped stride-2, odd spatial
+    (4, 6, 9, 3, 1, 3, 16, 16),    // cpg_out=3: row chunks cross groups
 ];
 
 #[test]
@@ -169,8 +189,10 @@ fn prop_parallel_conv2d_bitwise_matches_scalar_reference() {
     for seed in 0..6 {
         for &(b, cin, cout, k, stride, groups, h, w) in &CASES {
             let mut rng = Rng::new(7000 + seed);
-            let x = randn(&mut rng, vec![b, cin, h, w], 1.0);
-            let wt = randn(&mut rng, vec![cout, cin / groups, k, k], 0.3);
+            let mut x = randn(&mut rng, vec![b, cin, h, w], 1.0);
+            let mut wt = randn(&mut rng, vec![cout, cin / groups, k, k], 0.3);
+            inject_specials(&mut x);
+            inject_specials(&mut wt);
             let want = conv2d_ref(&x, &wt, stride, groups);
             for nt in [1usize, 2, 8] {
                 pool::set_threads(nt);
@@ -194,11 +216,15 @@ fn prop_parallel_conv2d_bwd_bitwise_matches_scalar_reference() {
     for seed in 0..6 {
         for &(b, cin, cout, k, stride, groups, h, w) in &CASES {
             let mut rng = Rng::new(8000 + seed);
-            let x = randn(&mut rng, vec![b, cin, h, w], 1.0);
-            let wt = randn(&mut rng, vec![cout, cin / groups, k, k], 0.3);
+            let mut x = randn(&mut rng, vec![b, cin, h, w], 1.0);
+            let mut wt = randn(&mut rng, vec![cout, cin / groups, k, k], 0.3);
+            inject_specials(&mut x);
+            inject_specials(&mut wt);
             let gout = {
                 let probe = conv2d_ref(&x, &wt, stride, groups);
-                randn(&mut rng, probe.shape.clone(), 1.0)
+                let mut g = randn(&mut rng, probe.shape.clone(), 1.0);
+                inject_specials(&mut g);
+                g
             };
             let (gx_ref, gw_ref) =
                 conv2d_bwd_ref(&x, &wt, stride, groups, &gout);
@@ -221,6 +247,175 @@ fn prop_parallel_conv2d_bwd_bitwise_matches_scalar_reference() {
             pool::set_threads(0);
         }
     }
+}
+
+/// Regression for the `g == 0.0` early-continue asymmetry: the scalar
+/// reference skips zero output-gradients, the GEMM paths never do. The
+/// skipped products are all ±0.0, and folding them in order is
+/// bit-neutral (an `acc += p` chain starting from +0.0 can never hold
+/// -0.0), so gradients stuffed with exact +0.0 and -0.0 — relu masks —
+/// must still round-trip bit-identically through both the sequential and
+/// the fanned-out backward at every thread count.
+#[test]
+fn conv2d_bwd_zero_gradient_skip_is_bit_neutral() {
+    let _g = lock_pool();
+    for &(b, cin, cout, k, stride, groups, h, w) in &CASES {
+        let mut rng = Rng::new(4400);
+        let mut x = randn(&mut rng, vec![b, cin, h, w], 1.0);
+        let mut wt = randn(&mut rng, vec![cout, cin / groups, k, k], 0.3);
+        inject_specials(&mut x);
+        inject_specials(&mut wt);
+        let probe = conv2d_ref(&x, &wt, stride, groups);
+        // ~2/3 of the gradient exactly zero, alternating +0.0 / -0.0
+        let mut gout = randn(&mut rng, probe.shape.clone(), 1.0);
+        for (i, v) in gout.data.iter_mut().enumerate() {
+            match i % 3 {
+                0 => *v = 0.0,
+                1 => *v = -0.0,
+                _ => {}
+            }
+        }
+        let (gx_ref, gw_ref) = conv2d_bwd_ref(&x, &wt, stride, groups, &gout);
+        for nt in [1usize, 2, 8] {
+            pool::set_threads(nt);
+            let (gx, gw) = conv2d_bwd(&x, &wt, stride, groups, &gout);
+            assert_eq!(
+                bits_of(&gx),
+                bits_of(&gx_ref),
+                "gx zero-skip nt {nt} case {b}x{cin}->{cout} k{k} \
+                 s{stride} g{groups}"
+            );
+            assert_eq!(
+                bits_of(&gw),
+                bits_of(&gw_ref),
+                "gw zero-skip nt {nt} case {b}x{cin}->{cout} k{k} \
+                 s{stride} g{groups}"
+            );
+        }
+        // the fully-zero gradient: every output bit must be +0.0
+        let zero = Tensor::zeros(probe.shape.clone());
+        pool::set_threads(4);
+        let (gx, gw) = conv2d_bwd(&x, &wt, stride, groups, &zero);
+        assert!(gx.data.iter().all(|v| v.to_bits() == 0));
+        assert!(gw.data.iter().all(|v| v.to_bits() == 0));
+        pool::set_threads(0);
+    }
+}
+
+/// Scalar reference for fc_fwd: the pre-GEMM loop.
+fn fc_fwd_ref(x: &Tensor, w: &Tensor) -> Tensor {
+    let (b, cin) = (x.shape[0], x.shape[1]);
+    let cout = w.shape[0];
+    let mut out = vec![0f32; b * cout];
+    for bi in 0..b {
+        for oc in 0..cout {
+            let mut acc = 0f32;
+            for i in 0..cin {
+                acc += x.data[bi * cin + i] * w.data[oc * cin + i];
+            }
+            out[bi * cout + oc] = acc;
+        }
+    }
+    Tensor::new(vec![b, cout], out)
+}
+
+/// Scalar reference for fc_bwd: the fused pre-GEMM loop.
+fn fc_bwd_ref(x: &Tensor, w: &Tensor, gout: &Tensor) -> (Tensor, Tensor) {
+    let (b, cin) = (x.shape[0], x.shape[1]);
+    let cout = w.shape[0];
+    let mut gx = vec![0f32; b * cin];
+    let mut gw = vec![0f32; cout * cin];
+    for bi in 0..b {
+        for oc in 0..cout {
+            let g = gout.data[bi * cout + oc];
+            for i in 0..cin {
+                gx[bi * cin + i] += g * w.data[oc * cin + i];
+                gw[oc * cin + i] += g * x.data[bi * cin + i];
+            }
+        }
+    }
+    (
+        Tensor::new(x.shape.clone(), gx),
+        Tensor::new(w.shape.clone(), gw),
+    )
+}
+
+#[test]
+fn prop_fc_gemm_path_bitwise_matches_scalar_reference() {
+    let _g = lock_pool();
+    for seed in 0..4 {
+        for &(b, cin, cout) in
+            &[(32usize, 12usize, 8usize), (5, 7, 3), (1, 4, 2), (64, 48, 33)]
+        {
+            let mut rng = Rng::new(5100 + seed);
+            let mut x = randn(&mut rng, vec![b, cin], 1.0);
+            let mut w = randn(&mut rng, vec![cout, cin], 0.3);
+            let mut gout = randn(&mut rng, vec![b, cout], 1.0);
+            inject_specials(&mut x);
+            inject_specials(&mut w);
+            inject_specials(&mut gout);
+            let want = fc_fwd_ref(&x, &w);
+            let (gx_ref, gw_ref) = fc_bwd_ref(&x, &w, &gout);
+            for nt in [1usize, 2, 8] {
+                pool::set_threads(nt);
+                assert_eq!(
+                    bits_of(&fc_fwd(&x, &w)),
+                    bits_of(&want),
+                    "fc fwd seed {seed} nt {nt} {b}x{cin}->{cout}"
+                );
+                let (gx, gw) = fc_bwd(&x, &w, &gout);
+                assert_eq!(bits_of(&gx), bits_of(&gx_ref), "fc gx nt {nt}");
+                assert_eq!(bits_of(&gw), bits_of(&gw_ref), "fc gw nt {nt}");
+            }
+            pool::set_threads(0);
+        }
+    }
+}
+
+/// The zero-alloc-scratch guarantee: once the kernels are warm, repeated
+/// steps serve every im2col / packed-panel / shared-slab request from
+/// the recycling arenas — the allocation counter must not move. (This
+/// test owns the counters: every test in this binary serializes on
+/// POOL_LOCK, and no other test binary shares the process.)
+#[test]
+fn warm_kernels_do_zero_scratch_allocations() {
+    let _g = lock_pool();
+    let mut rng = Rng::new(99);
+    let x = randn(&mut rng, vec![8, 16, 16, 16], 1.0);
+    let wt = randn(&mut rng, vec![16, 16, 3, 3], 0.3);
+    let xf = randn(&mut rng, vec![32, 48], 1.0);
+    let wf = randn(&mut rng, vec![16, 48], 0.3);
+    let gf = randn(&mut rng, vec![32, 16], 1.0);
+    let gout = {
+        let probe = conv2d(&x, &wt, 1, 1);
+        randn(&mut rng, probe.shape.clone(), 1.0)
+    };
+    for nt in [1usize, 4] {
+        pool::set_threads(nt);
+        let step = || {
+            std::hint::black_box(conv2d(&x, &wt, 1, 1));
+            std::hint::black_box(conv2d_bwd(&x, &wt, 1, 1, &gout));
+            std::hint::black_box(fc_fwd(&xf, &wf));
+            std::hint::black_box(fc_bwd(&xf, &wf, &gf));
+        };
+        for _ in 0..3 {
+            step(); // warm the arenas (workers recycle scratch sets)
+        }
+        let (allocs_before, reuses_before) = pool::scratch_counters();
+        for _ in 0..5 {
+            step();
+        }
+        let (allocs_after, reuses_after) = pool::scratch_counters();
+        assert_eq!(
+            allocs_after, allocs_before,
+            "steady-state kernels allocated scratch at {nt} threads"
+        );
+        assert!(
+            reuses_after > reuses_before,
+            "scratch reuse counter did not advance at {nt} threads"
+        );
+    }
+    pool::set_threads(0);
 }
 
 /// The model-level executables (eval_fwd, act_obs via init_act_steps,

@@ -12,9 +12,13 @@
 #     (default 1.5x; speedup checks need >= 4 host hw threads), or
 #   * the speedup drops below 75% of the baseline's recorded speedup.
 #
-# A missing baseline, or one marked `"calibrated": false` (the committed
-# placeholder), passes in bootstrap mode: commit the CI-produced JSON as
-# BENCH_native.json to arm the gate.
+# Bootstrap mode: a missing baseline, or one marked `"calibrated": false`,
+# passes with a LOUD warning and a distinct exit message so an
+# uncalibrated baseline cannot silently persist. Set
+# BENCH_REQUIRE_CALIBRATED=1 (CI does on main) to turn bootstrap mode
+# into a hard failure (exit 2) — commit the bench-smoke artifact as
+# BENCH_native.json to calibrate:
+#   cd rust && cargo bench --bench bench_recon -- --quick --json ../BENCH_native.json
 set -euo pipefail
 
 new=${1:?usage: check_bench.sh NEW.json [BASELINE.json]}
@@ -29,6 +33,7 @@ with open(new_path) as f:
 host = int(new.get("host_threads", 0))
 notes = new.get("notes", {}) or {}
 min_speedup = float(os.environ.get("BENCH_MIN_SPEEDUP", "1.5"))
+require_calibrated = os.environ.get("BENCH_REQUIRE_CALIBRATED", "0") == "1"
 failures = []
 
 speedup = notes.get("recon_speedup_4t_over_1t")
@@ -37,62 +42,79 @@ if speedup is not None:
           f"(host has {host} hw threads)")
 
 base = None
+bootstrap_reason = None
 try:
     with open(base_path) as f:
         base = json.load(f)
 except FileNotFoundError:
-    print(f"no baseline at {base_path}: bootstrap pass "
-          f"(commit {new_path} as {base_path} to arm the gate)")
+    bootstrap_reason = f"no baseline file at {base_path}"
 if base is not None and not base.get("calibrated", True):
-    print(f"baseline {base_path} is an uncalibrated placeholder: "
-          f"bootstrap pass (commit {new_path} as {base_path})")
+    bootstrap_reason = (f"baseline {base_path} is marked "
+                        f'"calibrated": false (placeholder)')
     base = None
 
-if base is not None:
-    old = {r["name"]: r for r in base.get("results", [])}
-    seen = set()
-    for r in new.get("results", []):
-        seen.add(r["name"])
-        o = old.get(r["name"])
-        if o is None:
-            print(f"new   {r['name']}: {r['min_ms']:.1f}ms (no baseline; "
-                  f"rebase {base_path} to start tracking it)")
-            continue
-        if r["min_ms"] > o["min_ms"] * 1.25:
-            failures.append(
-                f"{r['name']}: min {r['min_ms']:.1f}ms vs baseline "
-                f"{o['min_ms']:.1f}ms (> 25% regression)")
-        else:
-            print(f"ok    {r['name']}: {r['min_ms']:.1f}ms "
-                  f"(baseline {o['min_ms']:.1f}ms)")
-    # a baseline entry with no matching result means a bench was renamed
-    # or deleted — fail loudly instead of silently disarming the gate
-    for name in old:
-        if name not in seen:
-            failures.append(
-                f"baseline entry '{name}' missing from {new_path} "
-                f"(bench renamed/removed? rebase {base_path})")
-    # speedup checks arm only once a calibrated baseline exists (so the
-    # documented bootstrap mode really is a pass) and only on hosts with
-    # enough hardware threads to make 4-thread numbers meaningful
-    if speedup is not None and host >= 4:
-        if speedup < min_speedup:
-            failures.append(
-                f"4-thread recon speedup {speedup:.2f}x "
-                f"< {min_speedup}x floor")
-        base_speedup = \
-            (base.get("notes") or {}).get("recon_speedup_4t_over_1t")
-        if base_speedup and speedup < 0.75 * base_speedup:
-            failures.append(
-                f"speedup {speedup:.2f}x < 75% of baseline "
-                f"{base_speedup:.2f}x")
-    elif speedup is not None:
-        print("host has < 4 hw threads: skipping the speedup checks")
+if bootstrap_reason is not None:
+    banner = "!" * 70
+    print(banner)
+    print("!!  BOOTSTRAP MODE — PERF GATE IS UNARMED")
+    print(f"!!  {bootstrap_reason}")
+    print("!!  Nothing was compared. To arm the gate, commit the")
+    print(f"!!  bench-smoke JSON artifact as {base_path}:")
+    print("!!    cd rust && cargo bench --bench bench_recon -- "
+          "--quick --json ../BENCH_native.json")
+    print(banner)
+    if require_calibrated:
+        print("bench gate: FAIL (BOOTSTRAP FORBIDDEN — "
+              "BENCH_REQUIRE_CALIBRATED=1 and the committed baseline "
+              "is not calibrated)")
+        sys.exit(2)
+    print("bench gate: PASS (BOOTSTRAP MODE — uncalibrated baseline, "
+          "no regression checks ran)")
+    sys.exit(0)
+
+old = {r["name"]: r for r in base.get("results", [])}
+seen = set()
+for r in new.get("results", []):
+    seen.add(r["name"])
+    o = old.get(r["name"])
+    if o is None:
+        print(f"new   {r['name']}: {r['min_ms']:.1f}ms (no baseline; "
+              f"rebase {base_path} to start tracking it)")
+        continue
+    if r["min_ms"] > o["min_ms"] * 1.25:
+        failures.append(
+            f"{r['name']}: min {r['min_ms']:.1f}ms vs baseline "
+            f"{o['min_ms']:.1f}ms (> 25% regression)")
+    else:
+        print(f"ok    {r['name']}: {r['min_ms']:.1f}ms "
+              f"(baseline {o['min_ms']:.1f}ms)")
+# a baseline entry with no matching result means a bench was renamed
+# or deleted — fail loudly instead of silently disarming the gate
+for name in old:
+    if name not in seen:
+        failures.append(
+            f"baseline entry '{name}' missing from {new_path} "
+            f"(bench renamed/removed? rebase {base_path})")
+# speedup checks run only on hosts with enough hardware threads to make
+# 4-thread numbers meaningful
+if speedup is not None and host >= 4:
+    if speedup < min_speedup:
+        failures.append(
+            f"4-thread recon speedup {speedup:.2f}x "
+            f"< {min_speedup}x floor")
+    base_speedup = \
+        (base.get("notes") or {}).get("recon_speedup_4t_over_1t")
+    if base_speedup and speedup < 0.75 * base_speedup:
+        failures.append(
+            f"speedup {speedup:.2f}x < 75% of baseline "
+            f"{base_speedup:.2f}x")
+elif speedup is not None:
+    print("host has < 4 hw threads: skipping the speedup checks")
 
 if failures:
     print("PERF REGRESSION:")
     for f in failures:
         print(f"  - {f}")
     sys.exit(1)
-print("bench gate: PASS")
+print("bench gate: PASS (calibrated)")
 PY
