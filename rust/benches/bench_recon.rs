@@ -7,10 +7,23 @@
 //! pool's determinism contract) and the speedup is what CI gates through
 //! `scripts/check_bench.sh`.
 
+//! Since the reconstruction-plan engine, the headline tentpole metric is
+//! `recon_iters_per_sec`: fused `plan.step` throughput on the heaviest
+//! block unit at 4 threads, gated by `scripts/check_bench.sh` (higher is
+//! better, >25% regression fails). The per-dispatch rows are retained
+//! for contrast — they measure the fallback parity path.
+
 mod harness;
 
+use brecq::calib::CalibSet;
+use brecq::quant::{
+    act_bounds, mse_steps_per_channel, weight_bounds, AdaRoundState,
+};
 use brecq::recon::{BitConfig, Calibrator, ReconConfig};
+use brecq::runtime::plan;
+use brecq::tensor::Tensor;
 use brecq::util::pool;
+use brecq::util::rng::Rng;
 use harness::Harness;
 
 fn main() {
@@ -67,6 +80,98 @@ fn main() {
         });
     }
 
+    // plan-step throughput on the heaviest block unit at 4 threads: the
+    // reconstruction-plan engine's fused iteration (gather + soft-quant
+    // + fwd/bwd + gv chain in one zero-alloc call). The derived
+    // `recon_iters_per_sec` note is the gated tentpole metric.
+    {
+        pool::set_threads(4);
+        let (ws, bs_all) = cal.fp_weights().unwrap();
+        let unit = units
+            .iter()
+            .max_by_key(|u| {
+                u.layer_ids
+                    .iter()
+                    .map(|&l| model.layers[l].macs)
+                    .sum::<u64>()
+            })
+            .unwrap();
+        let k = 64usize;
+        let bsz = 32usize;
+        let mut rng = Rng::new(42);
+        let mut synth = |shape: &[usize]| -> Tensor {
+            let mut shape = shape.to_vec();
+            shape[0] = k;
+            let n: usize = shape.iter().product();
+            Tensor::new(
+                shape,
+                (0..n).map(|_| rng.gauss() as f32).collect(),
+            )
+        };
+        let x = synth(&unit.in_shape);
+        let z_fp = synth(&unit.out_shape);
+        let mut fim_shape = unit.out_shape.clone();
+        fim_shape[0] = k;
+        let fim = Tensor::full(fim_shape, 1.0);
+        let states: Vec<AdaRoundState> = unit
+            .layer_ids
+            .iter()
+            .map(|&l| {
+                let steps = mse_steps_per_channel(&ws[l], 4);
+                AdaRoundState::init(&ws[l], &steps, 4)
+            })
+            .collect();
+        let wsteps: Vec<Tensor> =
+            states.iter().map(|s| s.steps_tensor()).collect();
+        let vs: Vec<Tensor> =
+            states.iter().map(|s| s.v.clone()).collect();
+        let asteps: Vec<Tensor> = unit
+            .layer_ids
+            .iter()
+            .map(|_| Tensor::scalar1(0.05))
+            .collect();
+        let inputs = plan::PlanInputs {
+            x: &x,
+            skip: None,
+            z_fp: &z_fp,
+            fim: Some(&fim),
+            ws: unit.layer_ids.iter().map(|&l| &ws[l]).collect(),
+            bs: unit.layer_ids.iter().map(|&l| &bs_all[l]).collect(),
+            wsteps: wsteps.iter().collect(),
+            wbounds: unit
+                .layer_ids
+                .iter()
+                .map(|_| weight_bounds(4))
+                .collect(),
+            abounds: unit
+                .layer_ids
+                .iter()
+                .map(|&l| act_bounds(8, model.layers[l].site_signed))
+                .collect(),
+            aq: false,
+            batch: bsz,
+        };
+        let mut uplan = env
+            .rt
+            .prepare_recon(&unit.recon_exe, inputs)
+            .unwrap()
+            .expect("block units compile to reconstruction plans");
+        let mut srng = Rng::new(7);
+        let iters = h.iters(200);
+        let ms = h.run(
+            &format!("recon plan step [{}]", unit.name),
+            iters,
+            || {
+                let rows = CalibSet::gather_rows_idx(k, bsz, &mut srng);
+                let out =
+                    uplan.step(&rows, &vs, &asteps, 10.0, 0.01).unwrap();
+                std::hint::black_box(out.loss);
+            },
+        );
+        let min_ms = ms.iter().cloned().fold(f64::INFINITY, f64::min);
+        h.note("recon_iters_per_sec", 1e3 / min_ms);
+    }
+
     // worker-pool speedup: identical end-to-end reconstruction at 1 vs 4
     // threads. Bit-identical losses are asserted, wall-clocks recorded.
     let bits = BitConfig::uniform(model, 4, None, true);
@@ -107,5 +212,11 @@ fn main() {
     h.note("recon_wall_s_4t", t4);
     h.note("recon_speedup_4t_over_1t", t1 / t4);
     h.note("steady_state_scratch_allocs", (a1 - a0) as f64);
+    // plan-engine accounting: how much of the run went through compiled
+    // plans vs the per-dispatch fallback
+    let (pb, ps, pf) = plan::counters();
+    h.note("plan_builds_total", pb as f64);
+    h.note("plan_steps_total", ps as f64);
+    h.note("plan_fallback_steps_total", pf as f64);
     h.finish();
 }

@@ -128,7 +128,9 @@ impl CalibSet {
         rng.sample_indices(self.len(), len)
     }
 
-    /// Gather rows of a cached activation tensor into a batch.
+    /// Gather rows of a cached activation tensor into a batch (the
+    /// allocating sibling of [`Tensor::gather_rows_into`]; no zero-fill
+    /// — every element is appended exactly once).
     pub fn gather_rows(src: &Tensor, rows: &[usize]) -> Tensor {
         let inner = src.inner();
         let mut data = Vec::with_capacity(rows.len() * inner);

@@ -10,10 +10,14 @@
 //! * **native** ([`runtime::native`], default) — a pure-Rust interpreter
 //!   for every executable family the manifest names (`unit_fwd`,
 //!   `unit_recon`, `eval_fwd`, `act_obs`, `fim`), ported from the
-//!   pure-jnp oracles in `python/compile/kernels/ref.py`. Paired with the
-//!   deterministic synthetic environment ([`model::synthetic`]) this makes
-//!   the whole pipeline — and the integration test suite — run hermetically
-//!   on a fresh checkout: no Python, no XLA, no artifacts.
+//!   pure-jnp oracles in `python/compile/kernels/ref.py`, plus a compiled
+//!   reconstruction-plan engine ([`runtime::plan`]) that runs the
+//!   Algorithm-1 inner loop with cached im2col slabs and zero
+//!   steady-state allocation, bit-identical to per-iteration dispatch.
+//!   Paired with the deterministic synthetic environment
+//!   ([`model::synthetic`]) this makes the whole pipeline — and the
+//!   integration test suite — run hermetically on a fresh checkout: no
+//!   Python, no XLA, no artifacts.
 //! * **pjrt** ([`runtime::pjrt`], cargo feature `pjrt`) — the original
 //!   three-layer path: Python authors and AOT-lowers the compute (models,
 //!   Pallas fake-quant kernels, reconstruction objectives) to HLO text once

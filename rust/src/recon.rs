@@ -9,9 +9,12 @@
 //!      targets z_fp; the quantized stream provides unit inputs x (the
 //!      asymmetric-reconstruction choice of the reference implementation),
 //!   3. per-unit optimization: T Adam steps on the AdaRound rounding
-//!      variables and LSQ activation steps, driven by the AOT `unit_recon`
-//!      executable (loss fwd + grads), with β-annealed rounding
-//!      regularization,
+//!      variables and LSQ activation steps, with β-annealed rounding
+//!      regularization — driven by a compiled reconstruction plan
+//!      ([`crate::runtime::plan`]: the unit lowered once, zero-alloc
+//!      fused steps) when the backend offers one, and by per-iteration
+//!      `unit_recon` dispatches (the retained bit-parity reference)
+//!      otherwise,
 //!   4. hard-rounding commit, then stream advance through `unit_fwd`.
 //!
 //! Per-layer bitwidths are runtime inputs to the executables, so the same
@@ -38,7 +41,7 @@ use crate::optim::{Adam, BetaSchedule};
 use crate::quant::{
     act_bounds, mse_steps_per_channel, weight_bounds, AdaRoundState,
 };
-use crate::runtime::Backend;
+use crate::runtime::{plan, Backend};
 use crate::tensor::Tensor;
 use crate::util::pool;
 use crate::util::rng::Rng;
@@ -92,6 +95,12 @@ pub struct ReconConfig {
     /// rounding regularizer on (AdaRound-style). false => AdaQuant-like
     /// continuous optimization committed by thresholding.
     pub round_reg: bool,
+    /// Drive the inner loop through a compiled reconstruction plan
+    /// ([`crate::runtime::plan`]) when the backend offers one. false
+    /// forces the per-iteration dispatch path — the bit-parity reference
+    /// (`tests/plan.rs` compares the two). Results are identical either
+    /// way.
+    pub plan: bool,
     pub seed: u64,
     pub verbose: bool,
 }
@@ -107,6 +116,7 @@ impl Default for ReconConfig {
             lam: 0.01,
             use_fim: true,
             round_reg: true,
+            plan: true,
             seed: 0,
             verbose: false,
         }
@@ -323,13 +333,12 @@ impl<'a> Calibrator<'a> {
                 unit, &fp_main, fp_skip.as_ref(), &ws, &bs, &act_steps,
                 bits, false,
             )?;
-            let unit_fim = match &fim {
-                Some(f) => f[ui].clone(),
-                None => Tensor::full(unit_out_full(unit, k), 1.0),
-            };
+            // no FIM clone: the reconstruction borrows the per-unit
+            // cache; None means unit weight (plain MSE) inside the loss
+            let unit_fim: Option<&Tensor> = fim.as_ref().map(|f| &f[ui]);
 
             let report = self.reconstruct_unit(
-                unit, &q_main, q_skip.as_ref(), &z_fp, &unit_fim, &ws, &bs,
+                unit, &q_main, q_skip.as_ref(), &z_fp, unit_fim, &ws, &bs,
                 &mut states, &mut act_steps, bits, cfg, &mut rng, nbatch,
             )?;
             reports.push(report);
@@ -457,6 +466,16 @@ impl<'a> Calibrator<'a> {
     }
 
     /// T Adam iterations on one unit (step 3 of the pipeline).
+    ///
+    /// The loop runs on a compiled reconstruction plan
+    /// ([`crate::runtime::plan`]) when the backend offers one
+    /// (`cfg.plan`, the default): the unit is lowered once and each
+    /// iteration is a single `plan.step(rows, vs, asteps, beta, lam)`
+    /// call with zero steady-state allocation. Otherwise — `cfg.plan`
+    /// off, plan-less backends, or units the backend declines (seq
+    /// units) — every iteration dispatches the `unit_recon` executable
+    /// with the full ~10·nl argument binding: the retained path, and
+    /// the bit-parity reference the plan must reproduce exactly.
     #[allow(clippy::too_many_arguments)]
     fn reconstruct_unit(
         &self,
@@ -464,7 +483,7 @@ impl<'a> Calibrator<'a> {
         x_cache: &Tensor,
         skip_cache: Option<&Tensor>,
         z_fp: &Tensor,
-        fim: &Tensor,
+        fim: Option<&Tensor>,
         ws: &[Tensor],
         bs: &[Tensor],
         states: &mut [AdaRoundState],
@@ -524,65 +543,143 @@ impl<'a> Calibrator<'a> {
             .collect();
         let aq_flag = Tensor::scalar1(if bits.aq { 1.0 } else { 0.0 });
 
+        // compile the unit once (plan path). The plan borrows the frozen
+        // caches and per-layer constants for the whole loop.
+        let mut plan_box = if cfg.plan {
+            let inputs = plan::PlanInputs {
+                x: x_cache,
+                skip: skip_cache,
+                z_fp,
+                fim,
+                ws: unit.layer_ids.iter().map(|&l| &ws[l]).collect(),
+                bs: unit.layer_ids.iter().map(|&l| &bs[l]).collect(),
+                wsteps: wsteps.iter().collect(),
+                wbounds: unit
+                    .layer_ids
+                    .iter()
+                    .map(|&l| weight_bounds(bits.wbits[l]))
+                    .collect(),
+                abounds: unit
+                    .layer_ids
+                    .iter()
+                    .map(|&l| {
+                        let layer = &self.model.layers[l];
+                        act_bounds(bits.abits[l], layer.site_signed)
+                    })
+                    .collect(),
+                aq: bits.aq,
+                batch: bsz,
+            };
+            self.rt.prepare_recon(&unit.recon_exe, inputs)?
+        } else {
+            None
+        };
+
+        // dispatch fallback without a FIM cache: one bsz-sized all-ones
+        // tensor satisfies the executable ABI for every iteration
+        // (gathering all-ones rows is the identity), replacing the old
+        // K-sized materialization; multiplying by 1.0 is exact, so the
+        // losses match the plan's implicit unit weight bitwise.
+        let ones_fb = if plan_box.is_none() && fim.is_none() {
+            let mut shape = z_fp.shape.clone();
+            shape[0] = bsz;
+            Some(Tensor::full(shape, 1.0))
+        } else {
+            None
+        };
+
         let mut initial_loss = 0.0;
         let mut final_loss = 0.0;
         for t in 0..cfg.iters {
             let rows = CalibSet::gather_rows_idx(x_cache.shape[0], bsz, rng);
-            let xb = CalibSet::gather_rows(x_cache, &rows);
-            let skb = skip_cache.map(|s| CalibSet::gather_rows(s, &rows));
-            let zb = CalibSet::gather_rows(z_fp, &rows);
-            let fb = CalibSet::gather_rows(fim, &rows);
             let (beta, reg_on) = sched.at(t);
             let lam = if cfg.round_reg && reg_on { cfg.lam } else { 0.0 };
-            let beta_t = Tensor::scalar1(beta);
-            let lam_t = Tensor::scalar1(lam);
+            let rec_loss: f64;
 
-            let mut args: Vec<&Tensor> = vec![&xb];
-            if unit.uses_skip {
-                args.push(skb.as_ref().unwrap());
-            }
-            args.push(&zb);
-            args.push(&fb);
-            for (i, &l) in unit.layer_ids.iter().enumerate() {
-                args.push(&ws[l]);
-                args.push(&bs[l]);
-                args.push(&wsteps[i]);
-                args.push(&vs[i]);
-                args.push(&wbounds[i].0);
-                args.push(&wbounds[i].1);
-            }
-            for (i, _) in unit.layer_ids.iter().enumerate() {
-                args.push(&asteps[i]);
-                args.push(&abounds[i].0);
-                args.push(&abounds[i].1);
-            }
-            args.push(&beta_t);
-            args.push(&lam_t);
-            args.push(&aq_flag);
+            if let Some(p) = plan_box.as_deref_mut() {
+                // fused iteration: gather + soft-quant + fwd/bwd + gv
+                // chain in one call, zero steady-state allocation
+                let s = p.step(&rows, &vs, &asteps, beta, lam)?;
+                rec_loss = s.rec as f64;
+                {
+                    let mut prefs: Vec<&mut Tensor> =
+                        vs.iter_mut().collect();
+                    let grefs: Vec<&Tensor> = p.gv().iter().collect();
+                    opt_v.step(&mut prefs, &grefs);
+                }
+                if bits.aq {
+                    let mut prefs: Vec<&mut Tensor> =
+                        asteps.iter_mut().collect();
+                    let grefs: Vec<&Tensor> = p.gsteps().iter().collect();
+                    opt_s.step(&mut prefs, &grefs);
+                    for st in asteps.iter_mut() {
+                        st.data[0] = st.data[0].max(1e-6);
+                    }
+                }
+            } else {
+                plan::note_fallback_step();
+                let xb = CalibSet::gather_rows(x_cache, &rows);
+                let skb =
+                    skip_cache.map(|s| CalibSet::gather_rows(s, &rows));
+                let zb = CalibSet::gather_rows(z_fp, &rows);
+                let fb_gathered =
+                    fim.map(|f| CalibSet::gather_rows(f, &rows));
+                let fb: &Tensor = fb_gathered
+                    .as_ref()
+                    .unwrap_or_else(|| {
+                        ones_fb.as_ref().expect("MSE fallback ones")
+                    });
+                let beta_t = Tensor::scalar1(beta);
+                let lam_t = Tensor::scalar1(lam);
 
-            let out = self.rt.run(&unit.recon_exe, &args)?;
-            // outputs: loss, rec_loss, round_loss, gv*nl, gastep*nl
-            let rec_loss = out[1].data[0] as f64;
+                let mut args: Vec<&Tensor> = vec![&xb];
+                if unit.uses_skip {
+                    args.push(skb.as_ref().unwrap());
+                }
+                args.push(&zb);
+                args.push(fb);
+                for (i, &l) in unit.layer_ids.iter().enumerate() {
+                    args.push(&ws[l]);
+                    args.push(&bs[l]);
+                    args.push(&wsteps[i]);
+                    args.push(&vs[i]);
+                    args.push(&wbounds[i].0);
+                    args.push(&wbounds[i].1);
+                }
+                for (i, _) in unit.layer_ids.iter().enumerate() {
+                    args.push(&asteps[i]);
+                    args.push(&abounds[i].0);
+                    args.push(&abounds[i].1);
+                }
+                args.push(&beta_t);
+                args.push(&lam_t);
+                args.push(&aq_flag);
+
+                let out = self.rt.run(&unit.recon_exe, &args)?;
+                // outputs: loss, rec_loss, round_loss, gv*nl, gastep*nl
+                rec_loss = out[1].data[0] as f64;
+                let gv = &out[3..3 + nl];
+                let gs = &out[3 + nl..3 + 2 * nl];
+                {
+                    let mut prefs: Vec<&mut Tensor> =
+                        vs.iter_mut().collect();
+                    let grefs: Vec<&Tensor> = gv.iter().collect();
+                    opt_v.step(&mut prefs, &grefs);
+                }
+                if bits.aq {
+                    let mut prefs: Vec<&mut Tensor> =
+                        asteps.iter_mut().collect();
+                    let grefs: Vec<&Tensor> = gs.iter().collect();
+                    opt_s.step(&mut prefs, &grefs);
+                    for st in asteps.iter_mut() {
+                        st.data[0] = st.data[0].max(1e-6); // keep positive
+                    }
+                }
+            }
             if t == 0 {
                 initial_loss = rec_loss;
             }
             final_loss = rec_loss;
-            let gv = &out[3..3 + nl];
-            let gs = &out[3 + nl..3 + 2 * nl];
-            {
-                let mut prefs: Vec<&mut Tensor> = vs.iter_mut().collect();
-                let grefs: Vec<&Tensor> = gv.iter().collect();
-                opt_v.step(&mut prefs, &grefs);
-            }
-            if bits.aq {
-                let mut prefs: Vec<&mut Tensor> =
-                    asteps.iter_mut().collect();
-                let grefs: Vec<&Tensor> = gs.iter().collect();
-                opt_s.step(&mut prefs, &grefs);
-                for st in asteps.iter_mut() {
-                    st.data[0] = st.data[0].max(1e-6); // keep step positive
-                }
-            }
         }
 
         // write back learned state
@@ -601,12 +698,6 @@ impl<'a> Calibrator<'a> {
             seconds: t0.elapsed().as_secs_f64(),
         })
     }
-}
-
-fn unit_out_full(unit: &UnitInfo, k: usize) -> Vec<usize> {
-    let mut s = unit.out_shape.clone();
-    s[0] = k;
-    s
 }
 
 impl CalibSet {

@@ -22,6 +22,7 @@ pub mod gemm;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod plan;
 
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -178,6 +179,22 @@ pub trait Backend: Sync {
 
     /// Number of distinct executables prepared (compiled / instantiated).
     fn compiled_count(&self) -> usize;
+
+    /// Compile a stateful reconstruction plan for a `unit_recon`
+    /// executable: the unit is lowered once, and `plan.step(...)` then
+    /// runs Algorithm-1 iterations with zero steady-state allocation and
+    /// no per-iteration re-lowering (see [`plan`]). Backends without plan
+    /// support — and units a backend declines to plan — return
+    /// `Ok(None)`; the caller falls back to per-iteration [`Backend::run`]
+    /// dispatches, which are retained as the bit-parity reference path.
+    fn prepare_recon<'p>(
+        &'p self,
+        name: &str,
+        inputs: plan::PlanInputs<'p>,
+    ) -> Result<Option<Box<dyn plan::ReconPlan + 'p>>> {
+        let _ = (name, inputs);
+        Ok(None)
+    }
 
     /// Validated, accounted dispatch of one executable.
     fn run(&self, name: &str, args: &[&Tensor]) -> Result<Vec<Tensor>> {

@@ -133,6 +133,44 @@ pub fn round_ste(w: f32, step: f32, n: f32, p: f32) -> f32 {
     step * (w / step).round().clamp(n, p)
 }
 
+/// One fused gv + rounding-regularizer element — the single definition
+/// shared by `exec_unit_recon`'s sequential pass and the plan engine's
+/// channel-parallel pass (`super::plan`), so the two paths cannot
+/// drift. Evaluates the rectified sigmoid once and returns
+/// (`1 - |2h(v)-1|^beta` as the f64 regularizer term,
+/// `gout * s * 1{inside} * h'(v) + lam * d(reg)/dv` as the gv element) —
+/// bit-identical to composing [`adaround_grad_v`] with the standalone
+/// regularizer loop.
+#[inline]
+pub(crate) fn gv_reg_elem(
+    w: f32,
+    s: f32,
+    ve: f32,
+    wn: f32,
+    wp: f32,
+    gout: f32,
+    beta: f32,
+    lam: f32,
+) -> (f64, f32) {
+    let sig = 1.0 / (1.0 + (-ve).exp());
+    let h = (sig * (ZETA - GAMMA) + GAMMA).clamp(0.0, 1.0);
+    let t = 2.0 * h - 1.0;
+    let term = 1.0 - (t.abs() as f64).powf(beta as f64);
+    let hp = if h > 0.0 && h < 1.0 {
+        sig * (1.0 - sig) * (ZETA - GAMMA)
+    } else {
+        0.0
+    };
+    let gt = (w / s).floor() + h;
+    let mut g = if gt > wn && gt < wp { gout * s * hp } else { 0.0 };
+    if lam > 0.0 {
+        let dr =
+            -(beta) * t.abs().powf(beta - 1.0) * t.signum() * 2.0 * hp;
+        g += lam * dr;
+    }
+    (term, g)
+}
+
 /// FIM-weighted squared error (Eq. 10), averaged over the leading batch dim.
 pub fn fim_loss(z: &Tensor, zq: &Tensor, fim: &Tensor) -> f64 {
     let b = z.shape[0] as f64;
@@ -158,7 +196,7 @@ pub fn fim_loss_grad_zq(z: &Tensor, zq: &Tensor, fim: &Tensor) -> Tensor {
 // ------------------------------------------------------------------
 
 /// TF/XLA 'SAME' padding: (out_size, low_pad) for one spatial dim.
-fn same_pads(h: usize, k: usize, s: usize) -> (usize, i64) {
+pub(crate) fn same_pads(h: usize, k: usize, s: usize) -> (usize, i64) {
     let out = (h + s - 1) / s;
     let total = ((out - 1) * s + k).saturating_sub(h);
     (out, (total / 2) as i64)
@@ -204,7 +242,7 @@ fn ow_range(
 /// the weight-gradient reduction reads. `out` must be pre-zeroed; padded
 /// taps stay +0.0.
 #[allow(clippy::too_many_arguments)]
-fn im2col(
+pub(crate) fn im2col(
     x: &[f32],
     cin: usize,
     h: usize,
@@ -324,6 +362,35 @@ fn pack_wflip(
 /// 1x1 stride-1 convolutions skip im2col entirely — the sample already
 /// is its own column matrix.
 pub fn conv2d(x: &Tensor, w: &Tensor, stride: usize, groups: usize) -> Tensor {
+    let (b, cout) = (x.shape[0], w.shape[0]);
+    let (ho, _) = same_pads(x.shape[2], w.shape[2], stride);
+    let (wo, _) = same_pads(x.shape[3], w.shape[2], stride);
+    let mut out = vec![0f32; b * cout * ho * wo];
+    conv2d_core(x, w, stride, groups, &mut out);
+    Tensor::new(vec![b, cout, ho, wo], out)
+}
+
+/// [`conv2d`] into a caller-provided buffer (the reconstruction plan's
+/// persistent activation scratch). Zeroes `out` first — the GEMM
+/// accumulates — so the result is bit-identical to the allocating form.
+pub(crate) fn conv2d_into(
+    x: &Tensor,
+    w: &Tensor,
+    stride: usize,
+    groups: usize,
+    out: &mut [f32],
+) {
+    out.fill(0.0);
+    conv2d_core(x, w, stride, groups, out);
+}
+
+fn conv2d_core(
+    x: &Tensor,
+    w: &Tensor,
+    stride: usize,
+    groups: usize,
+    out: &mut [f32],
+) {
     let (b, cin, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let (cout, cpg_in, k) = (w.shape[0], w.shape[1], w.shape[2]);
     assert_eq!(cin / groups, cpg_in, "conv group mismatch");
@@ -332,9 +399,9 @@ pub fn conv2d(x: &Tensor, w: &Tensor, stride: usize, groups: usize) -> Tensor {
     let (wo, pad_w) = same_pads(wd, k, stride);
     let n = ho * wo;
     let kw_g = cpg_in * k * k;
-    let mut out = vec![0f32; b * cout * n];
+    assert_eq!(out.len(), b * cout * n, "conv2d: bad out len");
     let work = out.len().saturating_mul(kw_g);
-    pool::par_chunks_mut(&mut out, cout * n, work, |bi, orow| {
+    pool::par_chunks_mut(out, cout * n, work, |bi, orow| {
         pool::with_scratch(|s| {
             let xs = x.row0(bi);
             let built;
@@ -367,44 +434,74 @@ pub fn conv2d(x: &Tensor, w: &Tensor, stride: usize, groups: usize) -> Tensor {
             }
         });
     });
-    Tensor::new(vec![b, cout, ho, wo], out)
 }
 
 /// Geometry of one backward call, shared by the sequential and parallel
-/// paths.
+/// paths (and by the reconstruction plan's slab-backed weight-gradient
+/// fold in [`super::plan`]).
 #[derive(Clone, Copy)]
-struct BwdGeom {
-    b: usize,
-    cin: usize,
-    h: usize,
-    wd: usize,
-    cout: usize,
-    cpg_in: usize,
-    cpg_out: usize,
-    k: usize,
-    stride: usize,
-    groups: usize,
-    ho: usize,
-    wo: usize,
-    pad_h: i64,
-    pad_w: i64,
+pub(crate) struct BwdGeom {
+    pub(crate) b: usize,
+    pub(crate) cin: usize,
+    pub(crate) h: usize,
+    pub(crate) wd: usize,
+    pub(crate) cout: usize,
+    pub(crate) cpg_in: usize,
+    pub(crate) cpg_out: usize,
+    pub(crate) k: usize,
+    pub(crate) stride: usize,
+    pub(crate) groups: usize,
+    pub(crate) ho: usize,
+    pub(crate) wo: usize,
+    pub(crate) pad_h: i64,
+    pub(crate) pad_w: i64,
 }
 
 impl BwdGeom {
-    fn n(&self) -> usize {
+    /// Geometry for a `(b, cin, h, wd)` input under `w`'s kernel.
+    pub(crate) fn of(
+        b: usize,
+        cin: usize,
+        h: usize,
+        wd: usize,
+        w: &Tensor,
+        stride: usize,
+        groups: usize,
+    ) -> BwdGeom {
+        let (cout, cpg_in, k) = (w.shape[0], w.shape[1], w.shape[2]);
+        let (ho, pad_h) = same_pads(h, k, stride);
+        let (wo, pad_w) = same_pads(wd, k, stride);
+        BwdGeom {
+            b,
+            cin,
+            h,
+            wd,
+            cout,
+            cpg_in,
+            cpg_out: cout / groups,
+            k,
+            stride,
+            groups,
+            ho,
+            wo,
+            pad_h,
+            pad_w,
+        }
+    }
+    pub(crate) fn n(&self) -> usize {
         self.ho * self.wo
     }
-    fn hw_in(&self) -> usize {
+    pub(crate) fn hw_in(&self) -> usize {
         self.h * self.wd
     }
-    fn kw_g(&self) -> usize {
+    pub(crate) fn kw_g(&self) -> usize {
         self.cpg_in * self.k * self.k
     }
-    fn kw_all(&self) -> usize {
+    pub(crate) fn kw_all(&self) -> usize {
         self.cin * self.k * self.k
     }
     /// 1x1 stride-1 convs read their operands directly (no col buffers).
-    fn direct(&self) -> bool {
+    pub(crate) fn direct(&self) -> bool {
         self.k == 1 && self.stride == 1
     }
 }
@@ -477,7 +574,7 @@ fn gx_sample(
 /// `[oc0, oc0+m)` (all inside one group `gi`): GEMM with the reduction
 /// over this sample's spatial positions, extending each element's chain.
 #[allow(clippy::too_many_arguments)]
-fn gw_accum(
+pub(crate) fn gw_accum(
     gs_sample: &[f32],
     cols_t_or_x: &[f32],
     rs_b: usize,
@@ -534,6 +631,45 @@ pub fn conv2d_bwd(
     groups: usize,
     gout: &Tensor,
 ) -> (Tensor, Tensor) {
+    let mut gx = vec![0f32; x.data.len()];
+    let mut gw = vec![0f32; w.data.len()];
+    conv2d_bwd_core(x, w, stride, groups, gout, Some(&mut gx), &mut gw);
+    (
+        Tensor::new(x.shape.clone(), gx),
+        Tensor::new(w.shape.clone(), gw),
+    )
+}
+
+/// [`conv2d_bwd`] into caller-provided buffers. `gx: None` skips the
+/// input-gradient phase entirely (the reconstruction plan's frozen-input
+/// layers only need `gw`); the weight-gradient fold is unaffected, so
+/// `gw` stays bit-identical either way. Both buffers are zeroed here —
+/// the GEMMs accumulate.
+pub(crate) fn conv2d_bwd_into(
+    x: &Tensor,
+    w: &Tensor,
+    stride: usize,
+    groups: usize,
+    gout: &Tensor,
+    mut gx: Option<&mut [f32]>,
+    gw: &mut [f32],
+) {
+    if let Some(g) = gx.as_deref_mut() {
+        g.fill(0.0);
+    }
+    gw.fill(0.0);
+    conv2d_bwd_core(x, w, stride, groups, gout, gx, gw);
+}
+
+fn conv2d_bwd_core(
+    x: &Tensor,
+    w: &Tensor,
+    stride: usize,
+    groups: usize,
+    gout: &Tensor,
+    mut gx: Option<&mut [f32]>,
+    gw: &mut [f32],
+) {
     let (b, cin, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let (cout, cpg_in, k) = (w.shape[0], w.shape[1], w.shape[2]);
     let cpg_out = cout / groups;
@@ -558,8 +694,6 @@ pub fn conv2d_bwd(
     let (n, hw_in, kw_g, kw_all) = (g.n(), g.hw_in(), g.kw_g(), g.kw_all());
     let kk = k * k;
     let gsz = cpg_in * cpg_out * kk;
-    let mut gx = vec![0f32; x.data.len()];
-    let mut gw = vec![0f32; w.data.len()];
     let work = gout.data.len().saturating_mul(kw_g);
 
     if !pool::active(work) {
@@ -572,7 +706,7 @@ pub fn conv2d_bwd(
                 pack_a,
                 pack_b,
             } = s;
-            let wf_all: &[f32] = if g.direct() {
+            let wf_all: &[f32] = if g.direct() || gx.is_none() {
                 &[]
             } else {
                 let wf = pool::grab_dirty(wpack, w.data.len());
@@ -591,16 +725,18 @@ pub fn conv2d_bwd(
             for bi in 0..b {
                 let gs = gout.row0(bi);
                 let xs = x.row0(bi);
-                gx_sample(
-                    gs,
-                    w,
-                    wf_all,
-                    g,
-                    &mut gx[bi * cin * hw_in..],
-                    gcols_buf,
-                    pack_a,
-                    pack_b,
-                );
+                if let Some(gx_all) = gx.as_deref_mut() {
+                    gx_sample(
+                        gs,
+                        w,
+                        wf_all,
+                        g,
+                        &mut gx_all[bi * cin * hw_in..],
+                        gcols_buf,
+                        pack_a,
+                        pack_b,
+                    );
+                }
                 if g.direct() {
                     for gi in 0..groups {
                         gw_accum(
@@ -639,10 +775,7 @@ pub fn conv2d_bwd(
                 }
             }
         });
-        return (
-            Tensor::new(x.shape.clone(), gx),
-            Tensor::new(w.shape.clone(), gw),
-        );
+        return;
     }
 
     // Parallel form, in batch chunks so the shared transposed-im2col
@@ -654,7 +787,7 @@ pub fn conv2d_bwd(
     // The flipped-weight operand is packed once, up front, and shared
     // read-only by every phase-A job.
     const SLAB_CAP: usize = 1 << 24; // f32 elements (~64 MB)
-    let wf_all = if g.direct() {
+    let wf_all = if g.direct() || gx.is_none() {
         Vec::new()
     } else {
         let mut v = pool::take_shared(w.data.len());
@@ -678,58 +811,85 @@ pub fn conv2d_bwd(
     for c0 in (0..b).step_by(bc) {
         let clen = bc.min(b - c0);
         // Phase A — per-sample jobs: gx GEMM, plus (when needed) this
-        // sample's transposed-im2col slab slot for phase B.
-        let gx_chunk = &mut gx[c0 * cin * hw_in..(c0 + clen) * cin * hw_in];
-        if g.direct() {
-            pool::par_chunks_mut(gx_chunk, cin * hw_in, work, |ci, gxs| {
-                pool::with_scratch(|s| {
-                    let gs = gout.row0(c0 + ci);
-                    gx_sample(
-                        gs,
-                        w,
-                        &wf_all,
-                        g,
-                        gxs,
-                        &mut s.im2col,
-                        &mut s.pack_a,
-                        &mut s.pack_b,
+        // sample's transposed-im2col slab slot for phase B. With gx
+        // skipped (None), only the slab slots are built.
+        match gx.as_deref_mut() {
+            Some(gx_all) => {
+                let gx_chunk =
+                    &mut gx_all[c0 * cin * hw_in..(c0 + clen) * cin * hw_in];
+                if g.direct() {
+                    pool::par_chunks_mut(
+                        gx_chunk,
+                        cin * hw_in,
+                        work,
+                        |ci, gxs| {
+                            pool::with_scratch(|s| {
+                                let gs = gout.row0(c0 + ci);
+                                gx_sample(
+                                    gs,
+                                    w,
+                                    &wf_all,
+                                    g,
+                                    gxs,
+                                    &mut s.im2col,
+                                    &mut s.pack_a,
+                                    &mut s.pack_b,
+                                );
+                            });
+                        },
                     );
-                });
-            });
-        } else {
-            pool::par_chunks2_mut(
-                gx_chunk,
-                cin * hw_in,
-                &mut cols_t[..clen * n * kw_all],
-                n * kw_all,
-                work,
-                |ci, gxs, ct| {
-                    pool::with_scratch(|s| {
-                        let gs = gout.row0(c0 + ci);
-                        let xs = x.row0(c0 + ci);
-                        gx_sample(
-                            gs,
-                            w,
-                            &wf_all,
-                            g,
-                            gxs,
-                            &mut s.im2col,
-                            &mut s.pack_a,
-                            &mut s.pack_b,
-                        );
-                        im2col(
-                            xs, cin, h, wd, k, stride, ho, wo, pad_h, pad_w,
-                            1, kw_all, ct,
-                        );
-                    });
-                },
-            );
+                } else {
+                    pool::par_chunks2_mut(
+                        gx_chunk,
+                        cin * hw_in,
+                        &mut cols_t[..clen * n * kw_all],
+                        n * kw_all,
+                        work,
+                        |ci, gxs, ct| {
+                            pool::with_scratch(|s| {
+                                let gs = gout.row0(c0 + ci);
+                                let xs = x.row0(c0 + ci);
+                                gx_sample(
+                                    gs,
+                                    w,
+                                    &wf_all,
+                                    g,
+                                    gxs,
+                                    &mut s.im2col,
+                                    &mut s.pack_a,
+                                    &mut s.pack_b,
+                                );
+                                im2col(
+                                    xs, cin, h, wd, k, stride, ho, wo,
+                                    pad_h, pad_w, 1, kw_all, ct,
+                                );
+                            });
+                        },
+                    );
+                }
+            }
+            None => {
+                if !g.direct() {
+                    pool::par_chunks_mut(
+                        &mut cols_t[..clen * n * kw_all],
+                        n * kw_all,
+                        work,
+                        |ci, ct| {
+                            let xs = x.row0(c0 + ci);
+                            im2col(
+                                xs, cin, h, wd, k, stride, ho, wo, pad_h,
+                                pad_w, 1, kw_all, ct,
+                            );
+                        },
+                    );
+                }
+            }
         }
 
         // Phase B — gw in out-channel blocks: each job owns a row block
         // and folds this chunk's samples in ascending order (the scalar
         // order, continued across chunks).
-        pool::par_chunks_mut(&mut gw, gemm::MR * kw_g, work, |ci, gwr| {
+        pool::par_chunks_mut(gw, gemm::MR * kw_g, work, |ci, gwr| {
             pool::with_scratch(|s| {
                 let o0 = ci * gemm::MR;
                 let mrows = gwr.len() / kw_g;
@@ -776,12 +936,10 @@ pub fn conv2d_bwd(
     }
     if !g.direct() {
         pool::give_shared(cols_t);
-        pool::give_shared(wf_all);
+        if !wf_all.is_empty() {
+            pool::give_shared(wf_all);
+        }
     }
-    (
-        Tensor::new(x.shape.clone(), gx),
-        Tensor::new(w.shape.clone(), gw),
-    )
 }
 
 /// Per-job row count for partitioning a (B, ...) matrix across the pool:
@@ -793,12 +951,26 @@ fn row_grain(rows: usize) -> usize {
 /// x (B, Cin) @ w (Cout, Cin)^T — GEMM with `w` viewed transposed.
 /// Reduction over `Cin` ascending: the scalar loop's order.
 pub fn fc_fwd(x: &Tensor, w: &Tensor) -> Tensor {
+    let (b, cout) = (x.shape[0], w.shape[0]);
+    let mut out = vec![0f32; b * cout];
+    fc_fwd_core(x, w, &mut out);
+    Tensor::new(vec![b, cout], out)
+}
+
+/// [`fc_fwd`] into a caller-provided (pre-existing) buffer; zeroed here
+/// because the GEMM accumulates.
+pub(crate) fn fc_fwd_into(x: &Tensor, w: &Tensor, out: &mut [f32]) {
+    out.fill(0.0);
+    fc_fwd_core(x, w, out);
+}
+
+fn fc_fwd_core(x: &Tensor, w: &Tensor, out: &mut [f32]) {
     let (b, cin) = (x.shape[0], x.shape[1]);
     let cout = w.shape[0];
-    let mut out = vec![0f32; b * cout];
+    assert_eq!(out.len(), b * cout, "fc_fwd: bad out len");
     let work = out.len().saturating_mul(cin);
     let rows = row_grain(b);
-    pool::par_chunks_mut(&mut out, rows * cout, work, |ci, orows| {
+    pool::par_chunks_mut(out, rows * cout, work, |ci, orows| {
         pool::with_scratch(|s| {
             let r0 = ci * rows;
             let m = orows.len() / cout;
@@ -819,7 +991,6 @@ pub fn fc_fwd(x: &Tensor, w: &Tensor) -> Tensor {
             );
         });
     });
-    Tensor::new(vec![b, cout], out)
 }
 
 /// Backward of [`fc_fwd`]: `gx = g @ w` (reduction over `Cout`
@@ -827,35 +998,68 @@ pub fn fc_fwd(x: &Tensor, w: &Tensor) -> Tensor {
 /// both exactly the fused scalar loop's per-element accumulation order,
 /// partitioned over output rows.
 pub fn fc_bwd(x: &Tensor, w: &Tensor, gout: &Tensor) -> (Tensor, Tensor) {
+    let mut gx = vec![0f32; x.data.len()];
+    let mut gw = vec![0f32; w.data.len()];
+    fc_bwd_core(x, w, gout, Some(&mut gx), &mut gw);
+    (
+        Tensor::new(x.shape.clone(), gx),
+        Tensor::new(w.shape.clone(), gw),
+    )
+}
+
+/// [`fc_bwd`] into caller-provided buffers; `gx: None` skips the
+/// input-gradient GEMM (frozen-input head layers only need `gw`). Both
+/// buffers are zeroed here — the GEMMs accumulate.
+pub(crate) fn fc_bwd_into(
+    x: &Tensor,
+    w: &Tensor,
+    gout: &Tensor,
+    mut gx: Option<&mut [f32]>,
+    gw: &mut [f32],
+) {
+    if let Some(g) = gx.as_deref_mut() {
+        g.fill(0.0);
+    }
+    gw.fill(0.0);
+    fc_bwd_core(x, w, gout, gx, gw);
+}
+
+fn fc_bwd_core(
+    x: &Tensor,
+    w: &Tensor,
+    gout: &Tensor,
+    mut gx: Option<&mut [f32]>,
+    gw: &mut [f32],
+) {
     let (b, cin) = (x.shape[0], x.shape[1]);
     let cout = w.shape[0];
-    let mut gx = vec![0f32; b * cin];
-    let mut gw = vec![0f32; cout * cin];
     let work = (b * cout).saturating_mul(cin);
     let rows = row_grain(b);
-    pool::par_chunks_mut(&mut gx, rows * cin, work, |ci, gxr| {
-        pool::with_scratch(|s| {
-            let r0 = ci * rows;
-            let m = gxr.len() / cin;
-            gemm::gemm(
-                m,
-                cin,
-                cout,
-                &gout.data[r0 * cout..],
-                cout,
-                1,
-                &w.data,
-                cin,
-                1,
-                gxr,
-                cin,
-                &mut s.pack_a,
-                &mut s.pack_b,
-            );
+    if let Some(gx) = gx.as_deref_mut() {
+        pool::par_chunks_mut(gx, rows * cin, work, |ci, gxr| {
+            pool::with_scratch(|s| {
+                let r0 = ci * rows;
+                let m = gxr.len() / cin;
+                gemm::gemm(
+                    m,
+                    cin,
+                    cout,
+                    &gout.data[r0 * cout..],
+                    cout,
+                    1,
+                    &w.data,
+                    cin,
+                    1,
+                    gxr,
+                    cin,
+                    &mut s.pack_a,
+                    &mut s.pack_b,
+                );
+            });
         });
-    });
+    }
     let orows = row_grain(cout);
-    pool::par_chunks_mut(&mut gw, orows * cin, work, |ci, gwr| {
+    pool::par_chunks_mut(gw, orows * cin, work, |ci, gwr| {
         pool::with_scratch(|s| {
             let o0 = ci * orows;
             let m = gwr.len() / cin;
@@ -876,10 +1080,6 @@ pub fn fc_bwd(x: &Tensor, w: &Tensor, gout: &Tensor) -> (Tensor, Tensor) {
             );
         });
     });
-    (
-        Tensor::new(x.shape.clone(), gx),
-        Tensor::new(w.shape.clone(), gw),
-    )
 }
 
 /// Global average pool (B, C, H, W) -> (B, C).
@@ -1039,9 +1239,10 @@ fn layer_bwd(
 // ------------------------------------------------------------------
 
 /// One structural node of a unit graph. Indices point into the unit's
-/// layer list (manifest binding order).
-#[derive(Debug, Clone)]
-enum Node {
+/// layer list (manifest binding order). `pub(crate)`: the reconstruction
+/// plan ([`super::plan`]) compiles the same node vocabulary.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum Node {
     /// Plain chain-apply of one layer.
     Layer(usize),
     /// ResNet basic block: relu(conv2(conv1(x)) + [down](x)).
@@ -1148,13 +1349,13 @@ fn parse_topo(topo: &str, nlayers: usize) -> Result<Vec<Node>> {
 
 /// A unit compiled against the manifest: node program + layer geometry.
 #[derive(Clone)]
-struct UnitProg {
-    name: String,
-    nodes: Vec<Node>,
-    layers: Vec<LayerInfo>, // unit binding order
-    model_ids: Vec<usize>,  // model-order index of each unit layer
-    uses_skip: bool,
-    save_skip: bool,
+pub(crate) struct UnitProg {
+    pub(crate) name: String,
+    pub(crate) nodes: Vec<Node>,
+    pub(crate) layers: Vec<LayerInfo>, // unit binding order
+    pub(crate) model_ids: Vec<usize>,  // model-order index of each layer
+    pub(crate) uses_skip: bool,
+    pub(crate) save_skip: bool,
 }
 
 fn build_unit_prog(model: &ModelInfo, u: &UnitInfo) -> Result<UnitProg> {
@@ -1224,30 +1425,29 @@ fn node_fwd(
         Node::Basic { c1, c2, down } => {
             let t1 = lf(c1, x);
             let t2 = lf(c2, &t1.out);
-            let (td, sc) = match down {
+            // the skip hop is borrowed, not cloned: the add reads it once
+            let (td, mut out) = match down {
                 Some(d) => {
                     let td = lf(d, x);
-                    let sc = td.out.clone();
-                    (Some(td), sc)
+                    let o = add(&t2.out, &td.out);
+                    (Some(td), o)
                 }
-                None => (None, x.clone()),
+                None => (None, add(&t2.out, x)),
             };
-            let mut out = add(&t2.out, &sc);
             relu_inplace(&mut out);
             Ok((out.clone(), NodeTape::Basic { t1, t2, td, out }))
         }
         Node::BasicL2 { c2, down } => {
             let sk = skip.context("basic_l2 unit needs a skip input")?;
             let t2 = lf(c2, x);
-            let (td, sc) = match down {
+            let (td, mut out) = match down {
                 Some(d) => {
                     let td = lf(d, sk);
-                    let sc = td.out.clone();
-                    (Some(td), sc)
+                    let o = add(&t2.out, &td.out);
+                    (Some(td), o)
                 }
-                None => (None, sk.clone()),
+                None => (None, add(&t2.out, sk)),
             };
-            let mut out = add(&t2.out, &sc);
             relu_inplace(&mut out);
             Ok((out.clone(), NodeTape::BasicL2 { t2, td, out }))
         }
@@ -1298,21 +1498,24 @@ fn node_bwd(
                 layer_bwd(&prog.layers[c2], t2, ws[c2], aq[c2], &g);
             gws[c2] = add(&gws[c2], &gw2);
             gsteps[c2] += gs2;
-            let g_sc = match (down, td) {
+            // identity skip: borrow the masked grad instead of cloning it
+            let g_sc_store;
+            let g_sc: &Tensor = match (down, td) {
                 (Some(d), Some(tdd)) => {
                     let (gxd, gwd, gsd) =
                         layer_bwd(&prog.layers[d], tdd, ws[d], aq[d], &g);
                     gws[d] = add(&gws[d], &gwd);
                     gsteps[d] += gsd;
-                    gxd
+                    g_sc_store = gxd;
+                    &g_sc_store
                 }
-                _ => g.clone(),
+                _ => &g,
             };
             let (gx1, gw1, gs1) =
                 layer_bwd(&prog.layers[c1], t1, ws[c1], aq[c1], &gh1);
             gws[c1] = add(&gws[c1], &gw1);
             gsteps[c1] += gs1;
-            Ok((add(&gx1, &g_sc), None))
+            Ok((add(&gx1, g_sc), None))
         }
         (&Node::BasicL2 { c2, down }, NodeTape::BasicL2 { t2, td, out }) => {
             let g = relu_mask(gout, out);
@@ -1375,14 +1578,17 @@ fn run_unit(
     bs: &[&Tensor],
     aq: &[Option<AqParams>],
 ) -> Result<(Tensor, Vec<NodeTape>)> {
-    let mut main = x.clone();
+    // the first hop borrows `x`; only node outputs are owned (a clone
+    // happens solely in the degenerate empty-program case)
+    let mut main: Option<Tensor> = None;
     let mut tapes = Vec::with_capacity(prog.nodes.len());
     for node in &prog.nodes {
-        let (out, tape) = node_fwd(prog, node, &main, skip, ws, bs, aq)?;
+        let inp = main.as_ref().unwrap_or(x);
+        let (out, tape) = node_fwd(prog, node, inp, skip, ws, bs, aq)?;
         tapes.push(tape);
-        main = out;
+        main = Some(out);
     }
-    Ok((main, tapes))
+    Ok((main.unwrap_or_else(|| x.clone()), tapes))
 }
 
 /// Backward through a whole unit: returns (grad wrt unit input, grad wrt
@@ -1397,19 +1603,22 @@ fn run_unit_bwd(
     gws: &mut [Tensor],
     gsteps: &mut [f32],
 ) -> Result<(Tensor, Option<Tensor>)> {
-    let mut g = gout.clone();
+    // the first (reverse) hop borrows `gout`; later hops own their grads
+    let mut g: Option<Tensor> = None;
     let mut g_skip: Option<Tensor> = None;
     for (node, tape) in prog.nodes.iter().zip(tapes.iter()).rev() {
-        let (gx, gs) = node_bwd(prog, node, tape, ws, aq, &g, gws, gsteps)?;
+        let gref = g.as_ref().unwrap_or(gout);
+        let (gx, gs) =
+            node_bwd(prog, node, tape, ws, aq, gref, gws, gsteps)?;
         if let Some(gs) = gs {
             g_skip = Some(match g_skip {
                 Some(acc) => add(&acc, &gs),
                 None => gs,
             });
         }
-        g = gx;
+        g = Some(gx);
     }
-    Ok((g, g_skip))
+    Ok((g.unwrap_or_else(|| gout.clone()), g_skip))
 }
 
 /// Enumerate (unit-layer index, tape) pairs in layer binding order —
@@ -1647,15 +1856,6 @@ impl NativeBackend {
         let (zq, tapes) = run_unit(u, x, skip, &wrefs, &bs, &aq)?;
         let rec = fim_loss(z_fp, &zq, fim);
 
-        // rounding regularizer sum_i sum(1 - |2h-1|^beta)
-        let mut rl = 0f64;
-        for v in &vs {
-            for &ve in &v.data {
-                let t = 2.0 * rect_sigmoid(ve) - 1.0;
-                rl += 1.0 - (t.abs() as f64).powf(beta as f64);
-            }
-        }
-
         // backward
         let g_zq = fim_loss_grad_zq(z_fp, &zq, fim);
         let mut gws: Vec<Tensor> =
@@ -1663,12 +1863,16 @@ impl NativeBackend {
         let mut gsteps = vec![0f32; nu];
         run_unit_bwd(u, &tapes, &wrefs, &aq, &g_zq, &mut gws, &mut gsteps)?;
 
-        // chain to v: gv = gw_hat * step * inside * h'(v) + lam * d(rl)/dv
-        let mut out = vec![
-            Tensor::scalar1((rec + lam as f64 * rl) as f32),
-            Tensor::scalar1(rec as f32),
-            Tensor::scalar1(rl as f32),
-        ];
+        // One fused pass per rounding variable: the rounding regularizer
+        // sum_i sum(1 - |2h(v)-1|^beta) and the chain to v
+        // (gv = gw_hat * step * inside * h'(v) + lam * d(rl)/dv) both need
+        // h(v) — [`gv_reg_elem`] evaluates the sigmoid once per element
+        // and serves both. The rl chain accumulates in the same
+        // layer-then-linear element order as the former standalone loop,
+        // so the sum (and every gv element) is bit-identical to the
+        // two-pass form.
+        let mut rl = 0f64;
+        let mut gvs = Vec::with_capacity(nu);
         for i in 0..nu {
             let w = ws[i];
             let inner = w.inner();
@@ -1676,28 +1880,29 @@ impl NativeBackend {
             for ch in 0..w.c0() {
                 let s = wsteps[i].data[ch];
                 for e in ch * inner..(ch + 1) * inner {
-                    let ve = vs[i].data[e];
-                    let mut g = adaround_grad_v(
+                    let (term, g) = gv_reg_elem(
                         w.data[e],
                         s,
-                        ve,
+                        vs[i].data[e],
                         wns[i],
                         wps[i],
                         gws[i].data[e],
+                        beta,
+                        lam,
                     );
-                    if lam > 0.0 {
-                        let t = 2.0 * rect_sigmoid(ve) - 1.0;
-                        let dr = -(beta) * t.abs().powf(beta - 1.0)
-                            * t.signum()
-                            * 2.0
-                            * rect_sigmoid_grad(ve);
-                        g += lam * dr;
-                    }
+                    rl += term;
                     gv.data[e] = g;
                 }
             }
-            out.push(gv);
+            gvs.push(gv);
         }
+
+        let mut out = vec![
+            Tensor::scalar1((rec + lam as f64 * rl) as f32),
+            Tensor::scalar1(rec as f32),
+            Tensor::scalar1(rl as f32),
+        ];
+        out.extend(gvs);
         for gs in gsteps {
             out.push(Tensor::scalar1(if aq_on { gs } else { 0.0 }));
         }
@@ -2019,6 +2224,29 @@ impl Backend for NativeBackend {
 
     fn compiled_count(&self) -> usize {
         self.progs.len()
+    }
+
+    /// Compile a stateful reconstruction plan for a `unit_recon`
+    /// executable (see [`super::plan`]). Multi-node (seq) units return
+    /// `None` and fall back to per-iteration dispatch — the retained
+    /// parity path.
+    fn prepare_recon<'p>(
+        &'p self,
+        name: &str,
+        inputs: super::plan::PlanInputs<'p>,
+    ) -> Result<Option<Box<dyn super::plan::ReconPlan + 'p>>> {
+        let Some(Prog::UnitRecon(u)) = self.progs.get(name) else {
+            return Ok(None);
+        };
+        let t0 = std::time::Instant::now();
+        let plan = super::plan::build_native_plan(u, inputs)?;
+        if plan.is_some() {
+            self.dispatches.record(
+                &format!("{name}#plan_build"),
+                t0.elapsed().as_secs_f64(),
+            );
+        }
+        Ok(plan)
     }
 }
 

@@ -1,0 +1,1291 @@
+//! Reconstruction-plan engine: the Algorithm-1 inner loop, compiled.
+//!
+//! `recon.rs::reconstruct_unit` runs `T` (default 800) iterations per
+//! unit, and every quantity except the sampled mini-batch, the rounding
+//! variables `v`, the learned activation steps and the (β, λ) schedule is
+//! frozen for the whole loop: the unit input cache, the skip cache, the
+//! FP targets, the FIM weights, the FP weights/biases and all quantizer
+//! bounds. The per-dispatch path re-pays for that freezing every
+//! iteration — fresh gather tensors, a `w.clone()` per layer for soft
+//! quantization, fresh tapes and gradient buffers, and a full `im2col`
+//! of the frozen first-layer input. A [`ReconPlan`] pays once:
+//!
+//! * **Cached im2col slabs.** The first layer(s) of a unit read the
+//!   frozen input cache, so the plan pre-builds their im2col slabs over
+//!   the whole K-sample cache — both the forward `(kw × n)` layout and
+//!   the transposed `(n × kw)` weight-gradient layout — and each
+//!   iteration's GEMMs read the sampled rows straight out of the slab.
+//!   Per-sample im2col is a pure per-sample gather, so a slab row is
+//!   bitwise identical to a freshly built one. 1×1 stride-1 layers need
+//!   no slab at all: the cache row already is its own column matrix.
+//! * **Persistent scratch.** Soft-quantized weights, activations,
+//!   gradient buffers, the gathered `xb/skb/zb/fb` batches and the
+//!   regularizer term buffer are plan-owned and reused every step; the
+//!   big slabs come from the [`pool`] shared arena and return to it on
+//!   drop, so plan after plan builds warm. A warm `step()` performs no
+//!   heap allocation (`tests/plan.rs` pins this on the arena counters).
+//! * **Fused dispatch.** One `step(rows, vs, asteps, beta, lam)` call
+//!   replaces the ~10·nl-argument `unit_recon` rebinding; the per-layer
+//!   soft-quantize and the h(v)-sharing gv/regularizer pass fan out over
+//!   out-channels on the pool (ownership-partitioned — each channel's
+//!   chain is independent, so thread-count parity is free).
+//!
+//! **Determinism contract.** Every step is bit-identical to the retained
+//! per-dispatch path at any `BRECQ_THREADS`: the slab feeds reproduce
+//! `conv2d`/`conv2d_bwd`'s exact GEMM calls on identical operands, every
+//! elementwise pass keeps the scalar loop's arithmetic order, and the
+//! only cross-element reduction (the f64 rounding-regularizer sum) folds
+//! on the calling thread in the dispatch path's layer-then-linear
+//! element order. `tests/plan.rs` asserts plan-vs-dispatch equality of
+//! losses, gradients and committed weights bitwise at 1/2/8 threads.
+//!
+//! Scope: plans cover single-node units (every unit of the synthetic
+//! models at `layer` and `block` granularity). Multi-node `seq(...)`
+//! units (stage/net granularity) and activation-quantized first layers
+//! keep their exact semantics through the fallbacks: `build` returns
+//! `None` for seq units, and aq-on plans skip the slab feed (the trained
+//! activation step re-quantizes the frozen input every iteration) while
+//! keeping the persistent scratch and fused dispatch.
+
+// Kernel-feeding loops index several buffers with shared offset
+// arithmetic (same rationale as runtime::native).
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::{ensure, Result};
+
+use crate::model::LayerInfo;
+use crate::tensor::Tensor;
+use crate::util::pool;
+
+use super::gemm;
+use super::native::{
+    adaround, add_bias, conv2d_bwd_into, conv2d_into, fc_bwd_into,
+    fc_fwd_into, gap_fwd, gv_reg_elem, gw_accum, im2col, lsq, lsq_grads,
+    relu_inplace, AqParams, BwdGeom, Node, UnitProg,
+};
+
+/// Total f32 elements the per-plan im2col slabs may occupy (both layouts
+/// summed, ~128 MB). Layers past the budget fall back to per-iteration
+/// im2col into warm pool scratch — still zero-alloc, just re-lowered.
+const PLAN_SLAB_BUDGET: usize = 1 << 25;
+
+static PLAN_BUILDS: AtomicUsize = AtomicUsize::new(0);
+static PLAN_STEPS: AtomicUsize = AtomicUsize::new(0);
+static PLAN_FALLBACK_STEPS: AtomicUsize = AtomicUsize::new(0);
+
+/// (plans built, plan steps run, dispatch-fallback iterations) since
+/// process start — the bench JSONs report these.
+pub fn counters() -> (usize, usize, usize) {
+    (
+        PLAN_BUILDS.load(Ordering::Relaxed),
+        PLAN_STEPS.load(Ordering::Relaxed),
+        PLAN_FALLBACK_STEPS.load(Ordering::Relaxed),
+    )
+}
+
+/// Record one reconstruction iteration that ran on the per-dispatch
+/// fallback path instead of a plan.
+pub fn note_fallback_step() {
+    PLAN_FALLBACK_STEPS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Everything frozen across a unit's reconstruction loop. Borrowed, not
+/// copied: the plan lives inside one `reconstruct_unit` call.
+pub struct PlanInputs<'a> {
+    /// Quantized-stream unit input cache, (K, ...).
+    pub x: &'a Tensor,
+    /// Skip-path cache for `uses_skip` units.
+    pub skip: Option<&'a Tensor>,
+    /// FP reconstruction targets, (K, out...).
+    pub z_fp: &'a Tensor,
+    /// Eq. 10 weights; `None` means unit weight (plain MSE) — bitwise
+    /// identical to an all-ones tensor.
+    pub fim: Option<&'a Tensor>,
+    /// FP weights / biases, unit binding order.
+    pub ws: Vec<&'a Tensor>,
+    pub bs: Vec<&'a Tensor>,
+    /// Per-channel AdaRound step tensors.
+    pub wsteps: Vec<&'a Tensor>,
+    /// Weight-grid clip bounds (n, p) per layer.
+    pub wbounds: Vec<(f32, f32)>,
+    /// Activation-grid bounds (lo, hi) per site.
+    pub abounds: Vec<(f32, f32)>,
+    /// Activation quantization on?
+    pub aq: bool,
+    /// Mini-batch size (fixed across all steps).
+    pub batch: usize,
+}
+
+/// Scalar outputs of one fused iteration — exactly the first three
+/// outputs of the `unit_recon` executable (as f32, like its scalar1
+/// tensors, so reported losses are bit-identical to the dispatch path).
+#[derive(Debug, Clone, Copy)]
+pub struct StepOut {
+    pub loss: f32,
+    pub rec: f32,
+    pub round: f32,
+}
+
+/// A compiled, stateful reconstruction loop for one unit.
+pub trait ReconPlan {
+    /// One Algorithm-1 iteration over the sampled cache rows. `vs` and
+    /// `asteps` are the current trainables (unit binding order); the
+    /// gradients land in [`ReconPlan::gv`] / [`ReconPlan::gsteps`].
+    fn step(
+        &mut self,
+        rows: &[usize],
+        vs: &[Tensor],
+        asteps: &[Tensor],
+        beta: f32,
+        lam: f32,
+    ) -> Result<StepOut>;
+
+    /// Per-layer AdaRound gradients from the last step.
+    fn gv(&self) -> &[Tensor];
+
+    /// Per-site LSQ step gradients from the last step (scalar tensors;
+    /// zero when activation quantization is off — the executable's
+    /// `gastep` semantics).
+    fn gsteps(&self) -> &[Tensor];
+}
+
+// ------------------------------------------------------------------
+// Native plan
+// ------------------------------------------------------------------
+
+/// Where a planned layer reads its input.
+#[derive(Clone, Copy, PartialEq)]
+enum Input {
+    /// The unit input cache (frozen).
+    X,
+    /// The unit skip cache (frozen).
+    Skip,
+    /// The precomputed global-average-pool of the input cache (frozen).
+    Gap,
+    /// Another planned layer's output buffer (unit binding index).
+    Layer(usize),
+}
+
+/// Where a layer's incoming output-gradient lives during backward.
+#[derive(Clone, Copy)]
+enum GradSrc {
+    /// The unit-output loss gradient buffer.
+    GZq,
+    /// A consumer layer's input-gradient buffer.
+    LayerGx(usize),
+}
+
+/// Whole-cache im2col slabs for one frozen-input conv layer.
+struct Slab {
+    /// Forward layout: per sample `kw_all x n` row-major.
+    fwd: Vec<f32>,
+    /// Transposed layout: per sample `n x kw_all` (the gw fold operand).
+    bwd_t: Vec<f32>,
+    /// Elements per sample in each layout (`kw_all * n`).
+    per: usize,
+}
+
+/// One planned layer: geometry + persistent buffers.
+struct PLayer {
+    info: LayerInfo,
+    input: Input,
+    /// Conv geometry at the step batch size (None for fc).
+    conv: Option<BwdGeom>,
+    /// Frozen 1x1 stride-1 conv reading cache rows directly (aq off).
+    direct: bool,
+    /// Frozen conv fed from pre-built whole-cache slabs (aq off).
+    slab: Option<Slab>,
+    wn: f32,
+    wp: f32,
+    alo: f32,
+    ahi: f32,
+    /// Soft-quantized weights (rebuilt in place every step).
+    what: Tensor,
+    /// Output activations (bsz), post bias/relu.
+    z: Tensor,
+    /// LSQ-quantized input (aq only).
+    xq: Option<Tensor>,
+    /// Gradient wrt the (quantized) layer input; None when the input is
+    /// frozen and no LSQ chain needs it.
+    gx: Option<Tensor>,
+    /// Weight gradient (re-zeroed by the kernels every step).
+    gw: Tensor,
+}
+
+pub struct NativeReconPlan<'a> {
+    node: Node,
+    layers: Vec<PLayer>,
+    // frozen caches + constants (borrowed)
+    x: &'a Tensor,
+    skip: Option<&'a Tensor>,
+    z_fp: &'a Tensor,
+    fim: Option<&'a Tensor>,
+    ws: Vec<&'a Tensor>,
+    bs: Vec<&'a Tensor>,
+    wsteps: Vec<&'a Tensor>,
+    aq: bool,
+    bsz: usize,
+    // gathered batches (persistent)
+    xb: Option<Tensor>,
+    skb: Option<Tensor>,
+    zb: Tensor,
+    fb: Option<Tensor>,
+    /// gap over the whole K cache (GapFc units), gathered into `gapb`.
+    gap_cache: Option<Tensor>,
+    gapb: Option<Tensor>,
+    /// Node output after a residual add (+ relu), when the node has one.
+    nout: Option<Tensor>,
+    g_zq: Tensor,
+    // per-layer outputs of the fused gv/regularizer pass
+    gvs: Vec<Tensor>,
+    rbufs: Vec<Vec<f64>>,
+    gstep_t: Vec<Tensor>,
+}
+
+/// Disjoint (mutable, shared) pair from one layer slice.
+fn pair_mut(ls: &mut [PLayer], i: usize, j: usize) -> (&mut PLayer, &PLayer) {
+    assert_ne!(i, j, "pair_mut: aliasing layer indices");
+    if i < j {
+        let (a, b) = ls.split_at_mut(j);
+        (&mut a[i], &b[0])
+    } else {
+        let (a, b) = ls.split_at_mut(i);
+        (&mut b[0], &a[j])
+    }
+}
+
+/// In-place relu backward mask: `g = if out > 0 { g } else { 0 }` — the
+/// dispatch path's `relu_mask` without the allocation.
+fn relu_mask_inplace(g: &mut Tensor, out: &Tensor) {
+    for (gv, ov) in g.data.iter_mut().zip(&out.data) {
+        *gv = if *ov > 0.0 { *gv } else { 0.0 };
+    }
+}
+
+/// Elementwise residual add into a persistent buffer: the dispatch
+/// path's `add(a, b)` with `out[i] = a[i] + b[i]`.
+fn add_into(a: &Tensor, b: &[f32], out: &mut Tensor) {
+    debug_assert_eq!(a.data.len(), out.data.len());
+    debug_assert_eq!(b.len(), out.data.len());
+    for i in 0..out.data.len() {
+        out.data[i] = a.data[i] + b[i];
+    }
+}
+
+/// LSQ fake-quant of the gathered batch into the persistent xq buffer
+/// (the dispatch path's `x.map(|v| lsq(..))`).
+fn lsq_fill(x: &Tensor, p: AqParams, xq: &mut Tensor) {
+    debug_assert_eq!(x.data.len(), xq.data.len());
+    for (o, &v) in xq.data.iter_mut().zip(&x.data) {
+        *o = lsq(v, p.step, p.lo, p.hi);
+    }
+}
+
+/// LSQ backward chain, in the dispatch path's linear element order:
+/// transforms `gx` (grad wrt quantized input) into grad wrt raw input in
+/// place and returns the accumulated scalar step gradient.
+fn lsq_chain(x: &Tensor, p: AqParams, gx: &mut Tensor) -> f32 {
+    let mut gstep = 0f32;
+    for i in 0..gx.data.len() {
+        let (gi, ds) = lsq_grads(x.data[i], p.step, p.lo, p.hi, gx.data[i]);
+        gx.data[i] = gi;
+        gstep += ds;
+    }
+    gstep
+}
+
+/// Forward column source for a frozen conv layer.
+#[derive(Clone, Copy)]
+enum ColsSrc<'s> {
+    /// Pre-built forward-layout slab, indexed by sampled cache row.
+    Slab { slab: &'s [f32], per: usize },
+    /// 1x1 stride-1: the cache row already is its own column matrix.
+    Cache(&'s Tensor),
+}
+
+/// Per-sample im2col+GEMM forward fed straight from the frozen source —
+/// exactly `conv2d`'s partitioning and GEMM calls, minus the im2col
+/// build. Bit-identical to `conv2d` on the gathered batch.
+fn conv_fwd_frozen(
+    g: BwdGeom,
+    what: &Tensor,
+    src: ColsSrc<'_>,
+    rows: &[usize],
+    z: &mut [f32],
+) {
+    let (n, kw_g) = (g.n(), g.kw_g());
+    z.fill(0.0);
+    let work = z.len().saturating_mul(kw_g);
+    pool::par_chunks_mut(z, g.cout * n, work, |bi, orow| {
+        pool::with_scratch(|s| {
+            let cols: &[f32] = match src {
+                ColsSrc::Slab { slab, per } => {
+                    &slab[rows[bi] * per..][..per]
+                }
+                ColsSrc::Cache(t) => t.row0(rows[bi]),
+            };
+            for gi in 0..g.groups {
+                gemm::gemm(
+                    g.cpg_out,
+                    n,
+                    kw_g,
+                    &what.data[gi * g.cpg_out * kw_g..],
+                    kw_g,
+                    1,
+                    &cols[gi * kw_g * n..],
+                    n,
+                    1,
+                    &mut orow[gi * g.cpg_out * n..],
+                    n,
+                    &mut s.pack_a,
+                    &mut s.pack_b,
+                );
+            }
+        });
+    });
+}
+
+/// Weight-gradient source for a frozen conv layer's backward fold.
+#[derive(Clone, Copy)]
+enum GwSrc<'s> {
+    /// Pre-built transposed-layout slab rows.
+    SlabT { slab: &'s [f32], per: usize },
+    /// 1x1 stride-1: cache rows viewed with (1, hw) strides.
+    Cache(&'s Tensor),
+}
+
+/// Frozen-input weight gradient: out-channel row blocks fold the sampled
+/// batch strictly ascending — `conv2d_bwd`'s phase-B partition and
+/// `gw_accum` calls on identical operands, with the input-gradient phase
+/// (which a frozen unit input never needs) skipped entirely.
+fn conv_gw_frozen(
+    g: BwdGeom,
+    gout: &Tensor,
+    src: GwSrc<'_>,
+    rows: &[usize],
+    gw: &mut [f32],
+) {
+    let (kw_g, kw_all, hw_in) = (g.kw_g(), g.kw_all(), g.hw_in());
+    gw.fill(0.0);
+    let work = gout.data.len().saturating_mul(kw_g);
+    pool::par_chunks_mut(gw, gemm::MR * kw_g, work, |ci, gwr| {
+        pool::with_scratch(|s| {
+            let o0 = ci * gemm::MR;
+            let mrows = gwr.len() / kw_g;
+            let mut r = 0;
+            while r < mrows {
+                let oc = o0 + r;
+                let gi = oc / g.cpg_out;
+                let m = ((gi + 1) * g.cpg_out - oc).min(mrows - r);
+                for (bi, &row) in rows.iter().enumerate() {
+                    let gs = gout.row0(bi);
+                    match src {
+                        GwSrc::SlabT { slab, per } => gw_accum(
+                            gs,
+                            &slab[row * per + gi * kw_g..],
+                            kw_all,
+                            1,
+                            g,
+                            oc,
+                            m,
+                            &mut gwr[r * kw_g..],
+                            &mut s.pack_a,
+                            &mut s.pack_b,
+                        ),
+                        GwSrc::Cache(t) => gw_accum(
+                            gs,
+                            &t.row0(row)[gi * g.cpg_in * hw_in..],
+                            1,
+                            hw_in,
+                            g,
+                            oc,
+                            m,
+                            &mut gwr[r * kw_g..],
+                            &mut s.pack_a,
+                            &mut s.pack_b,
+                        ),
+                    }
+                }
+                r += m;
+            }
+        });
+    });
+}
+
+/// Build both im2col slab layouts over the whole K-sample cache (samples
+/// partitioned across the pool; per-sample im2col is independent, so the
+/// slab rows equal freshly built per-batch columns bitwise).
+fn build_slab(g: BwdGeom, cache: &Tensor) -> Slab {
+    let k = cache.shape[0];
+    let per = g.kw_all() * g.n();
+    let mut fwd = pool::take_shared(k * per);
+    let mut bwd_t = pool::take_shared(k * per);
+    let work = (k * per).saturating_mul(4);
+    pool::par_chunks2_mut(&mut fwd, per, &mut bwd_t, per, work, |r, f, t| {
+        let xs = cache.row0(r);
+        im2col(
+            xs, g.cin, g.h, g.wd, g.k, g.stride, g.ho, g.wo, g.pad_h,
+            g.pad_w,
+            g.n(),
+            1,
+            f,
+        );
+        im2col(
+            xs,
+            g.cin,
+            g.h,
+            g.wd,
+            g.k,
+            g.stride,
+            g.ho,
+            g.wo,
+            g.pad_h,
+            g.pad_w,
+            1,
+            g.kw_all(),
+            t,
+        );
+    });
+    Slab { fwd, bwd_t, per }
+}
+
+/// Soft-quantize one layer's weights into its persistent buffer, fanned
+/// out per out-channel (each channel owns its contiguous slice and its
+/// own step — elementwise, so thread-count parity is free).
+fn soft_quant(pl: &mut PLayer, w: &Tensor, steps: &Tensor, v: &Tensor) {
+    let inner = w.inner();
+    let (wn, wp) = (pl.wn, pl.wp);
+    debug_assert_eq!(v.data.len(), w.data.len());
+    let work = w.numel().saturating_mul(32);
+    pool::par_chunks_mut(&mut pl.what.data, inner, work, |ch, chunk| {
+        let s = steps.data[ch];
+        let base = ch * inner;
+        for (j, o) in chunk.iter_mut().enumerate() {
+            *o = adaround(w.data[base + j], s, v.data[base + j], wn, wp);
+        }
+    });
+}
+
+/// One layer forward into its persistent output buffer. `input` is the
+/// gathered/produced batch tensor (None when the layer is slab- or
+/// cache-fed); `cache` is the frozen K-cache for slab/direct feeds.
+fn fwd_layer(
+    info: &LayerInfo,
+    geom: Option<BwdGeom>,
+    slab: Option<&Slab>,
+    direct: bool,
+    what: &Tensor,
+    bias: &Tensor,
+    xq: Option<&mut Tensor>,
+    z: &mut Tensor,
+    input: Option<&Tensor>,
+    cache: Option<&Tensor>,
+    rows: &[usize],
+    aqp: Option<AqParams>,
+) {
+    let mut conv_in = input;
+    let xq_ref;
+    if let (Some(p), Some(xq)) = (aqp, xq) {
+        lsq_fill(input.expect("aq layers read a gathered batch"), p, xq);
+        xq_ref = &*xq;
+        conv_in = Some(xq_ref);
+    }
+    if info.kind == "fc" {
+        fc_fwd_into(conv_in.expect("fc input"), what, &mut z.data);
+    } else if let Some(s) = slab {
+        conv_fwd_frozen(
+            geom.expect("conv geom"),
+            what,
+            ColsSrc::Slab { slab: &s.fwd, per: s.per },
+            rows,
+            &mut z.data,
+        );
+    } else if direct {
+        conv_fwd_frozen(
+            geom.expect("conv geom"),
+            what,
+            ColsSrc::Cache(cache.expect("direct feed cache")),
+            rows,
+            &mut z.data,
+        );
+    } else {
+        conv2d_into(
+            conv_in.expect("conv input"),
+            what,
+            info.stride,
+            info.groups,
+            &mut z.data,
+        );
+    }
+    add_bias(z, bias);
+    if info.relu {
+        relu_inplace(z);
+    }
+}
+
+/// One layer backward: weight gradient (always), input gradient (when
+/// the plan needs it), LSQ chain (aq). `g` is the grad at the layer
+/// output, already masked by this layer's relu. Returns the step grad.
+fn bwd_layer(
+    info: &LayerInfo,
+    geom: Option<BwdGeom>,
+    slab: Option<&Slab>,
+    direct: bool,
+    what: &Tensor,
+    raw_in: Option<&Tensor>,
+    conv_in: Option<&Tensor>,
+    g: &Tensor,
+    mut gx: Option<&mut Tensor>,
+    gw: &mut Tensor,
+    rows: &[usize],
+    cache: Option<&Tensor>,
+    aqp: Option<AqParams>,
+) -> f32 {
+    if info.kind == "fc" {
+        fc_bwd_into(
+            conv_in.expect("fc input"),
+            what,
+            g,
+            gx.as_mut().map(|t| t.data.as_mut_slice()),
+            &mut gw.data,
+        );
+    } else if let Some(s) = slab {
+        debug_assert!(gx.is_none(), "slab-fed layers skip gx");
+        conv_gw_frozen(
+            geom.expect("conv geom"),
+            g,
+            GwSrc::SlabT { slab: &s.bwd_t, per: s.per },
+            rows,
+            &mut gw.data,
+        );
+    } else if direct {
+        debug_assert!(gx.is_none(), "cache-fed layers skip gx");
+        conv_gw_frozen(
+            geom.expect("conv geom"),
+            g,
+            GwSrc::Cache(cache.expect("direct feed cache")),
+            rows,
+            &mut gw.data,
+        );
+    } else {
+        conv2d_bwd_into(
+            conv_in.expect("conv input"),
+            what,
+            info.stride,
+            info.groups,
+            g,
+            gx.as_mut().map(|t| t.data.as_mut_slice()),
+            &mut gw.data,
+        );
+    }
+    match (aqp, gx) {
+        (Some(p), Some(gxt)) => {
+            lsq_chain(raw_in.expect("aq raw input"), p, gxt)
+        }
+        _ => 0.0,
+    }
+}
+
+/// Batch-shape helper: `shape` with the leading dim replaced by `b`.
+fn batched(shape: &[usize], b: usize) -> Vec<usize> {
+    let mut s = shape.to_vec();
+    s[0] = b;
+    s
+}
+
+/// Compile a native reconstruction plan for a single-node unit; `None`
+/// means the unit keeps the per-dispatch path (multi-node `seq` units,
+/// or node shapes whose shared-gradient masking the plan cannot do in
+/// place).
+pub(crate) fn build_native_plan<'a>(
+    u: &UnitProg,
+    inp: PlanInputs<'a>,
+) -> Result<Option<Box<dyn ReconPlan + 'a>>> {
+    if u.nodes.len() != 1 {
+        return Ok(None);
+    }
+    let node = u.nodes[0];
+    // Basic/BasicL2 share the node-masked grad between conv2 and the
+    // downsample; the in-place mask needs the first consumer linear
+    // (always true for the exported topologies — decline otherwise).
+    match node {
+        Node::Basic { c2, .. } | Node::BasicL2 { c2, .. }
+            if u.layers[c2].relu =>
+        {
+            return Ok(None);
+        }
+        _ => {}
+    }
+
+    let nl = u.layers.len();
+    ensure!(
+        inp.ws.len() == nl
+            && inp.bs.len() == nl
+            && inp.wsteps.len() == nl
+            && inp.wbounds.len() == nl
+            && inp.abounds.len() == nl,
+        "plan inputs: arity mismatch ({} layers)",
+        nl
+    );
+    let k = inp.x.shape[0];
+    let bsz = inp.batch;
+    ensure!(bsz >= 1 && bsz <= k, "plan batch {bsz} vs cache {k}");
+
+    // layer input wiring (single node ⇒ frozen feeds are the unit caches)
+    let mut inputs_of = vec![Input::X; nl];
+    match node {
+        Node::Layer(i) => inputs_of[i] = Input::X,
+        Node::Basic { c1, c2, down } => {
+            inputs_of[c1] = Input::X;
+            inputs_of[c2] = Input::Layer(c1);
+            if let Some(d) = down {
+                inputs_of[d] = Input::X;
+            }
+        }
+        Node::BasicL2 { c2, down } => {
+            inputs_of[c2] = Input::X;
+            if let Some(d) = down {
+                inputs_of[d] = Input::Skip;
+            }
+        }
+        Node::Ir { e, d, p, .. } => {
+            inputs_of[e] = Input::X;
+            inputs_of[d] = Input::Layer(e);
+            inputs_of[p] = Input::Layer(d);
+        }
+        Node::IrL3 { p } => inputs_of[p] = Input::X,
+        Node::GapFc { fc } => inputs_of[fc] = Input::Gap,
+    }
+
+    // per-layer geometry + shape validation against the frozen caches
+    let mut geoms: Vec<Option<BwdGeom>> = Vec::with_capacity(nl);
+    for (i, info) in u.layers.iter().enumerate() {
+        ensure!(
+            inp.ws[i].shape == info.wshape,
+            "plan: layer {i} weight shape {:?} != manifest {:?}",
+            inp.ws[i].shape,
+            info.wshape
+        );
+        if info.kind == "fc" {
+            geoms.push(None);
+            continue;
+        }
+        let g = BwdGeom::of(
+            bsz,
+            info.cin,
+            info.h_in,
+            info.w_in,
+            inp.ws[i],
+            info.stride,
+            info.groups,
+        );
+        let src_shape: Option<&[usize]> = match inputs_of[i] {
+            Input::X => Some(&inp.x.shape),
+            Input::Skip => inp.skip.map(|s| s.shape.as_slice()),
+            _ => None,
+        };
+        if let Some(sh) = src_shape {
+            ensure!(
+                sh[1..] == [g.cin, g.h, g.wd],
+                "plan: layer {i} input {:?} != cache {:?}",
+                [g.cin, g.h, g.wd],
+                &sh[1..]
+            );
+        }
+        if let Input::Layer(p) = inputs_of[i] {
+            if let Some(Some(pg)) = geoms.get(p) {
+                ensure!(
+                    (pg.cout, pg.ho, pg.wo) == (g.cin, g.h, g.wd),
+                    "plan: layer {i} input geometry disagrees with its \
+                     producer {p}"
+                );
+            }
+        }
+        geoms.push(Some(g));
+    }
+
+    // unit output shape at the step batch
+    let out_of = |i: usize| -> Vec<usize> {
+        match (&u.layers[i].kind[..], geoms[i]) {
+            ("fc", _) => vec![bsz, u.layers[i].cout],
+            (_, Some(g)) => vec![bsz, g.cout, g.ho, g.wo],
+            _ => unreachable!("conv layer without geometry"),
+        }
+    };
+    let out_shape = match node {
+        Node::Layer(i) => out_of(i),
+        Node::Basic { c2, .. } | Node::BasicL2 { c2, .. } => out_of(c2),
+        Node::Ir { p, .. } | Node::IrL3 { p } => out_of(p),
+        Node::GapFc { fc } => out_of(fc),
+    };
+    ensure!(
+        inp.z_fp.shape[0] == k && inp.z_fp.shape[1..] == out_shape[1..],
+        "plan: z_fp shape {:?} != unit out {:?} at K={k}",
+        inp.z_fp.shape,
+        out_shape
+    );
+    if let Some(f) = inp.fim {
+        ensure!(
+            f.shape == inp.z_fp.shape,
+            "plan: fim shape {:?} != z_fp {:?}",
+            f.shape,
+            inp.z_fp.shape
+        );
+    }
+
+    // frozen-feed selection: slabs / direct cache reads (aq off only —
+    // a trained activation step re-quantizes the input every iteration)
+    let mut slab_left = PLAN_SLAB_BUDGET;
+    let mut layers: Vec<PLayer> = Vec::with_capacity(nl);
+    let mut gvs = Vec::with_capacity(nl);
+    let mut rbufs = Vec::with_capacity(nl);
+    let mut gstep_t = Vec::with_capacity(nl);
+    for (i, info) in u.layers.iter().enumerate() {
+        let frozen = !matches!(inputs_of[i], Input::Layer(_));
+        let is_conv = info.kind != "fc";
+        let (direct, slab) = if frozen && is_conv && !inp.aq {
+            let g = geoms[i].expect("conv geom");
+            if g.direct() {
+                (true, None)
+            } else {
+                let need = 2 * k * g.kw_all() * g.n();
+                if need <= slab_left {
+                    slab_left -= need;
+                    let cache = match inputs_of[i] {
+                        Input::X => inp.x,
+                        Input::Skip => inp.skip.expect("skip cache"),
+                        _ => unreachable!("frozen conv feeds X/Skip"),
+                    };
+                    (false, Some(build_slab(g, cache)))
+                } else {
+                    (false, None)
+                }
+            }
+        } else {
+            (false, None)
+        };
+        let in_shape = if is_conv {
+            let g = geoms[i].expect("conv geom");
+            vec![bsz, g.cin, g.h, g.wd]
+        } else {
+            vec![bsz, info.cin]
+        };
+        let want_gx = !frozen || inp.aq;
+        layers.push(PLayer {
+            info: info.clone(),
+            input: inputs_of[i],
+            conv: geoms[i],
+            direct,
+            slab,
+            wn: inp.wbounds[i].0,
+            wp: inp.wbounds[i].1,
+            alo: inp.abounds[i].0,
+            ahi: inp.abounds[i].1,
+            what: Tensor::zeros(info.wshape.clone()),
+            z: Tensor::zeros(out_of(i)),
+            xq: inp.aq.then(|| Tensor::zeros(in_shape.clone())),
+            gx: want_gx.then(|| Tensor::zeros(in_shape.clone())),
+            gw: Tensor::zeros(info.wshape.clone()),
+        });
+        gvs.push(Tensor::zeros(info.wshape.clone()));
+        rbufs.push(vec![0f64; inp.ws[i].numel()]);
+        gstep_t.push(Tensor::scalar1(0.0));
+    }
+
+    // which gathered batches the steps actually read
+    let tensor_fed = |l: &PLayer| l.slab.is_none() && !l.direct;
+    let need_xb = layers
+        .iter()
+        .any(|l| l.input == Input::X && tensor_fed(l))
+        || matches!(node, Node::Basic { down: None, .. })
+        || matches!(node, Node::Ir { res: true, .. });
+    let need_skb = layers
+        .iter()
+        .any(|l| l.input == Input::Skip && tensor_fed(l))
+        || matches!(node, Node::BasicL2 { down: None, .. })
+        || matches!(node, Node::IrL3 { .. });
+    if need_skb {
+        ensure!(inp.skip.is_some(), "plan: unit needs a skip cache");
+    }
+    let gap_cache = match node {
+        Node::GapFc { .. } => Some(gap_fwd(inp.x)),
+        _ => None,
+    };
+    let gapb = gap_cache
+        .as_ref()
+        .map(|g| Tensor::zeros(batched(&g.shape, bsz)));
+    let nout = match node {
+        Node::Basic { .. }
+        | Node::BasicL2 { .. }
+        | Node::IrL3 { .. }
+        | Node::Ir { res: true, .. } => {
+            Some(Tensor::zeros(out_shape.clone()))
+        }
+        _ => None,
+    };
+
+    PLAN_BUILDS.fetch_add(1, Ordering::Relaxed);
+    Ok(Some(Box::new(NativeReconPlan {
+        node,
+        layers,
+        x: inp.x,
+        skip: inp.skip,
+        z_fp: inp.z_fp,
+        fim: inp.fim,
+        ws: inp.ws,
+        bs: inp.bs,
+        wsteps: inp.wsteps,
+        aq: inp.aq,
+        bsz,
+        xb: need_xb.then(|| Tensor::zeros(batched(&inp.x.shape, bsz))),
+        skb: need_skb.then(|| {
+            Tensor::zeros(batched(&inp.skip.expect("skip").shape, bsz))
+        }),
+        zb: Tensor::zeros(out_shape.clone()),
+        fb: inp.fim.map(|_| Tensor::zeros(out_shape.clone())),
+        gap_cache,
+        gapb,
+        nout,
+        g_zq: Tensor::zeros(out_shape),
+        gvs,
+        rbufs,
+        gstep_t,
+    })))
+}
+
+impl NativeReconPlan<'_> {
+    /// Forward one layer into its persistent output buffer.
+    fn fwd_one(&mut self, i: usize, rows: &[usize], asteps: &[Tensor]) {
+        let aqp = self.aq.then(|| AqParams {
+            step: asteps[i].data[0],
+            lo: self.layers[i].alo,
+            hi: self.layers[i].ahi,
+        });
+        let input = self.layers[i].input;
+        match input {
+            Input::Layer(src) => {
+                let (pl, sp) = pair_mut(&mut self.layers, i, src);
+                fwd_layer(
+                    &pl.info,
+                    pl.conv,
+                    pl.slab.as_ref(),
+                    pl.direct,
+                    &pl.what,
+                    self.bs[i],
+                    pl.xq.as_mut(),
+                    &mut pl.z,
+                    Some(&sp.z),
+                    None,
+                    rows,
+                    aqp,
+                );
+            }
+            src => {
+                let cache: Option<&Tensor> = match src {
+                    Input::X => Some(self.x),
+                    Input::Skip => self.skip,
+                    _ => None,
+                };
+                let batch: Option<&Tensor> = match src {
+                    Input::X => self.xb.as_ref(),
+                    Input::Skip => self.skb.as_ref(),
+                    _ => self.gapb.as_ref(),
+                };
+                let pl = &mut self.layers[i];
+                fwd_layer(
+                    &pl.info,
+                    pl.conv,
+                    pl.slab.as_ref(),
+                    pl.direct,
+                    &pl.what,
+                    self.bs[i],
+                    pl.xq.as_mut(),
+                    &mut pl.z,
+                    batch,
+                    cache,
+                    rows,
+                    aqp,
+                );
+            }
+        }
+    }
+
+    /// Backward one layer: mask by its own relu, compute gw (and gx /
+    /// the LSQ chain when needed), store the step grad.
+    fn bwd_one(
+        &mut self,
+        i: usize,
+        src: GradSrc,
+        rows: &[usize],
+        asteps: &[Tensor],
+    ) {
+        let aqp = self.aq.then(|| AqParams {
+            step: asteps[i].data[0],
+            lo: self.layers[i].alo,
+            hi: self.layers[i].ahi,
+        });
+        // take the incoming grad out of its owner so the borrows of this
+        // layer, the producer layer and the grad never alias
+        let mut g_owned: Option<Tensor> = match src {
+            GradSrc::LayerGx(j) => {
+                Some(self.layers[j].gx.take().expect("consumer gx"))
+            }
+            GradSrc::GZq => None,
+        };
+        if self.layers[i].info.relu {
+            match g_owned.as_mut() {
+                Some(g) => relu_mask_inplace(g, &self.layers[i].z),
+                None => {
+                    relu_mask_inplace(&mut self.g_zq, &self.layers[i].z)
+                }
+            }
+        }
+        let gstep = {
+            let input = self.layers[i].input;
+            let (pl, sp): (&mut PLayer, Option<&PLayer>) = match input {
+                Input::Layer(k) => {
+                    let (a, b) = pair_mut(&mut self.layers, i, k);
+                    (a, Some(b))
+                }
+                _ => (&mut self.layers[i], None),
+            };
+            let raw_in: Option<&Tensor> = match input {
+                Input::Layer(_) => sp.map(|s| &s.z),
+                Input::X => self.xb.as_ref(),
+                Input::Skip => self.skb.as_ref(),
+                Input::Gap => self.gapb.as_ref(),
+            };
+            let cache: Option<&Tensor> = match input {
+                Input::X => Some(self.x),
+                Input::Skip => self.skip,
+                _ => None,
+            };
+            let conv_in: Option<&Tensor> = if aqp.is_some() {
+                Some(pl.xq.as_ref().expect("aq xq"))
+            } else {
+                raw_in
+            };
+            let g: &Tensor = g_owned.as_ref().unwrap_or(&self.g_zq);
+            bwd_layer(
+                &pl.info,
+                pl.conv,
+                pl.slab.as_ref(),
+                pl.direct,
+                &pl.what,
+                raw_in,
+                conv_in,
+                g,
+                pl.gx.as_mut(),
+                &mut pl.gw,
+                rows,
+                cache,
+                aqp,
+            )
+        };
+        self.gstep_t[i].data[0] = if self.aq { gstep } else { 0.0 };
+        if let GradSrc::LayerGx(j) = src {
+            self.layers[j].gx = g_owned;
+        }
+    }
+
+    /// Location of the unit output among the persistent buffers.
+    fn zq_is_nout(&self) -> bool {
+        matches!(
+            self.node,
+            Node::Basic { .. }
+                | Node::BasicL2 { .. }
+                | Node::IrL3 { .. }
+                | Node::Ir { res: true, .. }
+        )
+    }
+
+    fn zq_layer(&self) -> usize {
+        match self.node {
+            Node::Layer(i) => i,
+            Node::Basic { c2, .. } | Node::BasicL2 { c2, .. } => c2,
+            Node::Ir { p, .. } | Node::IrL3 { p } => p,
+            Node::GapFc { fc } => fc,
+        }
+    }
+}
+
+impl ReconPlan for NativeReconPlan<'_> {
+    fn step(
+        &mut self,
+        rows: &[usize],
+        vs: &[Tensor],
+        asteps: &[Tensor],
+        beta: f32,
+        lam: f32,
+    ) -> Result<StepOut> {
+        let nl = self.layers.len();
+        ensure!(rows.len() == self.bsz, "plan step: rows != batch size");
+        ensure!(
+            vs.len() == nl && asteps.len() == nl,
+            "plan step: trainable arity mismatch"
+        );
+        PLAN_STEPS.fetch_add(1, Ordering::Relaxed);
+
+        // 1. gather the sampled mini-batch into the persistent buffers
+        if let Some(xb) = self.xb.as_mut() {
+            self.x.gather_rows_into(rows, &mut xb.data);
+        }
+        if let Some(skb) = self.skb.as_mut() {
+            self.skip
+                .expect("skip cache")
+                .gather_rows_into(rows, &mut skb.data);
+        }
+        self.z_fp.gather_rows_into(rows, &mut self.zb.data);
+        if let Some(fb) = self.fb.as_mut() {
+            self.fim
+                .expect("fim cache")
+                .gather_rows_into(rows, &mut fb.data);
+        }
+        if let Some(gapb) = self.gapb.as_mut() {
+            self.gap_cache
+                .as_ref()
+                .expect("gap cache")
+                .gather_rows_into(rows, &mut gapb.data);
+        }
+
+        // 2. soft-quantize every layer's weights (Eq. 16), per channel
+        for i in 0..nl {
+            debug_assert_eq!(vs[i].data.len(), self.ws[i].data.len());
+            soft_quant(
+                &mut self.layers[i],
+                self.ws[i],
+                self.wsteps[i],
+                &vs[i],
+            );
+        }
+
+        // 3. forward through the node program
+        match self.node {
+            Node::Layer(i) => self.fwd_one(i, rows, asteps),
+            Node::Basic { c1, c2, down } => {
+                self.fwd_one(c1, rows, asteps);
+                self.fwd_one(c2, rows, asteps);
+                if let Some(d) = down {
+                    self.fwd_one(d, rows, asteps);
+                }
+                let nout = self.nout.as_mut().expect("basic nout");
+                match down {
+                    Some(d) => add_into(
+                        &self.layers[c2].z,
+                        &self.layers[d].z.data,
+                        nout,
+                    ),
+                    None => add_into(
+                        &self.layers[c2].z,
+                        &self.xb.as_ref().expect("residual xb").data,
+                        nout,
+                    ),
+                }
+                relu_inplace(nout);
+            }
+            Node::BasicL2 { c2, down } => {
+                self.fwd_one(c2, rows, asteps);
+                if let Some(d) = down {
+                    self.fwd_one(d, rows, asteps);
+                }
+                let nout = self.nout.as_mut().expect("basic_l2 nout");
+                match down {
+                    Some(d) => add_into(
+                        &self.layers[c2].z,
+                        &self.layers[d].z.data,
+                        nout,
+                    ),
+                    None => add_into(
+                        &self.layers[c2].z,
+                        &self.skb.as_ref().expect("skip batch").data,
+                        nout,
+                    ),
+                }
+                relu_inplace(nout);
+            }
+            Node::Ir { e, d, p, res } => {
+                self.fwd_one(e, rows, asteps);
+                self.fwd_one(d, rows, asteps);
+                self.fwd_one(p, rows, asteps);
+                if res {
+                    let nout = self.nout.as_mut().expect("ir nout");
+                    add_into(
+                        &self.layers[p].z,
+                        &self.xb.as_ref().expect("residual xb").data,
+                        nout,
+                    );
+                }
+            }
+            Node::IrL3 { p } => {
+                self.fwd_one(p, rows, asteps);
+                let nout = self.nout.as_mut().expect("ir_l3 nout");
+                add_into(
+                    &self.layers[p].z,
+                    &self.skb.as_ref().expect("skip batch").data,
+                    nout,
+                );
+            }
+            Node::GapFc { fc } => self.fwd_one(fc, rows, asteps),
+        }
+
+        // 4. FIM-weighted loss (Eq. 10) + gradient at the unit output —
+        //    runtime::native::fim_loss{,_grad_zq}'s arithmetic verbatim;
+        //    a missing FIM multiplies by an implicit exact 1.0.
+        let rec;
+        {
+            let zq: &Tensor = if self.zq_is_nout() {
+                self.nout.as_ref().expect("node out")
+            } else {
+                &self.layers[self.zq_layer()].z
+            };
+            let zb = &self.zb;
+            debug_assert_eq!(zb.data.len(), zq.data.len());
+            let bf = self.bsz as f64;
+            let mut acc = 0f64;
+            match self.fb.as_ref() {
+                Some(fb) => {
+                    for i in 0..zb.data.len() {
+                        let d = (zb.data[i] - zq.data[i]) as f64;
+                        acc += fb.data[i] as f64 * d * d;
+                    }
+                }
+                None => {
+                    for i in 0..zb.data.len() {
+                        let d = (zb.data[i] - zq.data[i]) as f64;
+                        acc += d * d;
+                    }
+                }
+            }
+            rec = acc / bf;
+            let bs_f = self.bsz as f32;
+            let g = &mut self.g_zq;
+            match self.fb.as_ref() {
+                Some(fb) => {
+                    for i in 0..g.data.len() {
+                        g.data[i] = -2.0 / bs_f
+                            * fb.data[i]
+                            * (zb.data[i] - zq.data[i]);
+                    }
+                }
+                None => {
+                    for i in 0..g.data.len() {
+                        g.data[i] =
+                            -2.0 / bs_f * (zb.data[i] - zq.data[i]);
+                    }
+                }
+            }
+        }
+
+        // 5. backward through the node program (dispatch order)
+        match self.node {
+            Node::Layer(i) => self.bwd_one(i, GradSrc::GZq, rows, asteps),
+            Node::Basic { c1, c2, down } => {
+                {
+                    let out = self.nout.as_ref().expect("basic nout");
+                    relu_mask_inplace(&mut self.g_zq, out);
+                }
+                self.bwd_one(c2, GradSrc::GZq, rows, asteps);
+                if let Some(d) = down {
+                    self.bwd_one(d, GradSrc::GZq, rows, asteps);
+                }
+                self.bwd_one(c1, GradSrc::LayerGx(c2), rows, asteps);
+            }
+            Node::BasicL2 { c2, down } => {
+                {
+                    let out = self.nout.as_ref().expect("basic_l2 nout");
+                    relu_mask_inplace(&mut self.g_zq, out);
+                }
+                self.bwd_one(c2, GradSrc::GZq, rows, asteps);
+                if let Some(d) = down {
+                    self.bwd_one(d, GradSrc::GZq, rows, asteps);
+                }
+            }
+            Node::Ir { e, d, p, .. } => {
+                self.bwd_one(p, GradSrc::GZq, rows, asteps);
+                self.bwd_one(d, GradSrc::LayerGx(p), rows, asteps);
+                self.bwd_one(e, GradSrc::LayerGx(d), rows, asteps);
+            }
+            Node::IrL3 { p } => self.bwd_one(p, GradSrc::GZq, rows, asteps),
+            Node::GapFc { fc } => {
+                self.bwd_one(fc, GradSrc::GZq, rows, asteps)
+            }
+        }
+
+        // 6. fused gv + rounding-regularizer pass: one sigmoid per
+        //    element, fanned out per out-channel; the f64 regularizer
+        //    terms land in rbuf and fold on this thread in the dispatch
+        //    path's layer-then-linear order — bit-identical to the
+        //    two-loop form.
+        let mut rl = 0f64;
+        for i in 0..nl {
+            let w = self.ws[i];
+            let steps = self.wsteps[i];
+            let v = &vs[i];
+            let inner = w.inner();
+            let (wn, wp) = (self.layers[i].wn, self.layers[i].wp);
+            let gw = &self.layers[i].gw;
+            let gv = &mut self.gvs[i].data;
+            let rbuf = &mut self.rbufs[i];
+            let work = w.numel().saturating_mul(64);
+            pool::par_chunks2_mut(
+                gv,
+                inner,
+                rbuf,
+                inner,
+                work,
+                |ch, gvc, rc| {
+                    let s = steps.data[ch];
+                    let base = ch * inner;
+                    for j in 0..gvc.len() {
+                        let e = base + j;
+                        let (term, g) = gv_reg_elem(
+                            w.data[e],
+                            s,
+                            v.data[e],
+                            wn,
+                            wp,
+                            gw.data[e],
+                            beta,
+                            lam,
+                        );
+                        rc[j] = term;
+                        gvc[j] = g;
+                    }
+                },
+            );
+            for &r in self.rbufs[i].iter() {
+                rl += r;
+            }
+        }
+
+        Ok(StepOut {
+            loss: (rec + lam as f64 * rl) as f32,
+            rec: rec as f32,
+            round: rl as f32,
+        })
+    }
+
+    fn gv(&self) -> &[Tensor] {
+        &self.gvs
+    }
+
+    fn gsteps(&self) -> &[Tensor] {
+        &self.gstep_t
+    }
+}
+
+impl Drop for NativeReconPlan<'_> {
+    fn drop(&mut self) {
+        // return the big slabs to the shared arena: the next unit's plan
+        // builds warm, keeping whole-calibration runs allocation-flat
+        for pl in &mut self.layers {
+            if let Some(s) = pl.slab.take() {
+                pool::give_shared(s.fwd);
+                pool::give_shared(s.bwd_t);
+            }
+        }
+    }
+}

@@ -94,6 +94,27 @@ impl Tensor {
         )
     }
 
+    /// Gather leading-dim rows into a caller-provided buffer (no
+    /// allocation): `out[bi] = self[rows[bi]]`. Each gathered row is a
+    /// plain copy, so a gather is bitwise identical to slicing the same
+    /// rows out one by one — the reconstruction plan's batch assembly
+    /// relies on that.
+    pub fn gather_rows_into(&self, rows: &[usize], out: &mut [f32]) {
+        let inner = self.inner();
+        assert_eq!(
+            out.len(),
+            rows.len() * inner,
+            "gather_rows_into: dst len {} != {} rows x {}",
+            out.len(),
+            rows.len(),
+            inner
+        );
+        for (bi, &r) in rows.iter().enumerate() {
+            out[bi * inner..(bi + 1) * inner]
+                .copy_from_slice(&self.data[r * inner..(r + 1) * inner]);
+        }
+    }
+
     /// Concatenate along a new leading batch axis built from equal chunks.
     pub fn stack0(parts: &[Tensor]) -> Tensor {
         assert!(!parts.is_empty());
@@ -156,6 +177,14 @@ mod tests {
         let t = Tensor::new(vec![3, 2], (0..6).map(|x| x as f32).collect());
         assert_eq!(t.row0(0), &[0.0, 1.0]);
         assert_eq!(t.row0(2), &[4.0, 5.0]);
+    }
+
+    #[test]
+    fn gather_rows_into_copies_rows() {
+        let t = Tensor::new(vec![4, 2], (0..8).map(|x| x as f32).collect());
+        let mut out = vec![0f32; 6];
+        t.gather_rows_into(&[3, 0, 3], &mut out);
+        assert_eq!(out, vec![6., 7., 0., 1., 6., 7.]);
     }
 
     #[test]

@@ -267,9 +267,12 @@ static SCRATCH_REUSES: AtomicUsize = AtomicUsize::new(0);
 static SCRATCH_ALLOCS: AtomicUsize = AtomicUsize::new(0);
 
 /// Caps on the recycle arenas so a pathological thread storm cannot pin
-/// unbounded memory; excess sets are simply dropped.
+/// unbounded memory; excess sets are simply dropped. The shared cap
+/// leaves headroom for the reconstruction plans (`runtime::plan`), which
+/// check several whole-cache im2col slabs out per unit and return them
+/// on drop so the next unit's plan builds warm.
 const RECYCLE_CAP: usize = 64;
-const SHARED_CAP: usize = 8;
+const SHARED_CAP: usize = 16;
 
 struct ScratchCell(RefCell<Option<Scratch>>);
 

@@ -1,0 +1,496 @@
+//! Reconstruction-plan parity properties: a compiled plan
+//! (`runtime::plan`) must be **bit-identical** to the retained
+//! per-dispatch `unit_recon` path — per step (losses, gv, gastep) and
+//! end-to-end (per-unit loss curves, committed weights, learned act
+//! steps) — at 1/2/8 threads, for every unit of both synthetic models.
+//! Plus the warm-plan zero-allocation guarantee on the scratch-arena
+//! counters (mirroring the warm-kernel test in `tests/parallel.rs`).
+
+use std::sync::Mutex;
+
+use brecq::calib::CalibSet;
+use brecq::coordinator::Env;
+use brecq::model::{ModelInfo, UnitInfo};
+use brecq::quant::{
+    act_bounds, mse_steps_per_channel, weight_bounds, AdaRoundState,
+};
+use brecq::recon::{BitConfig, Calibrator, ReconConfig};
+use brecq::runtime::plan::PlanInputs;
+use brecq::runtime::Backend;
+use brecq::tensor::Tensor;
+use brecq::util::pool;
+use brecq::util::rng::Rng;
+
+/// `pool::set_threads` is process-global; serialize every test in this
+/// binary (same rationale as `tests/parallel.rs`).
+static POOL_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock_pool() -> std::sync::MutexGuard<'static, ()> {
+    POOL_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn bits_of(t: &Tensor) -> Vec<u32> {
+    t.data.iter().map(|v| v.to_bits()).collect()
+}
+
+fn batched(shape: &[usize], b: usize) -> Vec<usize> {
+    let mut s = shape.to_vec();
+    s[0] = b;
+    s
+}
+
+/// Gaussian tensor with a deterministic sprinkling of IEEE edge values
+/// (±0.0, denormals) — the kernels must fold them bit-exactly.
+fn synth(rng: &mut Rng, shape: Vec<usize>) -> Tensor {
+    let n: usize = shape.iter().product();
+    let mut t = Tensor::new(
+        shape,
+        (0..n).map(|_| rng.gauss() as f32).collect(),
+    );
+    for (i, v) in t.data.iter_mut().enumerate() {
+        match i % 13 {
+            2 => *v = 0.0,
+            5 => *v = -0.0,
+            7 => *v = 1e-42,
+            11 => *v = -1e-42,
+            _ => {}
+        }
+    }
+    t
+}
+
+/// Per-unit quantizer fixtures shared by the plan and dispatch sides.
+struct UnitFixture {
+    x: Tensor,
+    skip: Option<Tensor>,
+    z_fp: Tensor,
+    fim: Option<Tensor>,
+    wsteps: Vec<Tensor>,
+    vs: Vec<Tensor>,
+    asteps: Vec<Tensor>,
+    wb: Vec<(Tensor, Tensor)>,
+    ab: Vec<(Tensor, Tensor)>,
+    wbounds: Vec<(f32, f32)>,
+    abounds: Vec<(f32, f32)>,
+    ones_fb: Tensor,
+}
+
+fn fixture(
+    model: &ModelInfo,
+    unit: &UnitInfo,
+    ws: &[Tensor],
+    k: usize,
+    bsz: usize,
+    use_fim: bool,
+    seed: u64,
+) -> UnitFixture {
+    let mut rng = Rng::new(seed);
+    let x = synth(&mut rng, batched(&unit.in_shape, k));
+    let skip = unit
+        .skip_shape
+        .as_ref()
+        .filter(|_| unit.uses_skip)
+        .map(|sh| synth(&mut rng, batched(sh, k)));
+    let z_fp = synth(&mut rng, batched(&unit.out_shape, k));
+    let fim = use_fim.then(|| {
+        synth(&mut rng, batched(&unit.out_shape, k))
+            .map(|v| v.abs() + 0.25)
+    });
+    let mut wsteps = Vec::new();
+    let mut vs = Vec::new();
+    let mut asteps = Vec::new();
+    let mut wb = Vec::new();
+    let mut ab = Vec::new();
+    let mut wbounds = Vec::new();
+    let mut abounds = Vec::new();
+    for &l in &unit.layer_ids {
+        let steps = mse_steps_per_channel(&ws[l], 4);
+        let st = AdaRoundState::init(&ws[l], &steps, 4);
+        wsteps.push(st.steps_tensor());
+        vs.push(st.v.clone());
+        asteps.push(Tensor::scalar1(0.07));
+        let (n, p) = weight_bounds(4);
+        wb.push((Tensor::scalar1(n), Tensor::scalar1(p)));
+        wbounds.push((n, p));
+        let (lo, hi) = act_bounds(8, model.layers[l].site_signed);
+        ab.push((Tensor::scalar1(lo), Tensor::scalar1(hi)));
+        abounds.push((lo, hi));
+    }
+    let ones_fb = Tensor::full(batched(&unit.out_shape, bsz), 1.0);
+    UnitFixture {
+        x,
+        skip,
+        z_fp,
+        fim,
+        wsteps,
+        vs,
+        asteps,
+        wb,
+        ab,
+        wbounds,
+        abounds,
+        ones_fb,
+    }
+}
+
+/// Run plan steps and identical dispatches for every unit of one
+/// granularity, asserting bitwise equality of all outputs.
+fn assert_unit_parity(
+    env: &Env,
+    model_name: &str,
+    gran: &str,
+    aq: bool,
+    use_fim: bool,
+    threads: &[usize],
+) {
+    let model = env.model(model_name);
+    let cal = Calibrator::new(&env.rt, &env.mf, model);
+    let (ws, bs) = cal.fp_weights().unwrap();
+    let bsz = env.mf.calib_batch;
+    let k = bsz + 16;
+    let aq_flag = Tensor::scalar1(if aq { 1.0 } else { 0.0 });
+    // (beta, lam): warmup (reg off), annealing, late phase
+    let cases = [(20.0f32, 0.0f32), (10.0, 0.01), (2.0, 0.01)];
+
+    for (ui, unit) in model.gran(gran).units.iter().enumerate() {
+        let f = fixture(model, unit, &ws, k, bsz, use_fim, 90 + ui as u64);
+        for &nt in threads {
+            pool::set_threads(nt);
+            let inputs = PlanInputs {
+                x: &f.x,
+                skip: f.skip.as_ref(),
+                z_fp: &f.z_fp,
+                fim: f.fim.as_ref(),
+                ws: unit.layer_ids.iter().map(|&l| &ws[l]).collect(),
+                bs: unit.layer_ids.iter().map(|&l| &bs[l]).collect(),
+                wsteps: f.wsteps.iter().collect(),
+                wbounds: f.wbounds.clone(),
+                abounds: f.abounds.clone(),
+                aq,
+                batch: bsz,
+            };
+            let mut plan = env
+                .rt
+                .prepare_recon(&unit.recon_exe, inputs)
+                .unwrap()
+                .expect("single-node units must compile to plans");
+            for (ci, &(beta, lam)) in cases.iter().enumerate() {
+                let rows = Rng::new(500 + ci as u64)
+                    .sample_indices(k, bsz);
+                let s = plan
+                    .step(&rows, &f.vs, &f.asteps, beta, lam)
+                    .unwrap();
+
+                // identical iteration through the dispatch path
+                let xb = CalibSet::gather_rows(&f.x, &rows);
+                let skb = f
+                    .skip
+                    .as_ref()
+                    .map(|sk| CalibSet::gather_rows(sk, &rows));
+                let zb = CalibSet::gather_rows(&f.z_fp, &rows);
+                let fb_g = f
+                    .fim
+                    .as_ref()
+                    .map(|t| CalibSet::gather_rows(t, &rows));
+                let fb = fb_g.as_ref().unwrap_or(&f.ones_fb);
+                let beta_t = Tensor::scalar1(beta);
+                let lam_t = Tensor::scalar1(lam);
+                let mut args: Vec<&Tensor> = vec![&xb];
+                if unit.uses_skip {
+                    args.push(skb.as_ref().unwrap());
+                }
+                args.push(&zb);
+                args.push(fb);
+                for (i, &l) in unit.layer_ids.iter().enumerate() {
+                    args.push(&ws[l]);
+                    args.push(&bs[l]);
+                    args.push(&f.wsteps[i]);
+                    args.push(&f.vs[i]);
+                    args.push(&f.wb[i].0);
+                    args.push(&f.wb[i].1);
+                }
+                for i in 0..unit.layer_ids.len() {
+                    args.push(&f.asteps[i]);
+                    args.push(&f.ab[i].0);
+                    args.push(&f.ab[i].1);
+                }
+                args.push(&beta_t);
+                args.push(&lam_t);
+                args.push(&aq_flag);
+                let out = env.rt.run(&unit.recon_exe, &args).unwrap();
+
+                let ctx = format!(
+                    "{model_name}/{gran} unit {} nt {nt} case {ci} \
+                     aq {aq} fim {use_fim}",
+                    unit.name
+                );
+                assert_eq!(
+                    s.loss.to_bits(),
+                    out[0].data[0].to_bits(),
+                    "loss: {ctx}"
+                );
+                assert_eq!(
+                    s.rec.to_bits(),
+                    out[1].data[0].to_bits(),
+                    "rec: {ctx}"
+                );
+                assert_eq!(
+                    s.round.to_bits(),
+                    out[2].data[0].to_bits(),
+                    "round: {ctx}"
+                );
+                let nl = unit.layer_ids.len();
+                for i in 0..nl {
+                    assert_eq!(
+                        bits_of(&plan.gv()[i]),
+                        bits_of(&out[3 + i]),
+                        "gv[{i}]: {ctx}"
+                    );
+                    assert_eq!(
+                        plan.gsteps()[i].data[0].to_bits(),
+                        out[3 + nl + i].data[0].to_bits(),
+                        "gastep[{i}]: {ctx}"
+                    );
+                }
+            }
+        }
+    }
+    pool::set_threads(0);
+}
+
+#[test]
+fn plan_step_matches_dispatch_resnet_block() {
+    let _g = lock_pool();
+    let env = Env::bootstrap_synthetic().unwrap();
+    assert_unit_parity(&env, "resnet_s", "block", false, true, &[1, 2, 8]);
+    // MSE fallback (no FIM): plan's implicit unit weight vs the
+    // dispatch path's all-ones tensor
+    assert_unit_parity(&env, "resnet_s", "block", false, false, &[2]);
+}
+
+#[test]
+fn plan_step_matches_dispatch_resnet_layer_aq() {
+    let _g = lock_pool();
+    let env = Env::bootstrap_synthetic().unwrap();
+    assert_unit_parity(&env, "resnet_s", "layer", true, true, &[1, 2, 8]);
+}
+
+#[test]
+fn plan_step_matches_dispatch_mbv2_block() {
+    let _g = lock_pool();
+    let env = Env::bootstrap_synthetic().unwrap();
+    assert_unit_parity(
+        &env,
+        "mobilenetv2_s",
+        "block",
+        false,
+        true,
+        &[1, 2, 8],
+    );
+}
+
+#[test]
+fn plan_step_matches_dispatch_mbv2_layer_aq_mse() {
+    let _g = lock_pool();
+    let env = Env::bootstrap_synthetic().unwrap();
+    assert_unit_parity(
+        &env,
+        "mobilenetv2_s",
+        "layer",
+        true,
+        false,
+        &[1, 2],
+    );
+}
+
+/// End-to-end: whole calibrations driven by plans vs the dispatch path
+/// must produce identical loss curves, committed weights and act steps.
+fn calibrate_fingerprint(
+    env: &Env,
+    model_name: &str,
+    cfg: &ReconConfig,
+    abits: Option<usize>,
+) -> (Vec<(u64, u64)>, Vec<Vec<u32>>, Vec<u32>) {
+    let model = env.model(model_name);
+    let cal = Calibrator::new(&env.rt, &env.mf, model);
+    let train = env.train_set().unwrap();
+    let calib = env.calib(&train, 32, 3);
+    let bits = BitConfig::uniform(model, 4, abits, true);
+    let qm = cal.calibrate(&calib, &bits, cfg).unwrap();
+    (
+        qm.reports
+            .iter()
+            .map(|r| (r.initial_loss.to_bits(), r.final_loss.to_bits()))
+            .collect(),
+        qm.weights.iter().map(bits_of).collect(),
+        qm.act_steps.iter().map(|v| v.to_bits()).collect(),
+    )
+}
+
+#[test]
+fn calibrate_plan_vs_dispatch_bitwise_resnet() {
+    let _g = lock_pool();
+    let env = Env::bootstrap_synthetic().unwrap();
+    for nt in [1usize, 2, 8] {
+        pool::set_threads(nt);
+        let planned = calibrate_fingerprint(
+            &env,
+            "resnet_s",
+            &ReconConfig { iters: 10, ..ReconConfig::default() },
+            Some(8),
+        );
+        let dispatched = calibrate_fingerprint(
+            &env,
+            "resnet_s",
+            &ReconConfig {
+                iters: 10,
+                plan: false,
+                ..ReconConfig::default()
+            },
+            Some(8),
+        );
+        assert_eq!(planned, dispatched, "resnet_s W4A8 nt {nt}");
+    }
+    pool::set_threads(0);
+}
+
+#[test]
+fn calibrate_plan_vs_dispatch_bitwise_mbv2() {
+    let _g = lock_pool();
+    let env = Env::bootstrap_synthetic().unwrap();
+    for nt in [1usize, 2, 8] {
+        pool::set_threads(nt);
+        let planned = calibrate_fingerprint(
+            &env,
+            "mobilenetv2_s",
+            &ReconConfig { iters: 8, ..ReconConfig::default() },
+            None,
+        );
+        let dispatched = calibrate_fingerprint(
+            &env,
+            "mobilenetv2_s",
+            &ReconConfig {
+                iters: 8,
+                plan: false,
+                ..ReconConfig::default()
+            },
+            None,
+        );
+        assert_eq!(planned, dispatched, "mobilenetv2_s W4 nt {nt}");
+    }
+    pool::set_threads(0);
+}
+
+#[test]
+fn calibrate_plan_vs_dispatch_bitwise_mse_layer_and_seq_fallback() {
+    let _g = lock_pool();
+    let env = Env::bootstrap_synthetic().unwrap();
+    pool::set_threads(2);
+    // layer granularity, MSE objective, no rounding regularizer
+    let base = ReconConfig {
+        gran: "layer".into(),
+        iters: 8,
+        use_fim: false,
+        round_reg: false,
+        ..ReconConfig::default()
+    };
+    let planned = calibrate_fingerprint(&env, "resnet_s", &base, None);
+    let dispatched = calibrate_fingerprint(
+        &env,
+        "resnet_s",
+        &ReconConfig { plan: false, ..base.clone() },
+        None,
+    );
+    assert_eq!(planned, dispatched, "resnet_s layer MSE");
+    // stage granularity: multi-node seq units decline plans and fall
+    // back to dispatch — results must be identical (and the run must
+    // not crash)
+    let stage = ReconConfig {
+        gran: "stage".into(),
+        iters: 6,
+        ..ReconConfig::default()
+    };
+    let planned = calibrate_fingerprint(&env, "resnet_s", &stage, None);
+    let dispatched = calibrate_fingerprint(
+        &env,
+        "resnet_s",
+        &ReconConfig { plan: false, ..stage.clone() },
+        None,
+    );
+    assert_eq!(planned, dispatched, "resnet_s stage seq fallback");
+    pool::set_threads(0);
+}
+
+/// The warm-plan zero-allocation guarantee: once a plan has stepped a
+/// few times, further steps serve every scratch request from the
+/// recycling arenas — the allocation counter must not move. (Counters
+/// are process-global; every test in this binary serializes on
+/// POOL_LOCK.)
+#[test]
+fn warm_plan_steps_do_zero_scratch_allocations() {
+    let _g = lock_pool();
+    let env = Env::bootstrap_synthetic().unwrap();
+    let model = env.model("resnet_s");
+    let cal = Calibrator::new(&env.rt, &env.mf, model);
+    let (ws, bs) = cal.fp_weights().unwrap();
+    let bsz = env.mf.calib_batch;
+    let k = bsz + 16;
+    // heaviest block unit
+    let unit = model
+        .gran("block")
+        .units
+        .iter()
+        .max_by_key(|u| {
+            u.layer_ids
+                .iter()
+                .map(|&l| model.layers[l].macs)
+                .sum::<u64>()
+        })
+        .unwrap();
+    let f = fixture(model, unit, &ws, k, bsz, true, 7);
+    for nt in [1usize, 4] {
+        pool::set_threads(nt);
+        let inputs = PlanInputs {
+            x: &f.x,
+            skip: f.skip.as_ref(),
+            z_fp: &f.z_fp,
+            fim: f.fim.as_ref(),
+            ws: unit.layer_ids.iter().map(|&l| &ws[l]).collect(),
+            bs: unit.layer_ids.iter().map(|&l| &bs[l]).collect(),
+            wsteps: f.wsteps.iter().collect(),
+            wbounds: f.wbounds.clone(),
+            abounds: f.abounds.clone(),
+            aq: false,
+            batch: bsz,
+        };
+        let mut plan = env
+            .rt
+            .prepare_recon(&unit.recon_exe, inputs)
+            .unwrap()
+            .expect("plan");
+        let mut rng = Rng::new(11);
+        let mut step = |rng: &mut Rng| {
+            let rows = rng.sample_indices(k, bsz);
+            std::hint::black_box(
+                plan.step(&rows, &f.vs, &f.asteps, 10.0, 0.01).unwrap(),
+            );
+        };
+        for _ in 0..3 {
+            step(&mut rng); // warm the plan + per-thread scratch sets
+        }
+        let (allocs_before, reuses_before) = pool::scratch_counters();
+        for _ in 0..5 {
+            step(&mut rng);
+        }
+        let (allocs_after, reuses_after) = pool::scratch_counters();
+        assert_eq!(
+            allocs_after, allocs_before,
+            "warm plan steps allocated scratch at {nt} threads"
+        );
+        assert!(
+            reuses_after > reuses_before,
+            "scratch reuse counter did not advance at {nt} threads"
+        );
+    }
+    pool::set_threads(0);
+}

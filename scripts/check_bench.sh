@@ -10,7 +10,10 @@
 #   * a baseline entry has no matching result (bench renamed/deleted), or
 #   * the 4-thread reconstruction speedup falls below $BENCH_MIN_SPEEDUP
 #     (default 1.5x; speedup checks need >= 4 host hw threads), or
-#   * the speedup drops below 75% of the baseline's recorded speedup.
+#   * the speedup drops below 75% of the baseline's recorded speedup, or
+#   * the plan-engine iteration throughput note `recon_iters_per_sec`
+#     falls below 75% of the baseline's (the min_ms rule, inverted for a
+#     higher-is-better metric).
 #
 # Bootstrap mode: a missing baseline, or one marked `"calibrated": false`,
 # passes with a LOUD warning and a distinct exit message so an
@@ -110,6 +113,29 @@ if speedup is not None and host >= 4:
             f"{base_speedup:.2f}x")
 elif speedup is not None:
     print("host has < 4 hw threads: skipping the speedup checks")
+
+# reconstruction-plan iteration throughput: gated like min_ms, inverted
+# (higher is better; >25% drop fails once the baseline records it). Like
+# the bench-row rule above, a baseline note with no matching result
+# means the metric was renamed/removed — fail loudly rather than
+# silently disarming the gate.
+ips = notes.get("recon_iters_per_sec")
+base_ips = (base.get("notes") or {}).get("recon_iters_per_sec")
+if base_ips is not None and ips is None:
+    failures.append(
+        f"baseline records recon_iters_per_sec but {new_path} does not "
+        f"(bench note renamed/removed? rebase {base_path})")
+elif ips is not None and base_ips is not None and base_ips > 0:
+    if ips < 0.75 * base_ips:
+        failures.append(
+            f"recon_iters_per_sec {ips:.1f}/s vs baseline "
+            f"{base_ips:.1f}/s (> 25% throughput regression)")
+    else:
+        print(f"ok    recon_iters_per_sec: {ips:.1f}/s "
+              f"(baseline {base_ips:.1f}/s)")
+elif ips is not None:
+    print(f"new   recon_iters_per_sec: {ips:.1f}/s (no baseline note; "
+          f"rebase {base_path} to start gating it)")
 
 if failures:
     print("PERF REGRESSION:")
