@@ -33,6 +33,10 @@ fn main() {
     let train = env.train_set().unwrap();
     let calib = env.calib(&train, 64, 0);
     let cal = Calibrator::new(&env.rt, &env.mf, model);
+    // plan counters are cumulative process-global atomics; snapshot now
+    // and report end-of-run deltas so the notes attribute to this bench
+    // alone regardless of what else the process ran
+    let plan_c0 = plan::snapshot();
 
     // end-to-end mini-calibration (20 iters/unit, 64 calib images)
     for gran in ["block", "layer"] {
@@ -80,96 +84,111 @@ fn main() {
         });
     }
 
-    // plan-step throughput on the heaviest block unit at 4 threads: the
-    // reconstruction-plan engine's fused iteration (gather + soft-quant
-    // + fwd/bwd + gv chain in one zero-alloc call). The derived
-    // `recon_iters_per_sec` note is the gated tentpole metric.
+    // plan-step throughput at 4 threads: the reconstruction-plan
+    // engine's fused iteration (gather + soft-quant + fwd/bwd + gv
+    // chain in one zero-alloc call), on the heaviest unit of every
+    // plan-compiled granularity — the single-node block unit (whose
+    // derived `recon_iters_per_sec` note is the gated tentpole metric)
+    // plus the multi-node stage/net/pack seq programs.
     {
         pool::set_threads(4);
         let (ws, bs_all) = cal.fp_weights().unwrap();
-        let unit = units
-            .iter()
-            .max_by_key(|u| {
-                u.layer_ids
+        let heaviest = |gran: &str| {
+            model
+                .gran(gran)
+                .units
+                .iter()
+                .max_by_key(|u| {
+                    u.layer_ids
+                        .iter()
+                        .map(|&l| model.layers[l].macs)
+                        .sum::<u64>()
+                })
+                .unwrap()
+        };
+        for gran in ["block", "stage", "net", "pack"] {
+            let unit = heaviest(gran);
+            let k = 64usize;
+            let bsz = 32usize;
+            let mut rng = Rng::new(42);
+            let mut synth = |shape: &[usize]| -> Tensor {
+                let mut shape = shape.to_vec();
+                shape[0] = k;
+                let n: usize = shape.iter().product();
+                Tensor::new(
+                    shape,
+                    (0..n).map(|_| rng.gauss() as f32).collect(),
+                )
+            };
+            let x = synth(&unit.in_shape);
+            let z_fp = synth(&unit.out_shape);
+            let mut fim_shape = unit.out_shape.clone();
+            fim_shape[0] = k;
+            let fim = Tensor::full(fim_shape, 1.0);
+            let states: Vec<AdaRoundState> = unit
+                .layer_ids
+                .iter()
+                .map(|&l| {
+                    let steps = mse_steps_per_channel(&ws[l], 4);
+                    AdaRoundState::init(&ws[l], &steps, 4)
+                })
+                .collect();
+            let wsteps: Vec<Tensor> =
+                states.iter().map(|s| s.steps_tensor()).collect();
+            let vs: Vec<Tensor> =
+                states.iter().map(|s| s.v.clone()).collect();
+            let asteps: Vec<Tensor> = unit
+                .layer_ids
+                .iter()
+                .map(|_| Tensor::scalar1(0.05))
+                .collect();
+            let inputs = plan::PlanInputs {
+                x: &x,
+                skip: None,
+                z_fp: &z_fp,
+                fim: Some(&fim),
+                ws: unit.layer_ids.iter().map(|&l| &ws[l]).collect(),
+                bs: unit.layer_ids.iter().map(|&l| &bs_all[l]).collect(),
+                wsteps: wsteps.iter().collect(),
+                wbounds: unit
+                    .layer_ids
                     .iter()
-                    .map(|&l| model.layers[l].macs)
-                    .sum::<u64>()
-            })
-            .unwrap();
-        let k = 64usize;
-        let bsz = 32usize;
-        let mut rng = Rng::new(42);
-        let mut synth = |shape: &[usize]| -> Tensor {
-            let mut shape = shape.to_vec();
-            shape[0] = k;
-            let n: usize = shape.iter().product();
-            Tensor::new(
-                shape,
-                (0..n).map(|_| rng.gauss() as f32).collect(),
-            )
-        };
-        let x = synth(&unit.in_shape);
-        let z_fp = synth(&unit.out_shape);
-        let mut fim_shape = unit.out_shape.clone();
-        fim_shape[0] = k;
-        let fim = Tensor::full(fim_shape, 1.0);
-        let states: Vec<AdaRoundState> = unit
-            .layer_ids
-            .iter()
-            .map(|&l| {
-                let steps = mse_steps_per_channel(&ws[l], 4);
-                AdaRoundState::init(&ws[l], &steps, 4)
-            })
-            .collect();
-        let wsteps: Vec<Tensor> =
-            states.iter().map(|s| s.steps_tensor()).collect();
-        let vs: Vec<Tensor> =
-            states.iter().map(|s| s.v.clone()).collect();
-        let asteps: Vec<Tensor> = unit
-            .layer_ids
-            .iter()
-            .map(|_| Tensor::scalar1(0.05))
-            .collect();
-        let inputs = plan::PlanInputs {
-            x: &x,
-            skip: None,
-            z_fp: &z_fp,
-            fim: Some(&fim),
-            ws: unit.layer_ids.iter().map(|&l| &ws[l]).collect(),
-            bs: unit.layer_ids.iter().map(|&l| &bs_all[l]).collect(),
-            wsteps: wsteps.iter().collect(),
-            wbounds: unit
-                .layer_ids
-                .iter()
-                .map(|_| weight_bounds(4))
-                .collect(),
-            abounds: unit
-                .layer_ids
-                .iter()
-                .map(|&l| act_bounds(8, model.layers[l].site_signed))
-                .collect(),
-            aq: false,
-            batch: bsz,
-        };
-        let mut uplan = env
-            .rt
-            .prepare_recon(&unit.recon_exe, inputs)
-            .unwrap()
-            .expect("block units compile to reconstruction plans");
-        let mut srng = Rng::new(7);
-        let iters = h.iters(200);
-        let ms = h.run(
-            &format!("recon plan step [{}]", unit.name),
-            iters,
-            || {
+                    .map(|_| weight_bounds(4))
+                    .collect(),
+                abounds: unit
+                    .layer_ids
+                    .iter()
+                    .map(|&l| act_bounds(8, model.layers[l].site_signed))
+                    .collect(),
+                aq: false,
+                batch: bsz,
+            };
+            let mut uplan = env
+                .rt
+                .prepare_recon(&unit.recon_exe, inputs)
+                .unwrap()
+                .expect("exported units compile to reconstruction plans");
+            let mut srng = Rng::new(7);
+            let iters = h.iters(if gran == "block" { 200 } else { 100 });
+            // the block row keeps its historical name (the calibrated
+            // baseline tracks it); multi-node rows carry their gran
+            let label = if gran == "block" {
+                format!("recon plan step [{}]", unit.name)
+            } else {
+                format!("recon plan step [{gran}:{}]", unit.name)
+            };
+            let ms = h.run(&label, iters, || {
                 let rows = CalibSet::gather_rows_idx(k, bsz, &mut srng);
                 let out =
                     uplan.step(&rows, &vs, &asteps, 10.0, 0.01).unwrap();
                 std::hint::black_box(out.loss);
-            },
-        );
-        let min_ms = ms.iter().cloned().fold(f64::INFINITY, f64::min);
-        h.note("recon_iters_per_sec", 1e3 / min_ms);
+            });
+            if gran == "block" {
+                let min_ms =
+                    ms.iter().cloned().fold(f64::INFINITY, f64::min);
+                h.note("recon_iters_per_sec", 1e3 / min_ms);
+            }
+        }
     }
 
     // worker-pool speedup: identical end-to-end reconstruction at 1 vs 4
@@ -212,11 +231,12 @@ fn main() {
     h.note("recon_wall_s_4t", t4);
     h.note("recon_speedup_4t_over_1t", t1 / t4);
     h.note("steady_state_scratch_allocs", (a1 - a0) as f64);
-    // plan-engine accounting: how much of the run went through compiled
-    // plans vs the per-dispatch fallback
-    let (pb, ps, pf) = plan::counters();
-    h.note("plan_builds_total", pb as f64);
-    h.note("plan_steps_total", ps as f64);
-    h.note("plan_fallback_steps_total", pf as f64);
+    // plan-engine accounting: how much of this bench went through
+    // compiled plans vs the per-dispatch fallback (delta since the
+    // start-of-run snapshot — never the polluted process totals)
+    let pd = plan::snapshot().since(&plan_c0);
+    h.note("plan_builds_total", pd.builds as f64);
+    h.note("plan_steps_total", pd.steps as f64);
+    h.note("plan_fallback_steps_total", pd.fallback_steps as f64);
     h.finish();
 }

@@ -94,7 +94,9 @@ pub fn bias_correction(
     let act_steps = vec![1.0; ws.len()];
     let nobits = BitConfig::uniform(model, 8, None, false); // acts FP here
 
-    let gran = model.gran("layer");
+    // same validated lookup as calibrate/fim_pass: a model that does
+    // not export layer granularity is a typed error, not a panic
+    let gran = model.try_gran("layer")?;
     let mut fp_main = calib.images.clone();
     let mut q_main = calib.images.clone();
     let mut fp_skip: Option<Tensor> = None;

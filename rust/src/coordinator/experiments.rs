@@ -100,7 +100,7 @@ fn eval_quantized(
 pub fn table1(env: &Env, o: &ExpOpts) -> Result<Table> {
     let mut t = Table::new(
         "Table 1 — granularity ablation, 2-bit weights (top-1 %)",
-        &["Model", "FP", "Layer", "Block", "Stage", "Net"],
+        &["Model", "FP", "Layer", "Block", "Stage", "Net", "Pack"],
     );
     let train = env.train_set()?;
     for mname in ["resnet_s", "mobilenetv2_s"] {
@@ -113,7 +113,15 @@ pub fn table1(env: &Env, o: &ExpOpts) -> Result<Table> {
         let calib = env.calib(&train, o.calib_n, o.seed);
         let bits = BitConfig::uniform(model, 2, None, true);
         let mut cells = vec![mname.to_string(), pct(model.fp_acc)];
-        for gran in ["layer", "block", "stage", "net"] {
+        for gran in ["layer", "block", "stage", "net", "pack"] {
+            // models export different granularity subsets (mobilenet has
+            // no stage/net partition) — a missing one is a "-" cell, not
+            // a failed table
+            if !model.grans.contains_key(gran) {
+                println!("  table1 {mname} {gran}: not exported, skipping");
+                cells.push("-".into());
+                continue;
+            }
             let cal = Calibrator::new(&env.rt, &env.mf, model);
             let cfg = baselines::brecq_cfg(&base_cfg(o), gran);
             let qm = cal.calibrate(&calib, &bits, &cfg)?;
@@ -185,6 +193,34 @@ pub fn table2(env: &Env, o: &ExpOpts, models: &[String]) -> Result<Table> {
             }
             t.row(cells);
         }
+
+        // Pack-PTQ row: the BRECQ engine at the FIM-grouped pack
+        // partition (PAPERS.md) — same quantizer substrate, only the
+        // unit grouping changes. Models without an exported pack
+        // partition get "-" cells like any other missing granularity.
+        let mut cells =
+            vec!["BRECQ (pack)*".to_string(), format!("{wbits}/32")];
+        for mname in ALL_MODELS {
+            if !models.iter().any(|m| m == mname)
+                || !env.mf.models.contains_key(mname)
+                || !env.model(mname).grans.contains_key("pack")
+            {
+                cells.push("-".into());
+                continue;
+            }
+            let model = env.model(mname);
+            let bits = BitConfig::uniform(model, wbits, None, true);
+            let calib = env.calib(&train, o.calib_n, o.seed);
+            let cal = Calibrator::new(&env.rt, &env.mf, model);
+            let qm = cal.calibrate(
+                &calib, &bits,
+                &baselines::brecq_cfg(&base_cfg(o), "pack"))?;
+            let acc = eval_quantized(env, mname, &qm)?;
+            let cell = format!("{:.2}", acc * 100.0);
+            println!("  table2 BRECQ (pack) W{wbits} {mname}: {cell}");
+            cells.push(cell);
+        }
+        t.row(cells);
     }
     Ok(t)
 }

@@ -273,7 +273,8 @@ fn print_exp_list() {
         &["Id", "Paper", "Regenerates"]);
     for (id, paper, what) in [
         ("table1", "Table 1",
-         "granularity ablation at 2-bit weights (layer/block/stage/net)"),
+         "granularity ablation at 2-bit weights \
+          (layer/block/stage/net/pack)"),
         ("table2", "Table 2",
          "weight-only PTQ comparison, W4/W3/W2, activations FP"),
         ("table3", "Table 3",
@@ -352,8 +353,8 @@ USAGE: brecq <cmd> [--flags]
   eval        --model M
   calibrate   --model M --bits B [--act-bits A] [--method fp|brecq|
               adaround|adaquant|omse|biascorr] [--gran layer|block|
-              stage|net] [--data train|distilled] [--iters N] [--calib K]
-              [--seed S] [--verbose]
+              stage|net|pack] [--data train|distilled] [--iters N]
+              [--calib K] [--seed S] [--verbose]
   sensitivity --model M
   mp-search   --model M --hw size|fpga|arm --budget X
   hwsim       --model M [--act-bits A]

@@ -90,9 +90,27 @@ impl ModelInfo {
     }
 
     pub fn gran(&self, g: &str) -> &GranInfo {
-        self.grans
-            .get(g)
-            .unwrap_or_else(|| panic!("{}: granularity '{g}' not exported", self.name))
+        self.try_gran(g)
+            .unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Validated granularity lookup: a typed error (instead of a panic
+    /// or — worse — a silent fallback) for granularity strings the model
+    /// does not export. Every user-facing entry point that accepts a
+    /// granularity string routes through this, so a typo like `"blcok"`
+    /// or requesting `net` from a model that only exports `layer`/
+    /// `block` fails loudly with the declared choices.
+    pub fn try_gran(&self, g: &str) -> anyhow::Result<&GranInfo> {
+        self.grans.get(g).ok_or_else(|| {
+            let mut have: Vec<&str> =
+                self.grans.keys().map(|k| k.as_str()).collect();
+            have.sort_unstable();
+            anyhow::anyhow!(
+                "{}: granularity '{g}' is not exported (available: {})",
+                self.name,
+                have.join("|")
+            )
+        })
     }
 
     /// Total weight parameters (excluding biases, like the paper's size

@@ -30,12 +30,24 @@
 //!
 //! Two models are emitted, miniatures of the paper's families:
 //!  * `resnet_s` — stem + basic block (identity skip) + strided basic block
-//!    (1x1 down projection), exported at layer/block/stage/net granularity,
+//!    (1x1 down projection), exported at layer/block/stage/net/pack
+//!    granularity,
 //!  * `mobilenetv2_s` — stem + inverted residual (expand/depthwise/project,
-//!    linear bottleneck) + head conv, exported at layer/block granularity.
+//!    linear bottleneck) + head conv, exported at layer/block/pack
+//!    granularity.
+//!
+//! The `pack` granularity is Pack-PTQ (see PAPERS.md): the generator
+//! measures a FIM-interaction proxy between adjacent blocks — the
+//! excess logit MSE of quantizing two neighbors together over the sum
+//! of quantizing each alone — and
+//! [`crate::sensitivity::group_packs`] greedily merges strongly-coupled
+//! neighbors into packs reconstructed jointly. The partition is
+//! concrete at export time, so packs get their own `fim` executable and
+//! stream like any other granularity.
 
 use std::collections::BTreeMap;
 use std::fs;
+use std::ops::Range;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
@@ -43,6 +55,7 @@ use anyhow::{Context, Result};
 
 use crate::quant::{mse_steps_per_channel, quantize_nearest};
 use crate::runtime::native::{add_bias, conv2d, fc_fwd, gap_fwd, relu_inplace};
+use crate::sensitivity::group_packs;
 use crate::tensor::Tensor;
 use crate::util::json::{arr, num, obj, s, Json};
 use crate::util::rng::Rng;
@@ -218,7 +231,7 @@ fn resnet_desc(cfg: &SynthConfig) -> SModel {
         blocks: vec![b0, b1],
         head_convs: vec![],
         fc: 6,
-        grans: vec!["layer", "block", "stage", "net"],
+        grans: vec!["layer", "block", "stage", "net", "pack"],
     }
 }
 
@@ -259,7 +272,7 @@ fn mbv2_desc(cfg: &SynthConfig) -> SModel {
         blocks: vec![b0],
         head_convs: vec![4],
         fc: 5,
-        grans: vec!["layer", "block"],
+        grans: vec!["layer", "block", "pack"],
     }
 }
 
@@ -614,7 +627,18 @@ fn conv_out_shape(l: &SLayer, inp: &[usize]) -> Vec<usize> {
 }
 
 /// Unit partition at one granularity, with stream IO shapes (batch `b`).
-fn units_of(m: &SModel, gran: &str, b: usize, cfg: &SynthConfig) -> Vec<SUnit> {
+/// `packs` is the model's Pack-PTQ block partition (consumed only by the
+/// `"pack"` arm). Granularity strings are matched exhaustively: an
+/// unknown one is a generator bug and panics — it must never silently
+/// fall through to another partition (the runtime guards user input
+/// separately via `ModelInfo::try_gran`).
+fn units_of(
+    m: &SModel,
+    gran: &str,
+    b: usize,
+    cfg: &SynthConfig,
+    packs: &[Range<usize>],
+) -> Vec<SUnit> {
     let mut units: Vec<SUnit> = Vec::new();
     let mut cur = vec![b, 3, cfg.img, cfg.img];
     let mut pending_skip: Option<Vec<usize>> = None;
@@ -753,8 +777,9 @@ fn units_of(m: &SModel, gran: &str, b: usize, cfg: &SynthConfig) -> Vec<SUnit> {
                 );
             }
         }
-        _ => {
-            // "stage" / "net": all body blocks fused into one unit
+        "stage" | "net" => {
+            // all body blocks fused into one seq unit (the synthetic
+            // trunks have a single stage, so the partitions coincide)
             let mut ids = Vec::new();
             let mut topos = Vec::new();
             let mut out = cur.clone();
@@ -778,6 +803,61 @@ fn units_of(m: &SModel, gran: &str, b: usize, cfg: &SynthConfig) -> Vec<SUnit> {
                 out,
             );
         }
+        "pack" => {
+            // Pack-PTQ: FIM-coupled adjacent blocks reconstruct jointly.
+            // A singleton pack is exactly its block unit; a longer pack
+            // is a seq over its blocks, named p{j}.
+            assert_eq!(
+                packs.iter().map(|r| r.len()).sum::<usize>(),
+                m.blocks.len(),
+                "pack partition must cover every block of {}",
+                m.name
+            );
+            for (j, r) in packs.iter().enumerate() {
+                if r.len() == 1 {
+                    let (name, topo, ids, out) =
+                        block_unit(m, &m.blocks[r.start], r.start, &cur);
+                    push(
+                        &mut units,
+                        &mut pending_skip,
+                        &mut cur,
+                        name,
+                        topo,
+                        ids,
+                        false,
+                        false,
+                        out,
+                    );
+                } else {
+                    let mut ids = Vec::new();
+                    let mut topos = Vec::new();
+                    let mut out = cur.clone();
+                    for bi in r.clone() {
+                        let (_, topo, bids, o) =
+                            block_unit(m, &m.blocks[bi], bi, &out);
+                        ids.extend(bids);
+                        topos.push(topo);
+                        out = o;
+                    }
+                    push(
+                        &mut units,
+                        &mut pending_skip,
+                        &mut cur,
+                        format!("p{j}"),
+                        format!("seq({})", topos.join(",")),
+                        ids,
+                        false,
+                        false,
+                        out,
+                    );
+                }
+            }
+        }
+        other => panic!(
+            "units_of: unknown granularity '{other}' for model {} — \
+             every declared granularity needs an explicit arm here",
+            m.name
+        ),
     }
 
     for &hc in &m.head_convs {
@@ -843,6 +923,79 @@ fn block_unit(
             )
         }
     }
+}
+
+fn block_layer_ids(blk: &SBlock) -> Vec<usize> {
+    match *blk {
+        SBlock::Basic { c1, c2, down } => {
+            let mut v = vec![c1, c2];
+            if let Some(d) = down {
+                v.push(d);
+            }
+            v
+        }
+        SBlock::Ir { e, d, p, .. } => vec![e, d, p],
+    }
+}
+
+/// Pack-PTQ grouping threshold: adjacent blocks merge into one pack
+/// when their measured interaction term is at least this fraction of
+/// the smaller block's own 2-bit sensitivity. A design parameter, not a
+/// fit: large enough to ignore measurement noise around zero, small
+/// enough that genuinely coupled neighbors (a residual stream feeding a
+/// strided consumer) clear it.
+const PACK_TAU: f64 = 0.05;
+/// Upper bound on blocks per pack — keeps a pathological coupling chain
+/// from degenerating into whole-net reconstruction (Pack-PTQ's failure
+/// mode at low calibration sizes).
+const PACK_MAX_LEN: usize = 4;
+
+/// Measure the Pack-PTQ block partition for one model on the held-out
+/// split. `err(S)` is the mean squared logit deviation from FP with
+/// every layer of the blocks in `S` at 2-bit nearest rounding — the
+/// same data-driven FIM proxy as [`crate::sensitivity`]'s off-diagonal
+/// probes, lifted from layer pairs to block pairs:
+///
+///   s_i       = err({i})
+///   o_{i,i+1} = err({i, i+1}) - s_i - s_{i+1}
+///
+/// A positive `o` means the neighbors' quantization errors interact
+/// (the block-diagonal Hessian term BRECQ drops between blocks is not
+/// actually negligible there), so the pair reconstructs jointly.
+fn pack_partition(
+    m: &SModel,
+    ws: &[Tensor],
+    bs: &[Tensor],
+    x: &Tensor,
+) -> Vec<Range<usize>> {
+    let nb = m.blocks.len();
+    if nb <= 1 {
+        return (0..nb).map(|i| i..i + 1).collect();
+    }
+    let lg_fp = logits(m, ws, bs, x);
+    let err = |blocks: &[usize]| -> f64 {
+        let mut wq: Vec<Tensor> = ws.to_vec();
+        for &bi in blocks {
+            for &l in &block_layer_ids(&m.blocks[bi]) {
+                let steps = mse_steps_per_channel(&ws[l], 2);
+                wq[l] = quantize_nearest(&ws[l], &steps, 2);
+            }
+        }
+        let lq = logits(m, &wq, bs, x);
+        lq.data
+            .iter()
+            .zip(&lg_fp.data)
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / lg_fp.data.len() as f64
+    };
+    let diag: Vec<f64> = (0..nb).map(|i| err(&[i])).collect();
+    let coupling: Vec<f64> =
+        (0..nb - 1).map(|i| err(&[i, i + 1]) - diag[i] - diag[i + 1]).collect();
+    group_packs(&diag, &coupling, PACK_TAU, PACK_MAX_LEN)
 }
 
 fn unit_fwd_sig(
@@ -978,6 +1131,10 @@ pub fn generate(dir: &Path, cfg: &SynthConfig) -> Result<()> {
         );
     };
 
+    // Pack-PTQ coupling probes run on the held-out split (the same
+    // reference the acceptance loop scores against)
+    let test_x = standardize(&cand.test_raw, cfg.test_n, cfg.img);
+
     let mut models_json: BTreeMap<String, Json> = BTreeMap::new();
     for ((m, ws, bs), fp_acc) in cand.models.iter().zip(&cand.fp_accs) {
         // weight store
@@ -1049,10 +1206,11 @@ pub fn generate(dir: &Path, cfg: &SynthConfig) -> Result<()> {
             (0..nl).map(|i| (format!("obs{i}"), vec![2])).collect::<Vec<_>>();
         add_exe(&mut exes, &act_obs_exe, (inputs, outputs));
 
-        // granularities
+        // granularities (pack partition measured once per model)
+        let packs = pack_partition(m, ws, bs, &test_x);
         let mut grans_json: BTreeMap<String, Json> = BTreeMap::new();
         for gran in &m.grans {
-            let units = units_of(m, gran, cfg.calib_batch, cfg);
+            let units = units_of(m, gran, cfg.calib_batch, cfg, &packs);
             let fim_exe = format!("{}.{}.fim", m.name, gran);
             let mut inputs =
                 vec![("images".to_string(), img_sh(cfg.calib_batch))];

@@ -76,7 +76,8 @@ impl fmt::Display for Error {
             ),
             Error::UnknownGranularity(g) => write!(
                 f,
-                "unknown granularity '{g}' (expected layer|block|stage|net)"
+                "unknown granularity '{g}' \
+                 (expected layer|block|stage|net|pack)"
             ),
             Error::UnknownHardware(h) => write!(
                 f,
@@ -169,14 +170,21 @@ pub enum Granularity {
     Block,
     Stage,
     Net,
+    /// Pack-PTQ grouping: adjacent blocks with strong FIM cross-block
+    /// coupling are reconstructed jointly (see `sensitivity::group_packs`
+    /// and the generator's `pack_partition`). Models export it like any
+    /// other granularity; `JobSpec::validate` rejects it for models that
+    /// do not.
+    Pack,
 }
 
 impl Granularity {
-    pub const ALL: [Granularity; 4] = [
+    pub const ALL: [Granularity; 5] = [
         Granularity::Layer,
         Granularity::Block,
         Granularity::Stage,
         Granularity::Net,
+        Granularity::Pack,
     ];
 
     pub fn as_str(&self) -> &'static str {
@@ -185,6 +193,7 @@ impl Granularity {
             Granularity::Block => "block",
             Granularity::Stage => "stage",
             Granularity::Net => "net",
+            Granularity::Pack => "pack",
         }
     }
 

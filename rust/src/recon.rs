@@ -225,7 +225,7 @@ impl<'a> Calibrator<'a> {
         ws: &[Tensor],
         bs: &[Tensor],
     ) -> Result<Vec<Tensor>> {
-        let g = self.model.gran(gran);
+        let g = self.model.try_gran(gran)?;
         let b = self.mf.calib_batch;
         let k = calib.len();
         assert!(k % b == 0, "calib size must be a multiple of {b}");
@@ -306,8 +306,10 @@ impl<'a> Calibrator<'a> {
             vec![1.0; nl]
         };
 
-        // FIM caches (or unit MSE weights)
-        let gran = self.model.gran(&cfg.gran);
+        // FIM caches (or unit MSE weights); the granularity string is
+        // validated here — an unknown/undeclared one is a typed error,
+        // never a silent fallback
+        let gran = self.model.try_gran(&cfg.gran)?;
         let fim = if cfg.use_fim {
             Some(self.fim_pass(&cfg.gran, calib, &ws, &bs)?)
         } else {

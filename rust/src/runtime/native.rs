@@ -2227,9 +2227,10 @@ impl Backend for NativeBackend {
     }
 
     /// Compile a stateful reconstruction plan for a `unit_recon`
-    /// executable (see [`super::plan`]). Multi-node (seq) units return
-    /// `None` and fall back to per-iteration dispatch — the retained
-    /// parity path.
+    /// executable (see [`super::plan`]) — single- and multi-node (seq)
+    /// unit programs alike. Only node shapes whose shared-gradient
+    /// masking cannot be done in place return `None` and fall back to
+    /// per-iteration dispatch — the retained parity path.
     fn prepare_recon<'p>(
         &'p self,
         name: &str,

@@ -39,13 +39,19 @@
 //! element order. `tests/plan.rs` asserts plan-vs-dispatch equality of
 //! losses, gradients and committed weights bitwise at 1/2/8 threads.
 //!
-//! Scope: plans cover single-node units (every unit of the synthetic
-//! models at `layer` and `block` granularity). Multi-node `seq(...)`
-//! units (stage/net granularity) and activation-quantized first layers
-//! keep their exact semantics through the fallbacks: `build` returns
-//! `None` for seq units, and aq-on plans skip the slab feed (the trained
-//! activation step re-quantizes the frozen input every iteration) while
-//! keeping the persistent scratch and fused dispatch.
+//! Scope: plans compile every exported unit shape — single-node units
+//! (`layer`/`block` granularity) *and* multi-node `seq(...)` programs
+//! (`stage`/`net`/`pack` granularity). A multi-node plan gives each
+//! node its own slab/scratch schedule (slabs and direct cache feeds
+//! only where the feed is frozen, i.e. node 0), chains the nodes in
+//! topo order through persistent inter-node output buffers, and runs
+//! the backward pass through per-node gradient buffers in exactly the
+//! dispatch path's `run_unit_bwd` node order. `build` still returns
+//! `None` for node shapes whose shared-gradient masking cannot be done
+//! in place (see the decline rules in `build_native_plan`), and aq-on
+//! plans skip the slab feed (the trained activation step re-quantizes
+//! the frozen input every iteration) while keeping the persistent
+//! scratch and fused dispatch.
 
 // Kernel-feeding loops index several buffers with shared offset
 // arithmetic (same rationale as runtime::native).
@@ -90,6 +96,38 @@ pub fn counters() -> (usize, usize, usize) {
 /// fallback path instead of a plan.
 pub fn note_fallback_step() {
     PLAN_FALLBACK_STEPS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Point-in-time copy of the plan counters. The statics are cumulative
+/// process-global atomics, so any absolute read is polluted by earlier
+/// work in the same process — take a snapshot before a phase and
+/// subtract it after ([`Counters::since`]) to attribute counts to that
+/// phase alone. Benches and `tests/plan.rs` read deltas, never totals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Counters {
+    pub builds: usize,
+    pub steps: usize,
+    pub fallback_steps: usize,
+}
+
+impl Counters {
+    /// Per-field delta `self - earlier` (saturating: a counter can only
+    /// grow, but don't turn a misordered pair into a giant number).
+    pub fn since(&self, earlier: &Counters) -> Counters {
+        Counters {
+            builds: self.builds.saturating_sub(earlier.builds),
+            steps: self.steps.saturating_sub(earlier.steps),
+            fallback_steps: self
+                .fallback_steps
+                .saturating_sub(earlier.fallback_steps),
+        }
+    }
+}
+
+/// Snapshot the cumulative plan counters.
+pub fn snapshot() -> Counters {
+    let (builds, steps, fallback_steps) = counters();
+    Counters { builds, steps, fallback_steps }
 }
 
 /// Everything frozen across a unit's reconstruction loop. Borrowed, not
@@ -167,6 +205,10 @@ enum Input {
     Gap,
     /// Another planned layer's output buffer (unit binding index).
     Layer(usize),
+    /// A previous node's residual-combined output buffer (`nouts[m]`).
+    /// Only wired when node `m` actually owns one; nodes whose output is
+    /// a plain layer wire `Layer(out_layer)` instead.
+    Node(usize),
 }
 
 /// Where a layer's incoming output-gradient lives during backward.
@@ -176,6 +218,31 @@ enum GradSrc {
     GZq,
     /// A consumer layer's input-gradient buffer.
     LayerGx(usize),
+    /// A later node's residual-combined input gradient (`gins[m]`).
+    Node(usize),
+}
+
+/// The unit-binding index of the layer a node's main output flows from
+/// (pre any residual add — the residual preserves its shape).
+fn out_layer(n: Node) -> usize {
+    match n {
+        Node::Layer(i) => i,
+        Node::Basic { c2, .. } | Node::BasicL2 { c2, .. } => c2,
+        Node::Ir { p, .. } | Node::IrL3 { p } => p,
+        Node::GapFc { fc } => fc,
+    }
+}
+
+/// Whether a node's output lives in its own buffer (`nouts[n]`) — true
+/// exactly when `node_fwd` materializes a residual add (+ relu) tensor.
+fn has_out_buf(n: Node) -> bool {
+    matches!(
+        n,
+        Node::Basic { .. }
+            | Node::BasicL2 { .. }
+            | Node::IrL3 { .. }
+            | Node::Ir { res: true, .. }
+    )
 }
 
 /// Whole-cache im2col slabs for one frozen-input conv layer.
@@ -216,7 +283,7 @@ struct PLayer {
 }
 
 pub struct NativeReconPlan<'a> {
-    node: Node,
+    nodes: Vec<Node>,
     layers: Vec<PLayer>,
     // frozen caches + constants (borrowed)
     x: &'a Tensor,
@@ -236,8 +303,12 @@ pub struct NativeReconPlan<'a> {
     /// gap over the whole K cache (GapFc units), gathered into `gapb`.
     gap_cache: Option<Tensor>,
     gapb: Option<Tensor>,
-    /// Node output after a residual add (+ relu), when the node has one.
-    nout: Option<Tensor>,
+    /// Per-node output after a residual add (+ relu), when the node has
+    /// one; later nodes read it as their input (`Input::Node`).
+    nouts: Vec<Option<Tensor>>,
+    /// Per-node residual-combined input gradient (non-entry Basic /
+    /// `Ir{res}` nodes); the earlier node consumes it (`GradSrc::Node`).
+    gins: Vec<Option<Tensor>>,
     g_zq: Tensor,
     // per-layer outputs of the fused gv/regularizer pass
     gvs: Vec<Tensor>,
@@ -596,28 +667,44 @@ fn batched(shape: &[usize], b: usize) -> Vec<usize> {
     s
 }
 
-/// Compile a native reconstruction plan for a single-node unit; `None`
-/// means the unit keeps the per-dispatch path (multi-node `seq` units,
-/// or node shapes whose shared-gradient masking the plan cannot do in
-/// place).
+/// Compile a native reconstruction plan for a `UnitProg` of any node
+/// count; `None` means the unit keeps the per-dispatch path (node
+/// shapes whose shared-gradient masking the plan cannot do in place —
+/// none of the exported topologies hit these):
+///
+/// * Basic/BasicL2 with a relu on `c2`: the node-masked grad is shared
+///   between conv2 and the downsample, so the in-place mask needs the
+///   first consumer linear.
+/// * A non-entry `Ir{res}` node with a relu on `p`: the residual input
+///   gradient adds the *unmasked* incoming grad, but `bwd_one` masks
+///   the shared buffer in place by `p`'s relu.
+/// * BasicL2/IrL3/GapFc inside a multi-node program: those shapes read
+///   the unit-level skip/gap caches, which only exist at the entry.
 pub(crate) fn build_native_plan<'a>(
     u: &UnitProg,
     inp: PlanInputs<'a>,
 ) -> Result<Option<Box<dyn ReconPlan + 'a>>> {
-    if u.nodes.len() != 1 {
-        return Ok(None);
-    }
-    let node = u.nodes[0];
-    // Basic/BasicL2 share the node-masked grad between conv2 and the
-    // downsample; the in-place mask needs the first consumer linear
-    // (always true for the exported topologies — decline otherwise).
-    match node {
-        Node::Basic { c2, .. } | Node::BasicL2 { c2, .. }
-            if u.layers[c2].relu =>
-        {
-            return Ok(None);
+    let nn = u.nodes.len();
+    ensure!(nn >= 1, "plan: empty unit program");
+    for (n, &node) in u.nodes.iter().enumerate() {
+        match node {
+            Node::Basic { c2, .. } | Node::BasicL2 { c2, .. }
+                if u.layers[c2].relu =>
+            {
+                return Ok(None);
+            }
+            Node::BasicL2 { .. } | Node::IrL3 { .. } | Node::GapFc { .. }
+                if nn > 1 =>
+            {
+                return Ok(None);
+            }
+            Node::Ir { p, res: true, .. }
+                if n > 0 && u.layers[p].relu =>
+            {
+                return Ok(None);
+            }
+            _ => {}
         }
-        _ => {}
     }
 
     let nl = u.layers.len();
@@ -634,30 +721,40 @@ pub(crate) fn build_native_plan<'a>(
     let bsz = inp.batch;
     ensure!(bsz >= 1 && bsz <= k, "plan batch {bsz} vs cache {k}");
 
-    // layer input wiring (single node ⇒ frozen feeds are the unit caches)
+    // layer input wiring: node 0's entry layers read the frozen unit
+    // caches; node n>0's entry layers read the previous node's output
+    // (its residual buffer when it owns one, its out layer's z else)
     let mut inputs_of = vec![Input::X; nl];
-    match node {
-        Node::Layer(i) => inputs_of[i] = Input::X,
-        Node::Basic { c1, c2, down } => {
-            inputs_of[c1] = Input::X;
-            inputs_of[c2] = Input::Layer(c1);
-            if let Some(d) = down {
-                inputs_of[d] = Input::X;
+    let mut entry = Input::X;
+    for (n, &node) in u.nodes.iter().enumerate() {
+        match node {
+            Node::Layer(i) => inputs_of[i] = entry,
+            Node::Basic { c1, c2, down } => {
+                inputs_of[c1] = entry;
+                inputs_of[c2] = Input::Layer(c1);
+                if let Some(d) = down {
+                    inputs_of[d] = entry;
+                }
             }
-        }
-        Node::BasicL2 { c2, down } => {
-            inputs_of[c2] = Input::X;
-            if let Some(d) = down {
-                inputs_of[d] = Input::Skip;
+            Node::BasicL2 { c2, down } => {
+                inputs_of[c2] = entry;
+                if let Some(d) = down {
+                    inputs_of[d] = Input::Skip;
+                }
             }
+            Node::Ir { e, d, p, .. } => {
+                inputs_of[e] = entry;
+                inputs_of[d] = Input::Layer(e);
+                inputs_of[p] = Input::Layer(d);
+            }
+            Node::IrL3 { p } => inputs_of[p] = entry,
+            Node::GapFc { fc } => inputs_of[fc] = Input::Gap,
         }
-        Node::Ir { e, d, p, .. } => {
-            inputs_of[e] = Input::X;
-            inputs_of[d] = Input::Layer(e);
-            inputs_of[p] = Input::Layer(d);
-        }
-        Node::IrL3 { p } => inputs_of[p] = Input::X,
-        Node::GapFc { fc } => inputs_of[fc] = Input::Gap,
+        entry = if has_out_buf(node) {
+            Input::Node(n)
+        } else {
+            Input::Layer(out_layer(node))
+        };
     }
 
     // per-layer geometry + shape validation against the frozen caches
@@ -695,7 +792,15 @@ pub(crate) fn build_native_plan<'a>(
                 &sh[1..]
             );
         }
-        if let Input::Layer(p) = inputs_of[i] {
+        // producer check: a layer fed by another layer's z, or by a
+        // previous node's residual buffer (whose shape is that node's
+        // out layer's shape), must agree with the producer's geometry
+        let producer = match inputs_of[i] {
+            Input::Layer(p) => Some(p),
+            Input::Node(m) => Some(out_layer(u.nodes[m])),
+            _ => None,
+        };
+        if let Some(p) = producer {
             if let Some(Some(pg)) = geoms.get(p) {
                 ensure!(
                     (pg.cout, pg.ho, pg.wo) == (g.cin, g.h, g.wd),
@@ -715,12 +820,7 @@ pub(crate) fn build_native_plan<'a>(
             _ => unreachable!("conv layer without geometry"),
         }
     };
-    let out_shape = match node {
-        Node::Layer(i) => out_of(i),
-        Node::Basic { c2, .. } | Node::BasicL2 { c2, .. } => out_of(c2),
-        Node::Ir { p, .. } | Node::IrL3 { p } => out_of(p),
-        Node::GapFc { fc } => out_of(fc),
-    };
+    let out_shape = out_of(out_layer(u.nodes[nn - 1]));
     ensure!(
         inp.z_fp.shape[0] == k && inp.z_fp.shape[1..] == out_shape[1..],
         "plan: z_fp shape {:?} != unit out {:?} at K={k}",
@@ -744,7 +844,8 @@ pub(crate) fn build_native_plan<'a>(
     let mut rbufs = Vec::with_capacity(nl);
     let mut gstep_t = Vec::with_capacity(nl);
     for (i, info) in u.layers.iter().enumerate() {
-        let frozen = !matches!(inputs_of[i], Input::Layer(_));
+        let frozen =
+            matches!(inputs_of[i], Input::X | Input::Skip | Input::Gap);
         let is_conv = info.kind != "fc";
         let (direct, slab) = if frozen && is_conv && !inp.aq {
             let g = geoms[i].expect("conv geom");
@@ -795,41 +896,61 @@ pub(crate) fn build_native_plan<'a>(
         gstep_t.push(Tensor::scalar1(0.0));
     }
 
-    // which gathered batches the steps actually read
+    // which gathered batches the steps actually read — a residual add
+    // on the *entry* node reads the gathered unit input/skip batch;
+    // later nodes' residuals read the previous node's output buffers
+    let node0 = u.nodes[0];
     let tensor_fed = |l: &PLayer| l.slab.is_none() && !l.direct;
     let need_xb = layers
         .iter()
         .any(|l| l.input == Input::X && tensor_fed(l))
-        || matches!(node, Node::Basic { down: None, .. })
-        || matches!(node, Node::Ir { res: true, .. });
+        || matches!(node0, Node::Basic { down: None, .. })
+        || matches!(node0, Node::Ir { res: true, .. });
     let need_skb = layers
         .iter()
         .any(|l| l.input == Input::Skip && tensor_fed(l))
-        || matches!(node, Node::BasicL2 { down: None, .. })
-        || matches!(node, Node::IrL3 { .. });
+        || matches!(node0, Node::BasicL2 { down: None, .. })
+        || matches!(node0, Node::IrL3 { .. });
     if need_skb {
         ensure!(inp.skip.is_some(), "plan: unit needs a skip cache");
     }
-    let gap_cache = match node {
+    let gap_cache = match node0 {
         Node::GapFc { .. } => Some(gap_fwd(inp.x)),
         _ => None,
     };
     let gapb = gap_cache
         .as_ref()
         .map(|g| Tensor::zeros(batched(&g.shape, bsz)));
-    let nout = match node {
-        Node::Basic { .. }
-        | Node::BasicL2 { .. }
-        | Node::IrL3 { .. }
-        | Node::Ir { res: true, .. } => {
-            Some(Tensor::zeros(out_shape.clone()))
-        }
-        _ => None,
-    };
+    let nouts: Vec<Option<Tensor>> = u
+        .nodes
+        .iter()
+        .map(|&nd| {
+            has_out_buf(nd)
+                .then(|| Tensor::zeros(out_of(out_layer(nd))))
+        })
+        .collect();
+    // non-entry Basic / residual-Ir nodes combine their entry layer's
+    // gx with a shortcut grad into a node input gradient the previous
+    // node consumes; its shape is the previous node's output shape
+    let gins: Vec<Option<Tensor>> = u
+        .nodes
+        .iter()
+        .enumerate()
+        .map(|(n, &nd)| {
+            (n > 0
+                && matches!(
+                    nd,
+                    Node::Basic { .. } | Node::Ir { res: true, .. }
+                ))
+            .then(|| {
+                Tensor::zeros(out_of(out_layer(u.nodes[n - 1])))
+            })
+        })
+        .collect();
 
     PLAN_BUILDS.fetch_add(1, Ordering::Relaxed);
     Ok(Some(Box::new(NativeReconPlan {
-        node,
+        nodes: u.nodes.clone(),
         layers,
         x: inp.x,
         skip: inp.skip,
@@ -848,7 +969,8 @@ pub(crate) fn build_native_plan<'a>(
         fb: inp.fim.map(|_| Tensor::zeros(out_shape.clone())),
         gap_cache,
         gapb,
-        nout,
+        nouts,
+        gins,
         g_zq: Tensor::zeros(out_shape),
         gvs,
         rbufs,
@@ -892,6 +1014,7 @@ impl NativeReconPlan<'_> {
                 let batch: Option<&Tensor> = match src {
                     Input::X => self.xb.as_ref(),
                     Input::Skip => self.skb.as_ref(),
+                    Input::Node(m) => self.nouts[m].as_ref(),
                     _ => self.gapb.as_ref(),
                 };
                 let pl = &mut self.layers[i];
@@ -933,6 +1056,9 @@ impl NativeReconPlan<'_> {
             GradSrc::LayerGx(j) => {
                 Some(self.layers[j].gx.take().expect("consumer gx"))
             }
+            GradSrc::Node(m) => {
+                Some(self.gins[m].take().expect("node gin"))
+            }
             GradSrc::GZq => None,
         };
         if self.layers[i].info.relu {
@@ -957,6 +1083,7 @@ impl NativeReconPlan<'_> {
                 Input::X => self.xb.as_ref(),
                 Input::Skip => self.skb.as_ref(),
                 Input::Gap => self.gapb.as_ref(),
+                Input::Node(m) => self.nouts[m].as_ref(),
             };
             let cache: Option<&Tensor> = match input {
                 Input::X => Some(self.x),
@@ -986,28 +1113,225 @@ impl NativeReconPlan<'_> {
             )
         };
         self.gstep_t[i].data[0] = if self.aq { gstep } else { 0.0 };
-        if let GradSrc::LayerGx(j) = src {
-            self.layers[j].gx = g_owned;
+        match src {
+            GradSrc::LayerGx(j) => self.layers[j].gx = g_owned,
+            GradSrc::Node(m) => self.gins[m] = g_owned,
+            GradSrc::GZq => {}
         }
     }
 
-    /// Location of the unit output among the persistent buffers.
-    fn zq_is_nout(&self) -> bool {
-        matches!(
-            self.node,
-            Node::Basic { .. }
-                | Node::BasicL2 { .. }
-                | Node::IrL3 { .. }
-                | Node::Ir { res: true, .. }
-        )
+    /// The main-path input batch of node `n` (a residual shortcut reads
+    /// it): the gathered unit input for the entry node, the previous
+    /// node's output buffer otherwise.
+    fn node_in_data(&self, n: usize) -> &[f32] {
+        if n == 0 {
+            &self.xb.as_ref().expect("residual xb").data
+        } else {
+            match self.nouts[n - 1].as_ref() {
+                Some(t) => &t.data,
+                None => {
+                    &self.layers[out_layer(self.nodes[n - 1])].z.data
+                }
+            }
+        }
     }
 
-    fn zq_layer(&self) -> usize {
-        match self.node {
-            Node::Layer(i) => i,
-            Node::Basic { c2, .. } | Node::BasicL2 { c2, .. } => c2,
-            Node::Ir { p, .. } | Node::IrL3 { p } => p,
-            Node::GapFc { fc } => fc,
+    /// Read access to a gradient buffer by source.
+    fn grad_data(&self, src: GradSrc) -> &[f32] {
+        match src {
+            GradSrc::GZq => &self.g_zq.data,
+            GradSrc::LayerGx(j) => {
+                &self.layers[j].gx.as_ref().expect("layer gx").data
+            }
+            GradSrc::Node(m) => {
+                &self.gins[m].as_ref().expect("node gin").data
+            }
+        }
+    }
+
+    /// In-place relu mask of the incoming grad buffer by node `n`'s
+    /// post-relu output — the dispatch path's `relu_mask(gout, out)`
+    /// without the fresh tensor (sound because the buffer is dead once
+    /// this node's backward completes; shapes that would still need the
+    /// unmasked values are declined at build time).
+    fn mask_node_src(&mut self, src: GradSrc, n: usize) {
+        let nout = self.nouts[n].take().expect("node out");
+        match src {
+            GradSrc::GZq => relu_mask_inplace(&mut self.g_zq, &nout),
+            GradSrc::LayerGx(j) => relu_mask_inplace(
+                self.layers[j].gx.as_mut().expect("layer gx"),
+                &nout,
+            ),
+            GradSrc::Node(m) => relu_mask_inplace(
+                self.gins[m].as_mut().expect("node gin"),
+                &nout,
+            ),
+        }
+        self.nouts[n] = Some(nout);
+    }
+
+    /// Forward one node: its layers in topo order, then the residual
+    /// add (+ relu) into `nouts[n]` when the node has one — exactly the
+    /// dispatch path's `node_fwd`.
+    fn fwd_node(&mut self, n: usize, rows: &[usize], asteps: &[Tensor]) {
+        match self.nodes[n] {
+            Node::Layer(i) => self.fwd_one(i, rows, asteps),
+            Node::Basic { c1, c2, down } => {
+                self.fwd_one(c1, rows, asteps);
+                self.fwd_one(c2, rows, asteps);
+                if let Some(d) = down {
+                    self.fwd_one(d, rows, asteps);
+                }
+                let mut nout =
+                    self.nouts[n].take().expect("basic nout");
+                {
+                    let sc: &[f32] = match down {
+                        Some(d) => &self.layers[d].z.data,
+                        None => self.node_in_data(n),
+                    };
+                    add_into(&self.layers[c2].z, sc, &mut nout);
+                }
+                relu_inplace(&mut nout);
+                self.nouts[n] = Some(nout);
+            }
+            Node::BasicL2 { c2, down } => {
+                self.fwd_one(c2, rows, asteps);
+                if let Some(d) = down {
+                    self.fwd_one(d, rows, asteps);
+                }
+                let mut nout =
+                    self.nouts[n].take().expect("basic_l2 nout");
+                {
+                    let sc: &[f32] = match down {
+                        Some(d) => &self.layers[d].z.data,
+                        None => {
+                            &self.skb.as_ref().expect("skip batch").data
+                        }
+                    };
+                    add_into(&self.layers[c2].z, sc, &mut nout);
+                }
+                relu_inplace(&mut nout);
+                self.nouts[n] = Some(nout);
+            }
+            Node::Ir { e, d, p, res } => {
+                self.fwd_one(e, rows, asteps);
+                self.fwd_one(d, rows, asteps);
+                self.fwd_one(p, rows, asteps);
+                if res {
+                    let mut nout =
+                        self.nouts[n].take().expect("ir nout");
+                    add_into(
+                        &self.layers[p].z,
+                        self.node_in_data(n),
+                        &mut nout,
+                    );
+                    self.nouts[n] = Some(nout);
+                }
+            }
+            Node::IrL3 { p } => {
+                self.fwd_one(p, rows, asteps);
+                let mut nout = self.nouts[n].take().expect("ir_l3 nout");
+                add_into(
+                    &self.layers[p].z,
+                    &self.skb.as_ref().expect("skip batch").data,
+                    &mut nout,
+                );
+                self.nouts[n] = Some(nout);
+            }
+            Node::GapFc { fc } => self.fwd_one(fc, rows, asteps),
+        }
+    }
+
+    /// Backward one node in the dispatch path's `node_bwd` order; `src`
+    /// is the grad at this node's output. Returns where the grad at the
+    /// node's *input* now lives (consumed by the previous node; dead
+    /// for the entry node, whose input is frozen).
+    fn bwd_node(
+        &mut self,
+        n: usize,
+        src: GradSrc,
+        rows: &[usize],
+        asteps: &[Tensor],
+    ) -> GradSrc {
+        match self.nodes[n] {
+            Node::Layer(i) => {
+                self.bwd_one(i, src, rows, asteps);
+                GradSrc::LayerGx(i)
+            }
+            Node::Basic { c1, c2, down } => {
+                self.mask_node_src(src, n);
+                self.bwd_one(c2, src, rows, asteps);
+                if let Some(d) = down {
+                    self.bwd_one(d, src, rows, asteps);
+                }
+                self.bwd_one(c1, GradSrc::LayerGx(c2), rows, asteps);
+                if n > 0 {
+                    // node input grad = c1's gx + the shortcut grad
+                    // (downsample gx, or the node-masked grad itself)
+                    let mut gin =
+                        self.gins[n].take().expect("basic gin");
+                    {
+                        let sc: &[f32] = match down {
+                            Some(d) => {
+                                &self.layers[d]
+                                    .gx
+                                    .as_ref()
+                                    .expect("down gx")
+                                    .data
+                            }
+                            None => self.grad_data(src),
+                        };
+                        add_into(
+                            self.layers[c1]
+                                .gx
+                                .as_ref()
+                                .expect("c1 gx"),
+                            sc,
+                            &mut gin,
+                        );
+                    }
+                    self.gins[n] = Some(gin);
+                    GradSrc::Node(n)
+                } else {
+                    GradSrc::LayerGx(c1)
+                }
+            }
+            Node::BasicL2 { c2, down } => {
+                self.mask_node_src(src, n);
+                self.bwd_one(c2, src, rows, asteps);
+                if let Some(d) = down {
+                    self.bwd_one(d, src, rows, asteps);
+                }
+                GradSrc::LayerGx(c2)
+            }
+            Node::Ir { e, d, p, res } => {
+                self.bwd_one(p, src, rows, asteps);
+                self.bwd_one(d, GradSrc::LayerGx(p), rows, asteps);
+                self.bwd_one(e, GradSrc::LayerGx(d), rows, asteps);
+                if res && n > 0 {
+                    // residual: node input grad = e's gx + the
+                    // *unmasked* incoming grad (p is linear — enforced
+                    // by the build-time decline)
+                    let mut gin = self.gins[n].take().expect("ir gin");
+                    add_into(
+                        self.layers[e].gx.as_ref().expect("e gx"),
+                        self.grad_data(src),
+                        &mut gin,
+                    );
+                    self.gins[n] = Some(gin);
+                    GradSrc::Node(n)
+                } else {
+                    GradSrc::LayerGx(e)
+                }
+            }
+            Node::IrL3 { p } => {
+                self.bwd_one(p, src, rows, asteps);
+                GradSrc::LayerGx(p)
+            }
+            Node::GapFc { fc } => {
+                self.bwd_one(fc, src, rows, asteps);
+                GradSrc::LayerGx(fc)
+            }
         }
     }
 }
@@ -1062,73 +1386,10 @@ impl ReconPlan for NativeReconPlan<'_> {
             );
         }
 
-        // 3. forward through the node program
-        match self.node {
-            Node::Layer(i) => self.fwd_one(i, rows, asteps),
-            Node::Basic { c1, c2, down } => {
-                self.fwd_one(c1, rows, asteps);
-                self.fwd_one(c2, rows, asteps);
-                if let Some(d) = down {
-                    self.fwd_one(d, rows, asteps);
-                }
-                let nout = self.nout.as_mut().expect("basic nout");
-                match down {
-                    Some(d) => add_into(
-                        &self.layers[c2].z,
-                        &self.layers[d].z.data,
-                        nout,
-                    ),
-                    None => add_into(
-                        &self.layers[c2].z,
-                        &self.xb.as_ref().expect("residual xb").data,
-                        nout,
-                    ),
-                }
-                relu_inplace(nout);
-            }
-            Node::BasicL2 { c2, down } => {
-                self.fwd_one(c2, rows, asteps);
-                if let Some(d) = down {
-                    self.fwd_one(d, rows, asteps);
-                }
-                let nout = self.nout.as_mut().expect("basic_l2 nout");
-                match down {
-                    Some(d) => add_into(
-                        &self.layers[c2].z,
-                        &self.layers[d].z.data,
-                        nout,
-                    ),
-                    None => add_into(
-                        &self.layers[c2].z,
-                        &self.skb.as_ref().expect("skip batch").data,
-                        nout,
-                    ),
-                }
-                relu_inplace(nout);
-            }
-            Node::Ir { e, d, p, res } => {
-                self.fwd_one(e, rows, asteps);
-                self.fwd_one(d, rows, asteps);
-                self.fwd_one(p, rows, asteps);
-                if res {
-                    let nout = self.nout.as_mut().expect("ir nout");
-                    add_into(
-                        &self.layers[p].z,
-                        &self.xb.as_ref().expect("residual xb").data,
-                        nout,
-                    );
-                }
-            }
-            Node::IrL3 { p } => {
-                self.fwd_one(p, rows, asteps);
-                let nout = self.nout.as_mut().expect("ir_l3 nout");
-                add_into(
-                    &self.layers[p].z,
-                    &self.skb.as_ref().expect("skip batch").data,
-                    nout,
-                );
-            }
-            Node::GapFc { fc } => self.fwd_one(fc, rows, asteps),
+        // 3. forward through the node program in topo order; each node
+        //    reads its predecessor's persistent output buffer
+        for n in 0..self.nodes.len() {
+            self.fwd_node(n, rows, asteps);
         }
 
         // 4. FIM-weighted loss (Eq. 10) + gradient at the unit output —
@@ -1136,10 +1397,12 @@ impl ReconPlan for NativeReconPlan<'_> {
         //    a missing FIM multiplies by an implicit exact 1.0.
         let rec;
         {
-            let zq: &Tensor = if self.zq_is_nout() {
-                self.nout.as_ref().expect("node out")
-            } else {
-                &self.layers[self.zq_layer()].z
+            let last = self.nodes.len() - 1;
+            let zq: &Tensor = match self.nouts[last].as_ref() {
+                Some(t) => t,
+                None => {
+                    &self.layers[out_layer(self.nodes[last])].z
+                }
             };
             let zb = &self.zb;
             debug_assert_eq!(zb.data.len(), zq.data.len());
@@ -1179,39 +1442,12 @@ impl ReconPlan for NativeReconPlan<'_> {
             }
         }
 
-        // 5. backward through the node program (dispatch order)
-        match self.node {
-            Node::Layer(i) => self.bwd_one(i, GradSrc::GZq, rows, asteps),
-            Node::Basic { c1, c2, down } => {
-                {
-                    let out = self.nout.as_ref().expect("basic nout");
-                    relu_mask_inplace(&mut self.g_zq, out);
-                }
-                self.bwd_one(c2, GradSrc::GZq, rows, asteps);
-                if let Some(d) = down {
-                    self.bwd_one(d, GradSrc::GZq, rows, asteps);
-                }
-                self.bwd_one(c1, GradSrc::LayerGx(c2), rows, asteps);
-            }
-            Node::BasicL2 { c2, down } => {
-                {
-                    let out = self.nout.as_ref().expect("basic_l2 nout");
-                    relu_mask_inplace(&mut self.g_zq, out);
-                }
-                self.bwd_one(c2, GradSrc::GZq, rows, asteps);
-                if let Some(d) = down {
-                    self.bwd_one(d, GradSrc::GZq, rows, asteps);
-                }
-            }
-            Node::Ir { e, d, p, .. } => {
-                self.bwd_one(p, GradSrc::GZq, rows, asteps);
-                self.bwd_one(d, GradSrc::LayerGx(p), rows, asteps);
-                self.bwd_one(e, GradSrc::LayerGx(d), rows, asteps);
-            }
-            Node::IrL3 { p } => self.bwd_one(p, GradSrc::GZq, rows, asteps),
-            Node::GapFc { fc } => {
-                self.bwd_one(fc, GradSrc::GZq, rows, asteps)
-            }
+        // 5. backward through the node program in reverse topo order
+        //    (the dispatch path's `run_unit_bwd`): each node consumes
+        //    the grad at its output and leaves the grad at its input
+        let mut src = GradSrc::GZq;
+        for n in (0..self.nodes.len()).rev() {
+            src = self.bwd_node(n, src, rows, asteps);
         }
 
         // 6. fused gv + rounding-regularizer pass: one sigmoid per

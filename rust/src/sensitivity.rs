@@ -61,6 +61,47 @@ impl SensitivityTable {
     }
 }
 
+/// Pack-PTQ grouping (PAPERS.md): partition `nb` adjacent blocks into
+/// packs by greedy adjacent merge. `diag[i]` is block i's own 2-bit
+/// sensitivity, `coupling[i]` the measured interaction between blocks i
+/// and i+1 (`err({i,i+1}) - diag[i] - diag[i+1]`, the FIM/Hessian
+/// off-block term BRECQ's block-diagonal assumption drops). Blocks i
+/// and i+1 fall into the same pack when the interaction is at least
+/// `tau` of the smaller diagonal term; `max_len` caps pack length so a
+/// coupling chain cannot degenerate into whole-net reconstruction.
+/// Returns contiguous, ordered, covering ranges — a valid partition by
+/// construction.
+pub fn group_packs(
+    diag: &[f64],
+    coupling: &[f64],
+    tau: f64,
+    max_len: usize,
+) -> Vec<std::ops::Range<usize>> {
+    let nb = diag.len();
+    assert!(
+        nb == 0 || coupling.len() == nb - 1,
+        "group_packs: {} blocks need {} coupling terms, got {}",
+        nb,
+        nb.saturating_sub(1),
+        coupling.len()
+    );
+    assert!(max_len >= 1, "group_packs: max_len must be >= 1");
+    let mut packs = Vec::new();
+    let mut start = 0usize;
+    for i in 0..nb {
+        let len = i + 1 - start;
+        let merge_next = i + 1 < nb && len < max_len && {
+            let floor = diag[i].min(diag[i + 1]).max(f64::MIN_POSITIVE);
+            coupling[i] > tau * floor
+        };
+        if !merge_next {
+            packs.push(start..i + 1);
+            start = i + 1;
+        }
+    }
+    packs
+}
+
 /// Layer pairs that share a reconstruction block (block granularity units).
 pub fn intra_block_pairs(model: &ModelInfo) -> Vec<(usize, usize)> {
     let mut pairs = Vec::new();
@@ -187,5 +228,56 @@ mod tests {
         assert!((t.predict(&[2, 2]) - (2.0 + 1.0 + 0.5 + 0.25)).abs()
             < 1e-12);
         assert!((t.predict(&[2, 4]) - (2.0 + 1.0 + 0.05)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn group_packs_merges_only_coupled_neighbors() {
+        // strong coupling between 0-1, none between 1-2 or 2-3
+        let diag = [1.0, 1.0, 1.0, 1.0];
+        let coupling = [0.5, 0.0, -0.1];
+        let p = group_packs(&diag, &coupling, 0.05, 4);
+        assert_eq!(p, vec![0..2, 2..3, 3..4]);
+    }
+
+    #[test]
+    fn group_packs_uncoupled_is_identity_partition() {
+        let diag = [1.0, 2.0, 3.0];
+        let coupling = [0.0, 0.0];
+        let p = group_packs(&diag, &coupling, 0.05, 4);
+        assert_eq!(p, vec![0..1, 1..2, 2..3]);
+    }
+
+    #[test]
+    fn group_packs_respects_max_len() {
+        // everything coupled, but packs cap at 2
+        let diag = [1.0; 5];
+        let coupling = [10.0; 4];
+        let p = group_packs(&diag, &coupling, 0.05, 2);
+        assert_eq!(p, vec![0..2, 2..4, 4..5]);
+    }
+
+    #[test]
+    fn group_packs_covers_and_orders() {
+        let diag = [0.3, 0.1, 0.9, 0.2, 0.4, 0.6];
+        let coupling = [0.02, 0.5, -0.3, 0.011, 0.0];
+        for tau in [0.0, 0.05, 0.5, 10.0] {
+            let p = group_packs(&diag, &coupling, tau, 3);
+            let mut next = 0usize;
+            for r in &p {
+                assert_eq!(r.start, next, "contiguous at tau={tau}");
+                assert!(r.end > r.start);
+                next = r.end;
+            }
+            assert_eq!(next, diag.len(), "covering at tau={tau}");
+        }
+    }
+
+    #[test]
+    fn group_packs_degenerate_sizes() {
+        assert_eq!(group_packs(&[], &[], 0.05, 4), Vec::<_>::new());
+        assert_eq!(group_packs(&[1.0], &[], 0.05, 4), vec![0..1]);
+        // max_len 1 forces singletons regardless of coupling
+        let p = group_packs(&[1.0, 1.0], &[100.0], 0.05, 1);
+        assert_eq!(p, vec![0..1, 1..2]);
     }
 }

@@ -2,9 +2,14 @@
 //! (`runtime::plan`) must be **bit-identical** to the retained
 //! per-dispatch `unit_recon` path — per step (losses, gv, gastep) and
 //! end-to-end (per-unit loss curves, committed weights, learned act
-//! steps) — at 1/2/8 threads, for every unit of both synthetic models.
-//! Plus the warm-plan zero-allocation guarantee on the scratch-arena
-//! counters (mirroring the warm-kernel test in `tests/parallel.rs`).
+//! steps) — at 1/2/8 threads, for every unit of both synthetic models
+//! at every exported granularity (single-node layer/block units and
+//! multi-node stage/net/pack seq programs alike). Plus the warm-plan
+//! zero-allocation guarantee on the scratch-arena counters (mirroring
+//! the warm-kernel test in `tests/parallel.rs`), zero-fallback
+//! accounting on the plan counters (delta reads — the counters are
+//! process-global and cumulative), and the typed-error contract for
+//! unknown granularity strings.
 
 use std::sync::Mutex;
 
@@ -15,7 +20,7 @@ use brecq::quant::{
     act_bounds, mse_steps_per_channel, weight_bounds, AdaRoundState,
 };
 use brecq::recon::{BitConfig, Calibrator, ReconConfig};
-use brecq::runtime::plan::PlanInputs;
+use brecq::runtime::plan::{self, PlanInputs};
 use brecq::runtime::Backend;
 use brecq::tensor::Tensor;
 use brecq::util::pool;
@@ -173,7 +178,7 @@ fn assert_unit_parity(
                 .rt
                 .prepare_recon(&unit.recon_exe, inputs)
                 .unwrap()
-                .expect("single-node units must compile to plans");
+                .expect("every exported unit must compile to a plan");
             for (ci, &(beta, lam)) in cases.iter().enumerate() {
                 let rows = Rng::new(500 + ci as u64)
                     .sample_indices(k, bsz);
@@ -303,6 +308,44 @@ fn plan_step_matches_dispatch_mbv2_layer_aq_mse() {
     );
 }
 
+#[test]
+fn plan_step_matches_dispatch_resnet_stage() {
+    let _g = lock_pool();
+    let env = Env::bootstrap_synthetic().unwrap();
+    assert_unit_parity(&env, "resnet_s", "stage", false, true, &[1, 2, 8]);
+    // aq on: multi-node plans keep the LSQ chains across node joins
+    assert_unit_parity(&env, "resnet_s", "stage", true, true, &[2]);
+}
+
+#[test]
+fn plan_step_matches_dispatch_resnet_net() {
+    let _g = lock_pool();
+    let env = Env::bootstrap_synthetic().unwrap();
+    assert_unit_parity(&env, "resnet_s", "net", false, true, &[1, 2, 8]);
+    // MSE fallback through a whole-net program
+    assert_unit_parity(&env, "resnet_s", "net", false, false, &[2]);
+    assert_unit_parity(&env, "resnet_s", "net", true, false, &[2]);
+}
+
+#[test]
+fn plan_step_matches_dispatch_pack_both_models() {
+    let _g = lock_pool();
+    let env = Env::bootstrap_synthetic().unwrap();
+    // whatever partition the generator measured, every pack unit —
+    // singleton block or multi-block seq — must compile and match
+    assert_unit_parity(&env, "resnet_s", "pack", false, true, &[1, 2, 8]);
+    assert_unit_parity(&env, "resnet_s", "pack", true, false, &[2]);
+    assert_unit_parity(
+        &env,
+        "mobilenetv2_s",
+        "pack",
+        false,
+        true,
+        &[1, 2, 8],
+    );
+    assert_unit_parity(&env, "mobilenetv2_s", "pack", true, false, &[2]);
+}
+
 /// End-to-end: whole calibrations driven by plans vs the dispatch path
 /// must produce identical loss curves, committed weights and act steps.
 fn calibrate_fingerprint(
@@ -382,7 +425,7 @@ fn calibrate_plan_vs_dispatch_bitwise_mbv2() {
 }
 
 #[test]
-fn calibrate_plan_vs_dispatch_bitwise_mse_layer_and_seq_fallback() {
+fn calibrate_plan_vs_dispatch_bitwise_mse_layer_and_multinode() {
     let _g = lock_pool();
     let env = Env::bootstrap_synthetic().unwrap();
     pool::set_threads(2);
@@ -402,23 +445,99 @@ fn calibrate_plan_vs_dispatch_bitwise_mse_layer_and_seq_fallback() {
         None,
     );
     assert_eq!(planned, dispatched, "resnet_s layer MSE");
-    // stage granularity: multi-node seq units decline plans and fall
-    // back to dispatch — results must be identical (and the run must
-    // not crash)
+    // stage granularity: the multi-node seq unit now compiles to a plan
+    // (no dispatch fallback) and must stay bitwise equal to dispatch
     let stage = ReconConfig {
         gran: "stage".into(),
         iters: 6,
         ..ReconConfig::default()
     };
+    let before = plan::snapshot();
     let planned = calibrate_fingerprint(&env, "resnet_s", &stage, None);
+    let d = plan::snapshot().since(&before);
+    assert_eq!(d.fallback_steps, 0, "stage seq units must compile");
+    assert!(d.steps > 0, "stage calibration ran no plan steps");
     let dispatched = calibrate_fingerprint(
         &env,
         "resnet_s",
         &ReconConfig { plan: false, ..stage.clone() },
         None,
     );
-    assert_eq!(planned, dispatched, "resnet_s stage seq fallback");
+    assert_eq!(planned, dispatched, "resnet_s stage seq plan");
     pool::set_threads(0);
+}
+
+/// Every exported granularity of both models calibrates entirely on
+/// compiled plans: the fallback counter must not move, and exactly one
+/// plan is built per unit. Delta reads — the counters are cumulative
+/// process-global atomics polluted by every earlier test in this
+/// binary.
+#[test]
+fn every_granularity_calibrates_with_zero_fallback() {
+    let _g = lock_pool();
+    let env = Env::bootstrap_synthetic().unwrap();
+    pool::set_threads(2);
+    for (mname, grans) in [
+        ("resnet_s", &["layer", "block", "stage", "net", "pack"][..]),
+        ("mobilenetv2_s", &["layer", "block", "pack"][..]),
+    ] {
+        for &gran in grans {
+            let cfg = ReconConfig {
+                gran: gran.into(),
+                iters: 4,
+                ..ReconConfig::default()
+            };
+            let before = plan::snapshot();
+            calibrate_fingerprint(&env, mname, &cfg, None);
+            let d = plan::snapshot().since(&before);
+            assert_eq!(
+                d.fallback_steps, 0,
+                "{mname}/{gran} fell back to per-iteration dispatch"
+            );
+            let nunits = env.model(mname).gran(gran).units.len();
+            assert_eq!(
+                d.builds, nunits,
+                "{mname}/{gran}: one plan per unit"
+            );
+            assert!(d.steps > 0, "{mname}/{gran} ran no plan steps");
+        }
+    }
+    pool::set_threads(0);
+}
+
+/// A granularity typo (or one a model does not export) is a typed
+/// error at every entry point — never a panic, never a silent
+/// fallthrough to some other partition.
+#[test]
+fn unknown_granularity_is_a_typed_error() {
+    let _g = lock_pool();
+    let env = Env::bootstrap_synthetic().unwrap();
+    let model = env.model("resnet_s");
+    // the validated lookup itself
+    let err = model.try_gran("blcok").unwrap_err().to_string();
+    assert!(
+        err.contains("'blcok'") && err.contains("available"),
+        "unhelpful error: {err}"
+    );
+    // end to end through ReconConfig.gran
+    let cal = Calibrator::new(&env.rt, &env.mf, model);
+    let train = env.train_set().unwrap();
+    let calib = env.calib(&train, 8, 0);
+    let bits = BitConfig::uniform(model, 4, None, true);
+    let cfg = ReconConfig {
+        gran: "blcok".into(),
+        iters: 2,
+        ..ReconConfig::default()
+    };
+    let err = cal.calibrate(&calib, &bits, &cfg).unwrap_err().to_string();
+    assert!(err.contains("blcok"), "calibrate error: {err}");
+    // a valid name the model does not export is equally loud
+    let err = env
+        .model("mobilenetv2_s")
+        .try_gran("net")
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("not exported"), "undeclared error: {err}");
 }
 
 /// The warm-plan zero-allocation guarantee: once a plan has stepped a
@@ -426,18 +545,15 @@ fn calibrate_plan_vs_dispatch_bitwise_mse_layer_and_seq_fallback() {
 /// recycling arenas — the allocation counter must not move. (Counters
 /// are process-global; every test in this binary serializes on
 /// POOL_LOCK.)
-#[test]
-fn warm_plan_steps_do_zero_scratch_allocations() {
-    let _g = lock_pool();
-    let env = Env::bootstrap_synthetic().unwrap();
-    let model = env.model("resnet_s");
+fn assert_warm_plan_zero_alloc(env: &Env, model_name: &str, gran: &str) {
+    let model = env.model(model_name);
     let cal = Calibrator::new(&env.rt, &env.mf, model);
     let (ws, bs) = cal.fp_weights().unwrap();
     let bsz = env.mf.calib_batch;
     let k = bsz + 16;
-    // heaviest block unit
+    // heaviest unit of the granularity
     let unit = model
-        .gran("block")
+        .gran(gran)
         .units
         .iter()
         .max_by_key(|u| {
@@ -493,4 +609,20 @@ fn warm_plan_steps_do_zero_scratch_allocations() {
         );
     }
     pool::set_threads(0);
+}
+
+#[test]
+fn warm_plan_steps_do_zero_scratch_allocations() {
+    let _g = lock_pool();
+    let env = Env::bootstrap_synthetic().unwrap();
+    assert_warm_plan_zero_alloc(&env, "resnet_s", "block");
+}
+
+#[test]
+fn warm_multinode_plan_steps_do_zero_scratch_allocations() {
+    let _g = lock_pool();
+    let env = Env::bootstrap_synthetic().unwrap();
+    // the whole-net seq program exercises the inter-node output and
+    // gradient buffers on top of the per-layer scratch
+    assert_warm_plan_zero_alloc(&env, "resnet_s", "net");
 }

@@ -1,0 +1,136 @@
+#!/usr/bin/env bash
+# Fixture tests for scripts/check_bench.sh — the perf gate itself needs
+# a regression test, or a refactor can silently disarm it. Each case
+# builds a small NEW/BASELINE JSON pair (including the multi-node
+# `recon plan step [stage:...|net:...|pack:...]` rows bench_recon now
+# emits) and asserts the gate's exit code and key output lines.
+#
+# usage: scripts/test_check_bench.sh   (exit 0 = all cases pass)
+set -uo pipefail
+
+here=$(cd "$(dirname "$0")" && pwd)
+gate="$here/check_bench.sh"
+tmp=$(mktemp -d)
+trap 'rm -rf "$tmp"' EXIT
+
+fails=0
+
+# run <name> <expected_exit> <grep_pattern> <new.json> <base.json> [env...]
+run_case() {
+    local name=$1 want=$2 pat=$3 new=$4 base=$5
+    shift 5
+    local out rc
+    out=$(env "$@" bash "$gate" "$new" "$base" 2>&1)
+    rc=$?
+    if [ "$rc" -ne "$want" ]; then
+        echo "FAIL  $name: exit $rc (wanted $want)"
+        echo "$out" | sed 's/^/      | /'
+        fails=$((fails + 1))
+        return
+    fi
+    if ! grep -q "$pat" <<<"$out"; then
+        echo "FAIL  $name: output missing /$pat/"
+        echo "$out" | sed 's/^/      | /'
+        fails=$((fails + 1))
+        return
+    fi
+    echo "ok    $name"
+}
+
+# Fixture builder: results as name=min_ms pairs, notes as key=value.
+# mk <path> <calibrated> <result>... -- <note>...
+mk() {
+    local path=$1 calibrated=$2
+    shift 2
+    python3 - "$path" "$calibrated" "$@" <<'PY'
+import json, sys
+path, calibrated = sys.argv[1], sys.argv[2] == "true"
+args = sys.argv[3:]
+split = args.index("--") if "--" in args else len(args)
+results = []
+for spec in args[:split]:
+    name, ms = spec.rsplit("=", 1)
+    results.append({"name": name, "min_ms": float(ms)})
+notes = {}
+for spec in args[split + 1:]:
+    key, val = spec.rsplit("=", 1)
+    notes[key] = float(val)
+doc = {"host_threads": 8, "results": results, "notes": notes}
+if not calibrated:
+    doc["calibrated"] = False
+with open(path, "w") as f:
+    json.dump(doc, f)
+PY
+}
+
+rows_ok=(
+    "calibrate 20it/unit gran=block=900"
+    "recon plan step [b1]=4.0"
+    "recon plan step [stage:stage1]=9.0"
+    "recon plan step [net:net]=9.5"
+    "recon plan step [pack:p0]=8.0"
+)
+notes_ok=(
+    "recon_speedup_4t_over_1t=2.1"
+    "recon_iters_per_sec=250.0"
+    "plan_fallback_steps_total=0"
+)
+
+mk "$tmp/base.json" true "${rows_ok[@]}" -- "${notes_ok[@]}"
+
+# 1. identical run passes
+mk "$tmp/new_same.json" true "${rows_ok[@]}" -- "${notes_ok[@]}"
+run_case "pass: identical run" 0 "bench gate: PASS (calibrated)" \
+    "$tmp/new_same.json" "$tmp/base.json"
+
+# 2. >25% min_ms regression on a multi-node plan row fails
+rows_slow=("${rows_ok[@]}")
+rows_slow[2]="recon plan step [stage:stage1]=12.0"
+mk "$tmp/new_slow.json" true "${rows_slow[@]}" -- "${notes_ok[@]}"
+run_case "fail: stage plan row regression" 1 "25% regression" \
+    "$tmp/new_slow.json" "$tmp/base.json"
+
+# 3. a baseline row missing from the new run fails (rename guard)
+mk "$tmp/new_missing.json" true "${rows_ok[@]:0:4}" -- "${notes_ok[@]}"
+run_case "fail: pack plan row disappeared" 1 "missing from" \
+    "$tmp/new_missing.json" "$tmp/base.json"
+
+# 4. rows the baseline doesn't know yet pass with a notice (how the
+#    stage/net/pack rows land before the baseline is rebased)
+mk "$tmp/base_old.json" true "${rows_ok[@]:0:2}" -- "${notes_ok[@]}"
+run_case "pass: new plan rows, old baseline" 0 "^new   recon plan step" \
+    "$tmp/new_same.json" "$tmp/base_old.json"
+
+# 5. recon_iters_per_sec throughput drop fails
+mk "$tmp/new_slow_ips.json" true "${rows_ok[@]}" -- \
+    "recon_speedup_4t_over_1t=2.1" "recon_iters_per_sec=100.0" \
+    "plan_fallback_steps_total=0"
+run_case "fail: iters/sec throughput drop" 1 "throughput regression" \
+    "$tmp/new_slow_ips.json" "$tmp/base.json"
+
+# 6. speedup below the floor fails
+mk "$tmp/new_slow_sp.json" true "${rows_ok[@]}" -- \
+    "recon_speedup_4t_over_1t=1.1" "recon_iters_per_sec=250.0" \
+    "plan_fallback_steps_total=0"
+run_case "fail: speedup under floor" 1 "floor" \
+    "$tmp/new_slow_sp.json" "$tmp/base.json"
+
+# 7. uncalibrated baseline: bootstrap pass off-main ...
+mk "$tmp/base_boot.json" false "${rows_ok[@]}" -- "${notes_ok[@]}"
+run_case "pass: bootstrap mode (loud)" 0 "BOOTSTRAP MODE" \
+    "$tmp/new_same.json" "$tmp/base_boot.json"
+
+# 8. ... and a hard failure when CI demands calibration (main)
+run_case "fail: bootstrap forbidden on main" 2 "BOOTSTRAP FORBIDDEN" \
+    "$tmp/new_same.json" "$tmp/base_boot.json" \
+    BENCH_REQUIRE_CALIBRATED=1
+
+# 9. missing baseline file is also bootstrap
+run_case "pass: no baseline file" 0 "no baseline file" \
+    "$tmp/new_same.json" "$tmp/nonexistent.json"
+
+if [ "$fails" -ne 0 ]; then
+    echo "check_bench fixture tests: $fails FAILED"
+    exit 1
+fi
+echo "check_bench fixture tests: all passed"
