@@ -6,14 +6,14 @@
 //! substrate is a small synthetic task); EXPERIMENTS.md tracks the *shape*:
 //! who wins, where the cliffs are, how the curves order.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::baselines;
 use crate::calib::CalibSet;
 use crate::coordinator::report::{pct, Table};
 use crate::coordinator::Env;
 use crate::distill::{self, DistillConfig};
-use crate::eval::{accuracy, EvalParams};
+use crate::eval::{accuracy, map_score, EvalParams};
 use crate::hwsim::{size_mb, ArmCpu, HwMeasure, Systolic};
 use crate::mp::{GaConfig, GeneticSearch};
 use crate::qat::{self, QatConfig};
@@ -420,6 +420,72 @@ pub fn mixed_precision(
                    format!("{avg:.2}"), pct(acc),
                    format!("{:.4}", res.predicted_loss),
                    format!("{:.2}", res.seconds)]);
+    }
+    Ok(t)
+}
+
+// ------------------------------------------------------------------
+// Table 5: detection backbone PTQ (mAP) on the synthetic det_s family
+// ------------------------------------------------------------------
+
+/// The paper's Table 5 evaluates PTQ'd detection backbones by COCO mAP;
+/// this runner regenerates its shape on the synthetic `det_s` workload
+/// (same quantizer substrate, same W4A8/W2A8 rows, mAP over the seeded
+/// scene boxes at IoU {0.5, 0.75}). See EXPERIMENTS.md for the
+/// synthetic-vs-COCO fidelity caveats.
+pub fn table5(env: &Env, o: &ExpOpts) -> Result<Table> {
+    let mut t = Table::new(
+        "Table 5 — detection backbone PTQ (mAP @ IoU {0.5, 0.75})",
+        &["Method", "Bits (W/A)", "det_s mAP"],
+    );
+    let mname = "det_s";
+    anyhow::ensure!(
+        env.mf.models.contains_key(mname),
+        "table5 needs the '{mname}' detection model (absent from this \
+         manifest)"
+    );
+    let model = env.model(mname);
+    let det = model
+        .det
+        .as_ref()
+        .context("det_s carries no detection geometry in the manifest")?;
+    let train = env.train_set_for(model)?;
+    let test = env.test_set_for(model)?;
+    let calib = env.calib(&train, o.calib_n, o.seed);
+    let cal = Calibrator::new(&env.rt, &env.mf, model);
+
+    let (ws, bs) = cal.fp_weights()?;
+    let fp = map_score(
+        &env.rt,
+        model,
+        det,
+        &EvalParams::fp(model, &ws, &bs),
+        &test,
+    )?;
+    println!("  table5 det_s fp: mAP {fp:.4}");
+    t.row(vec!["Full Prec.".into(), "32/32".into(), format!("{fp:.4}")]);
+
+    for wbits in [4usize, 2] {
+        for method in [Method::AdaRoundLayer, Method::Brecq] {
+            let bits = BitConfig::uniform(model, wbits, Some(8), true);
+            let qm = quantize_with(env, mname, method, &calib, &bits, o)?;
+            let map = map_score(
+                &env.rt,
+                model,
+                det,
+                &EvalParams::quantized(&qm),
+                &test,
+            )?;
+            println!(
+                "  table5 {} W{wbits}A8: mAP {map:.4}",
+                method.name()
+            );
+            t.row(vec![
+                method.name().to_string(),
+                format!("{wbits}/8"),
+                format!("{map:.4}"),
+            ]);
+        }
     }
     Ok(t)
 }

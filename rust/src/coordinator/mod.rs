@@ -118,6 +118,18 @@ impl Env {
         DataSet::load(&self.mf.dataset, "test")
     }
 
+    /// Train split of the dataset `model` actually consumes (the
+    /// detection family carries its own scene rasters; classification
+    /// models resolve to the manifest's root dataset).
+    pub fn train_set_for(&self, model: &ModelInfo) -> Result<DataSet> {
+        DataSet::load(self.mf.dataset_for(model), "train")
+    }
+
+    /// Test split of the dataset `model` actually consumes.
+    pub fn test_set_for(&self, model: &ModelInfo) -> Result<DataSet> {
+        DataSet::load(self.mf.dataset_for(model), "test")
+    }
+
     /// The paper's calibration protocol: `k` images from the train set
     /// (clamped to the train-set size — the synthetic environment is
     /// smaller than the CLI's 1024-image default).

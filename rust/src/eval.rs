@@ -1,11 +1,15 @@
 //! Model evaluation through the AOT `eval_fwd` executable: top-1 accuracy
 //! and cross-entropy loss over arbitrary (weights, act-steps, flag)
-//! configurations — FP reference, hard-quantized, or mixed precision.
+//! configurations — FP reference, hard-quantized, or mixed precision —
+//! plus the detection family's mAP path ([`det_map`] / [`map_score`]):
+//! IoU-matched average precision over the manifest's seeded box targets,
+//! computed serially in f64 after the batched forward so the score is
+//! bit-identical at any `BRECQ_THREADS`.
 
 use anyhow::Result;
 
 use crate::calib::{CalibSet, DataSet};
-use crate::model::{Manifest, ModelInfo};
+use crate::model::{DetInfo, Manifest, ModelInfo};
 use crate::quant::act_bounds;
 use crate::recon::{BitConfig, QuantizedModel};
 use crate::runtime::Backend;
@@ -116,6 +120,147 @@ pub fn accuracy(
     Ok(correct as f64 / seen as f64)
 }
 
+/// Intersection-over-union of two `[cx, cy, w, h]` boxes.
+fn iou(a: [f64; 4], b: [f64; 4]) -> f64 {
+    let half = |v: [f64; 4]| {
+        (v[0] - v[2] / 2.0, v[0] + v[2] / 2.0, v[1] - v[3] / 2.0, v[1] + v[3] / 2.0)
+    };
+    let (ax0, ax1, ay0, ay1) = half(a);
+    let (bx0, bx1, by0, by1) = half(b);
+    let iw = (ax1.min(bx1) - ax0.max(bx0)).max(0.0);
+    let ih = (ay1.min(by1) - ay0.max(by0)).max(0.0);
+    let inter = iw * ih;
+    let union = a[2] * a[3] + b[2] * b[3] - inter;
+    if union <= 0.0 {
+        0.0
+    } else {
+        inter / union
+    }
+}
+
+/// All-points average precision from a ranked TP/FP sequence.
+fn ap_from_ranked(hits: &[bool], npos: usize) -> f64 {
+    if npos == 0 {
+        return 0.0;
+    }
+    // precision envelope: walk the ranking once, summing precision at
+    // each recall step, then take the running-max (right-to-left) form
+    let mut precs: Vec<f64> = Vec::with_capacity(hits.len());
+    let mut tp = 0usize;
+    for (i, &h) in hits.iter().enumerate() {
+        if h {
+            tp += 1;
+        }
+        precs.push(tp as f64 / (i + 1) as f64);
+    }
+    // monotone envelope from the right
+    for i in (0..precs.len().saturating_sub(1)).rev() {
+        precs[i] = precs[i].max(precs[i + 1]);
+    }
+    let mut ap = 0.0;
+    for (i, &h) in hits.iter().enumerate() {
+        if h {
+            ap += precs[i];
+        }
+    }
+    ap / npos as f64
+}
+
+/// mAP over a logits batch: every anchor of every sample is a prediction
+/// (decoded box, objectness score); ground truth is the labeled scene's
+/// seeded objects. AP is computed per IoU threshold in {0.5, 0.75} with
+/// a global objectness ranking (ties broken by (sample, anchor) so the
+/// ordering is total) and greedy per-sample matching, then averaged.
+/// Pure, serial, f64 — bit-identical for bit-identical logits.
+pub fn det_map(det: &DetInfo, lg: &Tensor, labels: &[usize]) -> f64 {
+    let d = det.head_dim();
+    let na = det.anchors.len();
+    let n = labels.len();
+    // ranked predictions: (score, sample, anchor, box)
+    let mut preds: Vec<(f64, usize, usize, [f64; 4])> =
+        Vec::with_capacity(n * na);
+    for i in 0..n {
+        let row = &lg.data[i * d..(i + 1) * d];
+        for a in 0..na {
+            preds.push((row[a * 5 + 4] as f64, i, a, det.decode(row, a)));
+        }
+    }
+    preds.sort_by(|x, y| {
+        y.0.partial_cmp(&x.0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(x.1.cmp(&y.1))
+            .then(x.2.cmp(&y.2))
+    });
+    let npos: usize = labels.iter().map(|&l| det.scenes[l].len()).sum();
+
+    let mut map = 0.0;
+    let thresholds = [0.5, 0.75];
+    for &thr in &thresholds {
+        let mut used: Vec<Vec<bool>> =
+            labels.iter().map(|&l| vec![false; det.scenes[l].len()]).collect();
+        let mut hits = Vec::with_capacity(preds.len());
+        for &(_, i, _, pb) in &preds {
+            let gts = &det.scenes[labels[i]];
+            let mut best: Option<(f64, usize)> = None;
+            for (gi, o) in gts.iter().enumerate() {
+                if used[i][gi] {
+                    continue;
+                }
+                let v = iou(pb, o.bbox);
+                if v >= thr && best.map_or(true, |(bv, _)| v > bv) {
+                    best = Some((v, gi));
+                }
+            }
+            match best {
+                Some((_, gi)) => {
+                    used[i][gi] = true;
+                    hits.push(true);
+                }
+                None => hits.push(false),
+            }
+        }
+        map += ap_from_ranked(&hits, npos);
+    }
+    map / thresholds.len() as f64
+}
+
+/// mAP over a dataset through the AOT forward (the detection analogue of
+/// [`accuracy`]): batches like `accuracy` does, wrap-padding the trailing
+/// partial batch, then scores the concatenated logits serially.
+pub fn map_score(
+    rt: &dyn Backend,
+    model: &ModelInfo,
+    det: &DetInfo,
+    p: &EvalParams,
+    data: &DataSet,
+) -> Result<f64> {
+    let b = model.eval_batch;
+    let n = data.len();
+    let d = det.head_dim();
+    let mut all = Vec::with_capacity(n * d);
+    let mut start = 0;
+    while start < n {
+        let take = b.min(n - start);
+        let images = if take == b {
+            data.batch(start, b)
+        } else {
+            let mut parts = vec![data.batch(start, take)];
+            let mut have = take;
+            while have < b {
+                let chunk = (b - have).min(n);
+                parts.push(data.batch(0, chunk));
+                have += chunk;
+            }
+            Tensor::stack0(&parts)
+        };
+        let logits = forward(rt, model, p, &images)?;
+        all.extend_from_slice(&logits.data[..take * d]);
+        start += take;
+    }
+    let lg = Tensor::new(vec![n, d], all);
+    Ok(det_map(det, &lg, &data.labels))
+}
+
 /// Mean cross-entropy over a calibration set (sensitivity fitness signal).
 pub fn calib_loss(
     rt: &dyn Backend,
@@ -126,7 +271,7 @@ pub fn calib_loss(
 ) -> Result<f64> {
     let b = model.eval_batch;
     let n = calib.len();
-    let classes = mf.dataset.classes;
+    let classes = mf.dataset_for(model).classes;
     let mut total = 0.0f64;
     let mut seen = 0usize;
     let mut start = 0;

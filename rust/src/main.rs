@@ -16,6 +16,8 @@
 //! hardware dispatch, stage ordering and artifact reuse all live in the
 //! typed pipeline (`Session` + `JobSpec`).
 
+use std::path::{Path, PathBuf};
+
 use anyhow::Result;
 
 use brecq::coordinator::experiments::{self as exp, ExpOpts};
@@ -251,7 +253,14 @@ fn run() -> Result<()> {
             let o = opts(&a);
             let models = a.list(
                 "models", "resnet_s,mobilenetv2_s,regnet_s,mnasnet_s");
-            run_exp(&env, &o, &which, &models, &a)?;
+            // --out redirects the rendered reports (kick-tires.sh points
+            // it at artifacts/out/<git-sha>); default keeps the
+            // environment's own reports/ directory
+            let out = a
+                .opt_str("out")
+                .map(PathBuf::from)
+                .unwrap_or_else(|| env.dir.clone());
+            run_exp(&env, &o, &which, &models, &a, &out)?;
             for (name, calls, secs) in env.rt.hotspots(8) {
                 eprintln!("[dispatch] {name}: {calls} calls {secs:.1}s");
             }
@@ -266,7 +275,13 @@ fn run() -> Result<()> {
     Ok(())
 }
 
-/// `exp list`: every runnable output, plus what is intentionally absent.
+/// `exp all`'s table order (also what kick-tires.sh regenerates).
+const ALL_EXPS: [&str; 9] = [
+    "table1", "table2", "table3", "table4", "table5", "table6", "fig2",
+    "fig3", "fig4",
+];
+
+/// `exp list`: every runnable output.
 fn print_exp_list() {
     let mut tab = Table::new(
         "exp — available outputs (paper tables & figures)",
@@ -281,6 +296,9 @@ fn print_exp_list() {
          "fully quantized PTQ comparison, W4A4 and W2A4"),
         ("table4", "Table 4",
          "PTQ vs LSQ-QAT: accuracy, data need and wall-clock"),
+        ("table5", "Table 5",
+         "detection backbone PTQ (mAP) on the synthetic det_s workload, \
+          W4A8 and W2A8"),
         ("table6", "Table 6 / B.1",
          "first/last-layer 8-bit policy ablation"),
         ("fig2", "Fig. 2",
@@ -295,17 +313,17 @@ fn print_exp_list() {
     }
     tab.print();
     println!(
-        "not runnable: the paper's Table 5 (object detection on MS COCO \
-         with Faster R-CNN backbones) has no runner — this substrate only \
-         exports classification models and losses. See EXPERIMENTS.md."
+        "table5 runs the paper's detection benchmark on a synthetic \
+         scene workload, not MS COCO — see EXPERIMENTS.md for the \
+         fidelity caveats."
     );
 }
 
 fn run_exp(env: &Env, o: &ExpOpts, which: &str, models: &[String],
-           a: &Args) -> Result<()> {
+           a: &Args, out: &Path) -> Result<()> {
     let save = |t: Table, id: &str| -> Result<()> {
         t.print();
-        t.save(&env.dir, id)?;
+        t.save(out, id)?;
         Ok(())
     };
     match which {
@@ -316,6 +334,7 @@ fn run_exp(env: &Env, o: &ExpOpts, which: &str, models: &[String],
             let steps = a.usize("qat-steps", 600);
             save(exp::table4(env, o, steps)?, "table4")?
         }
+        "table5" => save(exp::table5(env, o)?, "table5")?,
         "table6" => save(exp::table6(env, o)?, "table6")?,
         "fig2" => {
             for m in ["resnet_s", "mobilenetv2_s", "regnet_s"] {
@@ -334,10 +353,28 @@ fn run_exp(env: &Env, o: &ExpOpts, which: &str, models: &[String],
                  "fig4_arm_resnet_s")?
         }
         "all" => {
-            for w in ["table1", "table2", "table3", "table4", "table6",
-                      "fig2", "fig3", "fig4"] {
-                run_exp(env, o, w, models, a)?;
+            // every table runs even when an earlier one fails — a broken
+            // runner must not hide the outputs after it (kick-tires.sh
+            // depends on this for its completeness manifest) — and the
+            // per-table verdicts land in one summary before the non-zero
+            // exit
+            let mut failed: Vec<String> = Vec::new();
+            for w in ALL_EXPS {
+                match run_exp(env, o, w, models, a, out) {
+                    Ok(()) => println!("[exp] {w}: ok"),
+                    Err(e) => {
+                        println!("[exp] {w}: FAIL — {e:#}");
+                        failed.push(w.to_string());
+                    }
+                }
             }
+            anyhow::ensure!(
+                failed.is_empty(),
+                "exp all: {}/{} tables failed: {}",
+                failed.len(),
+                ALL_EXPS.len(),
+                failed.join(", ")
+            );
         }
         other => anyhow::bail!(
             "unknown experiment '{other}' (try `brecq exp list`)"
@@ -362,11 +399,15 @@ USAGE: brecq <cmd> [--flags]
   run         <jobs.json>   batch mode: a JSON array of job specs runs
               through one cache-aware pipeline session (shared FP weights,
               calib sets and sensitivity LUTs); see examples/jobs.json
-  exp         <list|table1|table2|table3|table4|table6|fig2|fig3|fig4|all>
-              [--models a,b,c] [--iters N] [--seeds S] [--qat-steps N]
-              `exp list` shows what each id regenerates. The paper's
-              Table 5 (MS COCO object detection) has no runner: this
-              substrate is classification-only (see EXPERIMENTS.md).
+  exp         <list|table1|table2|table3|table4|table5|table6|fig2|fig3|
+              fig4|all> [--models a,b,c] [--iters N] [--seeds S]
+              [--qat-steps N] [--out DIR]
+              `exp list` shows what each id regenerates; `exp all` runs
+              every table, reports per-table pass/fail and exits non-zero
+              if any failed. table5 is the paper's detection benchmark on
+              the synthetic det_s workload (see EXPERIMENTS.md); --out
+              redirects the rendered reports (scripts/kick-tires.sh uses
+              artifacts/out/<git-sha>).
 
 Global: --artifacts DIR (default ./artifacts or $BRECQ_ARTIFACTS)
         --threads N   worker-pool size (default $BRECQ_THREADS or auto);

@@ -14,7 +14,95 @@ use std::path::{Path, PathBuf};
 use anyhow::{Context, Result};
 
 use crate::store::Store;
+use crate::tensor::Tensor;
 use crate::util::json::Json;
+
+/// What a model's final-layer outputs mean: softmax-classification
+/// logits (the default) or the detection family's per-anchor
+/// box-regression + objectness rows. Dispatch on this happens at the
+/// API boundary (eval stage, FIM seeding) — the reconstruction engine
+/// itself is task-agnostic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    Classify,
+    Detect,
+}
+
+/// Objectness logit magnitude of the synthetic detection targets:
+/// occupied anchors regress to `+DET_OBJ_LOGIT`, empty ones to
+/// `-DET_OBJ_LOGIT`. Shared by the generator's head solve, the FIM
+/// target rows and the mAP decode so they can never drift apart.
+pub const DET_OBJ_LOGIT: f32 = 2.5;
+
+/// One ground-truth object: which anchor slot owns it and its box in
+/// normalized `[cx, cy, w, h]` image coordinates.
+#[derive(Debug, Clone)]
+pub struct DetObj {
+    pub anchor: usize,
+    pub bbox: [f64; 4],
+}
+
+/// Detection-head geometry from the manifest: the anchor grid (each
+/// `[cx, cy, w, h]`, normalized) and, per scene class, the ground-truth
+/// objects the mAP eval matches against. The head emits 5 channels per
+/// anchor — `[dx, dy, dw, dh, obj]` with the standard anchor-relative
+/// encoding (`dx = (cx - acx)/aw`, `dw = ln(w/aw)`).
+#[derive(Debug, Clone)]
+pub struct DetInfo {
+    pub anchors: Vec<[f64; 4]>,
+    pub scenes: Vec<Vec<DetObj>>,
+}
+
+impl DetInfo {
+    /// Width of the head's output row: 5 channels per anchor.
+    pub fn head_dim(&self) -> usize {
+        self.anchors.len() * 5
+    }
+
+    /// The exact regression target row for one scene class. Empty
+    /// anchors target zero deltas and `-DET_OBJ_LOGIT` objectness.
+    pub fn target_row(&self, scene: usize) -> Vec<f32> {
+        let mut t = vec![0f32; self.head_dim()];
+        for a in 0..self.anchors.len() {
+            t[a * 5 + 4] = -DET_OBJ_LOGIT;
+        }
+        for o in &self.scenes[scene] {
+            let [acx, acy, aw, ah] = self.anchors[o.anchor];
+            let [cx, cy, w, h] = o.bbox;
+            let base = o.anchor * 5;
+            t[base] = ((cx - acx) / aw) as f32;
+            t[base + 1] = ((cy - acy) / ah) as f32;
+            t[base + 2] = ((w / aw).ln()) as f32;
+            t[base + 3] = ((h / ah).ln()) as f32;
+            t[base + 4] = DET_OBJ_LOGIT;
+        }
+        t
+    }
+
+    /// Stacked target rows for a batch of scene labels — the detection
+    /// counterpart of `CalibSet::onehot`, fed to the FIM executables
+    /// through the same argument slot.
+    pub fn target_rows(&self, labels: &[usize]) -> Tensor {
+        let d = self.head_dim();
+        let mut data = Vec::with_capacity(labels.len() * d);
+        for &l in labels {
+            data.extend_from_slice(&self.target_row(l));
+        }
+        Tensor::new(vec![labels.len(), d], data)
+    }
+
+    /// Decode one anchor's prediction from a logits row back to a box.
+    pub fn decode(&self, row: &[f32], a: usize) -> [f64; 4] {
+        let [acx, acy, aw, ah] = self.anchors[a];
+        let base = a * 5;
+        [
+            acx + row[base] as f64 * aw,
+            acy + row[base + 1] as f64 * ah,
+            aw * (row[base + 2] as f64).exp(),
+            ah * (row[base + 3] as f64).exp(),
+        ]
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct LayerInfo {
@@ -69,6 +157,14 @@ pub struct ModelInfo {
     pub qat_batch: usize,
     pub distill_exe: Option<String>,
     pub distill_batch: usize,
+    /// What the logits mean (default: classification).
+    pub task: Task,
+    /// Dataset override for models that do not consume the manifest's
+    /// root dataset (the detection family's scene rasters). Resolve
+    /// through `Manifest::dataset_for`, never read directly.
+    pub dataset: Option<DatasetInfo>,
+    /// Detection-head geometry; present iff `task == Task::Detect`.
+    pub det: Option<DetInfo>,
 }
 
 impl ModelInfo {
@@ -142,6 +238,56 @@ pub struct Manifest {
     pub models: HashMap<String, ModelInfo>,
 }
 
+fn parse_dataset(root: &Path, d: &Json) -> DatasetInfo {
+    DatasetInfo {
+        dir: root.join(d.req("dir").as_str().unwrap()),
+        img: d.req("img").as_usize().unwrap(),
+        classes: d.req("classes").as_usize().unwrap(),
+        train_n: d.req("train_n").as_usize().unwrap(),
+        test_n: d.req("test_n").as_usize().unwrap(),
+        mean: d.req("mean").f32_vec(),
+        std: d.req("std").f32_vec(),
+    }
+}
+
+fn parse_box(j: &Json) -> [f64; 4] {
+    let v: Vec<f64> = j
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap())
+        .collect();
+    [v[0], v[1], v[2], v[3]]
+}
+
+fn parse_det(j: &Json) -> DetInfo {
+    DetInfo {
+        anchors: j
+            .req("anchors")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(parse_box)
+            .collect(),
+        scenes: j
+            .req("scenes")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|sc| {
+                sc.as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|o| DetObj {
+                        anchor: o.req("anchor").as_usize().unwrap(),
+                        bbox: parse_box(o.req("box")),
+                    })
+                    .collect()
+            })
+            .collect(),
+    }
+}
+
 fn parse_layer(j: &Json) -> LayerInfo {
     LayerInfo {
         name: j.req("name").as_str().unwrap().to_string(),
@@ -168,16 +314,7 @@ impl Manifest {
         let json = Json::parse(&text)
             .map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
 
-        let d = json.req("dataset");
-        let dataset = DatasetInfo {
-            dir: dir.join(d.req("dir").as_str().unwrap()),
-            img: d.req("img").as_usize().unwrap(),
-            classes: d.req("classes").as_usize().unwrap(),
-            train_n: d.req("train_n").as_usize().unwrap(),
-            test_n: d.req("test_n").as_usize().unwrap(),
-            mean: d.req("mean").f32_vec(),
-            std: d.req("std").f32_vec(),
-        };
+        let dataset = parse_dataset(dir, json.req("dataset"));
 
         let mut models = HashMap::new();
         for (name, m) in json.req("models").as_obj().unwrap() {
@@ -259,6 +396,18 @@ impl Manifest {
                         .get("distill_batch")
                         .and_then(|v| v.as_usize())
                         .unwrap_or(0),
+                    task: match m.get("task").and_then(|v| v.as_str()) {
+                        Some("detect") => Task::Detect,
+                        _ => Task::Classify,
+                    },
+                    dataset: m
+                        .get("dataset")
+                        .filter(|v| !matches!(**v, Json::Null))
+                        .map(|d| parse_dataset(dir, d)),
+                    det: m
+                        .get("det")
+                        .filter(|v| !matches!(**v, Json::Null))
+                        .map(parse_det),
                 },
             );
         }
@@ -276,6 +425,22 @@ impl Manifest {
         self.models
             .get(name)
             .unwrap_or_else(|| panic!("model '{name}' not in manifest"))
+    }
+
+    /// The dataset a model trains/evaluates on: its own override when it
+    /// declares one (the detection family's scene rasters), else the
+    /// manifest's root dataset.
+    pub fn dataset_for<'a>(&'a self, model: &'a ModelInfo) -> &'a DatasetInfo {
+        model.dataset.as_ref().unwrap_or(&self.dataset)
+    }
+
+    /// Width of a model's final-layer output row: the detection head
+    /// dimension for `Task::Detect`, else the dataset's class count.
+    pub fn out_dim(&self, model: &ModelInfo) -> usize {
+        match &model.det {
+            Some(det) => det.head_dim(),
+            None => self.dataset_for(model).classes,
+        }
     }
 
     pub fn load_weights(&self, model: &ModelInfo) -> Result<Store> {

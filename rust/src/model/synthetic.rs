@@ -28,13 +28,23 @@
 //! for both models before a seed is accepted, so low-bit accuracy floors
 //! in the hermetic suite sit far from the noise floor.
 //!
-//! Two models are emitted, miniatures of the paper's families:
+//! Three models are emitted, miniatures of the paper's families:
 //!  * `resnet_s` — stem + basic block (identity skip) + strided basic block
 //!    (1x1 down projection), exported at layer/block/stage/net/pack
 //!    granularity,
 //!  * `mobilenetv2_s` — stem + inverted residual (expand/depthwise/project,
 //!    linear bottleneck) + head conv, exported at layer/block/pack
-//!    granularity.
+//!    granularity,
+//!  * `det_s` — the detection family (paper Table 5): resnet_s's exact
+//!    trunk geometry feeding a box-regression + objectness head over a
+//!    quadrant anchor grid, evaluated by mAP on its own "scene" raster
+//!    dataset (`data_det/`). The head is *solved*, not trained: a
+//!    minimum-norm linear map sending each scene prototype's trunk
+//!    feature exactly to its anchor-relative regression target, the
+//!    detection analogue of the cosine classifier below. Its own
+//!    acceptance loop verifies FP mAP, objectness margin and
+//!    nearest-W2 mAP on a separate rng stream, so the classification
+//!    candidates are bit-identical to a build without it.
 //!
 //! The `pack` granularity is Pack-PTQ (see PAPERS.md): the generator
 //! measures a FIM-interaction proxy between adjacent blocks — the
@@ -53,6 +63,8 @@ use std::sync::Mutex;
 
 use anyhow::{Context, Result};
 
+use crate::eval::det_map;
+use crate::model::{DetInfo, DetObj};
 use crate::quant::{mse_steps_per_channel, quantize_nearest};
 use crate::runtime::native::{add_bias, conv2d, fc_fwd, gap_fwd, relu_inplace};
 use crate::sensitivity::group_packs;
@@ -161,6 +173,9 @@ struct SModel {
     head_convs: Vec<usize>,
     fc: usize,
     grans: Vec<&'static str>,
+    /// Final-layer output width: the class count for classification
+    /// models, `DetInfo::head_dim()` for the detection family.
+    out_dim: usize,
 }
 
 fn conv_layer(
@@ -232,7 +247,20 @@ fn resnet_desc(cfg: &SynthConfig) -> SModel {
         head_convs: vec![],
         fc: 6,
         grans: vec!["layer", "block", "stage", "net", "pack"],
+        out_dim: cfg.classes,
     }
+}
+
+/// The detection family: resnet_s's exact trunk geometry — every node
+/// topology the plan compiler already covers, so its units compile with
+/// zero fallback by construction — with the classifier replaced by a
+/// `det.head_dim()`-wide box-regression + objectness head.
+fn det_desc(cfg: &SynthConfig, det: &DetInfo) -> SModel {
+    let mut m = resnet_desc(cfg);
+    m.name = "det_s";
+    m.out_dim = det.head_dim();
+    m.layers[m.fc].cout = det.head_dim();
+    m
 }
 
 fn mbv2_desc(cfg: &SynthConfig) -> SModel {
@@ -273,6 +301,7 @@ fn mbv2_desc(cfg: &SynthConfig) -> SModel {
         head_convs: vec![4],
         fc: 5,
         grans: vec!["layer", "block", "pack"],
+        out_dim: cfg.classes,
     }
 }
 
@@ -595,6 +624,277 @@ fn build_candidate(cfg: &SynthConfig, try_seed: u64) -> Candidate {
 }
 
 // ------------------------------------------------------------------
+// Detection family (paper Table 5): geometry, scenes, head solve
+// ------------------------------------------------------------------
+
+/// The fixed synthetic detection geometry: a 2x2 quadrant anchor grid
+/// and four scene classes occupying 1–3 anchors each. Ground-truth
+/// boxes are deterministically jittered off their anchors (shifted
+/// centers, scaled extents) so every regression target is nonzero —
+/// the head must actually regress, not emit constants.
+fn det_info() -> DetInfo {
+    let anchors: Vec<[f64; 4]> = vec![
+        [0.25, 0.25, 0.5, 0.5],
+        [0.75, 0.25, 0.5, 0.5],
+        [0.25, 0.75, 0.5, 0.5],
+        [0.75, 0.75, 0.5, 0.5],
+    ];
+    let classes = anchors.len();
+    let scenes = (0..classes)
+        .map(|k| {
+            let n_obj = 1 + k % 3;
+            (0..n_obj)
+                .map(|j| {
+                    let a = (k + j) % classes;
+                    let [acx, acy, aw, ah] = anchors[a];
+                    let sx = if a % 2 == 0 { 1.0 } else { -1.0 };
+                    let sy = if a < 2 { 1.0 } else { -1.0 };
+                    let fw = 0.85 + 0.10 * ((k + a) % 3) as f64;
+                    let fh = 0.85 + 0.10 * ((k + 2 * a) % 3) as f64;
+                    DetObj {
+                        anchor: a,
+                        bbox: [
+                            acx + 0.04 * sx,
+                            acy + 0.04 * sy,
+                            aw * fw,
+                            ah * fh,
+                        ],
+                    }
+                })
+                .collect()
+        })
+        .collect();
+    DetInfo { anchors, scenes }
+}
+
+/// Paint one scene class's ground-truth boxes onto a dim background
+/// (u8 NHWC): each object's pixels go bright in the channel keyed by
+/// its anchor, so scene identity lives in channel/occupancy statistics
+/// and survives pooling and quantization like the classification
+/// prototypes' density signatures.
+fn render_scene(det: &DetInfo, scene: usize, img: usize) -> Vec<u8> {
+    let mut raw = vec![30u8; img * img * 3];
+    for o in &det.scenes[scene] {
+        let [cx, cy, w, h] = o.bbox;
+        let hot = o.anchor % 3;
+        for py in 0..img {
+            let yc = (py as f64 + 0.5) / img as f64;
+            if (yc - cy).abs() > h / 2.0 {
+                continue;
+            }
+            for px in 0..img {
+                let xc = (px as f64 + 0.5) / img as f64;
+                if (xc - cx).abs() > w / 2.0 {
+                    continue;
+                }
+                for ch in 0..3 {
+                    raw[(py * img + px) * 3 + ch] =
+                        if ch == hot { 235 } else { 110 };
+                }
+            }
+        }
+    }
+    raw
+}
+
+/// Exact (minimum-norm) linear head: W with `W·φ_k = t_k` for every
+/// scene prototype trunk feature φ_k — `W = Tᵀ G⁻¹ Φ` with the K×K
+/// Gram `G = Φ Φᵀ` inverted in f64 by Gauss-Jordan with partial
+/// pivoting. The detection analogue of the cosine-classifier trick:
+/// prototypes map to their targets *by construction*, and the map is
+/// linear so noisy samples degrade gracefully. Returns None when the
+/// prototype features are (near-)linearly dependent — the candidate is
+/// rejected and the acceptance loop retries with fresh trunk noise.
+fn solve_head(
+    phi: &[Vec<f32>],
+    targets: &[Vec<f32>],
+) -> Option<Vec<Vec<f32>>> {
+    let k = phi.len();
+    let d = phi[0].len();
+    let od = targets[0].len();
+    let mut g: Vec<Vec<f64>> = (0..k)
+        .map(|i| {
+            (0..k)
+                .map(|j| {
+                    phi[i]
+                        .iter()
+                        .zip(&phi[j])
+                        .map(|(&a, &b)| a as f64 * b as f64)
+                        .sum()
+                })
+                .collect()
+        })
+        .collect();
+    let max_diag = (0..k).fold(0f64, |m, i| m.max(g[i][i]));
+    if max_diag <= 0.0 {
+        return None;
+    }
+    let tiny = max_diag * 1e-10;
+    let mut inv: Vec<Vec<f64>> = (0..k)
+        .map(|i| (0..k).map(|j| f64::from(u8::from(i == j))).collect())
+        .collect();
+    for col in 0..k {
+        let piv = (col..k).max_by(|&a, &b| {
+            g[a][col].abs().partial_cmp(&g[b][col].abs()).unwrap()
+        })?;
+        if g[piv][col].abs() < tiny {
+            return None;
+        }
+        g.swap(col, piv);
+        inv.swap(col, piv);
+        let p = g[col][col];
+        for j in 0..k {
+            g[col][j] /= p;
+            inv[col][j] /= p;
+        }
+        for r in 0..k {
+            if r == col {
+                continue;
+            }
+            let f = g[r][col];
+            if f == 0.0 {
+                continue;
+            }
+            for j in 0..k {
+                g[r][j] -= f * g[col][j];
+                inv[r][j] -= f * inv[col][j];
+            }
+        }
+    }
+    // A = Tᵀ G⁻¹ (od×k), W = A Φ (od×d)
+    let mut wrows = vec![vec![0f32; d]; od];
+    for (o, row) in wrows.iter_mut().enumerate() {
+        let a: Vec<f64> = (0..k)
+            .map(|j| {
+                (0..k).map(|i| targets[i][o] as f64 * inv[i][j]).sum()
+            })
+            .collect();
+        for (c, w) in row.iter_mut().enumerate() {
+            *w = (0..k)
+                .map(|j| a[j] * phi[j][c] as f64)
+                .sum::<f64>() as f32;
+        }
+    }
+    Some(wrows)
+}
+
+/// Which anchors a scene class occupies.
+fn det_occupancy(det: &DetInfo, scene: usize) -> Vec<bool> {
+    let mut occ = vec![false; det.anchors.len()];
+    for o in &det.scenes[scene] {
+        occ[o.anchor] = true;
+    }
+    occ
+}
+
+/// Minimum signed objectness margin over every (sample, anchor):
+/// occupied anchors score their obj logit, empty anchors its negation
+/// — the detection analogue of `min_margin`.
+fn det_obj_margin(det: &DetInfo, lg: &Tensor, labels: &[usize]) -> f64 {
+    let d = det.head_dim();
+    let mut m = f64::INFINITY;
+    for (row, &l) in lg.data.chunks(d).zip(labels) {
+        let occ = det_occupancy(det, l);
+        for (a, &on) in occ.iter().enumerate() {
+            let o = row[a * 5 + 4] as f64;
+            m = m.min(if on { o } else { -o });
+        }
+    }
+    m
+}
+
+struct DetCandidate {
+    model: SModel,
+    ws: Vec<Tensor>,
+    bs: Vec<Tensor>,
+    train_raw: Vec<u8>,
+    train_y: Vec<u8>,
+    test_raw: Vec<u8>,
+    test_y: Vec<u8>,
+    fp_map: f64,
+    score: f64,
+    accepted: bool,
+}
+
+/// One detection-environment candidate on its own rng stream (the
+/// classification candidates consume theirs untouched). None when the
+/// head solve hits a degenerate prototype Gram.
+fn build_det_candidate(
+    cfg: &SynthConfig,
+    det: &DetInfo,
+    try_seed: u64,
+) -> Option<DetCandidate> {
+    let mut rng = Rng::new(
+        (cfg.seed ^ 0xde7ec7)
+            .wrapping_mul(0x9e3779b97f4a7c15)
+            .wrapping_add(try_seed),
+    );
+    let m = det_desc(cfg, det);
+    let (mut ws, bs) = structured_init(&m, &mut rng);
+
+    // scene prototypes -> trunk features -> exact head solve
+    let classes = det.scenes.len();
+    let protos: Vec<Vec<u8>> =
+        (0..classes).map(|k| render_scene(det, k, cfg.img)).collect();
+    let mut proto_raw = Vec::new();
+    for p in &protos {
+        proto_raw.extend_from_slice(p);
+    }
+    let proto_x = standardize(&proto_raw, classes, cfg.img);
+    let phi = tensor_rows(&trunk(&m, &ws, &bs, &proto_x));
+    let targets: Vec<Vec<f32>> =
+        (0..classes).map(|k| det.target_row(k)).collect();
+    let wrows = solve_head(&phi, &targets)?;
+    let d = phi[0].len();
+    let mut data = Vec::with_capacity(m.out_dim * d);
+    for r in &wrows {
+        data.extend_from_slice(r);
+    }
+    ws[m.fc] = Tensor::new(vec![m.out_dim, d], data);
+
+    // scene dataset (noisy rasters around the prototypes)
+    let (train_raw, train_y) =
+        make_split(&protos, cfg.train_n, cfg.img, cfg.sigma, &mut rng);
+    let (test_raw, test_y) =
+        make_split(&protos, cfg.test_n, cfg.img, cfg.sigma, &mut rng);
+    let test_x = standardize(&test_raw, cfg.test_n, cfg.img);
+    let test_labels: Vec<usize> =
+        test_y.iter().map(|&v| v as usize).collect();
+
+    // diagnostics: FP mAP, objectness margin, nearest-W2 mAP
+    let lg = logits(&m, &ws, &bs, &test_x);
+    let fp_map = det_map(det, &lg, &test_labels);
+    let margin = det_obj_margin(det, &lg, &test_labels);
+    let nl = m.layers.len();
+    let wq: Vec<Tensor> = ws
+        .iter()
+        .enumerate()
+        .map(|(l, w)| {
+            let bits = if l == 0 || l == nl - 1 { 8 } else { 2 };
+            let steps = mse_steps_per_channel(w, bits);
+            quantize_nearest(w, &steps, bits)
+        })
+        .collect();
+    let lq = logits(&m, &wq, &bs, &test_x);
+    let near2 = det_map(det, &lq, &test_labels);
+    let accepted = fp_map >= 0.999 && margin >= 0.5 && near2 >= 0.75;
+    let score = fp_map + near2 + margin.min(2.0);
+
+    Some(DetCandidate {
+        model: m,
+        ws,
+        bs,
+        train_raw,
+        train_y,
+        test_raw,
+        test_y,
+        fp_map,
+        score,
+        accepted,
+    })
+}
+
+// ------------------------------------------------------------------
 // Manifest assembly + on-disk stores
 // ------------------------------------------------------------------
 
@@ -874,7 +1174,7 @@ fn units_of(
             o,
         );
     }
-    let out = vec![b, cfg.classes];
+    let out = vec![b, m.out_dim];
     push(
         &mut units,
         &mut pending_skip,
@@ -1086,6 +1386,203 @@ fn write_store(prefix: &Path, tensors: &[(String, &Tensor)]) -> Result<()> {
     Ok(())
 }
 
+fn add_exe(
+    exes: &mut BTreeMap<String, Json>,
+    name: &str,
+    io: (Vec<(String, Vec<usize>)>, Vec<(String, Vec<usize>)>),
+) {
+    exes.insert(
+        name.to_string(),
+        obj(vec![
+            ("file", s("native")),
+            ("inputs", io_json(&io.0)),
+            ("outputs", io_json(&io.1)),
+        ]),
+    );
+}
+
+fn det_json(det: &DetInfo) -> Json {
+    let anchors = arr(det
+        .anchors
+        .iter()
+        .map(|a| arr(a.iter().map(|&v| num(v)).collect()))
+        .collect());
+    let scenes = arr(det
+        .scenes
+        .iter()
+        .map(|objs| {
+            arr(objs
+                .iter()
+                .map(|o| {
+                    obj(vec![
+                        ("anchor", num(o.anchor as f64)),
+                        (
+                            "box",
+                            arr(o.bbox.iter().map(|&v| num(v)).collect()),
+                        ),
+                    ])
+                })
+                .collect())
+        })
+        .collect());
+    obj(vec![("anchors", anchors), ("scenes", scenes)])
+}
+
+/// Write one model's weight store and assemble its manifest entry,
+/// registering every executable it references. `pack_x` is the
+/// standardized held-out split the Pack-PTQ coupling probes run on;
+/// `extra` appends model-level keys (the detection family's
+/// task/dataset/det).
+#[allow(clippy::too_many_arguments)]
+fn emit_model(
+    dir: &Path,
+    cfg: &SynthConfig,
+    m: &SModel,
+    ws: &[Tensor],
+    bs: &[Tensor],
+    fp_acc: f64,
+    pack_x: &Tensor,
+    exes: &mut BTreeMap<String, Json>,
+    extra: Vec<(&str, Json)>,
+) -> Result<Json> {
+    // weight store
+    let mut tensors: Vec<(String, &Tensor)> = Vec::new();
+    for (l, layer) in m.layers.iter().enumerate() {
+        tensors.push((format!("{}.w", layer.name), &ws[l]));
+        tensors.push((format!("{}.b", layer.name), &bs[l]));
+    }
+    write_store(&dir.join(format!("weights_{}", m.name)), &tensors)?;
+
+    // layer geometry
+    let layers_json = arr(m
+        .layers
+        .iter()
+        .map(|l| {
+            obj(vec![
+                ("name", s(&l.name)),
+                ("kind", s(l.kind)),
+                ("cin", num(l.cin as f64)),
+                ("cout", num(l.cout as f64)),
+                ("k", num(l.k as f64)),
+                ("stride", num(l.stride as f64)),
+                ("groups", num(l.groups as f64)),
+                ("relu", Json::Bool(l.relu)),
+                ("site_signed", Json::Bool(l.site_signed)),
+                ("h_in", num(l.h_in as f64)),
+                ("w_in", num(l.h_in as f64)),
+                ("macs", num(l.macs() as f64)),
+                ("nparams", num(l.nparams() as f64)),
+                ("wshape", shape_json(&l.wshape())),
+            ])
+        })
+        .collect());
+
+    // model-level executables
+    let nl = m.layers.len();
+    let img_sh = |b: usize| vec![b, 3, cfg.img, cfg.img];
+    let fwd_exe = format!("{}.eval_fwd", m.name);
+    let mut inputs = vec![("images".to_string(), img_sh(cfg.eval_batch))];
+    for (i, l) in m.layers.iter().enumerate() {
+        inputs.push((format!("w{i}"), l.wshape()));
+        inputs.push((format!("b{i}"), vec![l.cout]));
+    }
+    for i in 0..nl {
+        inputs.push((format!("astep{i}"), vec![1]));
+        inputs.push((format!("aqmin{i}"), vec![1]));
+        inputs.push((format!("aqmax{i}"), vec![1]));
+    }
+    inputs.push(("aq_flag".into(), vec![1]));
+    add_exe(
+        exes,
+        &fwd_exe,
+        (
+            inputs,
+            vec![("logits".to_string(), vec![cfg.eval_batch, m.out_dim])],
+        ),
+    );
+
+    let act_obs_exe = format!("{}.act_obs", m.name);
+    let mut inputs = vec![("images".to_string(), img_sh(cfg.calib_batch))];
+    for (i, l) in m.layers.iter().enumerate() {
+        inputs.push((format!("w{i}"), l.wshape()));
+        inputs.push((format!("b{i}"), vec![l.cout]));
+    }
+    let outputs =
+        (0..nl).map(|i| (format!("obs{i}"), vec![2])).collect::<Vec<_>>();
+    add_exe(exes, &act_obs_exe, (inputs, outputs));
+
+    // granularities (pack partition measured once per model)
+    let packs = pack_partition(m, ws, bs, pack_x);
+    let mut grans_json: BTreeMap<String, Json> = BTreeMap::new();
+    for gran in &m.grans {
+        let units = units_of(m, gran, cfg.calib_batch, cfg, &packs);
+        let fim_exe = format!("{}.{}.fim", m.name, gran);
+        let mut inputs = vec![("images".to_string(), img_sh(cfg.calib_batch))];
+        // detection models feed per-sample regression-target rows
+        // through the same slot (see `recon::fim_pass`)
+        inputs.push(("onehot".into(), vec![cfg.calib_batch, m.out_dim]));
+        for (i, l) in m.layers.iter().enumerate() {
+            inputs.push((format!("w{i}"), l.wshape()));
+            inputs.push((format!("b{i}"), vec![l.cout]));
+        }
+        let outputs = units
+            .iter()
+            .enumerate()
+            .map(|(j, u)| (format!("g{j}"), u.out_shape.clone()))
+            .collect::<Vec<_>>();
+        add_exe(exes, &fim_exe, (inputs, outputs));
+
+        let mut units_json = Vec::new();
+        for (ui, u) in units.iter().enumerate() {
+            let fwd = format!("{}.{}.u{}.fwd", m.name, gran, ui);
+            let rec = format!("{}.{}.u{}.recon", m.name, gran, ui);
+            add_exe(exes, &fwd, unit_fwd_sig(u, &m.layers));
+            add_exe(exes, &rec, unit_recon_sig(u, &m.layers));
+            units_json.push(obj(vec![
+                ("name", s(&u.name)),
+                ("topo", s(&u.topo)),
+                (
+                    "layers",
+                    arr(u
+                        .layer_ids
+                        .iter()
+                        .map(|&l| s(&m.layers[l].name))
+                        .collect()),
+                ),
+                ("uses_skip", Json::Bool(u.uses_skip)),
+                ("save_skip", Json::Bool(u.save_skip)),
+                ("in_shape", shape_json(&u.in_shape)),
+                (
+                    "skip_shape",
+                    match &u.skip_shape {
+                        Some(sh) => shape_json(sh),
+                        None => Json::Null,
+                    },
+                ),
+                ("out_shape", shape_json(&u.out_shape)),
+                ("fwd_exe", s(&fwd)),
+                ("recon_exe", s(&rec)),
+            ]));
+        }
+        grans_json.insert(
+            gran.to_string(),
+            obj(vec![("fim_exe", s(&fim_exe)), ("units", arr(units_json))]),
+        );
+    }
+
+    let mut pairs = vec![
+        ("fp_acc", num(fp_acc)),
+        ("weights", s(&format!("weights_{}", m.name))),
+        ("layers", layers_json),
+        ("fwd_exe", s(&fwd_exe)),
+        ("act_obs_exe", s(&act_obs_exe)),
+        ("eval_batch", num(cfg.eval_batch as f64)),
+        ("grans", Json::Obj(grans_json)),
+    ];
+    pairs.extend(extra);
+    Ok(obj(pairs))
+}
+
 /// Generate the synthetic environment into `dir` (created if missing):
 /// manifest.json, per-model weight stores and the u8 raster dataset.
 pub fn generate(dir: &Path, cfg: &SynthConfig) -> Result<()> {
@@ -1118,18 +1615,6 @@ pub fn generate(dir: &Path, cfg: &SynthConfig) -> Result<()> {
     fs::write(data.join("test_y.bin"), &cand.test_y)?;
 
     let mut exes: BTreeMap<String, Json> = BTreeMap::new();
-    let add_exe = |exes: &mut BTreeMap<String, Json>,
-                   name: &str,
-                   io: (Vec<(String, Vec<usize>)>, Vec<(String, Vec<usize>)>)| {
-        exes.insert(
-            name.to_string(),
-            obj(vec![
-                ("file", s("native")),
-                ("inputs", io_json(&io.0)),
-                ("outputs", io_json(&io.1)),
-            ]),
-        );
-    };
 
     // Pack-PTQ coupling probes run on the held-out split (the same
     // reference the acceptance loop scores against)
@@ -1137,152 +1622,70 @@ pub fn generate(dir: &Path, cfg: &SynthConfig) -> Result<()> {
 
     let mut models_json: BTreeMap<String, Json> = BTreeMap::new();
     for ((m, ws, bs), fp_acc) in cand.models.iter().zip(&cand.fp_accs) {
-        // weight store
-        let mut tensors: Vec<(String, &Tensor)> = Vec::new();
-        for (l, layer) in m.layers.iter().enumerate() {
-            tensors.push((format!("{}.w", layer.name), &ws[l]));
-            tensors.push((format!("{}.b", layer.name), &bs[l]));
-        }
-        write_store(&dir.join(format!("weights_{}", m.name)), &tensors)?;
-
-        // layer geometry
-        let layers_json = arr(m
-            .layers
-            .iter()
-            .map(|l| {
-                obj(vec![
-                    ("name", s(&l.name)),
-                    ("kind", s(l.kind)),
-                    ("cin", num(l.cin as f64)),
-                    ("cout", num(l.cout as f64)),
-                    ("k", num(l.k as f64)),
-                    ("stride", num(l.stride as f64)),
-                    ("groups", num(l.groups as f64)),
-                    ("relu", Json::Bool(l.relu)),
-                    ("site_signed", Json::Bool(l.site_signed)),
-                    ("h_in", num(l.h_in as f64)),
-                    ("w_in", num(l.h_in as f64)),
-                    ("macs", num(l.macs() as f64)),
-                    ("nparams", num(l.nparams() as f64)),
-                    ("wshape", shape_json(&l.wshape())),
-                ])
-            })
-            .collect());
-
-        // model-level executables
-        let nl = m.layers.len();
-        let img_sh = |b: usize| vec![b, 3, cfg.img, cfg.img];
-        let fwd_exe = format!("{}.eval_fwd", m.name);
-        let mut inputs = vec![("images".to_string(), img_sh(cfg.eval_batch))];
-        for (i, l) in m.layers.iter().enumerate() {
-            inputs.push((format!("w{i}"), l.wshape()));
-            inputs.push((format!("b{i}"), vec![l.cout]));
-        }
-        for i in 0..nl {
-            inputs.push((format!("astep{i}"), vec![1]));
-            inputs.push((format!("aqmin{i}"), vec![1]));
-            inputs.push((format!("aqmax{i}"), vec![1]));
-        }
-        inputs.push(("aq_flag".into(), vec![1]));
-        add_exe(
-            &mut exes,
-            &fwd_exe,
-            (
-                inputs,
-                vec![(
-                    "logits".to_string(),
-                    vec![cfg.eval_batch, cfg.classes],
-                )],
-            ),
-        );
-
-        let act_obs_exe = format!("{}.act_obs", m.name);
-        let mut inputs = vec![("images".to_string(), img_sh(cfg.calib_batch))];
-        for (i, l) in m.layers.iter().enumerate() {
-            inputs.push((format!("w{i}"), l.wshape()));
-            inputs.push((format!("b{i}"), vec![l.cout]));
-        }
-        let outputs =
-            (0..nl).map(|i| (format!("obs{i}"), vec![2])).collect::<Vec<_>>();
-        add_exe(&mut exes, &act_obs_exe, (inputs, outputs));
-
-        // granularities (pack partition measured once per model)
-        let packs = pack_partition(m, ws, bs, &test_x);
-        let mut grans_json: BTreeMap<String, Json> = BTreeMap::new();
-        for gran in &m.grans {
-            let units = units_of(m, gran, cfg.calib_batch, cfg, &packs);
-            let fim_exe = format!("{}.{}.fim", m.name, gran);
-            let mut inputs =
-                vec![("images".to_string(), img_sh(cfg.calib_batch))];
-            inputs.push((
-                "onehot".into(),
-                vec![cfg.calib_batch, cfg.classes],
-            ));
-            for (i, l) in m.layers.iter().enumerate() {
-                inputs.push((format!("w{i}"), l.wshape()));
-                inputs.push((format!("b{i}"), vec![l.cout]));
-            }
-            let outputs = units
-                .iter()
-                .enumerate()
-                .map(|(j, u)| (format!("g{j}"), u.out_shape.clone()))
-                .collect::<Vec<_>>();
-            add_exe(&mut exes, &fim_exe, (inputs, outputs));
-
-            let mut units_json = Vec::new();
-            for (ui, u) in units.iter().enumerate() {
-                let fwd = format!("{}.{}.u{}.fwd", m.name, gran, ui);
-                let rec = format!("{}.{}.u{}.recon", m.name, gran, ui);
-                add_exe(&mut exes, &fwd, unit_fwd_sig(u, &m.layers));
-                add_exe(&mut exes, &rec, unit_recon_sig(u, &m.layers));
-                units_json.push(obj(vec![
-                    ("name", s(&u.name)),
-                    ("topo", s(&u.topo)),
-                    (
-                        "layers",
-                        arr(u
-                            .layer_ids
-                            .iter()
-                            .map(|&l| s(&m.layers[l].name))
-                            .collect()),
-                    ),
-                    ("uses_skip", Json::Bool(u.uses_skip)),
-                    ("save_skip", Json::Bool(u.save_skip)),
-                    ("in_shape", shape_json(&u.in_shape)),
-                    (
-                        "skip_shape",
-                        match &u.skip_shape {
-                            Some(sh) => shape_json(sh),
-                            None => Json::Null,
-                        },
-                    ),
-                    ("out_shape", shape_json(&u.out_shape)),
-                    ("fwd_exe", s(&fwd)),
-                    ("recon_exe", s(&rec)),
-                ]));
-            }
-            grans_json.insert(
-                gran.to_string(),
-                obj(vec![
-                    ("fim_exe", s(&fim_exe)),
-                    ("units", arr(units_json)),
-                ]),
-            );
-        }
-
-        models_json.insert(
-            m.name.to_string(),
-            obj(vec![
-                ("fp_acc", num(*fp_acc)),
-                ("weights", s(&format!("weights_{}", m.name))),
-                ("layers", layers_json),
-                ("fwd_exe", s(&fwd_exe)),
-                ("act_obs_exe", s(&act_obs_exe)),
-                ("eval_batch", num(cfg.eval_batch as f64)),
-                ("grans", Json::Obj(grans_json)),
-            ]),
-        );
+        let mj = emit_model(
+            dir, cfg, m, ws, bs, *fp_acc, &test_x, &mut exes, vec![],
+        )?;
+        models_json.insert(m.name.to_string(), mj);
     }
+
+    // detection family: own acceptance loop (separate rng stream), own
+    // scene dataset, extra manifest keys (task/dataset/det)
+    let det = det_info();
+    let mut dbest: Option<DetCandidate> = None;
+    for t in 0..cfg.max_tries {
+        if let Some(c) = build_det_candidate(cfg, &det, t) {
+            if c.accepted {
+                dbest = Some(c);
+                break;
+            }
+            let take = dbest.as_ref().map_or(true, |b| c.score > b.score);
+            if take {
+                dbest = Some(c);
+            }
+        }
+    }
+    let dc =
+        dbest.context("synthetic detection generation produced no candidate")?;
+    let ddata = dir.join("data_det");
+    fs::create_dir_all(&ddata)?;
+    fs::write(ddata.join("train_x.bin"), &dc.train_raw)?;
+    fs::write(ddata.join("train_y.bin"), &dc.train_y)?;
+    fs::write(ddata.join("test_x.bin"), &dc.test_raw)?;
+    fs::write(ddata.join("test_y.bin"), &dc.test_y)?;
+    let det_x = standardize(&dc.test_raw, cfg.test_n, cfg.img);
+    let dmj = emit_model(
+        dir,
+        cfg,
+        &dc.model,
+        &dc.ws,
+        &dc.bs,
+        dc.fp_map,
+        &det_x,
+        &mut exes,
+        vec![
+            ("task", s("detect")),
+            (
+                "dataset",
+                obj(vec![
+                    ("dir", s("data_det")),
+                    ("img", num(cfg.img as f64)),
+                    ("classes", num(det.scenes.len() as f64)),
+                    ("train_n", num(cfg.train_n as f64)),
+                    ("test_n", num(cfg.test_n as f64)),
+                    (
+                        "mean",
+                        arr(MEAN.iter().map(|&v| num(v as f64)).collect()),
+                    ),
+                    (
+                        "std",
+                        arr(STD.iter().map(|&v| num(v as f64)).collect()),
+                    ),
+                ]),
+            ),
+            ("det", det_json(&det)),
+        ],
+    )?;
+    models_json.insert(dc.model.name.to_string(), dmj);
 
     let manifest = obj(vec![
         ("backend", s("native")),

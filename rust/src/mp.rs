@@ -367,6 +367,9 @@ mod tests {
             qat_batch: 0,
             distill_exe: None,
             distill_batch: 0,
+            task: crate::model::Task::Classify,
+            dataset: None,
+            det: None,
         }
     }
 

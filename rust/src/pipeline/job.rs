@@ -20,7 +20,7 @@ use crate::baselines;
 use crate::calib::{CalibSet, DataSet};
 use crate::coordinator::Env;
 use crate::distill::{self, DistillConfig};
-use crate::eval::{accuracy, EvalParams};
+use crate::eval::{accuracy, map_score, EvalParams};
 use crate::model::ModelInfo;
 use crate::mp::{GaConfig, GeneticSearch, SearchResult};
 use crate::recon::{BitConfig, Calibrator, QuantizedModel, ReconConfig,
@@ -48,7 +48,8 @@ pub struct JobOutput {
     pub fp_acc: f64,
     /// Final per-layer weight bits (uniform policy or GA assignment).
     pub wbits: Vec<usize>,
-    /// Top-1 on the held-out test set (when `spec.eval`).
+    /// Held-out test-set score (when `spec.eval`): top-1 accuracy for
+    /// classification models, mAP for the detection family.
     pub accuracy: Option<f64>,
     /// GA outcome (when `spec.search`).
     pub search: Option<SearchResult>,
@@ -136,6 +137,35 @@ impl Session {
         })
     }
 
+    /// Cache key suffix identifying the dataset `model` consumes: empty
+    /// for the manifest's root dataset, the override directory for
+    /// models carrying their own (the detection family) — so per-model
+    /// splits and calibration subsets never collide in the cache.
+    fn dataset_id(mi: &ModelInfo) -> String {
+        match &mi.dataset {
+            Some(d) => format!("{}/", d.dir.display()),
+            None => String::new(),
+        }
+    }
+
+    /// Train split of the dataset `model` consumes (cached per dataset).
+    pub fn train_set_for(&self, model: &str) -> Result<Arc<DataSet>, Error> {
+        let mi = self.model(model)?;
+        let key = format!("dataset/{}train", Self::dataset_id(mi));
+        self.cache.get_or_try_insert(&key, || {
+            self.env.train_set_for(mi).map_err(Error::from)
+        })
+    }
+
+    /// Test split of the dataset `model` consumes (cached per dataset).
+    pub fn test_set_for(&self, model: &str) -> Result<Arc<DataSet>, Error> {
+        let mi = self.model(model)?;
+        let key = format!("dataset/{}test", Self::dataset_id(mi));
+        self.cache.get_or_try_insert(&key, || {
+            self.env.test_set_for(mi).map_err(Error::from)
+        })
+    }
+
     /// `FpWeights` stage: deploy weights in model order, loaded once per
     /// model per session.
     pub fn fp_weights(&self, model: &str) -> Result<Arc<FpWeights>, Error> {
@@ -149,8 +179,9 @@ impl Session {
     }
 
     /// `Calib` stage: the calibration working set. Train-sourced subsets
-    /// are model-independent (jobs on different models share them);
-    /// distilled sets are per-model.
+    /// are keyed by the dataset the model consumes (jobs on different
+    /// models share them iff they share a dataset); distilled sets are
+    /// per-model.
     pub fn calib_set(
         &self,
         model: &str,
@@ -160,8 +191,12 @@ impl Session {
     ) -> Result<Arc<CalibSet>, Error> {
         match source {
             DataSource::Train => {
-                let train = self.train_set()?;
-                let key = format!("calib/train/{n}/{seed}");
+                let mi = self.model(model)?;
+                let train = self.train_set_for(model)?;
+                let key = format!(
+                    "calib/{}train/{n}/{seed}",
+                    Self::dataset_id(mi)
+                );
                 self.cache.get_or_try_insert(&key, || {
                     Ok(self.env.calib(&train, n, seed))
                 })
@@ -310,22 +345,19 @@ impl Session {
                 .expect("reconstruction always has a calibration set");
             Some(self.reconstruct(model, spec, calib, &bits)?)
         };
-        // Eval
+        // Eval: top-1 accuracy for classification models, mAP for the
+        // detection family — both on the model's own held-out test set
         let acc = if spec.eval {
-            let test = self.test_set()?;
-            let a = match &quantized {
-                Some(qm) => accuracy(
-                    &self.env.rt,
-                    model,
-                    &EvalParams::quantized(qm),
-                    &test,
-                )?,
-                None => accuracy(
-                    &self.env.rt,
-                    model,
-                    &EvalParams::fp(model, &fpw.ws, &fpw.bs),
-                    &test,
-                )?,
+            let test = self.test_set_for(&spec.model)?;
+            let p = match &quantized {
+                Some(qm) => EvalParams::quantized(qm),
+                None => EvalParams::fp(model, &fpw.ws, &fpw.bs),
+            };
+            let a = match &model.det {
+                Some(det) => {
+                    map_score(&self.env.rt, model, det, &p, &test)?
+                }
+                None => accuracy(&self.env.rt, model, &p, &test)?,
             };
             Some(a)
         } else {

@@ -37,7 +37,7 @@ pub use job::{FpWeights, JobOutput, Session};
 use std::fmt;
 
 use crate::hwsim::{size_mb, ArmCpu, HwMeasure, ModelSize, Systolic};
-use crate::model::ModelInfo;
+use crate::model::{ModelInfo, Task};
 use crate::util::json::{self, Json};
 
 // ---------------------------------------------------------------------
@@ -444,6 +444,15 @@ impl JobSpec {
             }
         }
         if let Some(hb) = &self.search {
+            if model.task == Task::Detect {
+                return Err(Error::Spec(format!(
+                    "mixed-precision search is not supported for the \
+                     detection model '{}' (the sensitivity stage's \
+                     cross-entropy fitness is undefined for regression \
+                     heads)",
+                    model.name
+                )));
+            }
             if !hb.budget.is_finite() || hb.budget <= 0.0 {
                 return Err(Error::Spec(
                     "search budget must be a finite value > 0".into(),

@@ -229,14 +229,22 @@ impl<'a> Calibrator<'a> {
         let b = self.mf.calib_batch;
         let k = calib.len();
         assert!(k % b == 0, "calib size must be a multiple of {b}");
-        let classes = self.mf.dataset.classes;
+        let classes = self.mf.dataset_for(self.model).classes;
         let mut parts: Vec<Vec<Tensor>> =
             (0..g.units.len()).map(|_| Vec::new()).collect();
         let work = self.model_work(k).saturating_mul(3);
         let per_batch =
             pool::par_fill(k / b, 1, work, |i| -> Result<Vec<Tensor>> {
                 let images = calib.batch(i * b, b);
-                let onehot = calib.onehot(i * b, b, classes);
+                // detection models feed regression-target rows through
+                // the onehot slot (the seed becomes (logits - target),
+                // see runtime::native::fim_walk)
+                let onehot = match &self.model.det {
+                    Some(det) => {
+                        det.target_rows(&calib.labels[i * b..(i + 1) * b])
+                    }
+                    None => calib.onehot(i * b, b, classes),
+                };
                 let mut args: Vec<&Tensor> = vec![&images, &onehot];
                 for l in 0..self.model.layers.len() {
                     args.push(&ws[l]);

@@ -46,7 +46,7 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 
-use crate::model::{LayerInfo, Manifest, ModelInfo, UnitInfo};
+use crate::model::{LayerInfo, Manifest, ModelInfo, Task, UnitInfo};
 use crate::tensor::Tensor;
 use crate::util::pool;
 
@@ -1673,8 +1673,11 @@ enum Prog {
     EvalFwd { units: Vec<UnitProg>, nl: usize },
     /// Per-layer [max|x|, mean|x|] input statistics, model layer order.
     ActObs { units: Vec<UnitProg>, nl: usize },
-    /// d(cross-entropy)/d(unit output) at every unit of a granularity.
-    Fim { units: Vec<UnitProg>, nl: usize },
+    /// d(loss)/d(unit output) at every unit of a granularity. The loss
+    /// is batch-mean cross-entropy for classification models and
+    /// batch-mean half-SSE against the regression-target rows for
+    /// detection models (`det`).
+    Fim { units: Vec<UnitProg>, nl: usize, det: bool },
 }
 
 pub struct NativeBackend {
@@ -1725,7 +1728,11 @@ impl NativeBackend {
                 }
                 progs.insert(
                     g.fim_exe.clone(),
-                    Prog::Fim { units: uprogs, nl: model.layers.len() },
+                    Prog::Fim {
+                        units: uprogs,
+                        nl: model.layers.len(),
+                        det: model.task == Task::Detect,
+                    },
                 );
             }
             // The model-level executables stream over the coarsest exported
@@ -2086,12 +2093,16 @@ impl NativeBackend {
     }
 
     /// One FIM walk over `images`: forward the stream (keeping tapes),
-    /// seed d(cross-entropy)/d(logits) with the batch-mean divisor
-    /// `denom`, then reverse the stream recording the grad at every unit
-    /// output. Sample rows are independent end to end (the per-unit
+    /// seed d(loss)/d(logits) with the batch-mean divisor `denom`, then
+    /// reverse the stream recording the grad at every unit output. The
+    /// seed is `(softmax - onehot)/denom` for classification and, with
+    /// `det`, `(logits - target)/denom` — the gradient of batch-mean
+    /// half-SSE against the regression-target rows fed through the
+    /// onehot slot. Sample rows are independent end to end (the per-unit
     /// weight/step grads this computes on the side are discarded), so
     /// chunked calls stitched along dim 0 reproduce the single-batch walk
     /// bitwise.
+    #[allow(clippy::too_many_arguments)]
     fn fim_walk(
         units: &[UnitProg],
         images: &Tensor,
@@ -2100,21 +2111,32 @@ impl NativeBackend {
         bs: &[&Tensor],
         aq: &[Option<AqParams>],
         denom: f32,
+        det: bool,
     ) -> Result<Vec<Tensor>> {
         let (logits, kept) = Self::stream(units, images, ws, bs, aq, true)?;
 
-        // d(mean-batch cross-entropy)/d(logits) = (softmax - onehot)/denom
         let (b, classes) = (logits.shape[0], logits.shape[1]);
         let mut g = vec![0f32; b * classes];
-        for bi in 0..b {
-            let row = &logits.data[bi * classes..(bi + 1) * classes];
-            let m = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
-            let exps: Vec<f32> = row.iter().map(|&x| (x - m).exp()).collect();
-            let z: f32 = exps.iter().sum();
-            for ci in 0..classes {
-                g[bi * classes + ci] = (exps[ci] / z
-                    - onehot.data[bi * classes + ci])
-                    / denom;
+        if det {
+            // d(mean-batch half-SSE)/d(logits) = (logits - target)/denom
+            for i in 0..b * classes {
+                g[i] = (logits.data[i] - onehot.data[i]) / denom;
+            }
+        } else {
+            // d(mean-batch cross-entropy)/d(logits)
+            //   = (softmax - onehot)/denom
+            for bi in 0..b {
+                let row = &logits.data[bi * classes..(bi + 1) * classes];
+                let m =
+                    row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+                let exps: Vec<f32> =
+                    row.iter().map(|&x| (x - m).exp()).collect();
+                let z: f32 = exps.iter().sum();
+                for ci in 0..classes {
+                    g[bi * classes + ci] = (exps[ci] / z
+                        - onehot.data[bi * classes + ci])
+                        / denom;
+                }
             }
         }
         let mut g_main = Tensor::new(vec![b, classes], g);
@@ -2161,6 +2183,7 @@ impl NativeBackend {
         &self,
         units: &[UnitProg],
         nl: usize,
+        det: bool,
         args: &[&Tensor],
     ) -> Result<Vec<Tensor>> {
         let mut c = Cursor { v: args, i: 0 };
@@ -2173,14 +2196,16 @@ impl NativeBackend {
         // forward + backward: roughly 3x one forward pass
         let work = Self::stream_work(units, b).saturating_mul(3);
         if b <= 1 || !pool::active(work) {
-            return Self::fim_walk(units, images, onehot, &ws, &bs, &aq, denom);
+            return Self::fim_walk(
+                units, images, onehot, &ws, &bs, &aq, denom, det,
+            );
         }
         let chunks = Self::sample_chunks(b);
         let per_chunk = pool::par_fill(chunks.len(), 1, usize::MAX, |ci| {
             let (start, len) = chunks[ci];
             let xb = images.slice0(start, len);
             let ob = onehot.slice0(start, len);
-            Self::fim_walk(units, &xb, &ob, &ws, &bs, &aq, denom)
+            Self::fim_walk(units, &xb, &ob, &ws, &bs, &aq, denom, det)
         });
         let mut per_unit: Vec<Vec<Tensor>> =
             (0..units.len()).map(|_| Vec::new()).collect();
@@ -2214,7 +2239,9 @@ impl Backend for NativeBackend {
                 self.exec_eval_fwd(units, *nl, args)
             }
             Prog::ActObs { units, nl } => self.exec_act_obs(units, *nl, args),
-            Prog::Fim { units, nl } => self.exec_fim(units, *nl, args),
+            Prog::Fim { units, nl, det } => {
+                self.exec_fim(units, *nl, *det, args)
+            }
         }
     }
 

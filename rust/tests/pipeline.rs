@@ -9,6 +9,7 @@
 
 use std::sync::Mutex;
 
+use brecq::coordinator::experiments::{table5, ExpOpts};
 use brecq::coordinator::Env;
 use brecq::pipeline::{DataSource, Error, Granularity, Hardware, HwBudget,
                       JobOutput, JobSpec, Method, Session};
@@ -239,6 +240,107 @@ fn fingerprint(outs: &[JobOutput]) -> Vec<(
             )
         })
         .collect()
+}
+
+/// The detection family rides the same JobSpec surface: an FP job's
+/// `accuracy` field carries mAP and must reproduce the generator's
+/// manifest reference (the runtime forward replays the generator
+/// forward bit-exactly; test_n is a whole number of eval batches).
+#[test]
+fn det_fp_job_matches_manifest_reference() {
+    let s = session();
+    let out = s
+        .run(&JobSpec {
+            model: "det_s".into(),
+            method: Method::Fp,
+            ..JobSpec::default()
+        })
+        .unwrap();
+    let map = out.accuracy.expect("eval stage ran");
+    assert!(
+        (map - out.fp_acc).abs() < 1e-9,
+        "FP mAP {map} vs manifest {}",
+        out.fp_acc
+    );
+    assert!(
+        (0.0..=1.0).contains(&map),
+        "mAP out of range: {map}"
+    );
+    assert!(out.quantized.is_none());
+}
+
+/// mAP evaluation (batched forward + serial f64 scoring) and the whole
+/// quantized detection job must be bit-identical at 1/2/8 threads.
+#[test]
+fn det_quantized_job_is_thread_invariant() {
+    let _g = lock_pool();
+    let spec = JobSpec {
+        model: "det_s".into(),
+        wbits: 4,
+        abits: Some(8),
+        iters: 8,
+        calib_n: 32,
+        seed: 0,
+        ..JobSpec::default()
+    };
+    let mut prints = Vec::new();
+    for nt in [1usize, 2, 8] {
+        pool::set_threads(nt);
+        let s = session();
+        let out = s.run(&spec).unwrap();
+        assert!(
+            out.accuracy.is_some(),
+            "quantized det job must evaluate mAP"
+        );
+        prints.push(fingerprint(std::slice::from_ref(&out)));
+    }
+    pool::set_threads(0);
+    assert_eq!(prints[0], prints[1], "det job differs at 1 vs 2 threads");
+    assert_eq!(prints[1], prints[2], "det job differs at 2 vs 8 threads");
+}
+
+/// Mixed-precision search is undefined for the regression head: the
+/// pipeline rejects it with a typed spec error before any work runs.
+#[test]
+fn det_search_is_a_typed_spec_error() {
+    let s = session();
+    let r = s.run(&JobSpec {
+        model: "det_s".into(),
+        method: Method::Fp,
+        eval: false,
+        search: Some(HwBudget {
+            hw: Hardware::Size,
+            budget: 0.8,
+            relative: true,
+        }),
+        ..JobSpec::default()
+    });
+    assert!(matches!(r, Err(Error::Spec(_))));
+}
+
+/// The Table 5 runner renders byte-identical markdown across runs and
+/// thread counts — the determinism fingerprint kick-tires.sh relies on.
+#[test]
+fn table5_runner_is_deterministic_and_thread_invariant() {
+    let _g = lock_pool();
+    let o = ExpOpts {
+        iters: 6,
+        calib_n: 32,
+        seed: 0,
+        seeds: 1,
+        verbose: false,
+    };
+    let mut renders = Vec::new();
+    for nt in [1usize, 2] {
+        pool::set_threads(nt);
+        let env = Env::bootstrap_synthetic().unwrap();
+        renders.push(table5(&env, &o).unwrap().to_markdown());
+    }
+    pool::set_threads(0);
+    assert_eq!(renders[0], renders[1], "table5 depends on thread count");
+    // FP row plus {W4, W2} x {adaround-layer, brecq} quantized rows
+    let lines = renders[0].lines().count();
+    assert!(lines >= 7, "table5 too short:\n{}", renders[0]);
 }
 
 #[test]

@@ -2,7 +2,8 @@
 //! (`runtime::plan`) must be **bit-identical** to the retained
 //! per-dispatch `unit_recon` path — per step (losses, gv, gastep) and
 //! end-to-end (per-unit loss curves, committed weights, learned act
-//! steps) — at 1/2/8 threads, for every unit of both synthetic models
+//! steps) — at 1/2/8 threads, for every unit of all three synthetic
+//! models (the classifiers and the det_s detection backbone)
 //! at every exported granularity (single-node layer/block units and
 //! multi-node stage/net/pack seq programs alike). Plus the warm-plan
 //! zero-allocation guarantee on the scratch-arena counters (mirroring
@@ -346,6 +347,20 @@ fn plan_step_matches_dispatch_pack_both_models() {
     assert_unit_parity(&env, "mobilenetv2_s", "pack", true, false, &[2]);
 }
 
+#[test]
+fn plan_step_matches_dispatch_det_s() {
+    let _g = lock_pool();
+    let env = Env::bootstrap_synthetic().unwrap();
+    // det_s shares the resnet_s trunk geometry but carries its own
+    // weights and a 20-wide regression head; every granularity must
+    // step bit-identically to dispatch, like the classifiers
+    assert_unit_parity(&env, "det_s", "block", false, true, &[1, 2, 8]);
+    assert_unit_parity(&env, "det_s", "layer", true, true, &[2]);
+    assert_unit_parity(&env, "det_s", "stage", false, true, &[1, 2, 8]);
+    assert_unit_parity(&env, "det_s", "net", false, false, &[2]);
+    assert_unit_parity(&env, "det_s", "pack", true, false, &[2]);
+}
+
 /// End-to-end: whole calibrations driven by plans vs the dispatch path
 /// must produce identical loss curves, committed weights and act steps.
 fn calibrate_fingerprint(
@@ -356,7 +371,8 @@ fn calibrate_fingerprint(
 ) -> (Vec<(u64, u64)>, Vec<Vec<u32>>, Vec<u32>) {
     let model = env.model(model_name);
     let cal = Calibrator::new(&env.rt, &env.mf, model);
-    let train = env.train_set().unwrap();
+    // per-model dataset: det_s calibrates on its own data_det/ scenes
+    let train = env.train_set_for(model).unwrap();
     let calib = env.calib(&train, 32, 3);
     let bits = BitConfig::uniform(model, 4, abits, true);
     let qm = cal.calibrate(&calib, &bits, cfg).unwrap();
@@ -467,7 +483,36 @@ fn calibrate_plan_vs_dispatch_bitwise_mse_layer_and_multinode() {
     pool::set_threads(0);
 }
 
-/// Every exported granularity of both models calibrates entirely on
+#[test]
+fn calibrate_plan_vs_dispatch_bitwise_det() {
+    let _g = lock_pool();
+    let env = Env::bootstrap_synthetic().unwrap();
+    for nt in [1usize, 2, 8] {
+        pool::set_threads(nt);
+        // use_fim defaults on: this also drives the detection FIM seed
+        // (half-SSE gradient against the box-target rows)
+        let planned = calibrate_fingerprint(
+            &env,
+            "det_s",
+            &ReconConfig { iters: 8, ..ReconConfig::default() },
+            Some(8),
+        );
+        let dispatched = calibrate_fingerprint(
+            &env,
+            "det_s",
+            &ReconConfig {
+                iters: 8,
+                plan: false,
+                ..ReconConfig::default()
+            },
+            Some(8),
+        );
+        assert_eq!(planned, dispatched, "det_s W4A8 nt {nt}");
+    }
+    pool::set_threads(0);
+}
+
+/// Every exported granularity of every model calibrates entirely on
 /// compiled plans: the fallback counter must not move, and exactly one
 /// plan is built per unit. Delta reads — the counters are cumulative
 /// process-global atomics polluted by every earlier test in this
@@ -480,6 +525,9 @@ fn every_granularity_calibrates_with_zero_fallback() {
     for (mname, grans) in [
         ("resnet_s", &["layer", "block", "stage", "net", "pack"][..]),
         ("mobilenetv2_s", &["layer", "block", "pack"][..]),
+        // the detection backbone reuses the conv/fc/gap unit vocabulary,
+        // so its plans must compile exactly like the classifiers'
+        ("det_s", &["layer", "block", "stage", "net", "pack"][..]),
     ] {
         for &gran in grans {
             let cfg = ReconConfig {

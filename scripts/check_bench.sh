@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
 # Perf-regression gate over the bench harness's JSON output.
 #
-# usage: scripts/check_bench.sh NEW.json [BASELINE.json]
+# usage: scripts/check_bench.sh [--fold] NEW.json [BASELINE.json]
 #   BASELINE.json defaults to BENCH_native.json at the repo root.
+#   --fold appends baseline-missing rows/notes instead of gating (below).
 #
 # Fails (exit 1) when (all checks arm only once a calibrated baseline
 # is committed):
@@ -22,7 +23,62 @@
 # into a hard failure (exit 2) — commit the bench-smoke artifact as
 # BENCH_native.json to calibrate:
 #   cd rust && cargo bench --bench bench_recon -- --quick --json ../BENCH_native.json
+#
+# Fold mode: check_bench.sh --fold NEW.json [BASELINE.json] rewrites the
+# baseline in place, appending any result rows and notes NEW has that
+# the baseline lacks (benches added since the last calibration). It
+# NEVER overwrites an existing baseline number — loosening the gate
+# still takes an explicit recalibration — and it no-ops (exit 0) on a
+# missing or uncalibrated baseline, where the self-calibrate path owns
+# the file. CI's main-only bench-calibrate job runs this so `new` rows
+# stop drifting ungated.
 set -euo pipefail
+
+if [ "${1:-}" = "--fold" ]; then
+    shift
+    new=${1:?usage: check_bench.sh --fold NEW.json [BASELINE.json]}
+    base=${2:-BENCH_native.json}
+    python3 - "$new" "$base" <<'PY'
+import json, sys
+
+new_path, base_path = sys.argv[1], sys.argv[2]
+with open(new_path) as f:
+    new = json.load(f)
+try:
+    with open(base_path) as f:
+        base = json.load(f)
+except FileNotFoundError:
+    print(f"fold: no baseline at {base_path} — nothing to fold "
+          "(calibrate first)")
+    sys.exit(0)
+if not base.get("calibrated", True):
+    print(f"fold: baseline {base_path} is uncalibrated — nothing to "
+          "fold (the self-calibrate path owns it)")
+    sys.exit(0)
+
+have = {r["name"] for r in base.get("results", [])}
+added = [r for r in new.get("results", []) if r["name"] not in have]
+base_notes = base.get("notes") or {}
+new_notes = new.get("notes") or {}
+added_notes = {k: v for k, v in new_notes.items() if k not in base_notes}
+if not added and not added_notes:
+    print("fold: baseline already covers every result row and note")
+    sys.exit(0)
+base["results"] = base.get("results", []) + added
+base_notes.update(added_notes)
+base["notes"] = base_notes
+with open(base_path, "w") as f:
+    json.dump(base, f, indent=1, sort_keys=True)
+    f.write("\n")
+for r in added:
+    print(f"fold: added result '{r['name']}' ({r['min_ms']:.1f}ms)")
+for k in sorted(added_notes):
+    print(f"fold: added note '{k}' ({added_notes[k]})")
+print(f"fold: {base_path} updated — commit it to arm the gate for the "
+      "new rows")
+PY
+    exit $?
+fi
 
 new=${1:?usage: check_bench.sh NEW.json [BASELINE.json]}
 base=${2:-BENCH_native.json}

@@ -1,0 +1,90 @@
+#!/usr/bin/env bash
+# Artifact-evaluation harness ("kick the tires"): build the release
+# binary, regenerate every paper table and figure with `brecq exp all`
+# into a versioned output directory, and verify the produced report
+# files against the committed completeness manifest
+# (scripts/kick-tires-manifest.txt).
+#
+# usage: scripts/kick-tires.sh [--quick] [--out DIR] [--bin PATH]
+#
+#   --quick    minutes-not-hours mode: reduced reconstruction iteration
+#              counts and calibration-set sizes, and a shortened QAT
+#              baseline. CI runs this on every PR. The resulting numbers
+#              are NOT paper-grade — run without --quick for artifact
+#              evaluation proper.
+#   --out DIR  place outputs under DIR instead of the default
+#              artifacts/out/<git-sha>/
+#   --bin P    use an existing brecq binary instead of building one
+#              (skips `cargo build --release`)
+#
+# Outputs under the out directory:
+#   reports/<id>.md + reports/<id>.json   one pair per table/figure
+#   exp-all.log                           full runner transcript
+#   MANIFEST.txt                          sorted listing of reports/
+#
+# Exit codes: 0 = every table ran and the manifest matches; non-zero on
+# any table failure (`brecq exp all` reports per-table verdicts and
+# fails at the end) or on any manifest mismatch (missing OR unexpected
+# files — the committed manifest is the source of truth).
+set -euo pipefail
+
+here=$(cd "$(dirname "$0")" && pwd)
+root=$(cd "$here/.." && pwd)
+manifest="$here/kick-tires-manifest.txt"
+
+quick=0
+out=""
+bin=""
+while [ $# -gt 0 ]; do
+    case "$1" in
+        --quick) quick=1 ;;
+        --out) out=${2:?--out needs a directory}; shift ;;
+        --bin) bin=${2:?--bin needs a path}; shift ;;
+        *) echo "kick-tires: unknown flag '$1' (see header comment)" >&2
+           exit 2 ;;
+    esac
+    shift
+done
+
+sha=$(git -C "$root" rev-parse --short HEAD 2>/dev/null || echo nogit)
+out=${out:-$root/artifacts/out/$sha}
+mkdir -p "$out"
+
+if [ -z "$bin" ]; then
+    echo "[kick-tires] building release binary"
+    (cd "$root/rust" && cargo build --release)
+    bin="$root/rust/target/release/brecq"
+fi
+[ -x "$bin" ] || { echo "kick-tires: no brecq binary at $bin" >&2; exit 2; }
+
+# --quick trades fidelity for wall-clock: fewer Algorithm-1 iterations,
+# a smaller calibration set, fewer LSQ steps for the table4 QAT column.
+flags=()
+if [ "$quick" -eq 1 ]; then
+    flags+=(--iters 40 --calib 128 --qat-steps 120 --seeds 1)
+    echo "[kick-tires] QUICK mode: ${flags[*]} (numbers are not paper-grade)"
+fi
+
+echo "[kick-tires] regenerating all tables into $out"
+rc=0
+# ${flags[@]+...}: expand-if-set, so an empty array survives `set -u`
+# on bash < 4.4
+"$bin" exp all --out "$out" ${flags[@]+"${flags[@]}"} 2>&1 \
+    | tee "$out/exp-all.log" || rc=$?
+
+# Completeness check runs even when a table failed: the diff shows
+# exactly which outputs the failure cost us.
+(cd "$out" && find reports -type f | LC_ALL=C sort) > "$out/MANIFEST.txt"
+if ! diff -u "$manifest" "$out/MANIFEST.txt"; then
+    echo "[kick-tires] FAIL: produced files do not match" \
+         "scripts/kick-tires-manifest.txt (see diff above;" \
+         "'-' = expected but missing, '+' = unexpected extra)" >&2
+    exit 1
+fi
+n=$(wc -l < "$out/MANIFEST.txt")
+if [ "$rc" -ne 0 ]; then
+    echo "[kick-tires] FAIL: brecq exp all exited $rc" \
+         "(see $out/exp-all.log)" >&2
+    exit "$rc"
+fi
+echo "[kick-tires] PASS: all $n expected report files present under $out"

@@ -129,6 +129,77 @@ run_case "fail: bootstrap forbidden on main" 2 "BOOTSTRAP FORBIDDEN" \
 run_case "pass: no baseline file" 0 "no baseline file" \
     "$tmp/new_same.json" "$tmp/nonexistent.json"
 
+# --- fold mode (bench-calibrate on main folds `new` rows into the
+#     committed baseline so they stop drifting ungated) ---
+
+# run_fold <name> <expected_exit> <grep_pattern> <new.json> <base.json>
+run_fold() {
+    local name=$1 want=$2 pat=$3 new=$4 base=$5
+    local out rc
+    out=$(bash "$gate" --fold "$new" "$base" 2>&1)
+    rc=$?
+    if [ "$rc" -ne "$want" ]; then
+        echo "FAIL  $name: exit $rc (wanted $want)"
+        echo "$out" | sed 's/^/      | /'
+        fails=$((fails + 1))
+        return
+    fi
+    if ! grep -q "$pat" <<<"$out"; then
+        echo "FAIL  $name: output missing /$pat/"
+        echo "$out" | sed 's/^/      | /'
+        fails=$((fails + 1))
+        return
+    fi
+    echo "ok    $name"
+}
+
+# 10. fold appends rows/notes the baseline lacks; the folded baseline
+#     then gates the same new run cleanly (no more `new` notices)
+mk "$tmp/base_fold.json" true "${rows_ok[@]:0:2}" -- \
+    "recon_speedup_4t_over_1t=2.1" "recon_iters_per_sec=250.0"
+run_fold "fold: appends missing rows + notes" 0 "fold: added result" \
+    "$tmp/new_same.json" "$tmp/base_fold.json"
+run_case "pass: gate clean after fold" 0 "bench gate: PASS (calibrated)" \
+    "$tmp/new_same.json" "$tmp/base_fold.json"
+if grep -q "^new   " <(bash "$gate" "$tmp/new_same.json" \
+        "$tmp/base_fold.json" 2>&1); then
+    echo "FAIL  fold: 'new' notices survived the fold"
+    fails=$((fails + 1))
+else
+    echo "ok    fold: no 'new' notices after fold"
+fi
+
+# 11. fold never overwrites an existing baseline number (loosening the
+#     gate takes an explicit recalibration): fold a slower run over the
+#     full baseline, then confirm the gate still flags the regression
+cp "$tmp/base.json" "$tmp/base_keep.json"
+run_fold "fold: nothing to add is a no-op" 0 "already covers" \
+    "$tmp/new_slow.json" "$tmp/base_keep.json"
+run_case "fail: fold kept the old stage number" 1 "25% regression" \
+    "$tmp/new_slow.json" "$tmp/base_keep.json"
+
+# 12. fold refuses to own an uncalibrated baseline (self-calibrate path
+#     does) and leaves the file byte-identical
+cp "$tmp/base_boot.json" "$tmp/base_boot_keep.json"
+run_fold "fold: uncalibrated baseline is a no-op" 0 "uncalibrated" \
+    "$tmp/new_same.json" "$tmp/base_boot_keep.json"
+if cmp -s "$tmp/base_boot.json" "$tmp/base_boot_keep.json"; then
+    echo "ok    fold: uncalibrated baseline untouched"
+else
+    echo "FAIL  fold: uncalibrated baseline was modified"
+    fails=$((fails + 1))
+fi
+
+# 13. missing baseline file: fold no-ops instead of creating one
+run_fold "fold: missing baseline is a no-op" 0 "nothing to fold" \
+    "$tmp/new_same.json" "$tmp/fold_nonexistent.json"
+if [ -e "$tmp/fold_nonexistent.json" ]; then
+    echo "FAIL  fold: created a baseline out of thin air"
+    fails=$((fails + 1))
+else
+    echo "ok    fold: no baseline file created"
+fi
+
 if [ "$fails" -ne 0 ]; then
     echo "check_bench fixture tests: $fails FAILED"
     exit 1
