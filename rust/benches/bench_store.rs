@@ -1,0 +1,99 @@
+//! Bench: artifact-store throughput — blob publish (atomic write-rename)
+//! and warm load+decode at an FpWeights-sized payload, the store-hit
+//! `get_or_build` path a warm session takes per stage, and the
+//! end-to-end cold-vs-warm wall clock of one small BRECQ job (the number
+//! the store exists to shrink). Warm replay is asserted compute-free so
+//! the bench can't silently measure a recompute.
+
+mod harness;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use brecq::pipeline::{Artifact, ArtifactCache, ArtifactStore, FpWeights,
+                      JobSpec, Session};
+use brecq::tensor::Tensor;
+use harness::Harness;
+
+fn main() {
+    let mut h = Harness::from_args("bench_store");
+    let dir = std::env::temp_dir()
+        .join(format!("brecq_bench_store_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // an FpWeights-shaped payload: 16 small conv layers (~150 KB)
+    let ws: Vec<Tensor> = (0..16)
+        .map(|i| {
+            Tensor::new(
+                vec![16, 16, 3, 3],
+                vec![0.5 + i as f32 * 0.01; 16 * 16 * 3 * 3],
+            )
+        })
+        .collect();
+    let bs: Vec<Tensor> =
+        (0..16).map(|_| Tensor::new(vec![16], vec![0.25; 16])).collect();
+    let blob = FpWeights { ws, bs }.encode();
+    h.note("store_entry_bytes", blob.payload_len() as f64);
+
+    let store = ArtifactStore::open(&dir).unwrap();
+    let mut k = 0usize;
+    let iters = h.iters(30);
+    h.run("store.publish fp-weights", iters, || {
+        k += 1;
+        store.publish(&format!("bench/pub/{k}"), &blob).unwrap();
+    });
+
+    store.publish("bench/warm", &blob).unwrap();
+    let iters = h.iters(30);
+    h.run("store.load+decode fp-weights", iters, || {
+        let b = store.load("bench/warm").expect("warm entry present");
+        let v = FpWeights::decode(&b).unwrap();
+        std::hint::black_box(v.ws.len());
+    });
+
+    // the per-stage warm path: fresh cache (cold memory), warm disk —
+    // lock, load, verify, decode
+    let shared = Arc::new(ArtifactStore::open(&dir).unwrap());
+    let iters = h.iters(30);
+    h.run("cache.get_or_build store-hit", iters, || {
+        let c = ArtifactCache::with_store(shared.clone());
+        let v: Arc<FpWeights> = c
+            .get_or_build("bench/warm", || unreachable!("warm key"))
+            .unwrap();
+        std::hint::black_box(v.ws.len());
+    });
+
+    // end-to-end: one small BRECQ job, cold store vs warm replay
+    let job_dir = dir.join("jobs");
+    let spec = JobSpec {
+        wbits: 4,
+        abits: Some(8),
+        iters: 12,
+        calib_n: 32,
+        ..JobSpec::default()
+    };
+    let cold = Session::with_store(
+        harness::bench_env(),
+        Arc::new(ArtifactStore::open(&job_dir).unwrap()),
+    );
+    let t0 = Instant::now();
+    cold.run(&spec).expect("cold job");
+    h.note("store_cold_job_s", t0.elapsed().as_secs_f64());
+
+    let warm = Session::with_store(
+        harness::bench_env(),
+        Arc::new(ArtifactStore::open(&job_dir).unwrap()),
+    );
+    let t0 = Instant::now();
+    warm.run(&spec).expect("warm job");
+    h.note("store_warm_job_s", t0.elapsed().as_secs_f64());
+    assert_eq!(
+        warm.cache().computes(),
+        0,
+        "warm replay recomputed — the bench would be measuring a lie"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+    h.finish();
+}

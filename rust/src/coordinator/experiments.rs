@@ -25,6 +25,8 @@ use crate::util::stats;
 // re-export it so table code and downstream callers keep one name.
 pub use crate::pipeline::{Hardware, Method};
 
+use crate::pipeline::{Granularity, JobSpec, Session};
+
 /// Shared experiment options (CLI-tunable).
 #[derive(Clone)]
 pub struct ExpOpts {
@@ -97,12 +99,18 @@ fn eval_quantized(
 // Table 1: reconstruction-granularity ablation (W2, A=FP)
 // ------------------------------------------------------------------
 
-pub fn table1(env: &Env, o: &ExpOpts) -> Result<Table> {
+/// Runs through a [`Session`] (not a bare [`Env`]) so repeated
+/// regenerations share — and, with a store-backed session, *persist* —
+/// every granularity's reconstruction: a warm-store `exp table1` replays
+/// bit-identically with zero backend dispatches (`rust/tests/qaas.rs`).
+/// The spec path is numerically identical to driving the Calibrator
+/// directly: same calib subset, same `brecq_cfg`, same eval.
+pub fn table1(s: &Session, o: &ExpOpts) -> Result<Table> {
+    let env = s.env();
     let mut t = Table::new(
         "Table 1 — granularity ablation, 2-bit weights (top-1 %)",
         &["Model", "FP", "Layer", "Block", "Stage", "Net", "Pack"],
     );
-    let train = env.train_set()?;
     for mname in ["resnet_s", "mobilenetv2_s"] {
         if !env.mf.models.contains_key(mname) {
             println!("  table1 {mname}: not in manifest (export with \
@@ -110,8 +118,6 @@ pub fn table1(env: &Env, o: &ExpOpts) -> Result<Table> {
             continue;
         }
         let model = env.model(mname);
-        let calib = env.calib(&train, o.calib_n, o.seed);
-        let bits = BitConfig::uniform(model, 2, None, true);
         let mut cells = vec![mname.to_string(), pct(model.fp_acc)];
         for gran in ["layer", "block", "stage", "net", "pack"] {
             // models export different granularity subsets (mobilenet has
@@ -122,10 +128,23 @@ pub fn table1(env: &Env, o: &ExpOpts) -> Result<Table> {
                 cells.push("-".into());
                 continue;
             }
-            let cal = Calibrator::new(&env.rt, &env.mf, model);
-            let cfg = baselines::brecq_cfg(&base_cfg(o), gran);
-            let qm = cal.calibrate(&calib, &bits, &cfg)?;
-            let acc = eval_quantized(env, mname, &qm)?;
+            let spec = JobSpec {
+                model: mname.to_string(),
+                method: Method::Brecq,
+                gran: Granularity::parse(gran)?,
+                wbits: 2,
+                abits: None,
+                first_last_8: true,
+                iters: o.iters,
+                calib_n: o.calib_n,
+                seed: o.seed,
+                verbose: o.verbose,
+                ..JobSpec::default()
+            };
+            let out = s.run(&spec)?;
+            let acc = out
+                .accuracy
+                .context("table1 jobs always evaluate")?;
             println!("  table1 {mname} {gran}: {:.2}%", acc * 100.0);
             cells.push(pct(acc));
         }
@@ -461,6 +480,7 @@ pub fn table5(env: &Env, o: &ExpOpts) -> Result<Table> {
         det,
         &EvalParams::fp(model, &ws, &bs),
         &test,
+        false,
     )?;
     println!("  table5 det_s fp: mAP {fp:.4}");
     t.row(vec!["Full Prec.".into(), "32/32".into(), format!("{fp:.4}")]);
@@ -475,6 +495,7 @@ pub fn table5(env: &Env, o: &ExpOpts) -> Result<Table> {
                 det,
                 &EvalParams::quantized(&qm),
                 &test,
+                false,
             )?;
             println!(
                 "  table5 {} W{wbits}A8: mAP {map:.4}",

@@ -173,6 +173,21 @@ fn ap_from_ranked(hits: &[bool], npos: usize) -> f64 {
 /// ordering is total) and greedy per-sample matching, then averaged.
 /// Pure, serial, f64 — bit-identical for bit-identical logits.
 pub fn det_map(det: &DetInfo, lg: &Tensor, labels: &[usize]) -> f64 {
+    det_map_nms(det, lg, labels, false)
+}
+
+/// [`det_map`] with optional greedy non-maximum suppression: walking the
+/// same total-order ranking, a prediction is dropped when its IoU with
+/// any higher-ranked *kept* prediction of the same sample exceeds 0.5.
+/// Deterministic (the ranking's (sample, anchor) tie-break is total) and
+/// applied before matching, so duplicate boxes stop outranking other
+/// objects' true matches. Default off — table5 baselines are NMS-free.
+pub fn det_map_nms(
+    det: &DetInfo,
+    lg: &Tensor,
+    labels: &[usize],
+    nms: bool,
+) -> f64 {
     let d = det.head_dim();
     let na = det.anchors.len();
     let n = labels.len();
@@ -191,6 +206,16 @@ pub fn det_map(det: &DetInfo, lg: &Tensor, labels: &[usize]) -> f64 {
             .then(x.1.cmp(&y.1))
             .then(x.2.cmp(&y.2))
     });
+    if nms {
+        let mut kept: Vec<Vec<[f64; 4]>> = vec![Vec::new(); n];
+        preds.retain(|&(_, i, _, pb)| {
+            if kept[i].iter().any(|&kb| iou(pb, kb) > 0.5) {
+                return false;
+            }
+            kept[i].push(pb);
+            true
+        });
+    }
     let npos: usize = labels.iter().map(|&l| det.scenes[l].len()).sum();
 
     let mut map = 0.0;
@@ -226,13 +251,16 @@ pub fn det_map(det: &DetInfo, lg: &Tensor, labels: &[usize]) -> f64 {
 
 /// mAP over a dataset through the AOT forward (the detection analogue of
 /// [`accuracy`]): batches like `accuracy` does, wrap-padding the trailing
-/// partial batch, then scores the concatenated logits serially.
+/// partial batch, then scores the concatenated logits serially. `nms`
+/// enables greedy suppression (see [`det_map_nms`]); off reproduces the
+/// table5 baselines exactly.
 pub fn map_score(
     rt: &dyn Backend,
     model: &ModelInfo,
     det: &DetInfo,
     p: &EvalParams,
     data: &DataSet,
+    nms: bool,
 ) -> Result<f64> {
     let b = model.eval_batch;
     let n = data.len();
@@ -258,7 +286,7 @@ pub fn map_score(
         start += take;
     }
     let lg = Tensor::new(vec![n, d], all);
-    Ok(det_map(det, &lg, &data.labels))
+    Ok(det_map_nms(det, &lg, &data.labels, nms))
 }
 
 /// Mean cross-entropy over a calibration set (sensitivity fitness signal).

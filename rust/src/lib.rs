@@ -27,8 +27,13 @@
 //! The public front door is [`pipeline`]: a typed, cache-aware session API
 //! (`Session` + `JobSpec`) that compiles each quantization job into an
 //! explicit stage DAG and shares expensive intermediates (FP weights,
-//! calibration subsets, sensitivity LUTs) across jobs. The CLI
-//! (`src/main.rs`) and every example are thin views over it.
+//! calibration subsets, sensitivity LUTs) across jobs — and, through
+//! [`pipeline::artifact_store`], across *processes*: sessions opened on
+//! the same store directory replay cached stages bit-identically with
+//! zero backend work. The `brecq serve` daemon ([`pipeline::serve`])
+//! exposes that as a local job service. The CLI (`src/main.rs`) and every
+//! example are thin views over it. ([`store`] is unrelated to the
+//! artifact store: it reads the build-time python-ABI tensor files.)
 //!
 //! See DESIGN.md (repo root) for the system inventory and EXPERIMENTS.md
 //! for the paper-vs-measured results.

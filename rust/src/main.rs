@@ -9,14 +9,21 @@
 //!   distill    — generate ZeroQ-style distilled calibration data
 //!   run        — execute a JSON batch of JobSpecs through one
 //!                cache-aware session (see examples/jobs.json)
+//!   serve      — job daemon: accept JobSpec batches over a unix socket,
+//!                schedule them on the worker pool, stream progress events
+//!   submit     — client for `serve`: send a jobs.json to a running daemon
+//!   ctl        — one-shot daemon control (ping / stats / shutdown)
 //!   exp        — regenerate a paper table/figure; `exp list` enumerates
 //!                the available outputs
 //!
 //! The CLI owns flag parsing and printing only; method/granularity/
 //! hardware dispatch, stage ordering and artifact reuse all live in the
-//! typed pipeline (`Session` + `JobSpec`).
+//! typed pipeline (`Session` + `JobSpec`). `--store DIR` (or
+//! `$BRECQ_STORE`) layers the persistent content-addressed artifact store
+//! under the session cache so runs replay across processes.
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -24,9 +31,10 @@ use brecq::coordinator::experiments::{self as exp, ExpOpts};
 use brecq::coordinator::report::Table;
 use brecq::coordinator::Env;
 use brecq::distill::DistillConfig;
-use brecq::pipeline::{self, DataSource, Granularity, Hardware, JobSpec,
-                      Method, Session};
+use brecq::pipeline::{self, ArtifactStore, DataSource, Granularity,
+                      Hardware, JobSpec, Method, Session};
 use brecq::util::cli::Args;
+use brecq::util::json;
 
 fn main() {
     if let Err(e) = run() {
@@ -45,13 +53,28 @@ fn opts(a: &Args) -> ExpOpts {
     }
 }
 
-fn session(artifacts: Option<String>) -> Result<Session> {
-    Ok(Session::new(Env::bootstrap(artifacts)?))
+fn session(
+    artifacts: Option<String>,
+    store: Option<&str>,
+) -> Result<Session> {
+    let env = Env::bootstrap(artifacts)?;
+    Ok(match store {
+        Some(dir) => {
+            Session::with_store(env, Arc::new(ArtifactStore::open(dir)?))
+        }
+        None => Session::new(env),
+    })
 }
 
 fn run() -> Result<()> {
     let a = Args::from_env();
     let artifacts = a.opt_str("artifacts");
+    // persistent artifact store: --store beats $BRECQ_STORE beats none
+    // (sessions without a store keep the in-memory cache only)
+    let store = a
+        .opt_str("store")
+        .or_else(|| std::env::var("BRECQ_STORE").ok());
+    let store = store.as_deref();
     // worker-pool size: --threads beats $BRECQ_THREADS beats autodetect;
     // results are identical at any setting (see util::pool)
     let threads = a.usize("threads", 0);
@@ -60,7 +83,7 @@ fn run() -> Result<()> {
     }
     match a.cmd.as_str() {
         "eval" => {
-            let s = session(artifacts)?;
+            let s = session(artifacts, store)?;
             let mname = a.str("model", "resnet_s");
             let spec = JobSpec {
                 model: mname.clone(),
@@ -75,7 +98,7 @@ fn run() -> Result<()> {
             );
         }
         "calibrate" => {
-            let s = session(artifacts)?;
+            let s = session(artifacts, store)?;
             let o = opts(&a);
             let abits = a.usize("act-bits", 0);
             let spec = JobSpec {
@@ -108,7 +131,7 @@ fn run() -> Result<()> {
             }
         }
         "sensitivity" => {
-            let s = session(artifacts)?;
+            let s = session(artifacts, store)?;
             let o = opts(&a);
             let mname = a.str("model", "resnet_s");
             let t = s.sensitivity(&mname, DataSource::Train, o.calib_n,
@@ -131,7 +154,7 @@ fn run() -> Result<()> {
             }
         }
         "mp-search" => {
-            let s = session(artifacts)?;
+            let s = session(artifacts, store)?;
             let o = opts(&a);
             let mname = a.str("model", "resnet_s");
             let hw = Hardware::parse(&a.str("hw", "size"))?;
@@ -146,7 +169,7 @@ fn run() -> Result<()> {
             }
         }
         "hwsim" => {
-            let s = session(artifacts)?;
+            let s = session(artifacts, store)?;
             let mname = a.str("model", "resnet_s");
             let model = s.model(&mname)?;
             let abits = a.usize("act-bits", 8);
@@ -169,7 +192,7 @@ fn run() -> Result<()> {
             tab.print();
         }
         "distill" => {
-            let s = session(artifacts)?;
+            let s = session(artifacts, store)?;
             let o = opts(&a);
             let mname = a.str("model", "resnet_s");
             let dcal = s.distill(&mname, &DistillConfig {
@@ -193,7 +216,7 @@ fn run() -> Result<()> {
             let text = std::fs::read_to_string(&path)
                 .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
             let specs = JobSpec::parse_jobs(&text)?;
-            let s = session(artifacts)?;
+            let s = session(artifacts, store)?;
             println!("[run] {} jobs from {path} (threads: {})",
                      specs.len(), brecq::util::pool::threads());
             let results = s.run_many(&specs);
@@ -236,11 +259,151 @@ fn run() -> Result<()> {
             tab.print();
             let (hits, misses) = s.cache().stats();
             println!("artifact cache: {hits} hits / {misses} misses");
+            if let Some(st) = s.cache().store() {
+                let ss = st.stats();
+                println!(
+                    "artifact store: {} hits / {} misses / {} publishes \
+                     / {} corrupt ({} entries at {})",
+                    ss.hits, ss.misses, ss.publishes, ss.corrupt,
+                    st.len(), st.dir().display()
+                );
+            }
+            // --stats: per-slot outcome tallies — which cache keys were
+            // served from memory, from the store, or computed fresh
+            if a.bool("stats", false) {
+                let mut st = Table::new(
+                    "per-slot cache outcomes",
+                    &["Key", "Hit", "Store hit", "Computed", "Loaded"]);
+                for (key, ss) in s.cache().per_key_stats() {
+                    st.row(vec![
+                        key,
+                        ss.hits.to_string(),
+                        ss.store_hits.to_string(),
+                        ss.computes.to_string(),
+                        ss.loads.to_string(),
+                    ]);
+                }
+                st.print();
+            }
+            // --json OUT: machine-readable results + counters (the serve
+            // smoke test diffs these fingerprints against daemon runs)
+            if let Some(out_path) = a.opt_str("json") {
+                let jobs: Vec<json::Json> = results
+                    .iter()
+                    .enumerate()
+                    .map(|(i, r)| match r {
+                        Ok(out) => out.to_json(),
+                        Err(e) => json::obj(vec![
+                            ("model", json::s(&specs[i].model)),
+                            ("error", json::s(&format!("{e}"))),
+                        ]),
+                    })
+                    .collect();
+                let mut top = vec![
+                    ("jobs", json::arr(jobs)),
+                    ("cache_hits", json::num(hits as f64)),
+                    ("cache_misses", json::num(misses as f64)),
+                    ("computes",
+                     json::num(s.cache().computes() as f64)),
+                    ("store_hits",
+                     json::num(s.cache().store_hits() as f64)),
+                ];
+                if let Some(st) = s.cache().store() {
+                    let ss = st.stats();
+                    top.push(("store_publishes",
+                              json::num(ss.publishes as f64)));
+                    top.push(("store_corrupt",
+                              json::num(ss.corrupt as f64)));
+                }
+                std::fs::write(&out_path, json::obj(top).to_string())
+                    .map_err(|e| anyhow::anyhow!(
+                        "writing {out_path}: {e}"))?;
+                println!("[run] wrote {out_path}");
+            }
             anyhow::ensure!(
                 failed == 0,
                 "{failed} of {} jobs failed",
                 specs.len()
             );
+        }
+        #[cfg(unix)]
+        "serve" => {
+            let sock = PathBuf::from(a.str("sock", "brecq.sock"));
+            let workers = a.usize("workers", 0);
+            let s = session(artifacts, store)?;
+            pipeline::serve::serve(s, &sock, workers)?;
+        }
+        #[cfg(unix)]
+        "submit" => {
+            let path = a.positional.first().cloned().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "usage: brecq submit <jobs.json> --sock PATH\n{HELP}"
+                )
+            })?;
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+            let specs = JobSpec::parse_jobs(&text)?;
+            let sock = PathBuf::from(a.str("sock", "brecq.sock"));
+            let priority = a.f32("priority", 0.0) as i64;
+            let quiet = a.bool("quiet", false);
+            let summary = pipeline::serve::submit(
+                &sock, &specs, priority, |ev| {
+                    if !quiet {
+                        println!("{}", ev.to_string());
+                    }
+                })?;
+            let failed = summary
+                .results
+                .iter()
+                .filter(|r| r.is_err())
+                .count();
+            for (i, r) in summary.results.iter().enumerate() {
+                match r {
+                    Ok(out) => println!(
+                        "[submit] job {i}: ok fingerprint={}",
+                        out.get("fingerprint")
+                            .and_then(|f| f.as_str())
+                            .unwrap_or("?")
+                    ),
+                    Err(e) => println!("[submit] job {i}: error: {e}"),
+                }
+            }
+            if let Some(out_path) = a.opt_str("json") {
+                let jobs: Vec<json::Json> = summary
+                    .results
+                    .iter()
+                    .map(|r| match r {
+                        Ok(out) => out.clone(),
+                        Err(e) => json::obj(vec![
+                            ("error", json::s(e)),
+                        ]),
+                    })
+                    .collect();
+                let top = json::obj(vec![
+                    ("jobs", json::arr(jobs)),
+                    ("done", summary.done.clone()),
+                ]);
+                std::fs::write(&out_path, top.to_string()).map_err(
+                    |e| anyhow::anyhow!("writing {out_path}: {e}"))?;
+                println!("[submit] wrote {out_path}");
+            }
+            println!("[submit] done: {}", summary.done.to_string());
+            anyhow::ensure!(
+                failed == 0,
+                "{failed} of {} jobs failed",
+                summary.results.len()
+            );
+        }
+        #[cfg(unix)]
+        "ctl" => {
+            let op = a.positional.first().cloned().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "usage: brecq ctl <ping|stats|shutdown> --sock PATH"
+                )
+            })?;
+            let sock = PathBuf::from(a.str("sock", "brecq.sock"));
+            let reply = pipeline::serve::control(&sock, &op)?;
+            println!("{}", reply.to_string());
         }
         "exp" => {
             let which = a.positional.first().cloned()
@@ -249,7 +412,7 @@ fn run() -> Result<()> {
                 print_exp_list();
                 return Ok(());
             }
-            let env = Env::bootstrap(artifacts)?;
+            let s = session(artifacts, store)?;
             let o = opts(&a);
             let models = a.list(
                 "models", "resnet_s,mobilenetv2_s,regnet_s,mnasnet_s");
@@ -259,9 +422,9 @@ fn run() -> Result<()> {
             let out = a
                 .opt_str("out")
                 .map(PathBuf::from)
-                .unwrap_or_else(|| env.dir.clone());
-            run_exp(&env, &o, &which, &models, &a, &out)?;
-            for (name, calls, secs) in env.rt.hotspots(8) {
+                .unwrap_or_else(|| s.env().dir.clone());
+            run_exp(&s, &o, &which, &models, &a, &out)?;
+            for (name, calls, secs) in s.env().rt.hotspots(8) {
                 eprintln!("[dispatch] {name}: {calls} calls {secs:.1}s");
             }
         }
@@ -319,15 +482,18 @@ fn print_exp_list() {
     );
 }
 
-fn run_exp(env: &Env, o: &ExpOpts, which: &str, models: &[String],
+fn run_exp(s: &Session, o: &ExpOpts, which: &str, models: &[String],
            a: &Args, out: &Path) -> Result<()> {
+    // table1 runs through the session (persistent-store-aware); the other
+    // drivers still take the raw Env until they migrate
+    let env = s.env();
     let save = |t: Table, id: &str| -> Result<()> {
         t.print();
         t.save(out, id)?;
         Ok(())
     };
     match which {
-        "table1" => save(exp::table1(env, o)?, "table1")?,
+        "table1" => save(exp::table1(s, o)?, "table1")?,
         "table2" => save(exp::table2(env, o, models)?, "table2")?,
         "table3" => save(exp::table3(env, o, models)?, "table3")?,
         "table4" => {
@@ -360,7 +526,7 @@ fn run_exp(env: &Env, o: &ExpOpts, which: &str, models: &[String],
             // exit
             let mut failed: Vec<String> = Vec::new();
             for w in ALL_EXPS {
-                match run_exp(env, o, w, models, a, out) {
+                match run_exp(s, o, w, models, a, out) {
                     Ok(()) => println!("[exp] {w}: ok"),
                     Err(e) => {
                         println!("[exp] {w}: FAIL — {e:#}");
@@ -396,9 +562,21 @@ USAGE: brecq <cmd> [--flags]
   mp-search   --model M --hw size|fpga|arm --budget X
   hwsim       --model M [--act-bits A]
   distill     --model M --n K
-  run         <jobs.json>   batch mode: a JSON array of job specs runs
-              through one cache-aware pipeline session (shared FP weights,
-              calib sets and sensitivity LUTs); see examples/jobs.json
+  run         <jobs.json> [--stats] [--json OUT]
+              batch mode: a JSON array of job specs runs through one
+              cache-aware pipeline session (shared FP weights, calib sets
+              and sensitivity LUTs); see examples/jobs.json. --stats
+              prints per-slot hit/store-hit/compute tallies; --json OUT
+              writes results + counters machine-readably
+  serve       --sock PATH [--workers N]   job daemon: accepts JobSpec
+              batches over a unix socket, fair-shares them across client
+              connections on the worker pool, streams NDJSON progress
+              events; SIGINT/SIGTERM drain and exit cleanly. Pair with
+              --store DIR so results persist across daemon restarts
+  submit      <jobs.json> --sock PATH [--priority P] [--json OUT]
+              [--quiet]   send a batch to a running daemon and stream its
+              events; exits non-zero if any job failed
+  ctl         <ping|stats|shutdown> --sock PATH   one-shot daemon control
   exp         <list|table1|table2|table3|table4|table5|table6|fig2|fig3|
               fig4|all> [--models a,b,c] [--iters N] [--seeds S]
               [--qat-steps N] [--out DIR]
@@ -410,5 +588,9 @@ USAGE: brecq <cmd> [--flags]
               artifacts/out/<git-sha>).
 
 Global: --artifacts DIR (default ./artifacts or $BRECQ_ARTIFACTS)
+        --store DIR   persistent content-addressed artifact store
+                      (default $BRECQ_STORE or none): cached stages replay
+                      bit-identically across processes with zero backend
+                      work
         --threads N   worker-pool size (default $BRECQ_THREADS or auto);
                       results are bit-identical at any thread count";

@@ -1,0 +1,1147 @@
+//! Persistent, content-addressed artifact store — the on-disk layer under
+//! [`super::cache::ArtifactCache`].
+//!
+//! Not to be confused with [`crate::store`], the read-only loader for the
+//! *build-time* weight/dataset ABI shared with `python/compile/store.py`.
+//! This module persists *computed* pipeline artifacts (FP deploy weights,
+//! calibration subsets, sensitivity LUTs, finished reconstructions, eval
+//! scores) across processes, so a warm-store job replays bit-identical to
+//! a cold run without a single backend dispatch.
+//!
+//! Layout: one entry per cache key, addressed by a 128-bit FNV-1a hash of
+//! the key (the full key is recorded in the index and verified on load,
+//! so a hash collision can never serve the wrong artifact):
+//!
+//! ```text
+//!   <store>/<keyhash32hex>.bin    binary payload, little-endian sections
+//!   <store>/<keyhash32hex>.json   index: key, kind, sections, checksum
+//!   <store>/<keyhash32hex>.lock   cross-process advisory lock (flock)
+//! ```
+//!
+//! Publication is atomic: both files are written to a temp name and
+//! `rename(2)`d into place — `.bin` first, `.json` last, so the index is
+//! the commit point and a visible index always has its payload. Every
+//! f32/f64 value rides in the binary payload, never in JSON text (the
+//! [`crate::util::json`] writer does not guarantee round-trip-exact f64
+//! formatting); the JSON index carries only structure, names and integer
+//! metadata. The payload checksum (FNV-1a 64) is verified on every load:
+//! a corrupt or truncated entry is *detected, deleted and recomputed* —
+//! never silently served — and counted in [`StoreStats::corrupt`].
+//!
+//! Compute-once across processes: [`ArtifactStore::lock`] takes an
+//! exclusive `flock(2)` on the entry's `.lock` file. The cache holds it
+//! over its load→compute→publish window, so of N processes racing a cold
+//! key exactly one computes and the rest load the published bits
+//! (`rust/tests/qaas.rs` races real processes to pin this).
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::calib::CalibSet;
+use crate::mp::SearchResult;
+use crate::recon::{BitConfig, QuantizedModel, UnitReport};
+use crate::sensitivity::SensitivityTable;
+use crate::tensor::Tensor;
+use crate::util::json::{self, Json};
+
+use super::job::FpWeights;
+use super::Error;
+
+// ---------------------------------------------------------------------
+// Hashing
+// ---------------------------------------------------------------------
+
+/// FNV-1a 64 over `bytes` — the payload checksum and the digest helper
+/// for composite cache keys (bit vectors, budgets).
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    fnv64_seeded(0xcbf2_9ce4_8422_2325, bytes)
+}
+
+fn fnv64_seeded(seed: u64, bytes: &[u8]) -> u64 {
+    let mut h = seed;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// 128-bit key→path hash as 32 hex chars (two independently seeded FNV-1a
+/// 64 streams). Collisions are astronomically unlikely at our key counts,
+/// and harmless anyway: the index records the full key and a mismatch is
+/// treated as a miss.
+fn key_hash(key: &str) -> String {
+    let a = fnv64(key.as_bytes());
+    let b = fnv64_seeded(0x6c62_272e_07bb_0142, key.as_bytes());
+    format!("{a:016x}{b:016x}")
+}
+
+// ---------------------------------------------------------------------
+// Blob: the codec between typed artifacts and one store entry
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum DType {
+    F32,
+    F64,
+    U64,
+}
+
+impl DType {
+    fn as_str(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F64 => "f64",
+            DType::U64 => "u64",
+        }
+    }
+
+    fn parse(s: &str) -> Option<DType> {
+        match s {
+            "f32" => Some(DType::F32),
+            "f64" => Some(DType::F64),
+            "u64" => Some(DType::U64),
+            _ => None,
+        }
+    }
+
+    fn width(self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::F64 | DType::U64 => 8,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Section {
+    name: String,
+    dtype: DType,
+    shape: Vec<usize>,
+    /// Byte offset into the payload.
+    off: usize,
+    /// Element count.
+    len: usize,
+}
+
+/// One store entry in memory: a named, typed set of binary sections plus
+/// integer/string JSON metadata. [`Artifact`] implementations encode into
+/// and decode out of this; the store handles the bytes on disk.
+#[derive(Debug, Clone)]
+pub struct Blob {
+    kind: String,
+    meta: BTreeMap<String, Json>,
+    sections: Vec<Section>,
+    bytes: Vec<u8>,
+}
+
+impl Blob {
+    pub fn new(kind: &str) -> Blob {
+        Blob {
+            kind: kind.to_string(),
+            meta: BTreeMap::new(),
+            sections: Vec::new(),
+            bytes: Vec::new(),
+        }
+    }
+
+    pub fn kind(&self) -> &str {
+        &self.kind
+    }
+
+    pub fn payload_len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// Attach a metadata value. Structure only — never put an f32/f64
+    /// payload value here (JSON text is not bit-round-trip-exact); use a
+    /// binary section.
+    pub fn set_meta(&mut self, key: &str, v: Json) {
+        self.meta.insert(key.to_string(), v);
+    }
+
+    pub fn meta(&self, key: &str) -> Option<&Json> {
+        self.meta.get(key)
+    }
+
+    fn meta_usize(&self, key: &str) -> Result<usize, Error> {
+        self.meta(key).and_then(Json::as_usize).ok_or_else(|| {
+            Error::Exec(format!(
+                "store blob '{}': missing integer meta '{key}'",
+                self.kind
+            ))
+        })
+    }
+
+    fn push(&mut self, name: &str, dtype: DType, shape: Vec<usize>,
+            len: usize) {
+        self.sections.push(Section {
+            name: name.to_string(),
+            dtype,
+            shape,
+            off: self.bytes.len() - len * dtype.width(),
+            len,
+        });
+    }
+
+    pub fn push_f32s(&mut self, name: &str, shape: Vec<usize>,
+                     vals: &[f32]) {
+        for v in vals {
+            self.bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        self.push(name, DType::F32, shape, vals.len());
+    }
+
+    pub fn push_tensor(&mut self, name: &str, t: &Tensor) {
+        self.push_f32s(name, t.shape.clone(), &t.data);
+    }
+
+    pub fn push_f64s(&mut self, name: &str, vals: &[f64]) {
+        for v in vals {
+            self.bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        self.push(name, DType::F64, vec![vals.len()], vals.len());
+    }
+
+    pub fn push_u64s(&mut self, name: &str, vals: &[u64]) {
+        for v in vals {
+            self.bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        self.push(name, DType::U64, vec![vals.len()], vals.len());
+    }
+
+    fn find(&self, name: &str, dtype: DType) -> Result<&Section, Error> {
+        self.sections
+            .iter()
+            .find(|s| s.name == name && s.dtype == dtype)
+            .ok_or_else(|| {
+                Error::Exec(format!(
+                    "store blob '{}': missing {} section '{name}'",
+                    self.kind,
+                    dtype.as_str()
+                ))
+            })
+    }
+
+    pub fn f32s(&self, name: &str) -> Result<Vec<f32>, Error> {
+        let s = self.find(name, DType::F32)?;
+        Ok(self.bytes[s.off..s.off + s.len * 4]
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+
+    pub fn tensor(&self, name: &str) -> Result<Tensor, Error> {
+        let shape = self.find(name, DType::F32)?.shape.clone();
+        Ok(Tensor::new(shape, self.f32s(name)?))
+    }
+
+    pub fn f64s(&self, name: &str) -> Result<Vec<f64>, Error> {
+        let s = self.find(name, DType::F64)?;
+        Ok(self.bytes[s.off..s.off + s.len * 8]
+            .chunks_exact(8)
+            .map(|b| {
+                f64::from_le_bytes([
+                    b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+                ])
+            })
+            .collect())
+    }
+
+    pub fn u64s(&self, name: &str) -> Result<Vec<u64>, Error> {
+        let s = self.find(name, DType::U64)?;
+        Ok(self.bytes[s.off..s.off + s.len * 8]
+            .chunks_exact(8)
+            .map(|b| {
+                u64::from_le_bytes([
+                    b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+                ])
+            })
+            .collect())
+    }
+
+    pub fn usizes(&self, name: &str) -> Result<Vec<usize>, Error> {
+        Ok(self.u64s(name)?.into_iter().map(|v| v as usize).collect())
+    }
+
+    /// The JSON index document for this blob under `key`.
+    fn index_json(&self, key: &str) -> Json {
+        let sections: Vec<Json> = self
+            .sections
+            .iter()
+            .map(|s| {
+                json::obj(vec![
+                    ("name", json::s(&s.name)),
+                    ("dtype", json::s(s.dtype.as_str())),
+                    (
+                        "shape",
+                        Json::Arr(
+                            s.shape
+                                .iter()
+                                .map(|&d| json::num(d as f64))
+                                .collect(),
+                        ),
+                    ),
+                    ("off", json::num(s.off as f64)),
+                    ("len", json::num(s.len as f64)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("v", json::num(1.0)),
+            ("key", json::s(key)),
+            ("kind", json::s(&self.kind)),
+            ("bin_len", json::num(self.bytes.len() as f64)),
+            (
+                "checksum",
+                json::s(&format!("{:016x}", fnv64(&self.bytes))),
+            ),
+            ("meta", Json::Obj(self.meta.clone())),
+            ("sections", Json::Arr(sections)),
+        ])
+    }
+
+    /// Rebuild a blob from a parsed index + verified payload bytes.
+    /// Returns a human-readable reason on any structural problem (the
+    /// store treats that as corruption).
+    fn from_index(idx: &Json, bytes: Vec<u8>) -> Result<Blob, String> {
+        let kind = idx
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or("index missing 'kind'")?
+            .to_string();
+        let meta = idx
+            .get("meta")
+            .and_then(Json::as_obj)
+            .cloned()
+            .unwrap_or_default();
+        let mut sections = Vec::new();
+        for s in idx
+            .get("sections")
+            .and_then(Json::as_arr)
+            .ok_or("index missing 'sections'")?
+        {
+            let name = s
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or("section missing 'name'")?
+                .to_string();
+            let dtype = s
+                .get("dtype")
+                .and_then(Json::as_str)
+                .and_then(DType::parse)
+                .ok_or("section has bad 'dtype'")?;
+            let shape = s
+                .get("shape")
+                .map(Json::usize_vec)
+                .ok_or("section missing 'shape'")?;
+            let off = s
+                .get("off")
+                .and_then(Json::as_usize)
+                .ok_or("section missing 'off'")?;
+            let len = s
+                .get("len")
+                .and_then(Json::as_usize)
+                .ok_or("section missing 'len'")?;
+            let end = off
+                .checked_add(len * dtype.width())
+                .ok_or("section range overflows")?;
+            if end > bytes.len() {
+                return Err(format!(
+                    "section '{name}' [{off}..{end}) exceeds payload \
+                     ({} bytes)",
+                    bytes.len()
+                ));
+            }
+            sections.push(Section { name, dtype, shape, off, len });
+        }
+        Ok(Blob { kind, meta, sections, bytes })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Artifact: what the cache can persist
+// ---------------------------------------------------------------------
+
+/// A stage artifact that can round-trip through the store bit-exactly.
+/// `decode(encode(x))` must reproduce every result-bearing bit — the
+/// warm-replay tests compare fingerprints across processes.
+pub trait Artifact: Send + Sync + Sized + 'static {
+    /// Stable entry-kind tag, verified on load so a key can never decode
+    /// as the wrong type.
+    const KIND: &'static str;
+
+    fn encode(&self) -> Blob;
+    fn decode(blob: &Blob) -> Result<Self, Error>;
+}
+
+impl Artifact for FpWeights {
+    const KIND: &'static str = "fp-weights";
+
+    fn encode(&self) -> Blob {
+        let mut b = Blob::new(Self::KIND);
+        b.set_meta("layers", json::num(self.ws.len() as f64));
+        for (i, t) in self.ws.iter().enumerate() {
+            b.push_tensor(&format!("w{i}"), t);
+        }
+        for (i, t) in self.bs.iter().enumerate() {
+            b.push_tensor(&format!("b{i}"), t);
+        }
+        b
+    }
+
+    fn decode(b: &Blob) -> Result<FpWeights, Error> {
+        let n = b.meta_usize("layers")?;
+        let mut ws = Vec::with_capacity(n);
+        let mut bs = Vec::with_capacity(n);
+        for i in 0..n {
+            ws.push(b.tensor(&format!("w{i}"))?);
+            bs.push(b.tensor(&format!("b{i}"))?);
+        }
+        Ok(FpWeights { ws, bs })
+    }
+}
+
+impl Artifact for CalibSet {
+    const KIND: &'static str = "calib-set";
+
+    fn encode(&self) -> Blob {
+        let mut b = Blob::new(Self::KIND);
+        b.push_tensor("images", &self.images);
+        b.push_u64s(
+            "labels",
+            &self.labels.iter().map(|&l| l as u64).collect::<Vec<_>>(),
+        );
+        b
+    }
+
+    fn decode(b: &Blob) -> Result<CalibSet, Error> {
+        Ok(CalibSet {
+            images: b.tensor("images")?,
+            labels: b.usizes("labels")?,
+        })
+    }
+}
+
+impl Artifact for SensitivityTable {
+    const KIND: &'static str = "sensitivity-lut";
+
+    fn encode(&self) -> Blob {
+        let mut b = Blob::new(Self::KIND);
+        b.set_meta("layers", json::num(self.diag.len() as f64));
+        // HashMap iteration order is nondeterministic: flatten both maps
+        // through a sorted key order so encode() is a pure function of
+        // the table's contents
+        let mut dl = Vec::new();
+        let mut db = Vec::new();
+        let mut dv = Vec::new();
+        for (l, per_layer) in self.diag.iter().enumerate() {
+            let mut bits: Vec<usize> = per_layer.keys().copied().collect();
+            bits.sort_unstable();
+            for bit in bits {
+                dl.push(l as u64);
+                db.push(bit as u64);
+                dv.push(per_layer[&bit]);
+            }
+        }
+        b.push_u64s("diag_layer", &dl);
+        b.push_u64s("diag_bit", &db);
+        b.push_f64s("diag_val", &dv);
+        let mut pairs: Vec<(usize, usize)> =
+            self.offdiag.keys().copied().collect();
+        pairs.sort_unstable();
+        let mut oa = Vec::new();
+        let mut ob = Vec::new();
+        let mut ov = Vec::new();
+        for (x, y) in pairs {
+            oa.push(x as u64);
+            ob.push(y as u64);
+            ov.push(self.offdiag[&(x, y)]);
+        }
+        b.push_u64s("off_a", &oa);
+        b.push_u64s("off_b", &ob);
+        b.push_f64s("off_val", &ov);
+        b.push_f64s("base_loss", &[self.base_loss]);
+        b
+    }
+
+    fn decode(b: &Blob) -> Result<SensitivityTable, Error> {
+        let layers = b.meta_usize("layers")?;
+        let mut diag = vec![std::collections::HashMap::new(); layers];
+        let (dl, db, dv) =
+            (b.usizes("diag_layer")?, b.usizes("diag_bit")?,
+             b.f64s("diag_val")?);
+        if dl.len() != db.len() || db.len() != dv.len() {
+            return Err(Error::Exec(
+                "sensitivity blob: ragged diag sections".into(),
+            ));
+        }
+        for i in 0..dl.len() {
+            let l = dl[i];
+            if l >= layers {
+                return Err(Error::Exec(format!(
+                    "sensitivity blob: layer {l} out of range"
+                )));
+            }
+            diag[l].insert(db[i], dv[i]);
+        }
+        let (oa, ob, ov) =
+            (b.usizes("off_a")?, b.usizes("off_b")?, b.f64s("off_val")?);
+        if oa.len() != ob.len() || ob.len() != ov.len() {
+            return Err(Error::Exec(
+                "sensitivity blob: ragged offdiag sections".into(),
+            ));
+        }
+        let mut offdiag = std::collections::HashMap::new();
+        for i in 0..oa.len() {
+            offdiag.insert((oa[i], ob[i]), ov[i]);
+        }
+        let base_loss = *b.f64s("base_loss")?.first().ok_or_else(|| {
+            Error::Exec("sensitivity blob: empty base_loss".into())
+        })?;
+        Ok(SensitivityTable { diag, offdiag, base_loss })
+    }
+}
+
+impl Artifact for QuantizedModel {
+    const KIND: &'static str = "quantized-model";
+
+    fn encode(&self) -> Blob {
+        let mut b = Blob::new(Self::KIND);
+        b.set_meta("layers", json::num(self.weights.len() as f64));
+        b.set_meta("aq", json::b(self.bits.aq));
+        b.set_meta(
+            "report_names",
+            Json::Arr(self.reports.iter().map(|r| json::s(&r.name))
+                          .collect()),
+        );
+        for (i, t) in self.weights.iter().enumerate() {
+            b.push_tensor(&format!("w{i}"), t);
+        }
+        for (i, t) in self.biases.iter().enumerate() {
+            b.push_tensor(&format!("b{i}"), t);
+        }
+        b.push_f32s("act_steps", vec![self.act_steps.len()],
+                    &self.act_steps);
+        b.push_u64s(
+            "wbits",
+            &self.bits.wbits.iter().map(|&v| v as u64).collect::<Vec<_>>(),
+        );
+        b.push_u64s(
+            "abits",
+            &self.bits.abits.iter().map(|&v| v as u64).collect::<Vec<_>>(),
+        );
+        b.push_u64s(
+            "rep_iters",
+            &self.reports.iter().map(|r| r.iters as u64).collect::<Vec<_>>(),
+        );
+        // 4 f64 per report: initial/final loss, soft fraction, seconds
+        let mut rep = Vec::with_capacity(self.reports.len() * 4);
+        for r in &self.reports {
+            rep.extend_from_slice(&[
+                r.initial_loss,
+                r.final_loss,
+                r.soft_fraction_before_commit,
+                r.seconds,
+            ]);
+        }
+        b.push_f64s("rep_vals", &rep);
+        b.push_f64s("calib_seconds", &[self.calib_seconds]);
+        b
+    }
+
+    fn decode(b: &Blob) -> Result<QuantizedModel, Error> {
+        let n = b.meta_usize("layers")?;
+        let mut weights = Vec::with_capacity(n);
+        let mut biases = Vec::with_capacity(n);
+        for i in 0..n {
+            weights.push(b.tensor(&format!("w{i}"))?);
+            biases.push(b.tensor(&format!("b{i}"))?);
+        }
+        let aq = b
+            .meta("aq")
+            .and_then(Json::as_bool)
+            .ok_or_else(|| {
+                Error::Exec("quantized blob: missing 'aq' meta".into())
+            })?;
+        let names: Vec<String> = b
+            .meta("report_names")
+            .and_then(Json::as_arr)
+            .map(|a| {
+                a.iter()
+                    .filter_map(|v| v.as_str().map(str::to_string))
+                    .collect()
+            })
+            .unwrap_or_default();
+        let iters = b.usizes("rep_iters")?;
+        let vals = b.f64s("rep_vals")?;
+        if names.len() != iters.len() || vals.len() != names.len() * 4 {
+            return Err(Error::Exec(
+                "quantized blob: ragged report sections".into(),
+            ));
+        }
+        let reports: Vec<UnitReport> = names
+            .into_iter()
+            .enumerate()
+            .map(|(i, name)| UnitReport {
+                name,
+                initial_loss: vals[i * 4],
+                final_loss: vals[i * 4 + 1],
+                soft_fraction_before_commit: vals[i * 4 + 2],
+                iters: iters[i],
+                seconds: vals[i * 4 + 3],
+            })
+            .collect();
+        let calib_seconds =
+            *b.f64s("calib_seconds")?.first().ok_or_else(|| {
+                Error::Exec("quantized blob: empty calib_seconds".into())
+            })?;
+        Ok(QuantizedModel {
+            weights,
+            biases,
+            act_steps: b.f32s("act_steps")?,
+            bits: BitConfig {
+                wbits: b.usizes("wbits")?,
+                abits: b.usizes("abits")?,
+                aq,
+            },
+            reports,
+            calib_seconds,
+        })
+    }
+}
+
+impl Artifact for SearchResult {
+    const KIND: &'static str = "mp-search";
+
+    fn encode(&self) -> Blob {
+        let mut b = Blob::new(Self::KIND);
+        b.set_meta("evaluated", json::num(self.evaluated as f64));
+        b.push_u64s(
+            "wbits",
+            &self.wbits.iter().map(|&v| v as u64).collect::<Vec<_>>(),
+        );
+        b.push_f64s(
+            "vals",
+            &[self.predicted_loss, self.hw_cost, self.seconds],
+        );
+        b
+    }
+
+    fn decode(b: &Blob) -> Result<SearchResult, Error> {
+        let vals = b.f64s("vals")?;
+        if vals.len() != 3 {
+            return Err(Error::Exec(
+                "mp-search blob: bad 'vals' section".into(),
+            ));
+        }
+        Ok(SearchResult {
+            wbits: b.usizes("wbits")?,
+            predicted_loss: vals[0],
+            hw_cost: vals[1],
+            evaluated: b.meta_usize("evaluated")?,
+            seconds: vals[2],
+        })
+    }
+}
+
+/// Held-out evaluation score (top-1 accuracy or mAP) as a persistable
+/// artifact — the `Eval` stage's cache value.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalScore(pub f64);
+
+impl Artifact for EvalScore {
+    const KIND: &'static str = "eval-score";
+
+    fn encode(&self) -> Blob {
+        let mut b = Blob::new(Self::KIND);
+        b.push_f64s("score", &[self.0]);
+        b
+    }
+
+    fn decode(b: &Blob) -> Result<EvalScore, Error> {
+        Ok(EvalScore(*b.f64s("score")?.first().ok_or_else(|| {
+            Error::Exec("eval blob: empty score".into())
+        })?))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Cross-process advisory lock
+// ---------------------------------------------------------------------
+
+#[cfg(unix)]
+mod entry_lock {
+    use std::fs::{File, OpenOptions};
+    use std::io;
+    use std::os::unix::io::AsRawFd;
+    use std::path::Path;
+
+    const LOCK_EX: i32 = 2;
+
+    extern "C" {
+        fn flock(fd: i32, operation: i32) -> i32;
+    }
+
+    /// Held exclusive `flock(2)` on an entry's `.lock` file; released on
+    /// drop (closing the descriptor releases the lock).
+    #[derive(Debug)]
+    pub struct EntryLock {
+        _file: File,
+    }
+
+    pub fn acquire(path: &Path) -> io::Result<EntryLock> {
+        let file = OpenOptions::new()
+            .create(true)
+            .truncate(false)
+            .write(true)
+            .open(path)?;
+        loop {
+            let r = unsafe { flock(file.as_raw_fd(), LOCK_EX) };
+            if r == 0 {
+                return Ok(EntryLock { _file: file });
+            }
+            let e = io::Error::last_os_error();
+            if e.kind() != io::ErrorKind::Interrupted {
+                return Err(e);
+            }
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod entry_lock {
+    use std::fs::OpenOptions;
+    use std::io;
+    use std::path::{Path, PathBuf};
+
+    /// Fallback spin lock on `create_new` for platforms without flock;
+    /// a lock file older than 60s is considered stale (dead owner).
+    #[derive(Debug)]
+    pub struct EntryLock {
+        path: PathBuf,
+    }
+
+    impl Drop for EntryLock {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+
+    pub fn acquire(path: &Path) -> io::Result<EntryLock> {
+        let held = path.with_extension("lock.held");
+        loop {
+            match OpenOptions::new()
+                .create_new(true)
+                .write(true)
+                .open(&held)
+            {
+                Ok(_) => return Ok(EntryLock { path: held }),
+                Err(e) if e.kind() == io::ErrorKind::AlreadyExists => {
+                    if let Ok(meta) = std::fs::metadata(&held) {
+                        if let Ok(age) = meta
+                            .modified()
+                            .and_then(|m| {
+                                m.elapsed().map_err(|_| {
+                                    io::Error::other("clock skew")
+                                })
+                            })
+                        {
+                            if age.as_secs() > 60 {
+                                let _ = std::fs::remove_file(&held);
+                                continue;
+                            }
+                        }
+                    }
+                    std::thread::sleep(
+                        std::time::Duration::from_millis(10),
+                    );
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+pub use entry_lock::EntryLock;
+
+// ---------------------------------------------------------------------
+// The store
+// ---------------------------------------------------------------------
+
+/// Store counters. `hits`/`misses` are disk-level (the in-memory cache in
+/// front has its own); `corrupt` counts entries that failed key, length,
+/// checksum or schema verification (each one was deleted and recomputed);
+/// `publishes` counts entries written; `evicted` counts entries removed by
+/// the capacity sweep.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub corrupt: u64,
+    pub publishes: u64,
+    pub evicted: u64,
+}
+
+/// Content-addressed on-disk artifact store. Safe to share between any
+/// number of threads and processes pointing at the same directory.
+#[derive(Debug)]
+pub struct ArtifactStore {
+    dir: PathBuf,
+    cap_bytes: Option<u64>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    corrupt: AtomicU64,
+    publishes: AtomicU64,
+    evicted: AtomicU64,
+}
+
+impl ArtifactStore {
+    /// Open (creating if needed) a store rooted at `dir`, unbounded.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<ArtifactStore, Error> {
+        Self::open_with_cap(dir, None)
+    }
+
+    /// Open with a total-size cap in bytes: after each publish, oldest
+    /// entries are evicted until the store fits. Eviction can race a
+    /// concurrent reader in another process; the reader detects the
+    /// half-deleted entry via the corruption path and recomputes.
+    pub fn open_with_cap(
+        dir: impl Into<PathBuf>,
+        cap_bytes: Option<u64>,
+    ) -> Result<ArtifactStore, Error> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir).map_err(|e| {
+            Error::Exec(format!(
+                "creating artifact store at {}: {e}",
+                dir.display()
+            ))
+        })?;
+        Ok(ArtifactStore {
+            dir,
+            cap_bytes,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            corrupt: AtomicU64::new(0),
+            publishes: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            corrupt: self.corrupt.load(Ordering::Relaxed),
+            publishes: self.publishes.load(Ordering::Relaxed),
+            evicted: self.evicted.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Number of committed entries (published indexes) on disk.
+    pub fn len(&self) -> usize {
+        self.index_paths().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn entry_paths(&self, key: &str) -> (PathBuf, PathBuf) {
+        let h = key_hash(key);
+        (
+            self.dir.join(format!("{h}.json")),
+            self.dir.join(format!("{h}.bin")),
+        )
+    }
+
+    /// Exclusive cross-process lock for `key`'s entry. Hold it over the
+    /// whole load→compute→publish window for compute-once semantics.
+    pub fn lock(&self, key: &str) -> Result<EntryLock, Error> {
+        let path = self.dir.join(format!("{}.lock", key_hash(key)));
+        entry_lock::acquire(&path).map_err(|e| {
+            Error::Exec(format!(
+                "locking store entry for '{key}': {e}"
+            ))
+        })
+    }
+
+    /// Load the committed entry for `key`, verifying key, kind integrity,
+    /// payload length and checksum. Any verification failure deletes the
+    /// entry, bumps `corrupt` and reports a miss — a corrupt artifact is
+    /// never served.
+    pub fn load(&self, key: &str) -> Option<Blob> {
+        let (jp, bp) = self.entry_paths(key);
+        let text = match fs::read_to_string(&jp) {
+            Ok(t) => t,
+            Err(_) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+        };
+        match Self::verify_and_decode(key, &text, &bp) {
+            Ok(blob) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(blob)
+            }
+            Err(why) => {
+                self.discard_corrupt(key, &why);
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Count a corrupt entry and delete its files (also used by the cache
+    /// when a verified payload fails typed decode — schema drift).
+    pub(crate) fn discard_corrupt(&self, key: &str, why: &str) {
+        self.corrupt.fetch_add(1, Ordering::Relaxed);
+        eprintln!(
+            "[store] corrupt entry for '{key}' ({why}) — deleted, will \
+             recompute"
+        );
+        let (jp, bp) = self.entry_paths(key);
+        let _ = fs::remove_file(jp);
+        let _ = fs::remove_file(bp);
+    }
+
+    fn verify_and_decode(
+        key: &str,
+        index_text: &str,
+        bin_path: &Path,
+    ) -> Result<Blob, String> {
+        let idx = Json::parse(index_text)
+            .map_err(|e| format!("bad index JSON: {e}"))?;
+        if idx.get("v").and_then(Json::as_usize) != Some(1) {
+            return Err("unknown index version".into());
+        }
+        let stored_key = idx
+            .get("key")
+            .and_then(Json::as_str)
+            .ok_or("index missing 'key'")?;
+        if stored_key != key {
+            return Err(format!(
+                "key mismatch (entry holds '{stored_key}')"
+            ));
+        }
+        let bin_len = idx
+            .get("bin_len")
+            .and_then(Json::as_usize)
+            .ok_or("index missing 'bin_len'")?;
+        let want_sum = idx
+            .get("checksum")
+            .and_then(Json::as_str)
+            .and_then(|s| u64::from_str_radix(s, 16).ok())
+            .ok_or("index missing 'checksum'")?;
+        let bytes = fs::read(bin_path)
+            .map_err(|e| format!("payload unreadable: {e}"))?;
+        if bytes.len() != bin_len {
+            return Err(format!(
+                "payload truncated ({} of {bin_len} bytes)",
+                bytes.len()
+            ));
+        }
+        let got_sum = fnv64(&bytes);
+        if got_sum != want_sum {
+            return Err(format!(
+                "checksum mismatch ({got_sum:016x} != {want_sum:016x})"
+            ));
+        }
+        Blob::from_index(&idx, bytes)
+    }
+
+    /// Atomically publish `blob` under `key`: payload first, index last
+    /// (the rename of the index is the commit point). Safe against
+    /// readers in other processes at every intermediate state.
+    pub fn publish(&self, key: &str, blob: &Blob) -> Result<(), Error> {
+        let (jp, bp) = self.entry_paths(key);
+        let pid = std::process::id();
+        let io_err = |what: &str, e: std::io::Error| {
+            Error::Exec(format!("store publish '{key}' ({what}): {e}"))
+        };
+        let bin_tmp = bp.with_extension(format!("bin.tmp.{pid}"));
+        fs::write(&bin_tmp, &blob.bytes)
+            .map_err(|e| io_err("write payload", e))?;
+        fs::rename(&bin_tmp, &bp)
+            .map_err(|e| io_err("commit payload", e))?;
+        let json_tmp = jp.with_extension(format!("json.tmp.{pid}"));
+        fs::write(&json_tmp, blob.index_json(key).to_string())
+            .map_err(|e| io_err("write index", e))?;
+        fs::rename(&json_tmp, &jp)
+            .map_err(|e| io_err("commit index", e))?;
+        self.publishes.fetch_add(1, Ordering::Relaxed);
+        if self.cap_bytes.is_some() {
+            self.evict_to_cap(&jp);
+        }
+        Ok(())
+    }
+
+    fn index_paths(&self) -> Vec<PathBuf> {
+        let Ok(rd) = fs::read_dir(&self.dir) else { return Vec::new() };
+        let mut v: Vec<PathBuf> = rd
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.extension().map(|x| x == "json").unwrap_or(false)
+            })
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// Evict oldest entries (by index mtime, path as the deterministic
+    /// tie-break) until the store fits `cap_bytes`, never touching the
+    /// just-published `keep`.
+    fn evict_to_cap(&self, keep: &Path) {
+        let Some(cap) = self.cap_bytes else { return };
+        let mut entries: Vec<(std::time::SystemTime, PathBuf, u64)> =
+            Vec::new();
+        let mut total = 0u64;
+        for jp in self.index_paths() {
+            let bp = jp.with_extension("bin");
+            let jm = fs::metadata(&jp).ok();
+            let sz = jm.as_ref().map(|m| m.len()).unwrap_or(0)
+                + fs::metadata(&bp).map(|m| m.len()).unwrap_or(0);
+            let mtime = jm
+                .and_then(|m| m.modified().ok())
+                .unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+            total += sz;
+            entries.push((mtime, jp, sz));
+        }
+        entries.sort();
+        for (_, jp, sz) in entries {
+            if total <= cap {
+                break;
+            }
+            if jp == keep {
+                continue;
+            }
+            // index first (unpublish), then payload
+            let _ = fs::remove_file(&jp);
+            let _ = fs::remove_file(jp.with_extension("bin"));
+            total = total.saturating_sub(sz);
+            self.evicted.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "brecq-store-unit-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn blob_sections_round_trip_exact_bits() {
+        let mut b = Blob::new("test");
+        let t = Tensor::new(
+            vec![2, 3],
+            vec![1.0, -0.0, f32::MIN_POSITIVE, 3.5e-42, 1e30, -7.25],
+        );
+        b.push_tensor("t", &t);
+        b.push_f64s("d", &[0.1, -1e-300, 2f64.powi(-1074)]);
+        b.push_u64s("u", &[0, u64::MAX, 42]);
+        b.set_meta("n", json::num(3.0));
+
+        let store = ArtifactStore::open(tmp_dir("blob")).unwrap();
+        store.publish("k", &b).unwrap();
+        let back = store.load("k").expect("published entry loads");
+        assert_eq!(back.kind(), "test");
+        let bt = back.tensor("t").unwrap();
+        assert_eq!(bt.shape, t.shape);
+        let bits = |v: &[f32]| -> Vec<u32> {
+            v.iter().map(|x| x.to_bits()).collect()
+        };
+        assert_eq!(bits(&bt.data), bits(&t.data));
+        let d = back.f64s("d").unwrap();
+        assert_eq!(d[1].to_bits(), (-1e-300f64).to_bits());
+        assert_eq!(d[2].to_bits(), 2f64.powi(-1074).to_bits());
+        assert_eq!(back.u64s("u").unwrap(), vec![0, u64::MAX, 42]);
+        assert_eq!(back.meta("n").and_then(Json::as_usize), Some(3));
+        assert_eq!(
+            store.stats(),
+            StoreStats { hits: 1, publishes: 1, ..StoreStats::default() }
+        );
+        let _ = fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn missing_entry_is_a_miss_not_corruption() {
+        let store = ArtifactStore::open(tmp_dir("miss")).unwrap();
+        assert!(store.load("nope").is_none());
+        let s = store.stats();
+        assert_eq!((s.misses, s.corrupt), (1, 0));
+        let _ = fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn flipped_payload_byte_is_detected_and_discarded() {
+        let store = ArtifactStore::open(tmp_dir("corrupt")).unwrap();
+        let mut b = Blob::new("test");
+        b.push_f64s("x", &[1.0, 2.0, 3.0]);
+        store.publish("k", &b).unwrap();
+        let (_, bp) = store.entry_paths("k");
+        let mut bytes = fs::read(&bp).unwrap();
+        bytes[3] ^= 0x40;
+        fs::write(&bp, &bytes).unwrap();
+        assert!(store.load("k").is_none(), "corrupt entry served");
+        let s = store.stats();
+        assert_eq!(s.corrupt, 1);
+        // the entry was deleted: the next load is a clean miss
+        assert!(store.load("k").is_none());
+        assert_eq!(store.stats().corrupt, 1);
+        assert_eq!(store.len(), 0);
+        let _ = fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn truncated_index_is_detected() {
+        let store = ArtifactStore::open(tmp_dir("truncidx")).unwrap();
+        let mut b = Blob::new("test");
+        b.push_u64s("x", &[7]);
+        store.publish("k", &b).unwrap();
+        let (jp, _) = store.entry_paths("k");
+        let text = fs::read_to_string(&jp).unwrap();
+        fs::write(&jp, &text[..text.len() / 2]).unwrap();
+        assert!(store.load("k").is_none());
+        assert_eq!(store.stats().corrupt, 1);
+        let _ = fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn capacity_cap_evicts_oldest_entries() {
+        let store =
+            ArtifactStore::open_with_cap(tmp_dir("evict"), Some(4096))
+                .unwrap();
+        for i in 0..8 {
+            let mut b = Blob::new("test");
+            b.push_f64s("x", &vec![i as f64; 128]); // ~1KiB payload
+            store.publish(&format!("k{i}"), &b).unwrap();
+        }
+        assert!(store.stats().evicted > 0, "cap never evicted");
+        assert!(store.len() < 8);
+        // the most recent entry survives
+        assert!(store.load("k7").is_some());
+        let _ = fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn key_hash_is_stable_and_distinct() {
+        assert_eq!(key_hash("a"), key_hash("a"));
+        assert_ne!(key_hash("a"), key_hash("b"));
+        assert_eq!(key_hash("a").len(), 32);
+    }
+}

@@ -15,13 +15,106 @@
 //! the cache-hit tests pin down via backend dispatch accounting. Builders
 //! never re-enter the cache (dependencies are fetched *before* a slot is
 //! claimed), so slot locks are never nested and cannot deadlock.
+//!
+//! Persistence: a cache can be layered over an on-disk
+//! [`ArtifactStore`](super::artifact_store::ArtifactStore) via
+//! [`ArtifactCache::with_store`]. [`ArtifactCache::get_or_build`] then
+//! resolves a miss from disk before computing, and publishes what it
+//! computes — while holding the store's cross-process entry lock, so of N
+//! *processes* racing a cold key exactly one computes. Memory-only values
+//! (datasets, distilled batches) keep using
+//! [`ArtifactCache::get_or_try_insert`] and are counted as
+//! [`Outcome::Loaded`], not computes: a warm-store replay reports zero
+//! computes even though it re-reads datasets from the manifest.
 
 use std::any::Any;
-use std::collections::HashMap;
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
+use super::artifact_store::{Artifact, ArtifactStore};
 use super::Error;
+
+/// How a cache request was satisfied. Streamed per key to `serve`
+/// clients and aggregated into [`SlotStats`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Served from this process's memory.
+    Hit,
+    /// Loaded from the on-disk artifact store (no backend work).
+    StoreHit,
+    /// Built by running the stage computation.
+    Computed,
+    /// Built in memory from local inputs (datasets, distilled batches)
+    /// — backend-free, so not counted as a compute.
+    Loaded,
+}
+
+impl Outcome {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Outcome::Hit => "hit",
+            Outcome::StoreHit => "store-hit",
+            Outcome::Computed => "computed",
+            Outcome::Loaded => "loaded",
+        }
+    }
+}
+
+/// Per-key tally of [`Outcome`]s, surfaced by `brecq run --stats`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SlotStats {
+    pub hits: usize,
+    pub store_hits: usize,
+    pub computes: usize,
+    pub loads: usize,
+}
+
+impl SlotStats {
+    fn bump(&mut self, o: Outcome) {
+        match o {
+            Outcome::Hit => self.hits += 1,
+            Outcome::StoreHit => self.store_hits += 1,
+            Outcome::Computed => self.computes += 1,
+            Outcome::Loaded => self.loads += 1,
+        }
+    }
+}
+
+thread_local! {
+    /// Per-thread outcome trace: when armed (by `Session::run_traced`),
+    /// every cache request on this thread records (key, outcome) so the
+    /// daemon can attribute cache events to the job that triggered them.
+    static TRACE: RefCell<Option<Vec<(String, Outcome)>>> =
+        const { RefCell::new(None) };
+}
+
+/// Arm the calling thread's outcome trace (drops any previous one).
+pub(crate) fn trace_begin() {
+    TRACE.with(|t| *t.borrow_mut() = Some(Vec::new()));
+}
+
+/// Take the outcomes recorded since the last drain, leaving the trace
+/// armed. No-op (empty) on an unarmed thread.
+pub(crate) fn trace_drain() -> Vec<(String, Outcome)> {
+    TRACE.with(|t| {
+        t.borrow_mut().as_mut().map(std::mem::take).unwrap_or_default()
+    })
+}
+
+/// Disarm the calling thread's trace, returning anything undrained.
+pub(crate) fn trace_end() -> Vec<(String, Outcome)> {
+    TRACE.with(|t| t.borrow_mut().take().unwrap_or_default())
+}
+
+fn trace_push(key: &str, o: Outcome) {
+    TRACE.with(|t| {
+        if let Some(v) = t.borrow_mut().as_mut() {
+            v.push((key.to_string(), o));
+        }
+    });
+}
 
 /// One cache slot: the artifact, type-erased. The slot-level mutex is the
 /// compute-once serialization point for that key.
@@ -35,6 +128,10 @@ pub struct ArtifactCache {
     slots: Mutex<HashMap<String, Arc<Slot>>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
+    computes: AtomicUsize,
+    store_hits: AtomicUsize,
+    per_key: Mutex<BTreeMap<String, SlotStats>>,
+    store: Option<Arc<ArtifactStore>>,
 }
 
 impl ArtifactCache {
@@ -42,39 +139,149 @@ impl ArtifactCache {
         ArtifactCache::default()
     }
 
+    /// A cache persisting its [`Artifact`]-typed slots to `store`.
+    pub fn with_store(store: Arc<ArtifactStore>) -> ArtifactCache {
+        ArtifactCache { store: Some(store), ..ArtifactCache::default() }
+    }
+
+    /// The on-disk layer, if this cache has one.
+    pub fn store(&self) -> Option<&Arc<ArtifactStore>> {
+        self.store.as_ref()
+    }
+
+    fn record(&self, key: &str, o: Outcome) {
+        let mut per_key =
+            self.per_key.lock().unwrap_or_else(|e| e.into_inner());
+        per_key.entry(key.to_string()).or_default().bump(o);
+        drop(per_key);
+        trace_push(key, o);
+    }
+
+    fn claim_slot(&self, key: &str) -> Arc<Slot> {
+        let mut slots =
+            self.slots.lock().unwrap_or_else(|e| e.into_inner());
+        slots
+            .entry(key.to_string())
+            .or_insert_with(|| Arc::new(Slot { value: Mutex::new(None) }))
+            .clone()
+    }
+
+    fn typed<T: Any + Send + Sync>(
+        key: &str,
+        v: Arc<dyn Any + Send + Sync>,
+    ) -> Result<Arc<T>, Error> {
+        v.downcast::<T>().map_err(|_| {
+            Error::Spec(format!(
+                "artifact cache type mismatch for key '{key}'"
+            ))
+        })
+    }
+
     /// Fetch the artifact under `key`, building it with `build` on the
     /// first request. Concurrent requests for the same key block on the
     /// slot and observe the first builder's value. A failed build leaves
-    /// the slot empty, so a later request retries.
+    /// the slot empty, so a later request retries. Memory-only: the value
+    /// never touches the store, and a build counts as [`Outcome::Loaded`].
     pub fn get_or_try_insert<T, F>(&self, key: &str, build: F)
         -> Result<Arc<T>, Error>
     where
         T: Any + Send + Sync,
         F: FnOnce() -> Result<T, Error>,
     {
-        let slot = {
-            let mut slots =
-                self.slots.lock().unwrap_or_else(|e| e.into_inner());
-            slots
-                .entry(key.to_string())
-                .or_insert_with(|| {
-                    Arc::new(Slot { value: Mutex::new(None) })
-                })
-                .clone()
-        };
+        let slot = self.claim_slot(key);
         let mut value =
             slot.value.lock().unwrap_or_else(|e| e.into_inner());
         if let Some(v) = value.as_ref() {
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return v.clone().downcast::<T>().map_err(|_| {
-                Error::Spec(format!(
-                    "artifact cache type mismatch for key '{key}'"
-                ))
-            });
+            self.record(key, Outcome::Hit);
+            return Self::typed(key, v.clone());
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let built = Arc::new(build()?);
         *value = Some(built.clone());
+        self.record(key, Outcome::Loaded);
+        Ok(built)
+    }
+
+    /// Like [`Self::get_or_try_insert`], but for persistable artifacts:
+    /// a memory miss first tries the on-disk store (under the store's
+    /// cross-process entry lock), and a computed value is published back.
+    /// Without a store this degrades to the memory path, except the build
+    /// counts as a real [`Outcome::Computed`].
+    pub fn get_or_build<T, F>(&self, key: &str, build: F)
+        -> Result<Arc<T>, Error>
+    where
+        T: Artifact + Any,
+        F: FnOnce() -> Result<T, Error>,
+    {
+        let slot = self.claim_slot(key);
+        let mut value =
+            slot.value.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(v) = value.as_ref() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            self.record(key, Outcome::Hit);
+            return Self::typed(key, v.clone());
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+
+        // Hold the cross-process lock over load→compute→publish so that
+        // of N processes racing this cold key, exactly one computes. A
+        // lock failure (exotic filesystem) degrades to computing without
+        // compute-once across processes — still correct, just slower.
+        let guard = match &self.store {
+            Some(st) => match st.lock(key) {
+                Ok(g) => Some(g),
+                Err(e) => {
+                    eprintln!("[store] {e}; continuing unlocked");
+                    None
+                }
+            },
+            None => None,
+        };
+
+        if let Some(st) = &self.store {
+            if let Some(blob) = st.load(key) {
+                if blob.kind() == T::KIND {
+                    match T::decode(&blob) {
+                        Ok(v) => {
+                            let built = Arc::new(v);
+                            *value = Some(built.clone());
+                            self.store_hits
+                                .fetch_add(1, Ordering::Relaxed);
+                            self.record(key, Outcome::StoreHit);
+                            drop(guard);
+                            return Ok(built);
+                        }
+                        Err(e) => st.discard_corrupt(
+                            key,
+                            &format!("decode failed: {e}"),
+                        ),
+                    }
+                } else {
+                    st.discard_corrupt(
+                        key,
+                        &format!(
+                            "kind mismatch ('{}' != '{}')",
+                            blob.kind(),
+                            T::KIND
+                        ),
+                    );
+                }
+            }
+        }
+
+        let built = Arc::new(build()?);
+        if let Some(st) = &self.store {
+            // A publish failure (disk full, permissions) must not kill
+            // the job — the artifact is in memory and correct.
+            if let Err(e) = st.publish(key, &built.encode()) {
+                eprintln!("[store] {e}; artifact kept in memory only");
+            }
+        }
+        drop(guard);
+        *value = Some(built.clone());
+        self.computes.fetch_add(1, Ordering::Relaxed);
+        self.record(key, Outcome::Computed);
         Ok(built)
     }
 
@@ -84,6 +291,28 @@ impl ArtifactCache {
             self.hits.load(Ordering::Relaxed),
             self.misses.load(Ordering::Relaxed),
         )
+    }
+
+    /// Stage computations actually run (misses neither in memory nor on
+    /// disk, excluding memory-only loads). Zero across a warm-store
+    /// replay — the acceptance criterion `serve` asserts in CI.
+    pub fn computes(&self) -> usize {
+        self.computes.load(Ordering::Relaxed)
+    }
+
+    /// Memory misses resolved from the on-disk store.
+    pub fn store_hits(&self) -> usize {
+        self.store_hits.load(Ordering::Relaxed)
+    }
+
+    /// Per-key outcome tallies, sorted by key (`brecq run --stats`).
+    pub fn per_key_stats(&self) -> Vec<(String, SlotStats)> {
+        self.per_key
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .map(|(k, s)| (k.clone(), *s))
+            .collect()
     }
 
     /// Number of populated or in-flight keys.
@@ -161,5 +390,38 @@ mod tests {
             }
         });
         assert_eq!(built.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn memory_only_builds_are_loads_not_computes() {
+        let c = ArtifactCache::new();
+        let _: Arc<u32> = c.get_or_try_insert("k", || Ok(1)).unwrap();
+        let _: Arc<u32> = c.get_or_try_insert("k", || Ok(1)).unwrap();
+        assert_eq!(c.computes(), 0);
+        let per = c.per_key_stats();
+        assert_eq!(per.len(), 1);
+        assert_eq!(
+            per[0].1,
+            SlotStats { hits: 1, loads: 1, ..SlotStats::default() }
+        );
+    }
+
+    #[test]
+    fn trace_records_outcomes_per_thread() {
+        let c = ArtifactCache::new();
+        trace_begin();
+        let _: Arc<u32> = c.get_or_try_insert("k", || Ok(1)).unwrap();
+        let _: Arc<u32> = c.get_or_try_insert("k", || Ok(1)).unwrap();
+        let events = trace_end();
+        assert_eq!(
+            events,
+            vec![
+                ("k".to_string(), Outcome::Loaded),
+                ("k".to_string(), Outcome::Hit),
+            ]
+        );
+        // a disarmed thread records nothing
+        let _: Arc<u32> = c.get_or_try_insert("k2", || Ok(2)).unwrap();
+        assert!(trace_end().is_empty());
     }
 }

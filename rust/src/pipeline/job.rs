@@ -13,6 +13,15 @@
 //! executes jobs concurrently on [`crate::util::pool`], returns results
 //! bit-identical to running the same specs sequentially, at any thread
 //! count. `rust/tests/pipeline.rs` enforces this bitwise.
+//!
+//! Persistence: [`Session::with_store`] layers the cache over an on-disk
+//! [`ArtifactStore`]. Every backend-touching stage artifact (FP weights,
+//! calibration subsets, sensitivity LUTs, reconstructions, GA results,
+//! eval scores) then persists under its cache key, and a warm-store
+//! session replays a job bit-identically with *zero* backend dispatches
+//! — the cheap memory-only values (dataset splits) rebuild from the
+//! manifest without touching the backend. `rust/tests/qaas.rs` pins both
+//! properties via [`JobOutput::fingerprint`] and dispatch accounting.
 
 use std::sync::Arc;
 
@@ -26,9 +35,11 @@ use crate::mp::{GaConfig, GeneticSearch, SearchResult};
 use crate::recon::{BitConfig, Calibrator, QuantizedModel, ReconConfig,
                    UnitReport};
 use crate::sensitivity::{Profiler, SensitivityTable};
+use crate::util::json::{self, Json};
 use crate::util::pool;
 
-use super::cache::ArtifactCache;
+use super::artifact_store::{fnv64, ArtifactStore, EvalScore};
+use super::cache::{self, ArtifactCache, Outcome};
 use super::{hw_report, DataSource, Error, HwBudget, HwReport, JobSpec,
             Method};
 
@@ -37,6 +48,16 @@ use super::{hw_report, DataSource, Error, HwBudget, HwReport, JobSpec,
 pub struct FpWeights {
     pub ws: Vec<crate::tensor::Tensor>,
     pub bs: Vec<crate::tensor::Tensor>,
+}
+
+/// Typed progress event emitted by [`Session::run_traced`] — what the
+/// `serve` daemon streams to its clients while a job runs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JobEvent {
+    /// A DAG stage started (`done: false`) or finished (`done: true`).
+    Stage { stage: &'static str, done: bool },
+    /// A cache request this job triggered, and how it was satisfied.
+    Cache { key: String, outcome: Outcome },
 }
 
 /// Everything a finished job produced. Heavyweight artifacts that later
@@ -93,6 +114,110 @@ impl JobOutput {
         };
         format!("W{w}A{a}")
     }
+
+    /// FNV-1a 64 over every result-bearing bit of this output — spec
+    /// bits, quantized weights/biases/steps, scores, search and hw
+    /// numbers — excluding wall-clock timing. Two runs of the same spec
+    /// are bit-identical iff their fingerprints agree, which is how the
+    /// serve smoke test and the warm-replay tests compare results across
+    /// processes without shipping tensors as text.
+    pub fn fingerprint(&self) -> u64 {
+        let mut bytes: Vec<u8> = Vec::new();
+        let push_u64 = |bytes: &mut Vec<u8>, v: u64| {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        };
+        let push_f64 = |bytes: &mut Vec<u8>, v: f64| {
+            bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+        };
+        push_f64(&mut bytes, self.fp_acc);
+        for &w in &self.wbits {
+            push_u64(&mut bytes, w as u64);
+        }
+        push_f64(&mut bytes, self.accuracy.unwrap_or(f64::NEG_INFINITY));
+        if let Some(s) = &self.search {
+            for &w in &s.wbits {
+                push_u64(&mut bytes, w as u64);
+            }
+            push_f64(&mut bytes, s.predicted_loss);
+            push_f64(&mut bytes, s.hw_cost);
+        }
+        if let Some(h) = &self.hw {
+            push_f64(&mut bytes, h.size_mb);
+            push_f64(&mut bytes, h.fpga_ms);
+            push_f64(&mut bytes, h.arm_ms.unwrap_or(f64::NEG_INFINITY));
+        }
+        if let Some(q) = &self.quantized {
+            for t in q.weights.iter().chain(q.biases.iter()) {
+                for &v in &t.data {
+                    bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+                }
+            }
+            for &s in &q.act_steps {
+                bytes.extend_from_slice(&s.to_bits().to_le_bytes());
+            }
+            for &b in q.bits.wbits.iter().chain(q.bits.abits.iter()) {
+                push_u64(&mut bytes, b as u64);
+            }
+            for r in &q.reports {
+                push_f64(&mut bytes, r.initial_loss);
+                push_f64(&mut bytes, r.final_loss);
+                push_f64(&mut bytes, r.soft_fraction_before_commit);
+                push_u64(&mut bytes, r.iters as u64);
+            }
+        }
+        fnv64(&bytes)
+    }
+
+    /// Result summary as JSON (`brecq run --json`, serve results). All
+    /// bit-level comparisons go through the hex `fingerprint` field —
+    /// the f64 summary numbers here are for humans and dashboards.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("model", json::s(&self.spec.model)),
+            ("method", json::s(self.spec.method.as_str())),
+            ("bits", json::s(&self.bits_label())),
+            (
+                "wbits",
+                Json::Arr(
+                    self.wbits.iter().map(|&w| json::num(w as f64))
+                        .collect(),
+                ),
+            ),
+            ("fp_acc", json::num(self.fp_acc)),
+            ("seconds", json::num(self.seconds)),
+            (
+                "fingerprint",
+                json::s(&format!("{:016x}", self.fingerprint())),
+            ),
+        ];
+        if let Some(a) = self.accuracy {
+            fields.push(("accuracy", json::num(a)));
+        }
+        if let Some(s) = &self.search {
+            fields.push(("search_hw_cost", json::num(s.hw_cost)));
+            fields.push((
+                "search_predicted_loss",
+                json::num(s.predicted_loss),
+            ));
+        }
+        if let Some(h) = &self.hw {
+            fields.push(("size_mb", json::num(h.size_mb)));
+            fields.push(("fpga_ms", json::num(h.fpga_ms)));
+            if let Some(ms) = h.arm_ms {
+                fields.push(("arm_ms", json::num(ms)));
+            }
+        }
+        json::obj(fields)
+    }
+}
+
+/// Disarms the thread's cache trace even on an early `?` return.
+struct TraceGuard;
+
+impl Drop for TraceGuard {
+    fn drop(&mut self) {
+        let _ = cache::trace_end();
+    }
 }
 
 /// A PTQ session: one environment, one artifact cache, any number of
@@ -105,6 +230,13 @@ pub struct Session {
 impl Session {
     pub fn new(env: Env) -> Session {
         Session { env, cache: ArtifactCache::new() }
+    }
+
+    /// A session whose cache persists artifacts to `store`, sharing them
+    /// with every other session (past, present, concurrent) on the same
+    /// store directory.
+    pub fn with_store(env: Env, store: Arc<ArtifactStore>) -> Session {
+        Session { env, cache: ArtifactCache::with_store(store) }
     }
 
     pub fn env(&self) -> &Env {
@@ -149,6 +281,8 @@ impl Session {
     }
 
     /// Train split of the dataset `model` consumes (cached per dataset).
+    /// Memory-only: splits are cheap, backend-free rebuilds from the
+    /// manifest, so persisting them would only bloat the store.
     pub fn train_set_for(&self, model: &str) -> Result<Arc<DataSet>, Error> {
         let mi = self.model(model)?;
         let key = format!("dataset/{}train", Self::dataset_id(mi));
@@ -167,11 +301,11 @@ impl Session {
     }
 
     /// `FpWeights` stage: deploy weights in model order, loaded once per
-    /// model per session.
+    /// model per session and persisted to the store.
     pub fn fp_weights(&self, model: &str) -> Result<Arc<FpWeights>, Error> {
         let mi = self.model(model)?;
         let key = format!("fp/{model}");
-        self.cache.get_or_try_insert(&key, || {
+        self.cache.get_or_build(&key, || {
             let cal = Calibrator::new(&self.env.rt, &self.env.mf, mi);
             let (ws, bs) = cal.fp_weights()?;
             Ok(FpWeights { ws, bs })
@@ -197,7 +331,7 @@ impl Session {
                     "calib/{}train/{n}/{seed}",
                     Self::dataset_id(mi)
                 );
-                self.cache.get_or_try_insert(&key, || {
+                self.cache.get_or_build(&key, || {
                     Ok(self.env.calib(&train, n, seed))
                 })
             }
@@ -225,7 +359,7 @@ impl Session {
             "distill/{model}/{}/{}/{}/{}",
             cfg.total, cfg.iters, cfg.seed, cfg.lr
         );
-        self.cache.get_or_try_insert(&key, || {
+        self.cache.get_or_build(&key, || {
             distill::distill(&self.env.rt, &self.env.mf, mi, cfg)
                 .map_err(Error::from)
         })
@@ -248,7 +382,7 @@ impl Session {
             "sens/{model}/{}/{calib_n}/{seed}",
             source.as_str()
         );
-        self.cache.get_or_try_insert(&key, || {
+        self.cache.get_or_build(&key, || {
             let prof =
                 Profiler { rt: &self.env.rt, mf: &self.env.mf, model: mi };
             prof.measure(&calib, &fpw.ws, &fpw.bs, true)
@@ -281,10 +415,74 @@ impl Session {
             .expect("a search job always produces a search result"))
     }
 
+    // ---- persistent cache keys ------------------------------------------
+
+    /// Order-sensitive digest of a bit assignment, folded into recon and
+    /// eval keys (binary, not text — assignments can be hundreds of
+    /// layers).
+    fn bits_digest(bits: &BitConfig) -> u64 {
+        let mut bytes = Vec::with_capacity(
+            (bits.wbits.len() + bits.abits.len()) * 8 + 1,
+        );
+        for &b in &bits.wbits {
+            bytes.extend_from_slice(&(b as u64).to_le_bytes());
+        }
+        for &b in &bits.abits {
+            bytes.extend_from_slice(&(b as u64).to_le_bytes());
+        }
+        bytes.push(bits.aq as u8);
+        fnv64(&bytes)
+    }
+
+    /// Reconstruction cache key. The granularity component is the one the
+    /// method *actually uses* (baselines pin their own), so e.g. an
+    /// AdaRound job keyed under the spec's default granularity can never
+    /// collide with a BRECQ run.
+    fn recon_key(&self, spec: &JobSpec, bits: &BitConfig) -> String {
+        let gran = match spec.method {
+            Method::Brecq => spec.gran.as_str(),
+            Method::AdaRoundLayer
+            | Method::AdaQuantLike => "layer",
+            Method::Omse | Method::BiasCorr => "none",
+            Method::Fp => unreachable!("Fp has no Reconstruct stage"),
+        };
+        format!(
+            "recon/{}/{}/{gran}/{}/{}/{}/{}/{:016x}",
+            spec.model,
+            spec.method.as_str(),
+            spec.iters,
+            spec.calib_n,
+            spec.seed,
+            spec.source.as_str(),
+            Self::bits_digest(bits)
+        )
+    }
+
     // ---- job execution ---------------------------------------------------
 
     /// Execute one job through its stage DAG.
     pub fn run(&self, spec: &JobSpec) -> Result<JobOutput, Error> {
+        self.run_inner(spec, &mut |_| {})
+    }
+
+    /// [`Session::run`] with typed progress events: stage boundaries plus
+    /// the cache outcomes each stage triggered on this thread. The serve
+    /// daemon forwards these to clients as they happen.
+    pub fn run_traced(
+        &self,
+        spec: &JobSpec,
+        emit: &mut dyn FnMut(JobEvent),
+    ) -> Result<JobOutput, Error> {
+        cache::trace_begin();
+        let _guard = TraceGuard;
+        self.run_inner(spec, emit)
+    }
+
+    fn run_inner(
+        &self,
+        spec: &JobSpec,
+        emit: &mut dyn FnMut(JobEvent),
+    ) -> Result<JobOutput, Error> {
         let t0 = std::time::Instant::now();
         let model = self.model(&spec.model)?;
         spec.validate(model)?;
@@ -296,16 +494,32 @@ impl Session {
                 spec.describe_stages()
             );
         }
+        // Emits Stage start/finish around `body`, attributing any cache
+        // outcomes recorded on this thread since the previous boundary.
+        macro_rules! stage {
+            ($name:expr, $body:expr) => {{
+                emit(JobEvent::Stage { stage: $name, done: false });
+                let r = $body;
+                for (key, outcome) in cache::trace_drain() {
+                    emit(JobEvent::Cache { key, outcome });
+                }
+                emit(JobEvent::Stage { stage: $name, done: true });
+                r
+            }};
+        }
 
         // FpWeights
-        let fpw = self.fp_weights(&spec.model)?;
+        let fpw = stage!("fp-weights", self.fp_weights(&spec.model))?;
         // Calib
         let calib = if spec.needs_calib() {
-            Some(self.calib_set(
-                &spec.model,
-                spec.source,
-                spec.calib_n,
-                spec.seed,
+            Some(stage!(
+                "calib",
+                self.calib_set(
+                    &spec.model,
+                    spec.source,
+                    spec.calib_n,
+                    spec.seed,
+                )
             )?)
         } else {
             None
@@ -313,7 +527,10 @@ impl Session {
         // Sensitivity + MpSearch
         let ga_abits = spec.abits.unwrap_or(8);
         let search = match &spec.search {
-            Some(hb) => Some(self.search_stage(model, spec, hb, ga_abits)?),
+            Some(hb) => Some(stage!(
+                "mp-search",
+                self.search_stage(model, spec, hb, ga_abits)
+            )?),
             None => None,
         };
         // bit assignment: GA result, the uniform policy, or — for an Fp
@@ -343,29 +560,28 @@ impl Session {
             let calib = calib
                 .as_ref()
                 .expect("reconstruction always has a calibration set");
-            Some(self.reconstruct(model, spec, calib, &bits)?)
+            Some(stage!(
+                "reconstruct",
+                self.reconstruct(model, spec, calib, &bits)
+            )?)
         };
         // Eval: top-1 accuracy for classification models, mAP for the
         // detection family — both on the model's own held-out test set
         let acc = if spec.eval {
-            let test = self.test_set_for(&spec.model)?;
-            let p = match &quantized {
-                Some(qm) => EvalParams::quantized(qm),
-                None => EvalParams::fp(model, &fpw.ws, &fpw.bs),
-            };
-            let a = match &model.det {
-                Some(det) => {
-                    map_score(&self.env.rt, model, det, &p, &test)?
-                }
-                None => accuracy(&self.env.rt, model, &p, &test)?,
-            };
+            let a = stage!(
+                "eval",
+                self.eval_stage(model, spec, &fpw, &quantized, &bits)
+            )?;
             Some(a)
         } else {
             None
         };
         // HwReport
         let hw = if spec.hw_report {
-            Some(hw_report(model, &bits.wbits, ga_abits))
+            Some(stage!(
+                "hw-report",
+                hw_report(model, &bits.wbits, ga_abits)
+            ))
         } else {
             None
         };
@@ -377,7 +593,7 @@ impl Session {
             accuracy: acc,
             search,
             hw,
-            quantized,
+            quantized: quantized.map(|q| (*q).clone()),
             seconds: t0.elapsed().as_secs_f64(),
         })
     }
@@ -399,73 +615,142 @@ impl Session {
         hb: &HwBudget,
         abits: usize,
     ) -> Result<SearchResult, Error> {
+        // prefetched so the builder below never re-enters the cache
         let table = self.sensitivity(
             &spec.model,
             spec.source,
             spec.calib_n,
             spec.seed,
         )?;
-        let measurer = hb.hw.measurer();
-        let budget = hb.resolve(model, measurer.as_ref(), abits);
-        let ga = GeneticSearch {
-            model,
-            table: &table,
-            hw: measurer.as_ref(),
-            abits,
-            budget,
-        };
-        Ok(ga.run(&GaConfig { seed: spec.seed, ..GaConfig::default() })?)
+        let key = format!(
+            "mp/{}/{}/{}/{}/{}/{:016x}/{}/{abits}",
+            spec.model,
+            spec.source.as_str(),
+            spec.calib_n,
+            spec.seed,
+            hb.hw.as_str(),
+            hb.budget.to_bits(),
+            hb.relative as u8,
+        );
+        let res = self.cache.get_or_build(&key, || {
+            let measurer = hb.hw.measurer();
+            let budget = hb.resolve(model, measurer.as_ref(), abits);
+            let ga = GeneticSearch {
+                model,
+                table: &table,
+                hw: measurer.as_ref(),
+                abits,
+                budget,
+            };
+            Ok(ga.run(&GaConfig {
+                seed: spec.seed,
+                ..GaConfig::default()
+            })?)
+        })?;
+        Ok((*res).clone())
     }
 
-    /// `Reconstruct` stage: method dispatch over the shared engine. BRECQ
-    /// honors the spec's granularity directly — there is no special-cased
-    /// non-block path anymore.
+    /// `Reconstruct` stage: method dispatch over the shared engine,
+    /// persisted under [`Session::recon_key`]. BRECQ honors the spec's
+    /// granularity directly — there is no special-cased non-block path
+    /// anymore.
     fn reconstruct(
         &self,
         model: &ModelInfo,
         spec: &JobSpec,
         calib: &CalibSet,
         bits: &BitConfig,
-    ) -> Result<QuantizedModel, Error> {
-        let cal = Calibrator::new(&self.env.rt, &self.env.mf, model);
-        let base = ReconConfig {
-            iters: spec.iters,
-            seed: spec.seed,
-            verbose: spec.verbose,
-            ..ReconConfig::default()
+    ) -> Result<Arc<QuantizedModel>, Error> {
+        let key = self.recon_key(spec, bits);
+        self.cache.get_or_build(&key, || {
+            let cal = Calibrator::new(&self.env.rt, &self.env.mf, model);
+            let base = ReconConfig {
+                iters: spec.iters,
+                seed: spec.seed,
+                verbose: spec.verbose,
+                ..ReconConfig::default()
+            };
+            let qm = match spec.method {
+                Method::Fp => {
+                    unreachable!("Fp skips the Reconstruct stage")
+                }
+                Method::Brecq => cal.calibrate(
+                    calib,
+                    bits,
+                    &baselines::brecq_cfg(&base, spec.gran.as_str()),
+                )?,
+                Method::AdaRoundLayer => cal.calibrate(
+                    calib,
+                    bits,
+                    &baselines::adaround_layer_cfg(&base),
+                )?,
+                Method::AdaQuantLike => cal.calibrate(
+                    calib,
+                    bits,
+                    &baselines::adaquant_like_cfg(&base),
+                )?,
+                Method::Omse => baselines::omse(
+                    &self.env.rt,
+                    &self.env.mf,
+                    model,
+                    calib,
+                    bits,
+                )?,
+                Method::BiasCorr => baselines::bias_correction(
+                    &self.env.rt,
+                    &self.env.mf,
+                    model,
+                    calib,
+                    bits,
+                )?,
+            };
+            Ok(qm)
+        })
+    }
+
+    /// `Eval` stage: held-out score, persisted so a warm replay never
+    /// re-runs the forward pass. Quantized evals key off the recon key
+    /// (whose bits digest pins the exact assignment); FP evals are per
+    /// model. The NMS flag is part of the key — it changes the score.
+    fn eval_stage(
+        &self,
+        model: &ModelInfo,
+        spec: &JobSpec,
+        fpw: &FpWeights,
+        quantized: &Option<Arc<QuantizedModel>>,
+        bits: &BitConfig,
+    ) -> Result<f64, Error> {
+        // prefetched so the builder below never re-enters the cache
+        let test = self.test_set_for(&spec.model)?;
+        let key = match quantized {
+            Some(_) => format!(
+                "{}/eval/nms{}",
+                self.recon_key(spec, bits),
+                spec.det_nms as u8
+            ),
+            None => format!(
+                "eval/fp/{}/nms{}",
+                spec.model, spec.det_nms as u8
+            ),
         };
-        let qm = match spec.method {
-            Method::Fp => unreachable!("Fp skips the Reconstruct stage"),
-            Method::Brecq => cal.calibrate(
-                calib,
-                bits,
-                &baselines::brecq_cfg(&base, spec.gran.as_str()),
-            )?,
-            Method::AdaRoundLayer => cal.calibrate(
-                calib,
-                bits,
-                &baselines::adaround_layer_cfg(&base),
-            )?,
-            Method::AdaQuantLike => cal.calibrate(
-                calib,
-                bits,
-                &baselines::adaquant_like_cfg(&base),
-            )?,
-            Method::Omse => baselines::omse(
-                &self.env.rt,
-                &self.env.mf,
-                model,
-                calib,
-                bits,
-            )?,
-            Method::BiasCorr => baselines::bias_correction(
-                &self.env.rt,
-                &self.env.mf,
-                model,
-                calib,
-                bits,
-            )?,
-        };
-        Ok(qm)
+        let score = self.cache.get_or_build(&key, || {
+            let p = match quantized {
+                Some(qm) => EvalParams::quantized(qm),
+                None => EvalParams::fp(model, &fpw.ws, &fpw.bs),
+            };
+            let a = match &model.det {
+                Some(det) => map_score(
+                    &self.env.rt,
+                    model,
+                    det,
+                    &p,
+                    &test,
+                    spec.det_nms,
+                )?,
+                None => accuracy(&self.env.rt, model, &p, &test)?,
+            };
+            Ok(EvalScore(a))
+        })?;
+        Ok(score.0)
     }
 }

@@ -25,14 +25,25 @@
 //! hardware targets and data sources are distinct variants, not ad-hoc
 //! strings.
 //!
+//! Persistence and serving: [`artifact_store`] is the content-addressed
+//! on-disk layer under the cache ([`Session::with_store`]) — distinct
+//! from [`crate::store`], which only *reads* the build-time python-ABI
+//! tensor files — and [`serve`] is the `brecq serve` job daemon speaking
+//! newline-delimited JSON over a unix socket.
+//!
 //! See DESIGN.md (repo root) for the module inventory and the full DAG
 //! discussion.
 
+pub mod artifact_store;
 pub mod cache;
 pub mod job;
+#[cfg(unix)]
+pub mod serve;
 
-pub use cache::ArtifactCache;
-pub use job::{FpWeights, JobOutput, Session};
+pub use artifact_store::{Artifact, ArtifactStore, Blob, EvalScore,
+                         StoreStats};
+pub use cache::{ArtifactCache, Outcome, SlotStats};
+pub use job::{FpWeights, JobEvent, JobOutput, Session};
 
 use std::fmt;
 
@@ -325,6 +336,9 @@ pub struct JobSpec {
     pub eval: bool,
     /// Attach a size/latency report for the final bit assignment.
     pub hw_report: bool,
+    /// Greedy NMS (IoU 0.5) in the detection eval. Default off so the
+    /// table5 baselines are unchanged; no effect on classification.
+    pub det_nms: bool,
     pub verbose: bool,
 }
 
@@ -344,6 +358,7 @@ impl Default for JobSpec {
             search: None,
             eval: true,
             hw_report: false,
+            det_nms: false,
             verbose: false,
         }
     }
@@ -498,6 +513,7 @@ impl JobSpec {
             ("search", search),
             ("eval", json::b(self.eval)),
             ("hw_report", json::b(self.hw_report)),
+            ("det_nms", json::b(self.det_nms)),
             ("verbose", json::b(self.verbose)),
         ])
     }
@@ -509,10 +525,10 @@ impl JobSpec {
         let o = v.as_obj().ok_or_else(|| {
             Error::Spec("job must be a JSON object".into())
         })?;
-        const KEYS: [&str; 14] = [
+        const KEYS: [&str; 15] = [
             "model", "method", "gran", "wbits", "abits", "first_last_8",
             "iters", "calib_n", "seed", "source", "search", "eval",
-            "hw_report", "verbose",
+            "hw_report", "det_nms", "verbose",
         ];
         for k in o.keys() {
             if !KEYS.contains(&k.as_str()) {
@@ -571,6 +587,7 @@ impl JobSpec {
             search,
             eval: j_bool(v, "eval", d.eval)?,
             hw_report: j_bool(v, "hw_report", d.hw_report)?,
+            det_nms: j_bool(v, "det_nms", d.det_nms)?,
             verbose: j_bool(v, "verbose", d.verbose)?,
         })
     }
@@ -783,6 +800,7 @@ mod tests {
             }),
             eval: false,
             hw_report: true,
+            det_nms: true,
             verbose: true,
         };
         let text = spec.to_json().to_string();

@@ -1,0 +1,654 @@
+//! `brecq serve` — a local quantization-as-a-service daemon over a unix
+//! socket, plus the thin `brecq submit` client.
+//!
+//! Protocol: newline-delimited JSON, one document per line, both ways.
+//! Client requests:
+//!
+//! ```text
+//!   {"op":"submit", "priority": 0, "jobs": [<JobSpec>, ...]}
+//!   {"op":"ping"} | {"op":"stats"} | {"op":"shutdown"}
+//! ```
+//!
+//! Daemon events (streamed while a batch runs; `job` indexes into the
+//! submitted array):
+//!
+//! ```text
+//!   {"event":"accepted", "jobs": N}
+//!   {"event":"stage", "job": i, "stage": "reconstruct", "done": false}
+//!   {"event":"cache", "job": i, "key": "fp/resnet_s",
+//!    "outcome": "hit|store-hit|computed|loaded"}
+//!   {"event":"result", "job": i, "ok": true, "output": {...}}
+//!   {"event":"result", "job": i, "ok": false, "error": "..."}
+//!   {"event":"done", "ok": N, "failed": N, "computes": N,
+//!    "cache_hits": N, "store_hits": N}
+//! ```
+//!
+//! Scheduling: jobs queue with a per-batch priority and run on a fixed
+//! set of daemon workers (each job still fans its kernels out on
+//! [`crate::util::pool`], whose regions are per-call and safe to enter
+//! from several workers at once). The queue picks the highest-priority
+//! job, breaking ties *fair-share*: the connection that has been served
+//! the fewest jobs goes first, then FIFO by submission order — so one
+//! client dumping 100 jobs cannot starve another's single job at equal
+//! priority.
+//!
+//! Results are deterministic by construction — every job runs through
+//! the same [`Session`] cache/store machinery as `brecq run`, so a
+//! submitted batch is bit-identical (per [`super::JobOutput::fingerprint`]) to
+//! an in-process run of the same specs; `scripts/serve_smoke.sh` gates
+//! that in CI. Shutdown (SIGINT/SIGTERM or `{"op":"shutdown"}`) stops
+//! accepting connections, drains queued jobs, flushes each batch's
+//! `done` event and removes the socket file.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::util::json::{self, Json};
+
+use super::cache::Outcome;
+use super::job::{JobEvent, Session};
+use super::{Error, JobSpec};
+
+/// How often blocked loops (accept, reads, queue waits) re-check stop.
+const POLL: Duration = Duration::from_millis(25);
+
+// ---------------------------------------------------------------------
+// Signal handling (daemon entry point only)
+// ---------------------------------------------------------------------
+
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    pub static STOP: AtomicBool = AtomicBool::new(false);
+
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+
+    extern "C" fn handle(_sig: i32) {
+        STOP.store(true, Ordering::SeqCst);
+    }
+
+    /// Route SIGINT (2) and SIGTERM (15) to the stop flag.
+    #[allow(clippy::fn_to_numeric_cast)]
+    pub fn install() {
+        unsafe {
+            signal(2, handle as usize);
+            signal(15, handle as usize);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Daemon internals
+// ---------------------------------------------------------------------
+
+/// Per-batch bookkeeping shared by the queue entries of one submit.
+struct Batch {
+    conn: u64,
+    writer: Arc<Mutex<UnixStream>>,
+    remaining: AtomicUsize,
+    ok: AtomicUsize,
+    failed: AtomicUsize,
+    computes: AtomicUsize,
+    cache_hits: AtomicUsize,
+    store_hits: AtomicUsize,
+}
+
+struct Queued {
+    /// Global submission order (the FIFO tie-break).
+    seq: u64,
+    priority: i64,
+    /// Index into the batch's submitted jobs array.
+    job: usize,
+    spec: JobSpec,
+    batch: Arc<Batch>,
+}
+
+struct Shared {
+    session: Session,
+    queue: Mutex<Vec<Queued>>,
+    cv: Condvar,
+    /// Jobs served so far per connection (the fair-share signal).
+    served: Mutex<HashMap<u64, u64>>,
+    stop: AtomicBool,
+}
+
+/// Serialize `v` onto one protocol line. Write failures are ignored —
+/// a vanished client must not kill its jobs (their artifacts persist).
+fn write_line(w: &Mutex<UnixStream>, v: &Json) {
+    let mut line = v.to_string();
+    line.push('\n');
+    let mut s = w.lock().unwrap_or_else(|e| e.into_inner());
+    let _ = s.write_all(line.as_bytes());
+}
+
+fn event(kind: &str, mut fields: Vec<(&str, Json)>) -> Json {
+    fields.insert(0, ("event", json::s(kind)));
+    json::obj(fields)
+}
+
+impl Shared {
+    /// Highest priority first; ties go to the connection served least,
+    /// then FIFO. Returns the queue index to take.
+    fn pick(&self, q: &[Queued]) -> Option<usize> {
+        let served =
+            self.served.lock().unwrap_or_else(|e| e.into_inner());
+        q.iter()
+            .enumerate()
+            .max_by_key(|(_, t)| {
+                let s = served.get(&t.batch.conn).copied().unwrap_or(0);
+                (t.priority, std::cmp::Reverse(s),
+                 std::cmp::Reverse(t.seq))
+            })
+            .map(|(i, _)| i)
+    }
+
+    fn worker(&self) {
+        loop {
+            let task = {
+                let mut q = self
+                    .queue
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner());
+                loop {
+                    if let Some(i) = self.pick(&q) {
+                        break Some(q.remove(i));
+                    }
+                    if self.stop.load(Ordering::SeqCst) {
+                        break None;
+                    }
+                    q = self
+                        .cv
+                        .wait_timeout(q, POLL)
+                        .unwrap_or_else(|e| e.into_inner())
+                        .0;
+                }
+            };
+            let Some(t) = task else { return };
+            *self
+                .served
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .entry(t.batch.conn)
+                .or_insert(0) += 1;
+            self.run_one(&t);
+            if t.batch.remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
+                let b = &t.batch;
+                write_line(
+                    &b.writer,
+                    &event("done", vec![
+                        ("ok", json::num(
+                            b.ok.load(Ordering::SeqCst) as f64)),
+                        ("failed", json::num(
+                            b.failed.load(Ordering::SeqCst) as f64)),
+                        ("computes", json::num(
+                            b.computes.load(Ordering::SeqCst) as f64)),
+                        ("cache_hits", json::num(
+                            b.cache_hits.load(Ordering::SeqCst) as f64)),
+                        ("store_hits", json::num(
+                            b.store_hits.load(Ordering::SeqCst) as f64)),
+                    ]),
+                );
+            }
+        }
+    }
+
+    fn run_one(&self, t: &Queued) {
+        let b = &t.batch;
+        let ji = json::num(t.job as f64);
+        let mut emit = |e: JobEvent| match e {
+            JobEvent::Stage { stage, done } => write_line(
+                &b.writer,
+                &event("stage", vec![
+                    ("job", ji.clone()),
+                    ("stage", json::s(stage)),
+                    ("done", json::b(done)),
+                ]),
+            ),
+            JobEvent::Cache { key, outcome } => {
+                let ctr = match outcome {
+                    Outcome::Hit => &b.cache_hits,
+                    Outcome::StoreHit => &b.store_hits,
+                    Outcome::Computed => &b.computes,
+                    Outcome::Loaded => &b.cache_hits,
+                };
+                if outcome != Outcome::Loaded {
+                    ctr.fetch_add(1, Ordering::SeqCst);
+                }
+                write_line(
+                    &b.writer,
+                    &event("cache", vec![
+                        ("job", ji.clone()),
+                        ("key", json::s(&key)),
+                        ("outcome", json::s(outcome.as_str())),
+                    ]),
+                );
+            }
+        };
+        match self.session.run_traced(&t.spec, &mut emit) {
+            Ok(out) => {
+                b.ok.fetch_add(1, Ordering::SeqCst);
+                write_line(
+                    &b.writer,
+                    &event("result", vec![
+                        ("job", ji.clone()),
+                        ("ok", json::b(true)),
+                        ("output", out.to_json()),
+                    ]),
+                );
+            }
+            Err(e) => {
+                b.failed.fetch_add(1, Ordering::SeqCst);
+                write_line(
+                    &b.writer,
+                    &event("result", vec![
+                        ("job", ji.clone()),
+                        ("ok", json::b(false)),
+                        ("error", json::s(&e.to_string())),
+                    ]),
+                );
+            }
+        }
+    }
+
+    fn handle_request(
+        &self,
+        line: &str,
+        conn: u64,
+        writer: &Arc<Mutex<UnixStream>>,
+    ) {
+        let reply_err = |msg: &str| {
+            write_line(
+                writer,
+                &event("error", vec![("error", json::s(msg))]),
+            );
+        };
+        let v = match Json::parse(line) {
+            Ok(v) => v,
+            Err(e) => return reply_err(&format!("bad request: {e}")),
+        };
+        match v.get("op").and_then(Json::as_str) {
+            Some("ping") => {
+                write_line(writer, &event("pong", vec![]));
+            }
+            Some("stats") => {
+                let (hits, misses) = self.session.cache().stats();
+                let mut fields = vec![
+                    ("cache_hits", json::num(hits as f64)),
+                    ("cache_misses", json::num(misses as f64)),
+                    (
+                        "computes",
+                        json::num(self.session.cache().computes() as f64),
+                    ),
+                ];
+                if let Some(st) = self.session.cache().store() {
+                    let s = st.stats();
+                    fields.push(
+                        ("store_hits", json::num(s.hits as f64)));
+                    fields.push(
+                        ("store_misses", json::num(s.misses as f64)));
+                    fields.push(
+                        ("store_corrupt", json::num(s.corrupt as f64)));
+                    fields.push((
+                        "store_publishes",
+                        json::num(s.publishes as f64),
+                    ));
+                }
+                write_line(writer, &event("stats", fields));
+            }
+            Some("shutdown") => {
+                write_line(writer, &event("shutting-down", vec![]));
+                self.stop.store(true, Ordering::SeqCst);
+                self.cv.notify_all();
+            }
+            Some("submit") => {
+                let priority = v
+                    .get("priority")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0) as i64;
+                let jobs = match v.get("jobs").and_then(Json::as_arr) {
+                    Some(a) => a,
+                    None => {
+                        return reply_err(
+                            "submit needs a 'jobs' array",
+                        )
+                    }
+                };
+                let mut specs = Vec::with_capacity(jobs.len());
+                for (i, j) in jobs.iter().enumerate() {
+                    match JobSpec::from_json(j) {
+                        Ok(s) => specs.push(s),
+                        Err(e) => {
+                            return reply_err(&format!(
+                                "job {i}: {e}"
+                            ))
+                        }
+                    }
+                }
+                write_line(
+                    writer,
+                    &event("accepted", vec![
+                        ("jobs", json::num(specs.len() as f64)),
+                    ]),
+                );
+                if specs.is_empty() {
+                    write_line(
+                        writer,
+                        &event("done", vec![
+                            ("ok", json::num(0.0)),
+                            ("failed", json::num(0.0)),
+                            ("computes", json::num(0.0)),
+                            ("cache_hits", json::num(0.0)),
+                            ("store_hits", json::num(0.0)),
+                        ]),
+                    );
+                    return;
+                }
+                let batch = Arc::new(Batch {
+                    conn,
+                    writer: writer.clone(),
+                    remaining: AtomicUsize::new(specs.len()),
+                    ok: AtomicUsize::new(0),
+                    failed: AtomicUsize::new(0),
+                    computes: AtomicUsize::new(0),
+                    cache_hits: AtomicUsize::new(0),
+                    store_hits: AtomicUsize::new(0),
+                });
+                let mut q = self
+                    .queue
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner());
+                for (i, spec) in specs.into_iter().enumerate() {
+                    // the conn counter doubles as the global seq source:
+                    // seq only orders within one lock hold anyway
+                    let seq = (conn << 32) | i as u64;
+                    q.push(Queued {
+                        seq,
+                        priority,
+                        job: i,
+                        spec,
+                        batch: batch.clone(),
+                    });
+                }
+                drop(q);
+                self.cv.notify_all();
+            }
+            _ => reply_err("unknown op (submit|ping|stats|shutdown)"),
+        }
+    }
+
+    /// Read requests off one client connection until it closes or the
+    /// daemon stops. Partial lines survive read timeouts (the buffer
+    /// accumulates across retries).
+    fn handle_conn(&self, stream: UnixStream, conn: u64) {
+        let _ = stream.set_read_timeout(Some(POLL));
+        let writer = match stream.try_clone() {
+            Ok(w) => Arc::new(Mutex::new(w)),
+            Err(_) => return,
+        };
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        loop {
+            if self.stop.load(Ordering::SeqCst) {
+                return;
+            }
+            match reader.read_line(&mut line) {
+                Ok(0) => return, // client closed
+                Ok(_) => {
+                    let req = line.trim().to_string();
+                    line.clear();
+                    if !req.is_empty() {
+                        self.handle_request(&req, conn, &writer);
+                    }
+                }
+                Err(e)
+                    if e.kind() == ErrorKind::WouldBlock
+                        || e.kind() == ErrorKind::TimedOut
+                        || e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => return,
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Entry points
+// ---------------------------------------------------------------------
+
+/// Run the daemon on `socket` until SIGINT/SIGTERM or a client
+/// `shutdown` op. `workers` concurrent job slots (0 = pool size).
+pub fn serve(
+    session: Session,
+    socket: &Path,
+    workers: usize,
+) -> Result<(), Error> {
+    sig::install();
+    serve_until(session, socket, workers, || {
+        sig::STOP.load(Ordering::SeqCst)
+    })
+}
+
+/// Test/embedding variant: same daemon, no signal handlers. Stop it
+/// with [`control`]`(sock, "shutdown")` and join the thread.
+pub fn spawn(
+    session: Session,
+    socket: PathBuf,
+    workers: usize,
+) -> std::thread::JoinHandle<Result<(), Error>> {
+    std::thread::spawn(move || {
+        serve_until(session, &socket, workers, || false)
+    })
+}
+
+fn serve_until(
+    session: Session,
+    socket: &Path,
+    workers: usize,
+    external_stop: impl Fn() -> bool,
+) -> Result<(), Error> {
+    let workers = if workers == 0 {
+        crate::util::pool::threads()
+    } else {
+        workers
+    };
+    // a stale socket file from a dead daemon would make bind fail
+    let _ = std::fs::remove_file(socket);
+    let listener = UnixListener::bind(socket).map_err(|e| {
+        Error::Exec(format!("binding {}: {e}", socket.display()))
+    })?;
+    listener.set_nonblocking(true).map_err(|e| {
+        Error::Exec(format!("nonblocking listener: {e}"))
+    })?;
+    eprintln!(
+        "[serve] listening on {} ({workers} workers)",
+        socket.display()
+    );
+    let shared = Shared {
+        session,
+        queue: Mutex::new(Vec::new()),
+        cv: Condvar::new(),
+        served: Mutex::new(HashMap::new()),
+        stop: AtomicBool::new(false),
+    };
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| shared.worker());
+        }
+        let mut conn_id = 0u64;
+        loop {
+            if external_stop() {
+                shared.stop.store(true, Ordering::SeqCst);
+            }
+            if shared.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    conn_id += 1;
+                    let id = conn_id;
+                    let sh = &shared;
+                    s.spawn(move || sh.handle_conn(stream, id));
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    std::thread::sleep(POLL);
+                }
+                Err(e) => {
+                    eprintln!("[serve] accept: {e}");
+                    std::thread::sleep(POLL);
+                }
+            }
+        }
+        // drain: workers exit once the queue is empty and stop is set;
+        // conn threads notice stop on their next read timeout
+        shared.cv.notify_all();
+    });
+    let _ = std::fs::remove_file(socket);
+    eprintln!("[serve] shut down cleanly");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Clients
+// ---------------------------------------------------------------------
+
+/// What [`submit`] brings back: per-job results in submission order and
+/// the batch-level `done` accounting event.
+pub struct SubmitSummary {
+    /// One entry per submitted job: the `output` object on success, the
+    /// error text on failure.
+    pub results: Vec<Result<Json, String>>,
+    /// The terminal `done` event (ok/failed/computes/cache_hits/
+    /// store_hits counters for this batch).
+    pub done: Json,
+}
+
+/// Submit `specs` to a daemon on `socket` and stream events until the
+/// batch finishes. `on_event` sees every raw protocol event (stage,
+/// cache, result, ...) as it arrives.
+pub fn submit(
+    socket: &Path,
+    specs: &[JobSpec],
+    priority: i64,
+    mut on_event: impl FnMut(&Json),
+) -> Result<SubmitSummary, Error> {
+    let stream = UnixStream::connect(socket).map_err(|e| {
+        Error::Exec(format!(
+            "connecting to daemon at {}: {e}",
+            socket.display()
+        ))
+    })?;
+    let mut writer = stream.try_clone().map_err(|e| {
+        Error::Exec(format!("cloning daemon socket: {e}"))
+    })?;
+    let req = json::obj(vec![
+        ("op", json::s("submit")),
+        ("priority", json::num(priority as f64)),
+        (
+            "jobs",
+            Json::Arr(specs.iter().map(JobSpec::to_json).collect()),
+        ),
+    ]);
+    let mut line = req.to_string();
+    line.push('\n');
+    writer.write_all(line.as_bytes()).map_err(|e| {
+        Error::Exec(format!("sending submit request: {e}"))
+    })?;
+
+    let mut results: Vec<Option<Result<Json, String>>> =
+        (0..specs.len()).map(|_| None).collect();
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line.map_err(|e| {
+            Error::Exec(format!("reading daemon event: {e}"))
+        })?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let ev = Json::parse(&line).map_err(|e| {
+            Error::Exec(format!("bad daemon event: {e}"))
+        })?;
+        on_event(&ev);
+        match ev.get("event").and_then(Json::as_str) {
+            Some("error") => {
+                return Err(Error::Exec(format!(
+                    "daemon rejected the batch: {}",
+                    ev.get("error")
+                        .and_then(Json::as_str)
+                        .unwrap_or("unknown error")
+                )));
+            }
+            Some("result") => {
+                let job = ev
+                    .get("job")
+                    .and_then(Json::as_usize)
+                    .filter(|&j| j < results.len())
+                    .ok_or_else(|| {
+                        Error::Exec(
+                            "result event with bad job index".into(),
+                        )
+                    })?;
+                let ok = ev
+                    .get("ok")
+                    .and_then(Json::as_bool)
+                    .unwrap_or(false);
+                results[job] = Some(if ok {
+                    Ok(ev.get("output").cloned().unwrap_or(Json::Null))
+                } else {
+                    Err(ev
+                        .get("error")
+                        .and_then(Json::as_str)
+                        .unwrap_or("unknown job error")
+                        .to_string())
+                });
+            }
+            Some("done") => {
+                let results = results
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, r)| {
+                        r.unwrap_or_else(|| {
+                            Err(format!("job {i}: no result received"))
+                        })
+                    })
+                    .collect();
+                return Ok(SubmitSummary { done: ev, results });
+            }
+            _ => {}
+        }
+    }
+    Err(Error::Exec(
+        "daemon closed the connection before the batch finished".into(),
+    ))
+}
+
+/// One-shot control request (`ping` / `stats` / `shutdown`); returns the
+/// daemon's reply event.
+pub fn control(socket: &Path, op: &str) -> Result<Json, Error> {
+    let stream = UnixStream::connect(socket).map_err(|e| {
+        Error::Exec(format!(
+            "connecting to daemon at {}: {e}",
+            socket.display()
+        ))
+    })?;
+    let mut writer = stream.try_clone().map_err(|e| {
+        Error::Exec(format!("cloning daemon socket: {e}"))
+    })?;
+    let mut line = json::obj(vec![("op", json::s(op))]).to_string();
+    line.push('\n');
+    writer.write_all(line.as_bytes()).map_err(|e| {
+        Error::Exec(format!("sending '{op}': {e}"))
+    })?;
+    let mut reader = BufReader::new(stream);
+    let mut reply = String::new();
+    reader.read_line(&mut reply).map_err(|e| {
+        Error::Exec(format!("reading '{op}' reply: {e}"))
+    })?;
+    Json::parse(reply.trim())
+        .map_err(|e| Error::Exec(format!("bad '{op}' reply: {e}")))
+}

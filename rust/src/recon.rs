@@ -134,6 +134,7 @@ pub struct UnitReport {
 }
 
 /// A calibrated model: hard-quantized weights + learned activation steps.
+#[derive(Debug, Clone)]
 pub struct QuantizedModel {
     pub weights: Vec<Tensor>, // per layer, model order
     pub biases: Vec<Tensor>,

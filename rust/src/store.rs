@@ -1,6 +1,13 @@
-//! Weight/dataset binary store reader — the ABI shared with
+//! **Build-artifact reader** for the compile-time tensor ABI shared with
 //! `python/compile/store.py`: `<prefix>.json` index (name -> shape/offset/
 //! size in f32 elements) over a flat little-endian f32 `<prefix>.bin`.
+//! Read-only, flat f32, produced by the model build — the environment's
+//! *inputs*.
+//!
+//! Not to be confused with [`crate::pipeline::artifact_store`], the
+//! read/write content-addressed store for *computed* pipeline artifacts
+//! (typed multi-section payloads, checksums, cross-process locking).
+//! This module never writes anything.
 
 use std::collections::HashMap;
 use std::fs;

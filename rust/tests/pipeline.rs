@@ -49,6 +49,7 @@ fn jobspec_round_trips_through_util_json_text() {
         }),
         eval: false,
         hw_report: true,
+        det_nms: true,
         verbose: true,
     };
     let text = spec.to_json().to_string();

@@ -1,0 +1,585 @@
+//! Quantization-as-a-service tests: the persistent content-addressed
+//! artifact store under the session cache, and the `brecq serve` daemon.
+//!
+//! Pinned properties:
+//! - a cold cache key races (threads, sessions, *processes*) to exactly
+//!   one compute, and every racer observes bit-identical artifacts;
+//! - corrupted payloads and truncated indexes are detected, counted,
+//!   discarded and recomputed — never served;
+//! - a warm-store `exp table1` replays bit-identically with zero backend
+//!   dispatches and zero publishes;
+//! - a served batch is bit-identical (per `JobOutput::fingerprint`) to an
+//!   in-process run, concurrent clients included, and a warm re-submit —
+//!   same daemon or a restarted one on the same store — computes nothing;
+//! - greedy NMS changes det scoring exactly as the fixture math says, is
+//!   off by default, and stays thread-invariant when enabled.
+//!
+//! Everything runs on the hermetic synthetic environment.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use brecq::coordinator::experiments::{table1, ExpOpts};
+use brecq::coordinator::Env;
+use brecq::eval::{det_map, det_map_nms};
+use brecq::model::{DetInfo, DetObj};
+use brecq::pipeline::{ArtifactCache, ArtifactStore, EvalScore, JobSpec,
+                      Method, Session};
+use brecq::tensor::Tensor;
+use brecq::util::pool;
+
+/// `pool::set_threads` is process-global and libtest runs tests
+/// concurrently: serialize the tests that pin a thread count.
+static POOL_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock_pool() -> std::sync::MutexGuard<'static, ()> {
+    POOL_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn env() -> Env {
+    Env::bootstrap_synthetic().expect("synthetic environment")
+}
+
+/// Fresh per-test store directory (removed and recreated every run so a
+/// previous run's artifacts can't turn a cold assertion warm).
+fn tmp(name: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("brecq_qaas_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn store_cache(dir: &PathBuf) -> ArtifactCache {
+    ArtifactCache::with_store(Arc::new(ArtifactStore::open(dir).unwrap()))
+}
+
+/// The one on-disk file under `dir` with the given extension.
+fn entry_file(dir: &PathBuf, ext: &str) -> PathBuf {
+    let mut found: Vec<PathBuf> = std::fs::read_dir(dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().map_or(false, |e| e == ext))
+        .collect();
+    assert_eq!(found.len(), 1, "expected one .{ext} entry in {dir:?}");
+    found.pop().unwrap()
+}
+
+/// Total backend dispatches since the session's env was created.
+fn dispatches(s: &Session) -> u64 {
+    s.env()
+        .rt
+        .hotspots(usize::MAX)
+        .iter()
+        .map(|(_, calls, _)| *calls)
+        .sum()
+}
+
+// ---------------------------------------------------------------------
+// Compute-once under races
+// ---------------------------------------------------------------------
+
+#[test]
+fn racing_threads_and_sessions_compute_a_cold_key_once() {
+    let dir = tmp("thread_race");
+    // two caches over two independent store handles on one directory —
+    // the in-process analogue of two sessions in two processes
+    let c1 = store_cache(&dir);
+    let c2 = store_cache(&dir);
+    let builds = AtomicUsize::new(0);
+    // a value whose bit pattern text round-trips would lose
+    let val = f64::from_bits(0x3ff0_0000_0000_0001);
+    let got: Vec<u64> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let c = if i % 2 == 0 { &c1 } else { &c2 };
+                let builds = &builds;
+                s.spawn(move || {
+                    let v = c
+                        .get_or_build("qaas/race", || {
+                            builds.fetch_add(1, Ordering::SeqCst);
+                            std::thread::sleep(
+                                Duration::from_millis(40),
+                            );
+                            Ok(EvalScore(val))
+                        })
+                        .unwrap();
+                    v.0.to_bits()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert_eq!(
+        builds.load(Ordering::SeqCst),
+        1,
+        "a cold key must compute exactly once across racing sessions"
+    );
+    assert!(
+        got.iter().all(|&b| b == val.to_bits()),
+        "every racer must observe the computed bits exactly"
+    );
+    let p1 = c1.store().unwrap().stats().publishes;
+    let p2 = c2.store().unwrap().stats().publishes;
+    assert_eq!(p1 + p2, 1, "exactly one publish across both sessions");
+    assert_eq!(c1.computes() + c2.computes(), 1);
+    assert_eq!(
+        c1.store_hits() + c2.store_hits(),
+        1,
+        "the non-computing session must load the published entry"
+    );
+}
+
+/// Child half of the cross-process race: only does work when the parent
+/// test set `BRECQ_STORE_RACE_DIR`; a plain `cargo test` run no-ops it.
+#[test]
+fn store_race_child_process_helper() {
+    let Some(dir) = std::env::var_os("BRECQ_STORE_RACE_DIR") else {
+        return;
+    };
+    let cache = store_cache(&PathBuf::from(dir));
+    let v = cache
+        .get_or_build("qaas/proc-race", || {
+            std::thread::sleep(Duration::from_millis(150));
+            Ok(EvalScore(0.8125))
+        })
+        .unwrap();
+    println!(
+        "QAAS_RACE computed={} fp={:016x}",
+        cache.computes(),
+        v.0.to_bits()
+    );
+}
+
+#[test]
+fn racing_processes_compute_a_cold_key_once() {
+    let dir = tmp("proc_race");
+    let exe = std::env::current_exe().unwrap();
+    let children: Vec<_> = (0..3)
+        .map(|_| {
+            std::process::Command::new(&exe)
+                .args([
+                    "store_race_child_process_helper",
+                    "--exact",
+                    "--nocapture",
+                ])
+                .env("BRECQ_STORE_RACE_DIR", &dir)
+                .stdout(std::process::Stdio::piped())
+                .spawn()
+                .unwrap()
+        })
+        .collect();
+    let mut computes = 0usize;
+    let mut fps: Vec<String> = Vec::new();
+    for child in children {
+        let out = child.wait_with_output().unwrap();
+        assert!(out.status.success(), "race child failed");
+        let text = String::from_utf8_lossy(&out.stdout);
+        let line = text
+            .lines()
+            .find(|l| l.starts_with("QAAS_RACE "))
+            .expect("race child must print its QAAS_RACE line");
+        for field in line.split_whitespace() {
+            if let Some(n) = field.strip_prefix("computed=") {
+                computes += n.parse::<usize>().unwrap();
+            }
+            if let Some(h) = field.strip_prefix("fp=") {
+                fps.push(h.to_string());
+            }
+        }
+    }
+    assert_eq!(fps.len(), 3, "every child reports a fingerprint");
+    assert_eq!(
+        computes, 1,
+        "exactly one process may compute the cold key"
+    );
+    assert!(
+        fps.windows(2).all(|w| w[0] == w[1]),
+        "cross-process artifacts must be bit-identical: {fps:?}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Corruption detection
+// ---------------------------------------------------------------------
+
+#[test]
+fn corrupt_payload_and_truncated_index_are_recomputed() {
+    let dir = tmp("corrupt");
+    let key = "qaas/corrupt";
+    let build = || Ok(EvalScore(0.3125));
+
+    let c1 = store_cache(&dir);
+    let v1 = c1.get_or_build(key, build).unwrap();
+    assert_eq!(c1.computes(), 1);
+
+    // flip one payload byte behind the checksum's back
+    let bin = entry_file(&dir, "bin");
+    let mut bytes = std::fs::read(&bin).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x40;
+    std::fs::write(&bin, &bytes).unwrap();
+
+    let c2 = store_cache(&dir);
+    let v2 = c2.get_or_build(key, build).unwrap();
+    assert_eq!(
+        v2.0.to_bits(),
+        v1.0.to_bits(),
+        "recomputed value must equal the original"
+    );
+    assert_eq!(
+        c2.computes(),
+        1,
+        "a corrupt entry must be recomputed, not served"
+    );
+    assert_eq!(c2.store().unwrap().stats().corrupt, 1);
+
+    // the recompute republished a clean entry: next session store-hits
+    let c3 = store_cache(&dir);
+    c3.get_or_build(key, build).unwrap();
+    assert_eq!(c3.computes(), 0);
+    assert_eq!(c3.store_hits(), 1);
+    assert_eq!(c3.store().unwrap().stats().corrupt, 0);
+
+    // truncate the JSON index mid-document: same detect-and-recompute
+    let idx = entry_file(&dir, "json");
+    let text = std::fs::read(&idx).unwrap();
+    std::fs::write(&idx, &text[..text.len() / 2]).unwrap();
+    let c4 = store_cache(&dir);
+    c4.get_or_build(key, build).unwrap();
+    assert_eq!(c4.computes(), 1);
+    assert_eq!(c4.store().unwrap().stats().corrupt, 1);
+}
+
+// ---------------------------------------------------------------------
+// Warm-store replay (the acceptance property)
+// ---------------------------------------------------------------------
+
+#[test]
+fn warm_store_replays_table1_bit_identically_with_zero_dispatches() {
+    let _g = lock_pool();
+    pool::set_threads(2);
+    let dir = tmp("table1_store");
+    let o = ExpOpts {
+        iters: 4,
+        calib_n: 32,
+        seed: 0,
+        seeds: 1,
+        verbose: false,
+    };
+    // the Block cell's exact spec, for a bit-level fingerprint check on
+    // top of the rendered-table comparison
+    let block_spec = JobSpec {
+        model: "resnet_s".into(),
+        wbits: 2,
+        iters: o.iters,
+        calib_n: o.calib_n,
+        seed: o.seed,
+        ..JobSpec::default()
+    };
+
+    let cold = Session::with_store(
+        env(),
+        Arc::new(ArtifactStore::open(&dir).unwrap()),
+    );
+    let cold_md = table1(&cold, &o).unwrap().to_markdown();
+    let cold_fp = cold.run(&block_spec).unwrap().fingerprint();
+    assert!(cold.cache().computes() > 0, "cold run must compute");
+    assert!(cold.cache().store().unwrap().stats().publishes > 0);
+    assert!(dispatches(&cold) > 0, "cold run must hit the backend");
+
+    // fresh env + fresh session on the same store: only the disk warm
+    let warm = Session::with_store(
+        env(),
+        Arc::new(ArtifactStore::open(&dir).unwrap()),
+    );
+    let warm_md = table1(&warm, &o).unwrap().to_markdown();
+    let warm_fp = warm.run(&block_spec).unwrap().fingerprint();
+    assert_eq!(warm_md, cold_md, "warm table1 must render identically");
+    assert_eq!(
+        warm_fp, cold_fp,
+        "warm job output must be bit-identical to the cold run"
+    );
+    assert_eq!(warm.cache().computes(), 0, "warm run must not compute");
+    assert!(warm.cache().store_hits() > 0);
+    assert_eq!(warm.cache().store().unwrap().stats().publishes, 0);
+    assert_eq!(
+        dispatches(&warm),
+        0,
+        "warm replay must not dispatch the backend at all"
+    );
+    pool::set_threads(0);
+}
+
+// ---------------------------------------------------------------------
+// Serve daemon vs in-process run
+// ---------------------------------------------------------------------
+
+#[cfg(unix)]
+mod serve {
+    use super::*;
+    use brecq::pipeline::serve::{control, spawn, submit, SubmitSummary};
+    use brecq::util::json::Json;
+
+    fn smoke_specs() -> Vec<JobSpec> {
+        vec![
+            JobSpec {
+                model: "resnet_s".into(),
+                wbits: 4,
+                abits: Some(8),
+                iters: 6,
+                calib_n: 32,
+                seed: 0,
+                ..JobSpec::default()
+            },
+            JobSpec {
+                model: "resnet_s".into(),
+                method: Method::Omse,
+                wbits: 4,
+                calib_n: 32,
+                seed: 0,
+                ..JobSpec::default()
+            },
+        ]
+    }
+
+    fn wait_for_socket(sock: &PathBuf) {
+        for _ in 0..400 {
+            if sock.exists() {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        panic!("daemon socket {sock:?} never appeared");
+    }
+
+    fn result_fingerprints(s: &SubmitSummary) -> Vec<String> {
+        s.results
+            .iter()
+            .map(|r| {
+                r.as_ref()
+                    .expect("job failed")
+                    .get("fingerprint")
+                    .and_then(Json::as_str)
+                    .expect("result carries a fingerprint")
+                    .to_string()
+            })
+            .collect()
+    }
+
+    fn done_computes(s: &SubmitSummary) -> usize {
+        s.done
+            .get("computes")
+            .and_then(Json::as_usize)
+            .expect("done event carries computes")
+    }
+
+    #[test]
+    fn daemon_matches_in_process_run_and_warm_restart_is_free() {
+        let _g = lock_pool();
+        pool::set_threads(2);
+        let specs = smoke_specs();
+
+        // ground truth: a fresh in-process session, no store
+        let refs: Vec<String> = {
+            let s = Session::new(env());
+            specs
+                .iter()
+                .map(|sp| {
+                    format!("{:016x}", s.run(sp).unwrap().fingerprint())
+                })
+                .collect()
+        };
+
+        let dir = tmp("serve");
+        let store_dir = dir.join("store");
+        let sock = dir.join("d.sock");
+        let daemon = spawn(
+            Session::with_store(
+                env(),
+                Arc::new(ArtifactStore::open(&store_dir).unwrap()),
+            ),
+            sock.clone(),
+            2,
+        );
+        wait_for_socket(&sock);
+        assert_eq!(
+            control(&sock, "ping")
+                .unwrap()
+                .get("event")
+                .and_then(Json::as_str),
+            Some("pong")
+        );
+
+        // two concurrent clients, one submitting in reverse order
+        let (fwd, rev) = std::thread::scope(|s| {
+            let fwd = s.spawn(|| submit(&sock, &specs, 0, |_| {}));
+            let rev = s.spawn(|| {
+                let mut r: Vec<JobSpec> = specs.clone();
+                r.reverse();
+                submit(&sock, &r, 0, |_| {})
+            });
+            (
+                fwd.join().unwrap().unwrap(),
+                rev.join().unwrap().unwrap(),
+            )
+        });
+        assert_eq!(result_fingerprints(&fwd), refs);
+        let mut rev_fps = result_fingerprints(&rev);
+        rev_fps.reverse();
+        assert_eq!(
+            rev_fps, refs,
+            "concurrent clients must see bit-identical results"
+        );
+
+        // warm re-submit on the live daemon: everything cached
+        let warm = submit(&sock, &specs, 0, |_| {}).unwrap();
+        assert_eq!(result_fingerprints(&warm), refs);
+        assert_eq!(done_computes(&warm), 0, "warm batch must not compute");
+
+        control(&sock, "shutdown").unwrap();
+        daemon.join().unwrap().unwrap();
+        assert!(!sock.exists(), "shutdown must remove the socket file");
+
+        // restart on the same store with a fresh env: the disk alone
+        // makes the batch free, across daemon lifetimes
+        let daemon2 = spawn(
+            Session::with_store(
+                env(),
+                Arc::new(ArtifactStore::open(&store_dir).unwrap()),
+            ),
+            sock.clone(),
+            2,
+        );
+        wait_for_socket(&sock);
+        let warm2 = submit(&sock, &specs, 0, |_| {}).unwrap();
+        assert_eq!(result_fingerprints(&warm2), refs);
+        assert_eq!(
+            done_computes(&warm2),
+            0,
+            "restarted daemon must replay from the store"
+        );
+        control(&sock, "shutdown").unwrap();
+        daemon2.join().unwrap().unwrap();
+        pool::set_threads(0);
+    }
+
+    #[test]
+    fn daemon_rejects_bad_batches_with_typed_errors() {
+        let _g = lock_pool();
+        let dir = tmp("serve_err");
+        let sock = dir.join("d.sock");
+        let daemon = spawn(Session::new(env()), sock.clone(), 1);
+        wait_for_socket(&sock);
+
+        // unknown model fails that job, not the daemon
+        let bad = vec![JobSpec {
+            model: "nope".into(),
+            ..JobSpec::default()
+        }];
+        let s = submit(&sock, &bad, 0, |_| {}).unwrap();
+        assert!(s.results[0].is_err());
+        assert_eq!(done_computes(&s), 0);
+
+        control(&sock, "shutdown").unwrap();
+        daemon.join().unwrap().unwrap();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Greedy NMS
+// ---------------------------------------------------------------------
+
+/// Hand-checked fixture: three anchors (two stacked on one object, one on
+/// the other), zero regression deltas so each decoded box equals its
+/// anchor. Without NMS the duplicate second-ranked box is a false
+/// positive between two true positives: AP = (1 + 2/3) / 2 = 5/6. With
+/// NMS it is suppressed (IoU 1.0 with the kept top box): AP = 1.
+#[test]
+fn greedy_nms_suppresses_duplicate_boxes_deterministically() {
+    let det = DetInfo {
+        anchors: vec![
+            [0.3, 0.3, 0.2, 0.2],
+            [0.3, 0.3, 0.2, 0.2],
+            [0.7, 0.7, 0.2, 0.2],
+        ],
+        scenes: vec![vec![
+            DetObj { anchor: 0, bbox: [0.3, 0.3, 0.2, 0.2] },
+            DetObj { anchor: 2, bbox: [0.7, 0.7, 0.2, 0.2] },
+        ]],
+    };
+    let mut row = vec![0f32; det.head_dim()];
+    row[4] = 3.0; // anchor 0 objectness: top-ranked true positive
+    row[9] = 2.0; // anchor 1: duplicate box, outranks the other object
+    row[14] = 1.0; // anchor 2: second true positive
+    let lg = Tensor::new(vec![1, det.head_dim()], row);
+    let labels = [0usize];
+
+    let plain = det_map_nms(&det, &lg, &labels, false);
+    let suppressed = det_map_nms(&det, &lg, &labels, true);
+    assert!(
+        (plain - 5.0 / 6.0).abs() < 1e-12,
+        "plain mAP should be 5/6, got {plain}"
+    );
+    assert!(
+        (suppressed - 1.0).abs() < 1e-12,
+        "NMS mAP should be 1.0, got {suppressed}"
+    );
+    // the default entry point stays NMS-free (table5 baselines)
+    assert_eq!(det_map(&det, &lg, &labels).to_bits(), plain.to_bits());
+}
+
+/// `det_nms` rides the JobSpec: the eval artifact is keyed per flag (so
+/// both variants coexist in one session) and the NMS path stays
+/// bit-identical at 1, 2 and 8 threads.
+#[test]
+fn det_nms_job_is_keyed_separately_and_thread_invariant() {
+    let _g = lock_pool();
+    let spec = JobSpec {
+        model: "det_s".into(),
+        wbits: 4,
+        abits: Some(8),
+        iters: 6,
+        calib_n: 32,
+        seed: 0,
+        det_nms: true,
+        ..JobSpec::default()
+    };
+
+    pool::set_threads(1);
+    let s = Session::new(env());
+    let plain = s
+        .run(&JobSpec { det_nms: false, ..spec.clone() })
+        .unwrap()
+        .accuracy
+        .unwrap();
+    let nms = s.run(&spec).unwrap().accuracy.unwrap();
+    assert!((0.0..=1.0).contains(&plain));
+    assert!((0.0..=1.0).contains(&nms));
+    let keys: Vec<String> = s
+        .cache()
+        .per_key_stats()
+        .into_iter()
+        .map(|(k, _)| k)
+        .collect();
+    assert!(
+        keys.iter().any(|k| k.ends_with("/eval/nms0")),
+        "plain eval key missing: {keys:?}"
+    );
+    assert!(
+        keys.iter().any(|k| k.ends_with("/eval/nms1")),
+        "nms eval key missing: {keys:?}"
+    );
+
+    let mut bits = vec![nms.to_bits()];
+    for nt in [2usize, 8] {
+        pool::set_threads(nt);
+        let s = Session::new(env());
+        bits.push(s.run(&spec).unwrap().accuracy.unwrap().to_bits());
+    }
+    pool::set_threads(0);
+    assert_eq!(bits[0], bits[1], "NMS mAP differs at 1 vs 2 threads");
+    assert_eq!(bits[1], bits[2], "NMS mAP differs at 2 vs 8 threads");
+}

@@ -2,8 +2,15 @@
 # Perf-regression gate over the bench harness's JSON output.
 #
 # usage: scripts/check_bench.sh [--fold] NEW.json [BASELINE.json]
+#        scripts/check_bench.sh --merge OUT.json IN1.json [IN2.json ...]
 #   BASELINE.json defaults to BENCH_native.json at the repo root.
 #   --fold appends baseline-missing rows/notes instead of gating (below).
+#   --merge combines several bench binaries' JSONs into one document so
+#   the gate (which insists every baseline row appears in NEW) can cover
+#   rows from more than one bench binary. Result names must be unique
+#   across inputs; notes must agree, except the per-process
+#   `scratch_*_total` counters, which are summed. `calibrated` is the
+#   AND of the inputs; `host_threads` comes from the first input.
 #
 # Fails (exit 1) when (all checks arm only once a calibrated baseline
 # is committed):
@@ -33,6 +40,65 @@
 # the file. CI's main-only bench-calibrate job runs this so `new` rows
 # stop drifting ungated.
 set -euo pipefail
+
+if [ "${1:-}" = "--merge" ]; then
+    shift
+    out=${1:?usage: check_bench.sh --merge OUT.json IN1.json [IN2.json ...]}
+    shift
+    if [ "$#" -lt 1 ]; then
+        echo "usage: check_bench.sh --merge OUT.json IN1.json [IN2.json ...]" >&2
+        exit 1
+    fi
+    python3 - "$out" "$@" <<'PY'
+import json, sys
+
+out_path, in_paths = sys.argv[1], sys.argv[2:]
+docs = []
+for p in in_paths:
+    with open(p) as f:
+        docs.append((p, json.load(f)))
+
+results, names = [], set()
+notes = {}
+# per-process scratch-arena counters appear in every bench JSON with
+# different values; summing keeps the zero-alloc signal meaningful
+SUMMED = ("scratch_allocs_total", "scratch_reuses_total")
+for p, d in docs:
+    for r in d.get("results", []):
+        if r["name"] in names:
+            print(f"merge: duplicate result row '{r['name']}' in {p}")
+            sys.exit(1)
+        names.add(r["name"])
+        results.append(r)
+    for k, v in (d.get("notes") or {}).items():
+        if k in SUMMED:
+            notes[k] = notes.get(k, 0) + v
+        elif k in notes and notes[k] != v:
+            print(f"merge: conflicting note '{k}' in {p} "
+                  f"({notes[k]} vs {v})")
+            sys.exit(1)
+        else:
+            notes[k] = v
+
+first = docs[0][1]
+merged = {
+    "schema": first.get("schema", 1),
+    "bench": "+".join(d.get("bench", "?") for _, d in docs),
+    "calibrated": all(d.get("calibrated", True) for _, d in docs),
+    "quick": any(d.get("quick", False) for _, d in docs),
+    "threads": first.get("threads", 0),
+    "host_threads": first.get("host_threads", 0),
+    "results": results,
+    "notes": notes,
+}
+with open(out_path, "w") as f:
+    json.dump(merged, f, indent=1, sort_keys=True)
+    f.write("\n")
+print(f"merge: wrote {out_path} — {len(results)} rows, {len(notes)} "
+      f"notes from {len(in_paths)} inputs")
+PY
+    exit $?
+fi
 
 if [ "${1:-}" = "--fold" ]; then
     shift

@@ -1,0 +1,162 @@
+#!/usr/bin/env bash
+# Serve-mode smoke test (CI: serve-smoke job). Proves the daemon is a
+# faithful remote front-end for the pipeline:
+#   * two CONCURRENT `brecq submit` clients get job-for-job fingerprints
+#     bitwise-equal to a sequential in-process `brecq run`, and between
+#     them compute each unique artifact exactly once;
+#   * a warm re-submit against the live daemon reports computes == 0;
+#   * `brecq ctl shutdown` exits the daemon cleanly and removes the
+#     socket;
+#   * a RESTARTED daemon over the same --store replays the whole batch
+#     from disk: computes == 0 and fingerprints still match the
+#     in-process reference.
+#
+# usage: scripts/serve_smoke.sh   (builds rust/target/release/brecq if
+#                                  missing; exit 0 = all checks pass)
+set -euo pipefail
+
+root=$(cd "$(dirname "$0")/.." && pwd)
+bin="$root/rust/target/release/brecq"
+if [ ! -x "$bin" ]; then
+    (cd "$root/rust" && cargo build --release)
+fi
+
+tmp=$(mktemp -d)
+daemon_pid=""
+cleanup() {
+    if [ -n "$daemon_pid" ] && kill -0 "$daemon_pid" 2>/dev/null; then
+        kill "$daemon_pid" 2>/dev/null || true
+        wait "$daemon_pid" 2>/dev/null || true
+    fi
+    rm -rf "$tmp"
+}
+trap cleanup EXIT
+
+sock="$tmp/brecq.sock"
+store="$tmp/store"
+jobs="$root/examples/jobs.json"
+
+die() {
+    echo "serve_smoke: FAIL — $1" >&2
+    for log in "$tmp"/*.log; do
+        [ -e "$log" ] || continue
+        echo "--- $log ---" >&2
+        cat "$log" >&2
+    done
+    exit 1
+}
+
+wait_sock() {
+    for _ in $(seq 1 100); do
+        if "$bin" ctl ping --sock "$sock" >/dev/null 2>&1; then
+            return 0
+        fi
+        sleep 0.2
+    done
+    die "daemon socket never came up at $sock"
+}
+
+start_daemon() {
+    "$bin" serve --sock "$sock" --store "$store" \
+        >>"$tmp/daemon.log" 2>&1 &
+    daemon_pid=$!
+    wait_sock
+}
+
+stop_daemon() {
+    "$bin" ctl shutdown --sock "$sock" >/dev/null
+    if ! wait "$daemon_pid"; then
+        die "daemon exited non-zero after ctl shutdown"
+    fi
+    daemon_pid=""
+    if [ -e "$sock" ]; then
+        die "daemon left its socket behind at $sock"
+    fi
+}
+
+# check <client.json> <want_computes|-> [<want_computes_sum_with>]
+# Compares the client's per-job fingerprints against the in-process
+# reference; optionally pins the batch's `done.computes`, or checks that
+# two batches' computes sum to the reference's (each unique artifact
+# computed exactly once across the concurrent clients).
+check() {
+    python3 - "$tmp/ref.json" "$@" <<'PY'
+import json, sys
+
+ref = json.load(open(sys.argv[1]))
+got = json.load(open(sys.argv[2]))
+want = sys.argv[3]
+rf = [j.get("fingerprint") for j in ref["jobs"]]
+gf = [j.get("fingerprint") for j in got["jobs"]]
+if not (all(rf) and all(gf)):
+    print("a job is missing its fingerprint (errored?)")
+    print(" ref:", rf)
+    print(" got:", gf)
+    sys.exit(1)
+if rf != gf:
+    print("fingerprint mismatch vs in-process run:")
+    print(" ref:", rf)
+    print(" got:", gf)
+    sys.exit(1)
+msg = f"{sys.argv[2]}: {len(gf)} fingerprints match the reference"
+if want == "-":
+    pass
+elif want == "sum":
+    other = json.load(open(sys.argv[4]))
+    total = int(got["done"]["computes"]) + \
+        int(other["done"]["computes"])
+    if total != int(ref["computes"]):
+        print(f"concurrent clients computed {total} artifacts; the "
+              f"in-process run computed {ref['computes']} — dedup "
+              "across batches is broken")
+        sys.exit(1)
+    msg += f", computes sum == {total}"
+else:
+    c = int(got["done"]["computes"])
+    if c != int(want):
+        print(f"expected computes == {want}, got {c}")
+        sys.exit(1)
+    msg += f", computes == {c}"
+print("serve_smoke:", msg)
+PY
+}
+
+echo "serve_smoke: in-process reference run"
+"$bin" run "$jobs" --stats --json "$tmp/ref.json" \
+    >"$tmp/ref.log" 2>&1 || die "reference brecq run failed"
+
+echo "serve_smoke: starting daemon (store at $store)"
+start_daemon
+
+echo "serve_smoke: two concurrent submit clients"
+"$bin" submit "$jobs" --sock "$sock" --quiet \
+    --json "$tmp/a.json" >"$tmp/a.log" 2>&1 &
+pa=$!
+"$bin" submit "$jobs" --sock "$sock" --quiet --priority 1 \
+    --json "$tmp/b.json" >"$tmp/b.log" 2>&1 &
+pb=$!
+ok=0
+wait "$pa" || ok=1
+wait "$pb" || ok=1
+[ "$ok" -eq 0 ] || die "a submit client exited non-zero"
+check "$tmp/a.json" sum "$tmp/b.json"
+check "$tmp/b.json" -
+
+echo "serve_smoke: warm re-submit against the live daemon"
+"$bin" submit "$jobs" --sock "$sock" --quiet \
+    --json "$tmp/warm.json" >"$tmp/warm.log" 2>&1 \
+    || die "warm submit failed"
+check "$tmp/warm.json" 0
+
+echo "serve_smoke: clean shutdown"
+stop_daemon
+
+echo "serve_smoke: restarting daemon over the same store"
+start_daemon
+"$bin" submit "$jobs" --sock "$sock" --quiet \
+    --json "$tmp/restart.json" >"$tmp/restart.log" 2>&1 \
+    || die "post-restart submit failed"
+check "$tmp/restart.json" 0
+stop_daemon
+
+echo "serve_smoke: all checks passed"

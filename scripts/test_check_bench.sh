@@ -200,6 +200,71 @@ else
     echo "ok    fold: no baseline file created"
 fi
 
+# --- merge mode (bench-smoke combines bench_recon + bench_store JSONs
+#     into the single NEW document the gate compares) ---
+
+# run_merge <name> <expected_exit> <grep_pattern> <out.json> <in...>
+run_merge() {
+    local name=$1 want=$2 pat=$3
+    shift 3
+    local out rc
+    out=$(bash "$gate" --merge "$@" 2>&1)
+    rc=$?
+    if [ "$rc" -ne "$want" ]; then
+        echo "FAIL  $name: exit $rc (wanted $want)"
+        echo "$out" | sed 's/^/      | /'
+        fails=$((fails + 1))
+        return
+    fi
+    if ! grep -q "$pat" <<<"$out"; then
+        echo "FAIL  $name: output missing /$pat/"
+        echo "$out" | sed 's/^/      | /'
+        fails=$((fails + 1))
+        return
+    fi
+    echo "ok    $name"
+}
+
+# 14. merging two bench files yields one doc the gate accepts against a
+#     baseline that spans both benches' rows (which a single input could
+#     never satisfy — the rename guard would fire)
+mk "$tmp/in_recon.json" true "${rows_ok[@]}" -- "${notes_ok[@]}" \
+    "scratch_allocs_total=5"
+mk "$tmp/in_store.json" true "store.publish fp-weights=3.0" \
+    "store.load+decode fp-weights=1.0" -- "store_warm_job_s=0.4" \
+    "scratch_allocs_total=7"
+run_merge "merge: two bench files combine" 0 "merge: wrote" \
+    "$tmp/merged.json" "$tmp/in_recon.json" "$tmp/in_store.json"
+mk "$tmp/base_both.json" true "${rows_ok[@]}" \
+    "store.publish fp-weights=3.0" \
+    "store.load+decode fp-weights=1.0" -- "${notes_ok[@]}" \
+    "store_warm_job_s=0.4"
+run_case "pass: merged doc spans both benches" 0 \
+    "bench gate: PASS (calibrated)" \
+    "$tmp/merged.json" "$tmp/base_both.json"
+if python3 -c "
+import json, sys
+d = json.load(open('$tmp/merged.json'))
+sys.exit(0 if d['notes'].get('scratch_allocs_total') == 12 else 1)
+"; then
+    echo "ok    merge: scratch counters summed"
+else
+    echo "FAIL  merge: scratch counters not summed"
+    fails=$((fails + 1))
+fi
+
+# 15. a result row appearing in two inputs is an error, not a silent
+#     last-one-wins
+run_merge "fail: duplicate row across inputs" 1 "duplicate result row" \
+    "$tmp/merged_dup.json" "$tmp/in_recon.json" "$tmp/in_recon.json"
+
+# 16. conflicting non-scratch notes are an error
+mk "$tmp/in_conflict.json" true "other row=1.0" -- \
+    "recon_iters_per_sec=99.0"
+run_merge "fail: conflicting note across inputs" 1 "conflicting note" \
+    "$tmp/merged_conflict.json" "$tmp/in_recon.json" \
+    "$tmp/in_conflict.json"
+
 if [ "$fails" -ne 0 ]; then
     echo "check_bench fixture tests: $fails FAILED"
     exit 1
