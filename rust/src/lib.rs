@@ -39,7 +39,9 @@
 //! for the paper-vs-measured results.
 
 pub mod util {
+    pub mod cancel;
     pub mod cli;
+    pub mod faults;
     pub mod json;
     pub mod pool;
     pub mod rng;

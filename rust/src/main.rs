@@ -330,6 +330,12 @@ fn run() -> Result<()> {
         "serve" => {
             let sock = PathBuf::from(a.str("sock", "brecq.sock"));
             let workers = a.usize("workers", 0);
+            if brecq::util::faults::armed() {
+                eprintln!(
+                    "[serve] WARNING: fault injection armed \
+                     (BRECQ_FAULTS is set) — chaos-testing mode"
+                );
+            }
             let s = session(artifacts, store)?;
             pipeline::serve::serve(s, &sock, workers)?;
         }
@@ -346,8 +352,12 @@ fn run() -> Result<()> {
             let sock = PathBuf::from(a.str("sock", "brecq.sock"));
             let priority = a.f32("priority", 0.0) as i64;
             let quiet = a.bool("quiet", false);
+            // 0 (the default) waits forever; otherwise a typed timeout
+            let t = a.usize("timeout", 0);
+            let timeout =
+                (t > 0).then(|| std::time::Duration::from_secs(t as u64));
             let summary = pipeline::serve::submit(
-                &sock, &specs, priority, |ev| {
+                &sock, &specs, priority, timeout, |ev| {
                     if !quiet {
                         println!("{}", ev.to_string());
                     }
@@ -398,11 +408,25 @@ fn run() -> Result<()> {
         "ctl" => {
             let op = a.positional.first().cloned().ok_or_else(|| {
                 anyhow::anyhow!(
-                    "usage: brecq ctl <ping|stats|shutdown> --sock PATH"
+                    "usage: brecq ctl <ping|stats|shutdown|cancel BATCH> \
+                     --sock PATH"
                 )
             })?;
             let sock = PathBuf::from(a.str("sock", "brecq.sock"));
-            let reply = pipeline::serve::control(&sock, &op)?;
+            let reply = if op == "cancel" {
+                let id = a
+                    .positional
+                    .get(1)
+                    .and_then(|s| s.parse::<f64>().ok())
+                    .ok_or_else(|| anyhow::anyhow!(
+                        "usage: brecq ctl cancel <batch-id> --sock PATH \
+                         (the id from the submit 'accepted' event)"
+                    ))?;
+                pipeline::serve::control_fields(
+                    &sock, "cancel", vec![("batch", json::num(id))])?
+            } else {
+                pipeline::serve::control(&sock, &op)?
+            };
             println!("{}", reply.to_string());
         }
         "exp" => {
@@ -572,11 +596,21 @@ USAGE: brecq <cmd> [--flags]
               batches over a unix socket, fair-shares them across client
               connections on the worker pool, streams NDJSON progress
               events; SIGINT/SIGTERM drain and exit cleanly. Pair with
-              --store DIR so results persist across daemon restarts
+              --store DIR so results persist across daemon restarts.
+              Jobs run panic-isolated; with a store, in-flight batches
+              are journalled and a restarted daemon finishes them.
+              $BRECQ_FAULTS arms deterministic fault injection (see
+              DESIGN.md, chaos testing only)
   submit      <jobs.json> --sock PATH [--priority P] [--json OUT]
-              [--quiet]   send a batch to a running daemon and stream its
-              events; exits non-zero if any job failed
-  ctl         <ping|stats|shutdown> --sock PATH   one-shot daemon control
+              [--quiet] [--timeout SECS]   send a batch to a running
+              daemon and stream its events; exits non-zero if any job
+              failed. --timeout bounds the whole wait (default: wait
+              forever); a daemon that dies mid-batch is reported as a
+              connection EOF, distinct from per-job failures
+  ctl         <ping|stats|shutdown|cancel BATCH> --sock PATH   one-shot
+              daemon control; cancel stops a batch by the id from its
+              'accepted' event (running jobs stop at the next stage or
+              iteration boundary)
   exp         <list|table1|table2|table3|table4|table5|table6|fig2|fig3|
               fig4|all> [--models a,b,c] [--iters N] [--seeds S]
               [--qat-steps N] [--out DIR]

@@ -33,14 +33,26 @@
 //! over its load→compute→publish window, so of N processes racing a cold
 //! key exactly one computes and the rest load the published bits
 //! (`rust/tests/qaas.rs` races real processes to pin this).
+//!
+//! Every IO site (`store.publish`, `store.load`, `store.index`,
+//! `store.lock`) classifies errors transient-vs-permanent and retries
+//! transients with bounded exponential backoff and deterministic,
+//! key-seeded jitter ([`StoreStats::retried`] counts the sleeps). The
+//! same four site names are fault-injection points for
+//! [`crate::util::faults`] — `$BRECQ_FAULTS="store.publish:io@0.1"`
+//! makes a tenth of publishes fail transiently, which the retry loop
+//! must absorb bit-identically (pinned by `rust/tests/chaos.rs`).
 
 use std::collections::BTreeMap;
 use std::fs;
+use std::io;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::calib::CalibSet;
 use crate::mp::SearchResult;
+use crate::util::faults;
+use crate::util::rng::Rng;
 use crate::recon::{BitConfig, QuantizedModel, UnitReport};
 use crate::sensitivity::SensitivityTable;
 use crate::tensor::Tensor;
@@ -775,7 +787,8 @@ pub use entry_lock::EntryLock;
 /// front has its own); `corrupt` counts entries that failed key, length,
 /// checksum or schema verification (each one was deleted and recomputed);
 /// `publishes` counts entries written; `evicted` counts entries removed by
-/// the capacity sweep.
+/// the capacity sweep; `retried` counts transient-IO backoff sleeps across
+/// all sites (zero on a healthy filesystem with no armed fault plan).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct StoreStats {
     pub hits: u64,
@@ -783,6 +796,31 @@ pub struct StoreStats {
     pub corrupt: u64,
     pub publishes: u64,
     pub evicted: u64,
+    pub retried: u64,
+}
+
+// ---------------------------------------------------------------------
+// Transient-IO retry policy
+// ---------------------------------------------------------------------
+
+/// Attempts per IO site (1 initial + 3 retries). Probability-mode
+/// injected faults are bounded-burst (never two consecutive fires), so
+/// any budget >= 2 recovers them deterministically; real-world EINTR
+/// and NFS-style timeouts get the full ladder.
+const RETRY_ATTEMPTS: u32 = 4;
+/// First backoff sleep; doubles per retry (2, 4, 8 ms before jitter).
+const RETRY_BASE_MS: u64 = 2;
+
+/// Errors worth retrying: interruptions and timeouts. Everything else
+/// (not-found, permissions, full disk, bad data) is permanent and
+/// surfaces immediately.
+fn transient(e: &io::Error) -> bool {
+    matches!(
+        e.kind(),
+        io::ErrorKind::Interrupted
+            | io::ErrorKind::WouldBlock
+            | io::ErrorKind::TimedOut
+    )
 }
 
 /// Content-addressed on-disk artifact store. Safe to share between any
@@ -796,6 +834,7 @@ pub struct ArtifactStore {
     corrupt: AtomicU64,
     publishes: AtomicU64,
     evicted: AtomicU64,
+    retried: AtomicU64,
 }
 
 impl ArtifactStore {
@@ -827,6 +866,7 @@ impl ArtifactStore {
             corrupt: AtomicU64::new(0),
             publishes: AtomicU64::new(0),
             evicted: AtomicU64::new(0),
+            retried: AtomicU64::new(0),
         })
     }
 
@@ -841,6 +881,56 @@ impl ArtifactStore {
             corrupt: self.corrupt.load(Ordering::Relaxed),
             publishes: self.publishes.load(Ordering::Relaxed),
             evicted: self.evicted.load(Ordering::Relaxed),
+            retried: self.retried.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Run `op` with the store's transient-IO retry policy: up to
+    /// [`RETRY_ATTEMPTS`] attempts, exponential backoff with jitter
+    /// drawn from a deterministic `(key, site)`-seeded stream (so two
+    /// processes retrying the same entry desynchronize, and a failing
+    /// run replays identically). `site` is also a fault-injection
+    /// point: an armed plan can replace any attempt with an injected
+    /// transient/permanent error or a panic before `op` runs.
+    fn with_retry<T>(
+        &self,
+        site: &str,
+        key: &str,
+        mut op: impl FnMut() -> io::Result<T>,
+    ) -> io::Result<T> {
+        let mut jitter =
+            Rng::new(fnv64(key.as_bytes()) ^ fnv64(site.as_bytes()));
+        let mut delay = RETRY_BASE_MS;
+        let mut attempt = 0u32;
+        loop {
+            attempt += 1;
+            let r = match faults::check(site) {
+                Some(faults::Kind::Io) => Err(io::Error::new(
+                    io::ErrorKind::TimedOut,
+                    format!("injected transient IO fault at {site}"),
+                )),
+                Some(faults::Kind::Perm) => {
+                    return Err(io::Error::other(format!(
+                        "injected permanent fault at {site}"
+                    )))
+                }
+                Some(faults::Kind::Panic) => {
+                    panic!("injected panic at {site} (key '{key}')")
+                }
+                None => op(),
+            };
+            match r {
+                Ok(v) => return Ok(v),
+                Err(e) if transient(&e) && attempt < RETRY_ATTEMPTS => {
+                    self.retried.fetch_add(1, Ordering::Relaxed);
+                    let ms = delay + jitter.next_u64() % delay.max(1);
+                    std::thread::sleep(
+                        std::time::Duration::from_millis(ms),
+                    );
+                    delay *= 2;
+                }
+                Err(e) => return Err(e),
+            }
         }
     }
 
@@ -865,29 +955,38 @@ impl ArtifactStore {
     /// whole load→compute→publish window for compute-once semantics.
     pub fn lock(&self, key: &str) -> Result<EntryLock, Error> {
         let path = self.dir.join(format!("{}.lock", key_hash(key)));
-        entry_lock::acquire(&path).map_err(|e| {
-            Error::Exec(format!(
-                "locking store entry for '{key}': {e}"
-            ))
-        })
+        self.with_retry("store.lock", key, || entry_lock::acquire(&path))
+            .map_err(|e| {
+                Error::Exec(format!(
+                    "locking store entry for '{key}': {e}"
+                ))
+            })
     }
 
     /// Load the committed entry for `key`, verifying key, kind integrity,
     /// payload length and checksum. Any verification failure deletes the
     /// entry, bumps `corrupt` and reports a miss — a corrupt artifact is
-    /// never served.
+    /// never served. A hit also touches the index mtime, which is the
+    /// recency signal [`Self::evict_to_cap`] sorts by: eviction under a
+    /// size cap is least-recently-*used*, not oldest-published.
     pub fn load(&self, key: &str) -> Option<Blob> {
         let (jp, bp) = self.entry_paths(key);
-        let text = match fs::read_to_string(&jp) {
-            Ok(t) => t,
-            Err(_) => {
-                self.misses.fetch_add(1, Ordering::Relaxed);
-                return None;
-            }
-        };
-        match Self::verify_and_decode(key, &text, &bp) {
+        let text =
+            match self.with_retry("store.index", key, || {
+                fs::read_to_string(&jp)
+            }) {
+                Ok(t) => t,
+                Err(_) => {
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    return None;
+                }
+            };
+        match self.verify_and_decode(key, &text, &bp) {
             Ok(blob) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
+                if self.cap_bytes.is_some() {
+                    Self::touch(&jp);
+                }
                 Some(blob)
             }
             Err(why) => {
@@ -895,6 +994,17 @@ impl ArtifactStore {
                 self.misses.fetch_add(1, Ordering::Relaxed);
                 None
             }
+        }
+    }
+
+    /// Best-effort mtime bump on hit (capped stores only) — keeps hot
+    /// entries at the back of the LRU eviction order.
+    fn touch(jp: &Path) {
+        let now = std::time::SystemTime::now();
+        if let Ok(f) = fs::File::options().write(true).open(jp) {
+            let _ = f.set_times(
+                fs::FileTimes::new().set_accessed(now).set_modified(now),
+            );
         }
     }
 
@@ -912,6 +1022,7 @@ impl ArtifactStore {
     }
 
     fn verify_and_decode(
+        &self,
         key: &str,
         index_text: &str,
         bin_path: &Path,
@@ -939,7 +1050,8 @@ impl ArtifactStore {
             .and_then(Json::as_str)
             .and_then(|s| u64::from_str_radix(s, 16).ok())
             .ok_or("index missing 'checksum'")?;
-        let bytes = fs::read(bin_path)
+        let bytes = self
+            .with_retry("store.load", key, || fs::read(bin_path))
             .map_err(|e| format!("payload unreadable: {e}"))?;
         if bytes.len() != bin_len {
             return Err(format!(
@@ -958,23 +1070,31 @@ impl ArtifactStore {
 
     /// Atomically publish `blob` under `key`: payload first, index last
     /// (the rename of the index is the commit point). Safe against
-    /// readers in other processes at every intermediate state.
+    /// readers in other processes at every intermediate state, and safe
+    /// to retry whole: the temp names are pid-suffixed and every step
+    /// is an overwrite, so a transiently-failed attempt replays clean.
     pub fn publish(&self, key: &str, blob: &Blob) -> Result<(), Error> {
         let (jp, bp) = self.entry_paths(key);
         let pid = std::process::id();
-        let io_err = |what: &str, e: std::io::Error| {
-            Error::Exec(format!("store publish '{key}' ({what}): {e}"))
+        let ctx = |what: &str| {
+            move |e: io::Error| {
+                io::Error::new(e.kind(), format!("{what}: {e}"))
+            }
         };
-        let bin_tmp = bp.with_extension(format!("bin.tmp.{pid}"));
-        fs::write(&bin_tmp, &blob.bytes)
-            .map_err(|e| io_err("write payload", e))?;
-        fs::rename(&bin_tmp, &bp)
-            .map_err(|e| io_err("commit payload", e))?;
-        let json_tmp = jp.with_extension(format!("json.tmp.{pid}"));
-        fs::write(&json_tmp, blob.index_json(key).to_string())
-            .map_err(|e| io_err("write index", e))?;
-        fs::rename(&json_tmp, &jp)
-            .map_err(|e| io_err("commit index", e))?;
+        self.with_retry("store.publish", key, || {
+            let bin_tmp = bp.with_extension(format!("bin.tmp.{pid}"));
+            fs::write(&bin_tmp, &blob.bytes)
+                .map_err(ctx("write payload"))?;
+            fs::rename(&bin_tmp, &bp).map_err(ctx("commit payload"))?;
+            let json_tmp = jp.with_extension(format!("json.tmp.{pid}"));
+            fs::write(&json_tmp, blob.index_json(key).to_string())
+                .map_err(ctx("write index"))?;
+            fs::rename(&json_tmp, &jp).map_err(ctx("commit index"))?;
+            Ok(())
+        })
+        .map_err(|e| {
+            Error::Exec(format!("store publish '{key}': {e}"))
+        })?;
         self.publishes.fetch_add(1, Ordering::Relaxed);
         if self.cap_bytes.is_some() {
             self.evict_to_cap(&jp);
@@ -995,9 +1115,11 @@ impl ArtifactStore {
         v
     }
 
-    /// Evict oldest entries (by index mtime, path as the deterministic
-    /// tie-break) until the store fits `cap_bytes`, never touching the
-    /// just-published `keep`.
+    /// Evict least-recently-used entries until the store fits
+    /// `cap_bytes`, never touching the just-published `keep`. Recency
+    /// is the index mtime (path as the deterministic tie-break), which
+    /// [`Self::load`] bumps on every hit — so a hot entry outlives
+    /// colder but younger ones.
     fn evict_to_cap(&self, keep: &Path) {
         let Some(cap) = self.cap_bytes else { return };
         let mut entries: Vec<(std::time::SystemTime, PathBuf, u64)> =
@@ -1135,6 +1257,39 @@ mod tests {
         assert!(store.len() < 8);
         // the most recent entry survives
         assert!(store.load("k7").is_some());
+        let _ = fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn lru_touch_on_hit_keeps_hot_entries_through_a_cap_squeeze() {
+        // cap sized so three ~2.4KiB entries fit and a fourth forces
+        // exactly one eviction
+        let store =
+            ArtifactStore::open_with_cap(tmp_dir("lru"), Some(8000))
+                .unwrap();
+        let blob = |i: usize| {
+            let mut b = Blob::new("test");
+            b.push_f64s("x", &vec![i as f64; 256]);
+            b
+        };
+        for i in 0..3 {
+            store.publish(&format!("k{i}"), &blob(i)).unwrap();
+            // mtime separation (filesystem timestamp granularity)
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+        assert_eq!(store.stats().evicted, 0, "cap squeezed too early");
+        // k0 is the oldest-published entry — a hit makes it the hottest
+        assert!(store.load("k0").is_some());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        // k3 pushes over cap: LRU must evict k1, not the hot k0
+        store.publish("k3", &blob(3)).unwrap();
+        assert!(store.stats().evicted > 0, "cap never evicted");
+        assert!(
+            store.load("k0").is_some(),
+            "hot entry evicted — eviction is not LRU"
+        );
+        assert!(store.load("k3").is_some());
+        assert!(store.load("k1").is_none(), "LRU entry survived");
         let _ = fs::remove_dir_all(store.dir());
     }
 

@@ -35,6 +35,7 @@ use crate::mp::{GaConfig, GeneticSearch, SearchResult};
 use crate::recon::{BitConfig, Calibrator, QuantizedModel, ReconConfig,
                    UnitReport};
 use crate::sensitivity::{Profiler, SensitivityTable};
+use crate::util::cancel::CancelToken;
 use crate::util::json::{self, Json};
 use crate::util::pool;
 
@@ -462,7 +463,7 @@ impl Session {
 
     /// Execute one job through its stage DAG.
     pub fn run(&self, spec: &JobSpec) -> Result<JobOutput, Error> {
-        self.run_inner(spec, &mut |_| {})
+        self.run_inner(spec, &CancelToken::none(), &mut |_| {})
     }
 
     /// [`Session::run`] with typed progress events: stage boundaries plus
@@ -475,12 +476,50 @@ impl Session {
     ) -> Result<JobOutput, Error> {
         cache::trace_begin();
         let _guard = TraceGuard;
-        self.run_inner(spec, emit)
+        self.run_inner(spec, &CancelToken::none(), emit)
+    }
+
+    /// [`Session::run_traced`] under a cancellation scope: the job stops
+    /// with [`Error::Cancelled`] at the next stage/iteration boundary
+    /// once `cancel` fires or the spec's `deadline_ms` budget (measured
+    /// from this call) expires.
+    pub fn run_with_cancel(
+        &self,
+        spec: &JobSpec,
+        cancel: &CancelToken,
+        emit: &mut dyn FnMut(JobEvent),
+    ) -> Result<JobOutput, Error> {
+        cache::trace_begin();
+        let _guard = TraceGuard;
+        self.run_inner(spec, cancel, emit)
     }
 
     fn run_inner(
         &self,
         spec: &JobSpec,
+        parent: &CancelToken,
+        emit: &mut dyn FnMut(JobEvent),
+    ) -> Result<JobOutput, Error> {
+        // The deadline clock starts here — job *execution* start, not
+        // queue-entry time.
+        let cancel =
+            parent.child(spec.deadline_ms.map(std::time::Duration::from_millis));
+        match self.run_exec(spec, &cancel, emit) {
+            // recon surfaces cancellation as an untyped bail routed
+            // through Error::Exec; retype it so callers can match
+            err @ Err(Error::Cancelled(_)) => err,
+            Err(e) => match cancel.cancelled() {
+                Some(reason) => Err(Error::Cancelled(reason)),
+                None => Err(e),
+            },
+            ok => ok,
+        }
+    }
+
+    fn run_exec(
+        &self,
+        spec: &JobSpec,
+        cancel: &CancelToken,
         emit: &mut dyn FnMut(JobEvent),
     ) -> Result<JobOutput, Error> {
         let t0 = std::time::Instant::now();
@@ -496,8 +535,14 @@ impl Session {
         }
         // Emits Stage start/finish around `body`, attributing any cache
         // outcomes recorded on this thread since the previous boundary.
+        // Each stage entry is a cancellation checkpoint: an expired
+        // deadline or a `ctl cancel` stops the job *between* stages, so
+        // no partially-built artifact is ever published.
         macro_rules! stage {
             ($name:expr, $body:expr) => {{
+                if let Some(reason) = cancel.cancelled() {
+                    return Err(Error::Cancelled(reason));
+                }
                 emit(JobEvent::Stage { stage: $name, done: false });
                 let r = $body;
                 for (key, outcome) in cache::trace_drain() {
@@ -562,7 +607,7 @@ impl Session {
                 .expect("reconstruction always has a calibration set");
             Some(stage!(
                 "reconstruct",
-                self.reconstruct(model, spec, calib, &bits)
+                self.reconstruct(model, spec, calib, &bits, &cancel)
             )?)
         };
         // Eval: top-1 accuracy for classification models, mAP for the
@@ -660,6 +705,7 @@ impl Session {
         spec: &JobSpec,
         calib: &CalibSet,
         bits: &BitConfig,
+        cancel: &CancelToken,
     ) -> Result<Arc<QuantizedModel>, Error> {
         let key = self.recon_key(spec, bits);
         self.cache.get_or_build(&key, || {
@@ -668,6 +714,7 @@ impl Session {
                 iters: spec.iters,
                 seed: spec.seed,
                 verbose: spec.verbose,
+                cancel: cancel.clone(),
                 ..ReconConfig::default()
             };
             let qm = match spec.method {

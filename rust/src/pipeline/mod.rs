@@ -72,6 +72,11 @@ pub enum Error {
     Spec(String),
     /// Execution failure from the engine below the API boundary.
     Exec(String),
+    /// The job was cancelled cooperatively — `ctl cancel`, a
+    /// [`JobSpec::deadline_ms`] expiry, or a parent token firing. The
+    /// message is the cancellation reason; no partial artifact was
+    /// published.
+    Cancelled(String),
 }
 
 impl fmt::Display for Error {
@@ -100,6 +105,7 @@ impl fmt::Display for Error {
             ),
             Error::Spec(m) => write!(f, "invalid job spec: {m}"),
             Error::Exec(m) => write!(f, "pipeline execution: {m}"),
+            Error::Cancelled(m) => write!(f, "job cancelled: {m}"),
         }
     }
 }
@@ -339,6 +345,12 @@ pub struct JobSpec {
     /// Greedy NMS (IoU 0.5) in the detection eval. Default off so the
     /// table5 baselines are unchanged; no effect on classification.
     pub det_nms: bool,
+    /// Wall-clock deadline for the whole job in milliseconds, measured
+    /// from when execution *starts* (not queue time). `None`/0 = no
+    /// deadline. Expiry surfaces as [`Error::Cancelled`] at the next
+    /// stage or reconstruction-iteration boundary. Not part of any
+    /// cache key: the artifacts a job computes don't depend on it.
+    pub deadline_ms: Option<u64>,
     pub verbose: bool,
 }
 
@@ -359,6 +371,7 @@ impl Default for JobSpec {
             eval: true,
             hw_report: false,
             det_nms: false,
+            deadline_ms: None,
             verbose: false,
         }
     }
@@ -514,6 +527,13 @@ impl JobSpec {
             ("eval", json::b(self.eval)),
             ("hw_report", json::b(self.hw_report)),
             ("det_nms", json::b(self.det_nms)),
+            (
+                "deadline_ms",
+                match self.deadline_ms {
+                    Some(ms) => json::num(ms as f64),
+                    None => Json::Null,
+                },
+            ),
             ("verbose", json::b(self.verbose)),
         ])
     }
@@ -525,10 +545,10 @@ impl JobSpec {
         let o = v.as_obj().ok_or_else(|| {
             Error::Spec("job must be a JSON object".into())
         })?;
-        const KEYS: [&str; 15] = [
+        const KEYS: [&str; 16] = [
             "model", "method", "gran", "wbits", "abits", "first_last_8",
             "iters", "calib_n", "seed", "source", "search", "eval",
-            "hw_report", "det_nms", "verbose",
+            "hw_report", "det_nms", "deadline_ms", "verbose",
         ];
         for k in o.keys() {
             if !KEYS.contains(&k.as_str()) {
@@ -573,6 +593,21 @@ impl JobSpec {
             None | Some(Json::Null) => None,
             Some(x) => Some(parse_search(x)?),
         };
+        // `deadline_ms: 0` and `deadline_ms: null` both mean no deadline
+        let deadline_ms = match v.get("deadline_ms") {
+            None | Some(Json::Null) => d.deadline_ms,
+            Some(x) => match x.as_f64() {
+                Some(n) if n == 0.0 => None,
+                Some(n) if n > 0.0 => Some(n as u64),
+                _ => {
+                    return Err(Error::Spec(
+                        "'deadline_ms' must be a non-negative number \
+                         or null"
+                            .into(),
+                    ))
+                }
+            },
+        };
         Ok(JobSpec {
             model,
             method,
@@ -588,6 +623,7 @@ impl JobSpec {
             eval: j_bool(v, "eval", d.eval)?,
             hw_report: j_bool(v, "hw_report", d.hw_report)?,
             det_nms: j_bool(v, "det_nms", d.det_nms)?,
+            deadline_ms,
             verbose: j_bool(v, "verbose", d.verbose)?,
         })
     }
@@ -801,6 +837,7 @@ mod tests {
             eval: false,
             hw_report: true,
             det_nms: true,
+            deadline_ms: Some(1500),
             verbose: true,
         };
         let text = spec.to_json().to_string();
@@ -817,6 +854,18 @@ mod tests {
         // abits: 0 and abits: null both mean FP activations
         let v = Json::parse(r#"{"model":"m","abits":0}"#).unwrap();
         assert_eq!(JobSpec::from_json(&v).unwrap().abits, None);
+        // deadline_ms: 0 and null both mean no deadline
+        let v = Json::parse(r#"{"model":"m","deadline_ms":0}"#).unwrap();
+        assert_eq!(JobSpec::from_json(&v).unwrap().deadline_ms, None);
+        let v =
+            Json::parse(r#"{"model":"m","deadline_ms":250}"#).unwrap();
+        assert_eq!(
+            JobSpec::from_json(&v).unwrap().deadline_ms,
+            Some(250)
+        );
+        let v =
+            Json::parse(r#"{"model":"m","deadline_ms":-5}"#).unwrap();
+        assert!(matches!(JobSpec::from_json(&v), Err(Error::Spec(_))));
     }
 
     #[test]

@@ -6,20 +6,23 @@
 //!
 //! ```text
 //!   {"op":"submit", "priority": 0, "jobs": [<JobSpec>, ...]}
+//!   {"op":"cancel", "batch": N}
 //!   {"op":"ping"} | {"op":"stats"} | {"op":"shutdown"}
 //! ```
 //!
 //! Daemon events (streamed while a batch runs; `job` indexes into the
-//! submitted array):
+//! submitted array, `batch` is the daemon-assigned batch id that
+//! `{"op":"cancel"}` takes):
 //!
 //! ```text
-//!   {"event":"accepted", "jobs": N}
+//!   {"event":"accepted", "batch": N, "jobs": N}
 //!   {"event":"stage", "job": i, "stage": "reconstruct", "done": false}
 //!   {"event":"cache", "job": i, "key": "fp/resnet_s",
 //!    "outcome": "hit|store-hit|computed|loaded"}
 //!   {"event":"result", "job": i, "ok": true, "output": {...}}
 //!   {"event":"result", "job": i, "ok": false, "error": "..."}
-//!   {"event":"done", "ok": N, "failed": N, "computes": N,
+//!   {"event":"cancelling", "batch": N, "queued_dropped": N}
+//!   {"event":"done", "batch": N, "ok": N, "failed": N, "computes": N,
 //!    "cache_hits": N, "store_hits": N}
 //! ```
 //!
@@ -32,22 +35,48 @@
 //! client dumping 100 jobs cannot starve another's single job at equal
 //! priority.
 //!
+//! ## Crash safety
+//!
+//! Every accepted batch terminates with exactly one `done` event, no
+//! matter how its jobs end:
+//!
+//! * Workers run jobs under `catch_unwind`, so a panicking job (a
+//!   backend bug, or an injected `panic` fault from
+//!   [`crate::util::faults`]) becomes a per-job
+//!   `{"event":"result","ok":false,"error":"panic: ..."}` instead of
+//!   killing the daemon, and the batch still completes.
+//! * Jobs carry a cooperative [`crate::util::cancel::CancelToken`]:
+//!   `{"op":"cancel","batch":N}` (or a spec's `deadline_ms`) stops them
+//!   at the next stage/iteration boundary with a typed
+//!   `job cancelled: ...` result; queued-but-unstarted siblings are
+//!   dropped immediately.
+//! * When the session has an artifact store, each in-flight batch is
+//!   journalled to `<store>/journal/<pid>-<batch>.json` (written by
+//!   tmp-file + rename, updated as jobs finish, removed on `done`). A
+//!   daemon restarted over the same store finds journals whose owner
+//!   pid is dead, claims them by rename, and re-runs the incomplete
+//!   jobs before binding the socket — warm cache hits for anything the
+//!   dead daemon had already published, so interrupted work is finished
+//!   exactly once.
+//!
 //! Results are deterministic by construction — every job runs through
 //! the same [`Session`] cache/store machinery as `brecq run`, so a
 //! submitted batch is bit-identical (per [`super::JobOutput::fingerprint`]) to
-//! an in-process run of the same specs; `scripts/serve_smoke.sh` gates
-//! that in CI. Shutdown (SIGINT/SIGTERM or `{"op":"shutdown"}`) stops
-//! accepting connections, drains queued jobs, flushes each batch's
-//! `done` event and removes the socket file.
+//! an in-process run of the same specs; `scripts/serve_smoke.sh` and
+//! `scripts/chaos_soak.sh` gate that in CI. Shutdown (SIGINT/SIGTERM or
+//! `{"op":"shutdown"}`) stops accepting connections, drains queued
+//! jobs, flushes each batch's `done` event and removes the socket file.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::os::unix::net::{UnixListener, UnixStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
+use crate::util::cancel::CancelToken;
 use crate::util::json::{self, Json};
 
 use super::cache::Outcome;
@@ -84,14 +113,36 @@ mod sig {
     }
 }
 
+/// `kill(pid, 0)` liveness probe: alive if the signal is deliverable
+/// (ret 0) or we merely lack permission (EPERM); ESRCH means gone.
+fn pid_alive(pid: i32) -> bool {
+    extern "C" {
+        fn kill(pid: i32, sig: i32) -> i32;
+    }
+    if unsafe { kill(pid, 0) } == 0 {
+        return true;
+    }
+    std::io::Error::last_os_error().raw_os_error() == Some(1) // EPERM
+}
+
 // ---------------------------------------------------------------------
 // Daemon internals
 // ---------------------------------------------------------------------
 
 /// Per-batch bookkeeping shared by the queue entries of one submit.
 struct Batch {
+    id: u64,
     conn: u64,
     writer: Arc<Mutex<UnixStream>>,
+    /// Fires on `{"op":"cancel"}`; each job derives its deadline child
+    /// from this, so one token stops the whole batch.
+    cancel: CancelToken,
+    /// Write-ahead journal file while the batch is in flight (only
+    /// when the session has an artifact store).
+    journal: Option<PathBuf>,
+    specs: Vec<JobSpec>,
+    /// Which jobs have reached a terminal result (journal payload).
+    done_flags: Mutex<Vec<bool>>,
     remaining: AtomicUsize,
     ok: AtomicUsize,
     failed: AtomicUsize,
@@ -116,6 +167,13 @@ struct Shared {
     cv: Condvar,
     /// Jobs served so far per connection (the fair-share signal).
     served: Mutex<HashMap<u64, u64>>,
+    /// Live batches by id — the `cancel` op's lookup table.
+    batches: Mutex<HashMap<u64, Arc<Batch>>>,
+    next_batch: AtomicU64,
+    /// `<store>/journal` when the session persists artifacts.
+    journal_dir: Option<PathBuf>,
+    /// Jobs re-run from dead daemons' journals at startup.
+    recovered: AtomicUsize,
     stop: AtomicBool,
 }
 
@@ -131,6 +189,65 @@ fn write_line(w: &Mutex<UnixStream>, v: &Json) {
 fn event(kind: &str, mut fields: Vec<(&str, Json)>) -> Json {
     fields.insert(0, ("event", json::s(kind)));
     json::obj(fields)
+}
+
+/// Extract a human-readable message from a panic payload.
+fn panic_msg(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+impl Batch {
+    /// Persist the in-flight journal: tmp write + atomic rename, same
+    /// commit discipline as the artifact store. Failures are logged,
+    /// not fatal — the journal is a recovery aid, not a correctness
+    /// dependency for the running daemon.
+    fn write_journal(&self) {
+        let Some(path) = &self.journal else { return };
+        let done = self
+            .done_flags
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .map(|&d| json::b(d))
+            .collect();
+        let doc = json::obj(vec![
+            ("v", json::num(1.0)),
+            ("pid", json::num(std::process::id() as f64)),
+            ("batch", json::num(self.id as f64)),
+            ("done", Json::Arr(done)),
+            (
+                "jobs",
+                Json::Arr(
+                    self.specs.iter().map(JobSpec::to_json).collect(),
+                ),
+            ),
+        ]);
+        let tmp = path.with_extension("tmp");
+        let write = std::fs::write(&tmp, doc.to_string())
+            .and_then(|()| std::fs::rename(&tmp, path));
+        if let Err(e) = write {
+            eprintln!(
+                "[serve] journal write {} failed: {e}",
+                path.display()
+            );
+        }
+    }
+
+    /// Record job `i`'s terminal result in the journal.
+    fn mark_done(&self, i: usize) {
+        if self.journal.is_some() {
+            self.done_flags
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())[i] = true;
+            self.write_journal();
+        }
+    }
 }
 
 impl Shared {
@@ -177,26 +294,64 @@ impl Shared {
                 .unwrap_or_else(|e| e.into_inner())
                 .entry(t.batch.conn)
                 .or_insert(0) += 1;
-            self.run_one(&t);
-            if t.batch.remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
-                let b = &t.batch;
-                write_line(
-                    &b.writer,
-                    &event("done", vec![
-                        ("ok", json::num(
-                            b.ok.load(Ordering::SeqCst) as f64)),
-                        ("failed", json::num(
-                            b.failed.load(Ordering::SeqCst) as f64)),
-                        ("computes", json::num(
-                            b.computes.load(Ordering::SeqCst) as f64)),
-                        ("cache_hits", json::num(
-                            b.cache_hits.load(Ordering::SeqCst) as f64)),
-                        ("store_hits", json::num(
-                            b.store_hits.load(Ordering::SeqCst) as f64)),
-                    ]),
+            // a batch cancelled while this job sat queued never starts
+            if let Some(reason) = t.batch.cancel.cancelled() {
+                self.report_failure(
+                    &t,
+                    &format!("job cancelled: {reason}"),
                 );
+            } else {
+                self.run_one(&t);
             }
+            self.finish_one(&t.batch);
         }
+    }
+
+    /// The single terminal accounting point: every queued job — run,
+    /// panicked, cancelled, or dropped — must funnel through here
+    /// exactly once so each accepted batch emits exactly one `done`.
+    fn finish_one(&self, b: &Arc<Batch>) {
+        if b.remaining.fetch_sub(1, Ordering::SeqCst) != 1 {
+            return;
+        }
+        write_line(
+            &b.writer,
+            &event("done", vec![
+                ("batch", json::num(b.id as f64)),
+                ("ok", json::num(
+                    b.ok.load(Ordering::SeqCst) as f64)),
+                ("failed", json::num(
+                    b.failed.load(Ordering::SeqCst) as f64)),
+                ("computes", json::num(
+                    b.computes.load(Ordering::SeqCst) as f64)),
+                ("cache_hits", json::num(
+                    b.cache_hits.load(Ordering::SeqCst) as f64)),
+                ("store_hits", json::num(
+                    b.store_hits.load(Ordering::SeqCst) as f64)),
+            ]),
+        );
+        if let Some(p) = &b.journal {
+            let _ = std::fs::remove_file(p);
+        }
+        self.batches
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .remove(&b.id);
+    }
+
+    /// Emit a failed `result` for job `t` and journal it.
+    fn report_failure(&self, t: &Queued, msg: &str) {
+        let b = &t.batch;
+        b.failed.fetch_add(1, Ordering::SeqCst);
+        write_line(
+            &b.writer,
+            &event("result", vec![
+                ("job", json::num(t.job as f64)),
+                ("ok", json::b(false)),
+                ("error", json::s(msg)),
+            ]),
+        );
+        b.mark_done(t.job);
     }
 
     fn run_one(&self, t: &Queued) {
@@ -231,8 +386,14 @@ impl Shared {
                 );
             }
         };
-        match self.session.run_traced(&t.spec, &mut emit) {
-            Ok(out) => {
+        // catch_unwind so a panicking job is a per-job failure, not a
+        // dead daemon: util::pool re-raises worker panics on the
+        // calling thread at scope join, so this fence sees them too.
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            self.session.run_with_cancel(&t.spec, &b.cancel, &mut emit)
+        }));
+        match r {
+            Ok(Ok(out)) => {
                 b.ok.fetch_add(1, Ordering::SeqCst);
                 write_line(
                     &b.writer,
@@ -242,18 +403,13 @@ impl Shared {
                         ("output", out.to_json()),
                     ]),
                 );
+                b.mark_done(t.job);
             }
-            Err(e) => {
-                b.failed.fetch_add(1, Ordering::SeqCst);
-                write_line(
-                    &b.writer,
-                    &event("result", vec![
-                        ("job", ji.clone()),
-                        ("ok", json::b(false)),
-                        ("error", json::s(&e.to_string())),
-                    ]),
-                );
-            }
+            Ok(Err(e)) => self.report_failure(t, &e.to_string()),
+            Err(payload) => self.report_failure(
+                t,
+                &format!("panic: {}", panic_msg(payload)),
+            ),
         }
     }
 
@@ -286,6 +442,12 @@ impl Shared {
                         "computes",
                         json::num(self.session.cache().computes() as f64),
                     ),
+                    (
+                        "journal_recovered",
+                        json::num(
+                            self.recovered.load(Ordering::SeqCst) as f64,
+                        ),
+                    ),
                 ];
                 if let Some(st) = self.session.cache().store() {
                     let s = st.stats();
@@ -299,6 +461,8 @@ impl Shared {
                         "store_publishes",
                         json::num(s.publishes as f64),
                     ));
+                    fields.push(
+                        ("store_retried", json::num(s.retried as f64)));
                 }
                 write_line(writer, &event("stats", fields));
             }
@@ -306,6 +470,64 @@ impl Shared {
                 write_line(writer, &event("shutting-down", vec![]));
                 self.stop.store(true, Ordering::SeqCst);
                 self.cv.notify_all();
+            }
+            Some("cancel") => {
+                let id = match v.get("batch").and_then(Json::as_f64) {
+                    Some(n) if n >= 0.0 => n as u64,
+                    _ => {
+                        return reply_err(
+                            "cancel needs a numeric 'batch' id",
+                        )
+                    }
+                };
+                let batch = self
+                    .batches
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .get(&id)
+                    .cloned();
+                let Some(b) = batch else {
+                    return reply_err(&format!(
+                        "unknown batch {id} (already done?)"
+                    ));
+                };
+                // running jobs observe this at their next checkpoint
+                b.cancel.cancel("cancelled by ctl");
+                // queued-but-unstarted jobs are dropped right now
+                let pulled: Vec<Queued> = {
+                    let mut q = self
+                        .queue
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner());
+                    let mut kept = Vec::with_capacity(q.len());
+                    let mut pulled = Vec::new();
+                    for t in q.drain(..) {
+                        if t.batch.id == id {
+                            pulled.push(t);
+                        } else {
+                            kept.push(t);
+                        }
+                    }
+                    *q = kept;
+                    pulled
+                };
+                write_line(
+                    writer,
+                    &event("cancelling", vec![
+                        ("batch", json::num(id as f64)),
+                        (
+                            "queued_dropped",
+                            json::num(pulled.len() as f64),
+                        ),
+                    ]),
+                );
+                for t in pulled {
+                    self.report_failure(
+                        &t,
+                        "job cancelled: cancelled by ctl",
+                    );
+                    self.finish_one(&t.batch);
+                }
             }
             Some("submit") => {
                 let priority = v
@@ -331,9 +553,12 @@ impl Shared {
                         }
                     }
                 }
+                let id =
+                    self.next_batch.fetch_add(1, Ordering::SeqCst);
                 write_line(
                     writer,
                     &event("accepted", vec![
+                        ("batch", json::num(id as f64)),
                         ("jobs", json::num(specs.len() as f64)),
                     ]),
                 );
@@ -341,6 +566,7 @@ impl Shared {
                     write_line(
                         writer,
                         &event("done", vec![
+                            ("batch", json::num(id as f64)),
                             ("ok", json::num(0.0)),
                             ("failed", json::num(0.0)),
                             ("computes", json::num(0.0)),
@@ -350,21 +576,42 @@ impl Shared {
                     );
                     return;
                 }
+                let n = specs.len();
+                let journal = self.journal_dir.as_ref().map(|d| {
+                    d.join(format!(
+                        "{}-{id}.json",
+                        std::process::id()
+                    ))
+                });
                 let batch = Arc::new(Batch {
+                    id,
                     conn,
                     writer: writer.clone(),
-                    remaining: AtomicUsize::new(specs.len()),
+                    cancel: CancelToken::new(),
+                    journal,
+                    specs,
+                    done_flags: Mutex::new(vec![false; n]),
+                    remaining: AtomicUsize::new(n),
                     ok: AtomicUsize::new(0),
                     failed: AtomicUsize::new(0),
                     computes: AtomicUsize::new(0),
                     cache_hits: AtomicUsize::new(0),
                     store_hits: AtomicUsize::new(0),
                 });
+                // journal before the first job can run: a crash after
+                // this point leaves a record to recover from
+                batch.write_journal();
+                self.batches
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .insert(id, batch.clone());
                 let mut q = self
                     .queue
                     .lock()
                     .unwrap_or_else(|e| e.into_inner());
-                for (i, spec) in specs.into_iter().enumerate() {
+                for (i, spec) in
+                    batch.specs.iter().cloned().enumerate()
+                {
                     // the conn counter doubles as the global seq source:
                     // seq only orders within one lock hold anyway
                     let seq = (conn << 32) | i as u64;
@@ -379,13 +626,18 @@ impl Shared {
                 drop(q);
                 self.cv.notify_all();
             }
-            _ => reply_err("unknown op (submit|ping|stats|shutdown)"),
+            _ => reply_err(
+                "unknown op (submit|cancel|ping|stats|shutdown)",
+            ),
         }
     }
 
     /// Read requests off one client connection until it closes or the
     /// daemon stops. Partial lines survive read timeouts (the buffer
-    /// accumulates across retries).
+    /// accumulates across retries). Queued batches outlive their
+    /// connection: a client that vanishes mid-batch loses only the
+    /// event stream — the jobs, the journal and the terminal `done`
+    /// accounting all still happen.
     fn handle_conn(&self, stream: UnixStream, conn: u64) {
         let _ = stream.set_read_timeout(Some(POLL));
         let writer = match stream.try_clone() {
@@ -413,6 +665,130 @@ impl Shared {
                         || e.kind() == ErrorKind::Interrupted => {}
                 Err(_) => return,
             }
+        }
+    }
+
+    /// Startup recovery: scan `<store>/journal` for batches abandoned
+    /// by dead daemons, claim each by rename (two restarting daemons
+    /// race safely — rename is atomic, the loser skips), and re-run
+    /// the jobs that never reached a terminal result. Anything the
+    /// dead daemon already published replays as a warm store hit;
+    /// only genuinely unfinished work recomputes.
+    fn recover_journals(&self) {
+        let Some(dir) = &self.journal_dir else { return };
+        let entries = match std::fs::read_dir(dir) {
+            Ok(e) => e,
+            Err(_) => return,
+        };
+        let mypid = std::process::id();
+        for ent in entries.flatten() {
+            let path = ent.path();
+            if path.extension().and_then(|e| e.to_str())
+                != Some("json")
+            {
+                continue;
+            }
+            let txt = match std::fs::read_to_string(&path) {
+                Ok(t) => t,
+                Err(_) => continue,
+            };
+            let v = match Json::parse(&txt) {
+                Ok(v) => v,
+                Err(e) => {
+                    eprintln!(
+                        "[recover] unreadable journal {}: {e}",
+                        path.display()
+                    );
+                    continue;
+                }
+            };
+            let owner = v
+                .get("pid")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0) as i32;
+            if owner > 0
+                && owner != mypid as i32
+                && pid_alive(owner)
+            {
+                continue; // a live daemon still owns this batch
+            }
+            let claimed = path
+                .with_extension(format!("recovering.{mypid}"));
+            if std::fs::rename(&path, &claimed).is_err() {
+                continue; // another daemon claimed it first
+            }
+            let done: Vec<bool> = v
+                .get("done")
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .map(|x| x.as_bool().unwrap_or(false))
+                        .collect()
+                })
+                .unwrap_or_default();
+            let jobs = match v.get("jobs").and_then(Json::as_arr) {
+                Some(a) => a.clone(),
+                None => {
+                    let _ = std::fs::remove_file(&claimed);
+                    continue;
+                }
+            };
+            let todo = jobs
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| !done.get(*i).copied().unwrap_or(false))
+                .count();
+            eprintln!(
+                "[recover] claimed {} (dead pid {owner}): {todo} of {} jobs incomplete",
+                path.display(),
+                jobs.len()
+            );
+            for (i, j) in jobs.iter().enumerate() {
+                if done.get(i).copied().unwrap_or(false) {
+                    continue;
+                }
+                let spec = match JobSpec::from_json(j) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        eprintln!("[recover] job {i}: bad spec: {e}");
+                        continue;
+                    }
+                };
+                // catch_unwind: an armed fault plan must not kill a
+                // recovering daemon before it even binds the socket
+                let r = catch_unwind(AssertUnwindSafe(|| {
+                    let mut emit = |e: JobEvent| {
+                        if let JobEvent::Cache { key, outcome } = e {
+                            if outcome == Outcome::Computed {
+                                eprintln!("[recover] computed {key}");
+                            }
+                        }
+                    };
+                    self.session.run_with_cancel(
+                        &spec,
+                        &CancelToken::none(),
+                        &mut emit,
+                    )
+                }));
+                match r {
+                    Ok(Ok(_)) => {
+                        self.recovered
+                            .fetch_add(1, Ordering::SeqCst);
+                        eprintln!(
+                            "[recover] job {i} ({}) finished",
+                            spec.model
+                        );
+                    }
+                    Ok(Err(e)) => {
+                        eprintln!("[recover] job {i} failed: {e}")
+                    }
+                    Err(payload) => eprintln!(
+                        "[recover] job {i} panicked: {}",
+                        panic_msg(payload)
+                    ),
+                }
+            }
+            let _ = std::fs::remove_file(&claimed);
         }
     }
 }
@@ -457,6 +833,24 @@ fn serve_until(
     } else {
         workers
     };
+    let journal_dir = session.cache().store().map(|st| {
+        let d = st.dir().join("journal");
+        let _ = std::fs::create_dir_all(&d);
+        d
+    });
+    let shared = Shared {
+        session,
+        queue: Mutex::new(Vec::new()),
+        cv: Condvar::new(),
+        served: Mutex::new(HashMap::new()),
+        batches: Mutex::new(HashMap::new()),
+        next_batch: AtomicU64::new(1),
+        journal_dir,
+        recovered: AtomicUsize::new(0),
+        stop: AtomicBool::new(false),
+    };
+    // finish dead daemons' interrupted batches before taking new work
+    shared.recover_journals();
     // a stale socket file from a dead daemon would make bind fail
     let _ = std::fs::remove_file(socket);
     let listener = UnixListener::bind(socket).map_err(|e| {
@@ -469,13 +863,6 @@ fn serve_until(
         "[serve] listening on {} ({workers} workers)",
         socket.display()
     );
-    let shared = Shared {
-        session,
-        queue: Mutex::new(Vec::new()),
-        cv: Condvar::new(),
-        served: Mutex::new(HashMap::new()),
-        stop: AtomicBool::new(false),
-    };
     std::thread::scope(|s| {
         for _ in 0..workers {
             s.spawn(|| shared.worker());
@@ -523,18 +910,26 @@ pub struct SubmitSummary {
     /// One entry per submitted job: the `output` object on success, the
     /// error text on failure.
     pub results: Vec<Result<Json, String>>,
-    /// The terminal `done` event (ok/failed/computes/cache_hits/
-    /// store_hits counters for this batch).
+    /// The terminal `done` event (batch id plus ok/failed/computes/
+    /// cache_hits/store_hits counters for this batch).
     pub done: Json,
 }
 
 /// Submit `specs` to a daemon on `socket` and stream events until the
 /// batch finishes. `on_event` sees every raw protocol event (stage,
-/// cache, result, ...) as it arrives.
+/// cache, result, ...) as it arrives — the `accepted` event carries
+/// the batch id that `ctl cancel` takes.
+///
+/// `timeout` bounds the whole wait: `None` waits forever, `Some(d)`
+/// returns a typed [`Error::Exec`] once `d` elapses without the batch
+/// finishing. A daemon that dies mid-batch is detected as EOF on the
+/// socket and reported distinctly from per-job failures — completed
+/// artifacts persist in the store either way.
 pub fn submit(
     socket: &Path,
     specs: &[JobSpec],
     priority: i64,
+    timeout: Option<Duration>,
     mut on_event: impl FnMut(&Json),
 ) -> Result<SubmitSummary, Error> {
     let stream = UnixStream::connect(socket).map_err(|e| {
@@ -542,6 +937,11 @@ pub fn submit(
             "connecting to daemon at {}: {e}",
             socket.display()
         ))
+    })?;
+    // short read timeout so the timeout deadline is checked even while
+    // the daemon is silent; partial lines accumulate across retries
+    stream.set_read_timeout(Some(POLL)).map_err(|e| {
+        Error::Exec(format!("setting socket timeout: {e}"))
     })?;
     let mut writer = stream.try_clone().map_err(|e| {
         Error::Exec(format!("cloning daemon socket: {e}"))
@@ -562,15 +962,54 @@ pub fn submit(
 
     let mut results: Vec<Option<Result<Json, String>>> =
         (0..specs.len()).map(|_| None).collect();
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line.map_err(|e| {
-            Error::Exec(format!("reading daemon event: {e}"))
-        })?;
-        if line.trim().is_empty() {
+    let mut got = 0usize;
+    let t0 = Instant::now();
+    let mut reader = BufReader::new(stream);
+    let mut buf = String::new();
+    loop {
+        if let Some(d) = timeout {
+            if t0.elapsed() > d {
+                return Err(Error::Exec(format!(
+                    "timed out after {:.1}s with {got} of {} job \
+                     results received — the batch is still running \
+                     on the daemon (use 'brecq ctl cancel' to stop it)",
+                    t0.elapsed().as_secs_f64(),
+                    specs.len()
+                )));
+            }
+        }
+        let txt = match reader.read_line(&mut buf) {
+            Ok(0) => {
+                return Err(Error::Exec(format!(
+                    "daemon closed the connection (EOF) after {got} \
+                     of {} job results — the daemon likely crashed \
+                     or was killed; completed artifacts persist in \
+                     the store",
+                    specs.len()
+                )))
+            }
+            Ok(_) => {
+                let t = buf.trim().to_string();
+                buf.clear();
+                t
+            }
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock
+                    || e.kind() == ErrorKind::TimedOut
+                    || e.kind() == ErrorKind::Interrupted =>
+            {
+                continue
+            }
+            Err(e) => {
+                return Err(Error::Exec(format!(
+                    "reading daemon event: {e}"
+                )))
+            }
+        };
+        if txt.is_empty() {
             continue;
         }
-        let ev = Json::parse(&line).map_err(|e| {
+        let ev = Json::parse(&txt).map_err(|e| {
             Error::Exec(format!("bad daemon event: {e}"))
         })?;
         on_event(&ev);
@@ -597,6 +1036,7 @@ pub fn submit(
                     .get("ok")
                     .and_then(Json::as_bool)
                     .unwrap_or(false);
+                got += 1;
                 results[job] = Some(if ok {
                     Ok(ev.get("output").cloned().unwrap_or(Json::Null))
                 } else {
@@ -622,14 +1062,15 @@ pub fn submit(
             _ => {}
         }
     }
-    Err(Error::Exec(
-        "daemon closed the connection before the batch finished".into(),
-    ))
 }
 
-/// One-shot control request (`ping` / `stats` / `shutdown`); returns the
-/// daemon's reply event.
-pub fn control(socket: &Path, op: &str) -> Result<Json, Error> {
+/// One-shot control request with extra request fields (the `cancel`
+/// op's batch id); returns the daemon's reply event.
+pub fn control_fields(
+    socket: &Path,
+    op: &str,
+    extra: Vec<(&str, Json)>,
+) -> Result<Json, Error> {
     let stream = UnixStream::connect(socket).map_err(|e| {
         Error::Exec(format!(
             "connecting to daemon at {}: {e}",
@@ -639,7 +1080,9 @@ pub fn control(socket: &Path, op: &str) -> Result<Json, Error> {
     let mut writer = stream.try_clone().map_err(|e| {
         Error::Exec(format!("cloning daemon socket: {e}"))
     })?;
-    let mut line = json::obj(vec![("op", json::s(op))]).to_string();
+    let mut fields = vec![("op", json::s(op))];
+    fields.extend(extra);
+    let mut line = json::obj(fields).to_string();
     line.push('\n');
     writer.write_all(line.as_bytes()).map_err(|e| {
         Error::Exec(format!("sending '{op}': {e}"))
@@ -651,4 +1094,9 @@ pub fn control(socket: &Path, op: &str) -> Result<Json, Error> {
     })?;
     Json::parse(reply.trim())
         .map_err(|e| Error::Exec(format!("bad '{op}' reply: {e}")))
+}
+
+/// One-shot control request (`ping` / `stats` / `shutdown`).
+pub fn control(socket: &Path, op: &str) -> Result<Json, Error> {
+    control_fields(socket, op, Vec::new())
 }

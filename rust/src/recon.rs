@@ -43,6 +43,8 @@ use crate::quant::{
 };
 use crate::runtime::{plan, Backend};
 use crate::tensor::Tensor;
+use crate::util::cancel::CancelToken;
+use crate::util::faults;
 use crate::util::pool;
 use crate::util::rng::Rng;
 
@@ -103,6 +105,9 @@ pub struct ReconConfig {
     pub plan: bool,
     pub seed: u64,
     pub verbose: bool,
+    /// Cooperative cancellation scope, checked at unit and iteration
+    /// boundaries. The default inert token costs one branch per check.
+    pub cancel: CancelToken,
 }
 
 impl Default for ReconConfig {
@@ -119,6 +124,7 @@ impl Default for ReconConfig {
             plan: true,
             seed: 0,
             verbose: false,
+            cancel: CancelToken::none(),
         }
     }
 }
@@ -292,6 +298,9 @@ impl<'a> Calibrator<'a> {
         cfg: &ReconConfig,
     ) -> Result<QuantizedModel> {
         let t_start = std::time::Instant::now();
+        if let Some(reason) = cfg.cancel.cancelled() {
+            anyhow::bail!("cancelled before calibration: {reason}");
+        }
         let (ws, bs) = self.fp_weights()?;
         let nl = self.model.layers.len();
         let b = self.mf.calib_batch;
@@ -319,6 +328,9 @@ impl<'a> Calibrator<'a> {
         // validated here — an unknown/undeclared one is a typed error,
         // never a silent fallback
         let gran = self.model.try_gran(&cfg.gran)?;
+        if let Some(reason) = cfg.cancel.cancelled() {
+            anyhow::bail!("cancelled before FIM pass: {reason}");
+        }
         let fim = if cfg.use_fim {
             Some(self.fim_pass(&cfg.gran, calib, &ws, &bs)?)
         } else {
@@ -335,6 +347,26 @@ impl<'a> Calibrator<'a> {
         let mut reports = Vec::new();
 
         for (ui, unit) in gran.units.iter().enumerate() {
+            if let Some(reason) = cfg.cancel.cancelled() {
+                anyhow::bail!(
+                    "cancelled at unit '{}': {reason}",
+                    unit.name
+                );
+            }
+            // Fault-injection site: lets the chaos harness fail or
+            // panic mid-reconstruction, between committed units.
+            match faults::check("job.recon") {
+                Some(faults::Kind::Panic) => panic!(
+                    "injected panic at job.recon (unit '{}')",
+                    unit.name
+                ),
+                Some(k) => anyhow::bail!(
+                    "injected {} fault at job.recon (unit '{}')",
+                    k.as_str(),
+                    unit.name
+                ),
+                None => {}
+            }
             if unit.save_skip {
                 fp_skip = Some(fp_main.clone());
                 q_skip = Some(q_main.clone());
@@ -602,6 +634,12 @@ impl<'a> Calibrator<'a> {
         let mut initial_loss = 0.0;
         let mut final_loss = 0.0;
         for t in 0..cfg.iters {
+            if let Some(reason) = cfg.cancel.cancelled() {
+                anyhow::bail!(
+                    "cancelled at unit '{}' iteration {t}: {reason}",
+                    unit.name
+                );
+            }
             let rows = CalibSet::gather_rows_idx(x_cache.shape[0], bsz, rng);
             let (beta, reg_on) = sched.at(t);
             let lam = if cfg.round_reg && reg_on { cfg.lam } else { 0.0 };

@@ -1,0 +1,138 @@
+//! Cooperative cancellation tokens with optional wall-clock deadlines.
+//!
+//! A `CancelToken` is checked — never enforced — at coarse checkpoints:
+//! pipeline stage boundaries and reconstruction unit/iteration
+//! boundaries. That keeps cancellation deterministic (a job observes it
+//! only between atomic units of work, so partial artifacts are never
+//! published) and costs one atomic load per check on an inert token.
+//!
+//! Tokens form a chain: `batch.child(deadline)` shares the parent's
+//! cancel flag (for `ctl cancel <batch-id>`) while adding a per-job
+//! deadline whose clock starts when the child is created — i.e. when
+//! the job starts *executing*, not when it was queued.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Debug)]
+struct Inner {
+    parent: Option<Arc<Inner>>,
+    deadline: Option<Instant>,
+    deadline_ms: u64,
+    cancelled: AtomicBool,
+    reason: Mutex<String>,
+}
+
+/// Cloneable cancellation handle. `Default`/[`CancelToken::none`] is an
+/// inert token that can never cancel (no allocation, near-zero checks).
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken(Option<Arc<Inner>>);
+
+impl CancelToken {
+    /// The inert token: never cancelled, no deadline, no allocation.
+    pub fn none() -> CancelToken {
+        CancelToken(None)
+    }
+
+    /// A live token that [`CancelToken::cancel`] can fire.
+    pub fn new() -> CancelToken {
+        CancelToken(Some(Arc::new(Inner {
+            parent: None,
+            deadline: None,
+            deadline_ms: 0,
+            cancelled: AtomicBool::new(false),
+            reason: Mutex::new(String::new()),
+        })))
+    }
+
+    /// A live token that auto-cancels once `d` has elapsed.
+    pub fn with_deadline(d: Duration) -> CancelToken {
+        CancelToken::none().child(Some(d))
+    }
+
+    /// A child sharing this token's cancellation, optionally adding its
+    /// own deadline (clock starts now). An inert parent with no
+    /// deadline stays inert.
+    pub fn child(&self, deadline: Option<Duration>) -> CancelToken {
+        if self.0.is_none() && deadline.is_none() {
+            return CancelToken(None);
+        }
+        CancelToken(Some(Arc::new(Inner {
+            parent: self.0.clone(),
+            deadline: deadline.map(|d| Instant::now() + d),
+            deadline_ms: deadline.map(|d| d.as_millis() as u64).unwrap_or(0),
+            cancelled: AtomicBool::new(false),
+            reason: Mutex::new(String::new()),
+        })))
+    }
+
+    /// Cancel this token (and, transitively, every child built from
+    /// it). No-op on an inert token.
+    pub fn cancel(&self, reason: &str) {
+        if let Some(i) = &self.0 {
+            *i.reason.lock().unwrap_or_else(|e| e.into_inner()) = reason.to_string();
+            i.cancelled.store(true, Ordering::SeqCst);
+        }
+    }
+
+    /// `Some(reason)` once this token — or any ancestor — is cancelled
+    /// or past its deadline; `None` while the work should continue.
+    pub fn cancelled(&self) -> Option<String> {
+        let mut cur = self.0.as_deref();
+        while let Some(i) = cur {
+            if i.cancelled.load(Ordering::SeqCst) {
+                let r = i.reason.lock().unwrap_or_else(|e| e.into_inner()).clone();
+                return Some(if r.is_empty() { "cancelled".to_string() } else { r });
+            }
+            if let Some(d) = i.deadline {
+                if Instant::now() >= d {
+                    return Some(format!("deadline of {}ms exceeded", i.deadline_ms));
+                }
+            }
+            cur = i.parent.as_deref();
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inert_token_never_cancels() {
+        let t = CancelToken::none();
+        t.cancel("ignored");
+        assert_eq!(t.cancelled(), None);
+        assert_eq!(CancelToken::default().cancelled(), None);
+    }
+
+    #[test]
+    fn explicit_cancel_reaches_children_with_the_reason() {
+        let parent = CancelToken::new();
+        let child = parent.child(None);
+        assert_eq!(child.cancelled(), None);
+        parent.cancel("cancelled by ctl");
+        assert_eq!(child.cancelled().as_deref(), Some("cancelled by ctl"));
+        assert_eq!(parent.cancelled().as_deref(), Some("cancelled by ctl"));
+    }
+
+    #[test]
+    fn deadline_fires_with_a_typed_reason() {
+        let t = CancelToken::with_deadline(Duration::from_millis(20));
+        assert_eq!(t.cancelled(), None);
+        std::thread::sleep(Duration::from_millis(30));
+        let why = t.cancelled().expect("deadline must have fired");
+        assert!(why.contains("deadline of 20ms exceeded"), "got: {why}");
+    }
+
+    #[test]
+    fn child_deadline_does_not_cancel_the_parent() {
+        let parent = CancelToken::new();
+        let child = parent.child(Some(Duration::from_millis(10)));
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(child.cancelled().is_some());
+        assert_eq!(parent.cancelled(), None, "sibling jobs must keep running");
+    }
+}

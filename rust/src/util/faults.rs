@@ -1,0 +1,305 @@
+//! Deterministic fault injection for chaos testing.
+//!
+//! A `FaultPlan` names *sites* (string keys compiled into the store and
+//! job layers, e.g. `store.publish`, `job.recon`) and attaches a fault
+//! kind plus a firing rule to each:
+//!
+//! ```text
+//! BRECQ_FAULTS="store.publish:io@0.1;job.recon:panic@2"
+//! ```
+//!
+//! means "each `store.publish` call fails with a transient IO error
+//! with probability 0.1; the 2nd `job.recon` call panics". A parameter
+//! containing `.` is a probability; a bare integer `N` fires exactly on
+//! the Nth call at that site. Probability draws come from a per-site
+//! seeded stream (`fnv64(site) ^ $BRECQ_FAULTS_SEED`), so a plan replays
+//! identically across runs and is independent of call order at *other*
+//! sites.
+//!
+//! Probability-mode faults are **bounded-burst**: a site never fires on
+//! two consecutive calls. Retry loops with >= 2 attempts therefore
+//! always recover an injected transient, which is what makes the chaos
+//! soak's compute-exactly-once assertion deterministic rather than
+//! flaky.
+//!
+//! Unarmed (the default — `$BRECQ_FAULTS` unset), `check()` is one
+//! relaxed atomic load; no site pays for the instrumentation.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, Once};
+
+use crate::util::rng::Rng;
+
+/// What an armed site does to its caller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// Transient IO error — retryable (classified like `EINTR`/timeouts).
+    Io,
+    /// Permanent error — surfaces to the caller without retry.
+    Perm,
+    /// The call site panics (exercises `catch_unwind` isolation).
+    Panic,
+}
+
+impl Kind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Kind::Io => "io",
+            Kind::Perm => "perm",
+            Kind::Panic => "panic",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Kind> {
+        match s {
+            "io" => Some(Kind::Io),
+            "perm" => Some(Kind::Perm),
+            "panic" => Some(Kind::Panic),
+            _ => None,
+        }
+    }
+}
+
+/// Firing rule for one site.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum When {
+    /// Fire each call with this probability (seeded per-site stream),
+    /// never on two consecutive calls (bounded burst).
+    Prob(f64),
+    /// Fire exactly on the Nth call at the site (1-based), once.
+    Nth(u64),
+}
+
+#[derive(Debug, Clone)]
+struct Rule {
+    site: String,
+    kind: Kind,
+    when: When,
+}
+
+/// A parsed `$BRECQ_FAULTS` plan. Install with [`set_plan`] (tests) or
+/// let the first [`check`] pick it up from the environment.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    rules: Vec<Rule>,
+    seed: u64,
+}
+
+impl FaultPlan {
+    /// Parse `site:kind@param` specs separated by `;`.
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan, String> {
+        let mut rules = Vec::new();
+        for part in spec.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (site, rest) = part
+                .split_once(':')
+                .ok_or_else(|| format!("'{part}': expected site:kind@param"))?;
+            let (kind, param) = rest
+                .split_once('@')
+                .ok_or_else(|| format!("'{part}': expected kind@param"))?;
+            let kind = Kind::parse(kind)
+                .ok_or_else(|| format!("'{part}': unknown kind '{kind}' (io|perm|panic)"))?;
+            let when = if param.contains('.') {
+                let p: f64 = param
+                    .parse()
+                    .map_err(|_| format!("'{part}': bad probability '{param}'"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(format!("'{part}': probability {p} outside [0,1]"));
+                }
+                When::Prob(p)
+            } else {
+                let n: u64 = param
+                    .parse()
+                    .map_err(|_| format!("'{part}': bad call index '{param}'"))?;
+                if n == 0 {
+                    return Err(format!("'{part}': call index is 1-based"));
+                }
+                When::Nth(n)
+            };
+            rules.push(Rule { site: site.trim().to_string(), kind, when });
+        }
+        Ok(FaultPlan { rules, seed })
+    }
+}
+
+/// Per-site runtime state under an armed plan.
+struct SiteState {
+    rng: Rng,
+    calls: u64,
+    fired: u64,
+    fired_last: bool,
+}
+
+struct PlanState {
+    plan: FaultPlan,
+    sites: HashMap<String, SiteState>,
+}
+
+impl PlanState {
+    fn check(&mut self, site: &str) -> Option<Kind> {
+        let rule = self.plan.rules.iter().find(|r| r.site == site)?;
+        let seed = self.plan.seed;
+        let st = self.sites.entry(site.to_string()).or_insert_with(|| SiteState {
+            rng: Rng::new(fnv64_local(site.as_bytes()) ^ seed),
+            calls: 0,
+            fired: 0,
+            fired_last: false,
+        });
+        st.calls += 1;
+        let fire = match rule.when {
+            When::Nth(n) => st.calls == n,
+            // bounded burst: a retry directly after an injected
+            // transient always observes a clean attempt
+            When::Prob(p) => !st.fired_last && st.rng.f64() < p,
+        };
+        st.fired_last = fire;
+        if fire {
+            st.fired += 1;
+            Some(rule.kind)
+        } else {
+            None
+        }
+    }
+}
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static STATE: Mutex<Option<PlanState>> = Mutex::new(None);
+static ENV_INIT: Once = Once::new();
+
+// Local FNV-1a so util never depends on the pipeline layer.
+fn fnv64_local(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn init_from_env() {
+    ENV_INIT.call_once(|| {
+        let Ok(spec) = std::env::var("BRECQ_FAULTS") else { return };
+        if spec.trim().is_empty() {
+            return;
+        }
+        let seed = std::env::var("BRECQ_FAULTS_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0);
+        match FaultPlan::parse(&spec, seed) {
+            Ok(p) => {
+                install(Some(p));
+                eprintln!("[faults] armed via $BRECQ_FAULTS: {spec} (seed {seed})");
+            }
+            Err(e) => eprintln!("[faults] ignoring malformed $BRECQ_FAULTS: {e}"),
+        }
+    });
+}
+
+fn install(plan: Option<FaultPlan>) {
+    let mut g = STATE.lock().unwrap_or_else(|e| e.into_inner());
+    match plan {
+        Some(p) => {
+            *g = Some(PlanState { plan: p, sites: HashMap::new() });
+            ARMED.store(true, Ordering::Relaxed);
+        }
+        None => {
+            *g = None;
+            ARMED.store(false, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Install (or clear) a plan programmatically. Test hook; also disarms
+/// the environment pickup so a later `check` can't overwrite it.
+pub fn set_plan(plan: Option<FaultPlan>) {
+    ENV_INIT.call_once(|| {});
+    install(plan);
+}
+
+/// Should this call at `site` fail, and how? `None` on the (default)
+/// unarmed path after a single relaxed load.
+pub fn check(site: &str) -> Option<Kind> {
+    init_from_env();
+    if !ARMED.load(Ordering::Relaxed) {
+        return None;
+    }
+    let mut g = STATE.lock().unwrap_or_else(|e| e.into_inner());
+    g.as_mut()?.check(site)
+}
+
+/// Is a fault plan currently armed (env or [`set_plan`])?
+pub fn armed() -> bool {
+    init_from_env();
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// `(calls, fired)` counters for `site` under the active plan.
+pub fn site_counters(site: &str) -> (u64, u64) {
+    let g = STATE.lock().unwrap_or_else(|e| e.into_inner());
+    g.as_ref()
+        .and_then(|st| st.sites.get(site))
+        .map(|s| (s.calls, s.fired))
+        .unwrap_or((0, 0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_the_documented_grammar() {
+        let p = FaultPlan::parse("store.publish:io@0.1; job.recon:panic@2", 7).unwrap();
+        assert_eq!(p.rules.len(), 2);
+        assert_eq!(p.rules[0].site, "store.publish");
+        assert_eq!(p.rules[0].kind, Kind::Io);
+        assert_eq!(p.rules[0].when, When::Prob(0.1));
+        assert_eq!(p.rules[1].kind, Kind::Panic);
+        assert_eq!(p.rules[1].when, When::Nth(2));
+        assert!(FaultPlan::parse("x", 0).is_err());
+        assert!(FaultPlan::parse("a:io", 0).is_err());
+        assert!(FaultPlan::parse("a:zap@1", 0).is_err());
+        assert!(FaultPlan::parse("a:io@1.5", 0).is_err());
+        assert!(FaultPlan::parse("a:io@0", 0).is_err());
+    }
+
+    #[test]
+    fn nth_mode_fires_exactly_once_and_prob_mode_is_bounded_burst() {
+        // direct PlanState checks — no global install, so this test
+        // cannot race other tests through the process-wide plan
+        let plan = FaultPlan::parse("a:perm@3;b:io@0.5", 11).unwrap();
+        let mut st = PlanState { plan, sites: HashMap::new() };
+        let hits: Vec<Option<Kind>> = (0..5).map(|_| st.check("a")).collect();
+        assert_eq!(hits, vec![None, None, Some(Kind::Perm), None, None]);
+        assert_eq!(st.check("unknown.site"), None);
+        let mut prev_fired = false;
+        let mut total = 0;
+        for _ in 0..200 {
+            let fired = st.check("b").is_some();
+            assert!(!(fired && prev_fired), "prob site fired twice in a row");
+            prev_fired = fired;
+            total += fired as u32;
+        }
+        assert!(total > 10, "p=0.5 over 200 calls fired only {total} times");
+        let (calls, fired) = {
+            let s = st.sites.get("b").unwrap();
+            (s.calls, s.fired)
+        };
+        assert_eq!(calls, 200);
+        assert_eq!(fired, total as u64);
+    }
+
+    #[test]
+    fn prob_streams_replay_identically_for_one_seed() {
+        let mk = || {
+            let plan = FaultPlan::parse("s:io@0.3", 42).unwrap();
+            let mut st = PlanState { plan, sites: HashMap::new() };
+            (0..64).map(|_| st.check("s").is_some()).collect::<Vec<_>>()
+        };
+        assert_eq!(mk(), mk());
+    }
+}

@@ -1,0 +1,430 @@
+//! Chaos tests: deterministic fault injection ([`brecq::util::faults`])
+//! against the store retry layer and the serve daemon's crash isolation.
+//!
+//! Pinned properties:
+//! - an injected transient IO fault at `store.publish` is retried and
+//!   the published artifact is bitwise identical to a fault-free run;
+//! - a job that panics mid-reconstruction becomes a per-job failure —
+//!   the daemon survives and the same spec succeeds on resubmit;
+//! - a job past its `deadline_ms` fails with a typed `deadline` error
+//!   while its sibling jobs in the batch complete normally;
+//! - a daemon killed with SIGKILL mid-batch leaves a journal that a
+//!   restarted daemon recovers before binding, after which the batch
+//!   replays warm with zero recomputation.
+//!
+//! The fault plan is process-global, so every test here serializes on
+//! one mutex and clears the plan before releasing it. (The faults
+//! module's own unit tests drive `PlanState` directly and never arm the
+//! global plan.)
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use brecq::coordinator::Env;
+use brecq::pipeline::{ArtifactCache, ArtifactStore, EvalScore, JobSpec,
+                      Session};
+use brecq::util::faults::{self, FaultPlan};
+
+/// One lock for every test in this binary: the fault plan (and the
+/// daemon sockets under the shared tmp naming) are process-global.
+static CHAOS_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock_chaos() -> std::sync::MutexGuard<'static, ()> {
+    CHAOS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Clears the global fault plan when dropped, so a failing assertion
+/// cannot leak an armed plan into the next test.
+struct DisarmOnDrop;
+
+impl Drop for DisarmOnDrop {
+    fn drop(&mut self) {
+        faults::set_plan(None);
+    }
+}
+
+fn env() -> Env {
+    Env::bootstrap_synthetic().expect("synthetic environment")
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("brecq_chaos_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn store_cache(dir: &PathBuf) -> ArtifactCache {
+    ArtifactCache::with_store(Arc::new(ArtifactStore::open(dir).unwrap()))
+}
+
+// ---------------------------------------------------------------------
+// Store retry under injected IO faults
+// ---------------------------------------------------------------------
+
+#[test]
+fn injected_publish_io_fault_retries_to_a_bitwise_identical_artifact() {
+    let _g = lock_chaos();
+    let _disarm = DisarmOnDrop;
+    // a value whose bit pattern a lossy round-trip would betray
+    let val = f64::from_bits(0x3fd5_5555_5555_5555);
+
+    // fault-free reference
+    let ref_cache = store_cache(&tmp("retry_ref"));
+    let v_ref = ref_cache
+        .get_or_build("chaos/retry", || Ok(EvalScore(val)))
+        .unwrap();
+
+    // the first publish call fails with a transient IO error
+    faults::set_plan(Some(
+        FaultPlan::parse("store.publish:io@1", 0).unwrap(),
+    ));
+    let dir = tmp("retry_faulted");
+    let c = store_cache(&dir);
+    let v = c
+        .get_or_build("chaos/retry", || Ok(EvalScore(val)))
+        .unwrap();
+    let (calls, fired) = faults::site_counters("store.publish");
+    faults::set_plan(None);
+
+    assert_eq!(fired, 1, "the injected fault must actually fire");
+    assert!(calls >= 2, "the publish must have been retried");
+    assert!(
+        c.store().unwrap().stats().retried >= 1,
+        "the store must count the retry"
+    );
+    assert_eq!(
+        v.0.to_bits(),
+        v_ref.0.to_bits(),
+        "value served through the retry must match the reference"
+    );
+
+    // the retried publish left a clean entry: a fresh session loads it
+    // without computing, and the bits survive the disk round trip
+    let c2 = store_cache(&dir);
+    let v2: Arc<EvalScore> = c2
+        .get_or_build("chaos/retry", || {
+            panic!("a published entry must not recompute")
+        })
+        .unwrap();
+    assert_eq!(v2.0.to_bits(), v_ref.0.to_bits());
+    assert_eq!(c2.computes(), 0);
+    assert_eq!(c2.store().unwrap().stats().corrupt, 0);
+}
+
+// ---------------------------------------------------------------------
+// Daemon fault isolation (panic, deadline, kill -9)
+// ---------------------------------------------------------------------
+
+#[cfg(unix)]
+mod serve {
+    use super::*;
+    use brecq::pipeline::serve::{control, spawn, submit, SubmitSummary};
+    use brecq::util::json::Json;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    fn wait_for_socket(sock: &PathBuf) {
+        for _ in 0..600 {
+            if sock.exists() {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        panic!("daemon socket {sock:?} never appeared");
+    }
+
+    fn brecq_spec(iters: usize) -> JobSpec {
+        JobSpec {
+            model: "resnet_s".into(),
+            wbits: 4,
+            abits: Some(8),
+            iters,
+            calib_n: 32,
+            seed: 0,
+            ..JobSpec::default()
+        }
+    }
+
+    fn omse_spec() -> JobSpec {
+        JobSpec {
+            model: "resnet_s".into(),
+            method: brecq::pipeline::Method::Omse,
+            wbits: 4,
+            calib_n: 32,
+            seed: 0,
+            ..JobSpec::default()
+        }
+    }
+
+    fn result_fingerprints(s: &SubmitSummary) -> Vec<String> {
+        s.results
+            .iter()
+            .map(|r| {
+                r.as_ref()
+                    .expect("job failed")
+                    .get("fingerprint")
+                    .and_then(Json::as_str)
+                    .expect("result carries a fingerprint")
+                    .to_string()
+            })
+            .collect()
+    }
+
+    fn done_field(s: &SubmitSummary, field: &str) -> usize {
+        s.done
+            .get(field)
+            .and_then(Json::as_usize)
+            .unwrap_or_else(|| panic!("done event carries {field}"))
+    }
+
+    #[test]
+    fn worker_panic_is_isolated_and_the_daemon_keeps_serving() {
+        let _g = lock_chaos();
+        let _disarm = DisarmOnDrop;
+        let spec = brecq_spec(6);
+
+        // fault-free reference fingerprint (computed while unarmed)
+        let ref_fp = {
+            let s = Session::new(env());
+            format!("{:016x}", s.run(&spec).unwrap().fingerprint())
+        };
+
+        let dir = tmp("panic_isolated");
+        let sock = dir.join("d.sock");
+        let daemon = spawn(Session::new(env()), sock.clone(), 1);
+        wait_for_socket(&sock);
+
+        // the first reconstruction unit panics
+        faults::set_plan(Some(
+            FaultPlan::parse("job.recon:panic@1", 0).unwrap(),
+        ));
+        let s1 = submit(&sock, &[spec.clone()], 0, None, |_| {})
+            .expect("the daemon must survive a panicking job");
+        faults::set_plan(None);
+        let err = s1.results[0]
+            .as_ref()
+            .expect_err("the panicked job must fail")
+            .clone();
+        assert!(
+            err.contains("panic") && err.contains("job.recon"),
+            "panic must surface as a typed per-job error, got: {err}"
+        );
+        assert_eq!(done_field(&s1, "failed"), 1);
+
+        // same daemon, same spec, no faults: serves normally
+        let s2 = submit(&sock, &[spec], 0, None, |_| {}).unwrap();
+        assert_eq!(
+            result_fingerprints(&s2),
+            vec![ref_fp],
+            "post-panic resubmit must be bit-identical to fault-free"
+        );
+        assert_eq!(done_field(&s2, "failed"), 0);
+
+        control(&sock, "shutdown").unwrap();
+        daemon.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn deadline_expired_job_fails_typed_while_its_sibling_completes() {
+        let _g = lock_chaos();
+        let dir = tmp("deadline");
+        let sock = dir.join("d.sock");
+        let daemon = spawn(Session::new(env()), sock.clone(), 2);
+        wait_for_socket(&sock);
+
+        // job 0 cannot finish 400 iterations inside 10ms; job 1 has no
+        // deadline and must be untouched by its sibling's cancellation
+        let doomed = JobSpec {
+            deadline_ms: Some(10),
+            ..brecq_spec(400)
+        };
+        let s = submit(
+            &sock,
+            &[doomed, omse_spec()],
+            0,
+            Some(Duration::from_secs(300)),
+            |_| {},
+        )
+        .unwrap();
+        let err = s.results[0]
+            .as_ref()
+            .expect_err("the deadline job must fail")
+            .clone();
+        assert!(
+            err.contains("cancelled") && err.contains("deadline"),
+            "expected a typed deadline error, got: {err}"
+        );
+        assert!(
+            s.results[1].is_ok(),
+            "sibling job must complete: {:?}",
+            s.results[1]
+        );
+        assert_eq!(done_field(&s, "ok"), 1);
+        assert_eq!(done_field(&s, "failed"), 1);
+
+        control(&sock, "shutdown").unwrap();
+        daemon.join().unwrap().unwrap();
+    }
+
+    /// Child half of the kill -9 test: a daemon over the parent's store
+    /// directory. Only runs when the parent set the env var; a plain
+    /// `cargo test` run no-ops it. The parent SIGKILLs this process.
+    #[test]
+    fn chaos_daemon_child_helper() {
+        let Some(dir) = std::env::var_os("BRECQ_CHAOS_SERVE_DIR") else {
+            return;
+        };
+        let dir = PathBuf::from(dir);
+        let store =
+            Arc::new(ArtifactStore::open(dir.join("store")).unwrap());
+        let d = spawn(
+            Session::with_store(env(), store),
+            dir.join("d.sock"),
+            2,
+        );
+        d.join().unwrap().unwrap();
+    }
+
+    /// SIGKILLs the child on drop so a failing assertion can't leak a
+    /// daemon process.
+    struct KillOnDrop(std::process::Child);
+
+    impl Drop for KillOnDrop {
+        fn drop(&mut self) {
+            let _ = self.0.kill();
+            let _ = self.0.wait();
+        }
+    }
+
+    #[test]
+    fn killed_daemon_journal_recovers_and_warm_restart_computes_nothing()
+    {
+        let _g = lock_chaos();
+        let dir = tmp("kill9");
+        let sock = dir.join("d.sock");
+        let store_dir = dir.join("store");
+        let specs = vec![brecq_spec(60), omse_spec()];
+
+        // ground truth from a fresh in-process session, no store
+        let refs: Vec<String> = {
+            let s = Session::new(env());
+            specs
+                .iter()
+                .map(|sp| {
+                    format!("{:016x}", s.run(sp).unwrap().fingerprint())
+                })
+                .collect()
+        };
+
+        let exe = std::env::current_exe().unwrap();
+        let mut child = KillOnDrop(
+            std::process::Command::new(&exe)
+                .args([
+                    "chaos_daemon_child_helper",
+                    "--exact",
+                    "--nocapture",
+                ])
+                .env("BRECQ_CHAOS_SERVE_DIR", &dir)
+                .stdout(std::process::Stdio::null())
+                .stderr(std::process::Stdio::null())
+                .spawn()
+                .unwrap(),
+        );
+        wait_for_socket(&sock);
+
+        // submit, then SIGKILL the daemon once the batch is running
+        let saw_stage = AtomicBool::new(false);
+        let r = std::thread::scope(|s| {
+            let h = s.spawn(|| {
+                submit(&sock, &specs, 0, None, |ev| {
+                    if ev.get("event").and_then(Json::as_str)
+                        == Some("stage")
+                    {
+                        saw_stage.store(true, Ordering::SeqCst);
+                    }
+                })
+            });
+            while !saw_stage.load(Ordering::SeqCst) && !h.is_finished()
+            {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            child.0.kill().unwrap();
+            let _ = child.0.wait();
+            h.join().unwrap()
+        });
+        let err = r.expect_err("a killed daemon must not return Ok");
+        assert!(
+            err.to_string().contains("EOF"),
+            "daemon death must be reported as EOF, got: {err}"
+        );
+
+        // the interrupted batch left its write-ahead journal behind
+        let journal_dir = store_dir.join("journal");
+        let journals = |dir: &PathBuf| -> usize {
+            std::fs::read_dir(dir)
+                .map(|rd| {
+                    rd.flatten()
+                        .filter(|e| {
+                            e.path()
+                                .extension()
+                                .map_or(false, |x| x == "json")
+                        })
+                        .count()
+                })
+                .unwrap_or(0)
+        };
+        assert!(
+            journals(&journal_dir) >= 1,
+            "killed daemon must leave an in-flight journal"
+        );
+
+        // restart over the same store: recovery runs before the socket
+        // binds, so once it appears the journal is consumed
+        let daemon = spawn(
+            Session::with_store(
+                env(),
+                Arc::new(ArtifactStore::open(&store_dir).unwrap()),
+            ),
+            sock.clone(),
+            2,
+        );
+        wait_for_socket(&sock);
+        assert_eq!(
+            journals(&journal_dir),
+            0,
+            "recovery must consume the dead daemon's journal"
+        );
+        let stats = control(&sock, "stats").unwrap();
+        assert!(
+            stats
+                .get("journal_recovered")
+                .and_then(Json::as_usize)
+                .unwrap_or(0)
+                >= 1,
+            "stats must report journal recovery: {}",
+            stats.to_string()
+        );
+
+        // recovery already finished the work: the resubmit is free and
+        // bit-identical to the in-process reference
+        let warm = submit(
+            &sock,
+            &specs,
+            0,
+            Some(Duration::from_secs(300)),
+            |_| {},
+        )
+        .unwrap();
+        assert_eq!(result_fingerprints(&warm), refs);
+        assert_eq!(
+            done_field(&warm, "computes"),
+            0,
+            "warm resubmit after recovery must compute nothing"
+        );
+
+        control(&sock, "shutdown").unwrap();
+        daemon.join().unwrap().unwrap();
+    }
+}

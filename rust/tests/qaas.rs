@@ -415,11 +415,11 @@ mod serve {
 
         // two concurrent clients, one submitting in reverse order
         let (fwd, rev) = std::thread::scope(|s| {
-            let fwd = s.spawn(|| submit(&sock, &specs, 0, |_| {}));
+            let fwd = s.spawn(|| submit(&sock, &specs, 0, None, |_| {}));
             let rev = s.spawn(|| {
                 let mut r: Vec<JobSpec> = specs.clone();
                 r.reverse();
-                submit(&sock, &r, 0, |_| {})
+                submit(&sock, &r, 0, None, |_| {})
             });
             (
                 fwd.join().unwrap().unwrap(),
@@ -435,7 +435,7 @@ mod serve {
         );
 
         // warm re-submit on the live daemon: everything cached
-        let warm = submit(&sock, &specs, 0, |_| {}).unwrap();
+        let warm = submit(&sock, &specs, 0, None, |_| {}).unwrap();
         assert_eq!(result_fingerprints(&warm), refs);
         assert_eq!(done_computes(&warm), 0, "warm batch must not compute");
 
@@ -454,7 +454,7 @@ mod serve {
             2,
         );
         wait_for_socket(&sock);
-        let warm2 = submit(&sock, &specs, 0, |_| {}).unwrap();
+        let warm2 = submit(&sock, &specs, 0, None, |_| {}).unwrap();
         assert_eq!(result_fingerprints(&warm2), refs);
         assert_eq!(
             done_computes(&warm2),
@@ -479,7 +479,7 @@ mod serve {
             model: "nope".into(),
             ..JobSpec::default()
         }];
-        let s = submit(&sock, &bad, 0, |_| {}).unwrap();
+        let s = submit(&sock, &bad, 0, None, |_| {}).unwrap();
         assert!(s.results[0].is_err());
         assert_eq!(done_computes(&s), 0);
 

@@ -1,0 +1,268 @@
+#!/usr/bin/env bash
+# Chaos soak (CI: chaos-smoke job). Hardened-serving acceptance run:
+#   * two daemons share one --store under an armed $BRECQ_FAULTS plan
+#     (probabilistic transient IO faults at every store site); their
+#     concurrent clients must get fingerprints bitwise-equal to a
+#     fault-free in-process reference, and between them compute each
+#     unique artifact exactly once (the retry layer absorbs the faults);
+#   * a warm re-submit under the same fault plan reports computes == 0;
+#   * a daemon SIGKILLed mid-batch leaves a write-ahead journal; its
+#     client sees a typed EOF error; a restarted daemon recovers the
+#     journal before binding, after which the batch replays warm
+#     (computes == 0) and still matches the fault-free reference;
+#   * at the end, no daemon ever served a corrupt artifact
+#     (store_corrupt == 0 everywhere).
+#
+# usage: scripts/chaos_soak.sh [--quick]
+#        --quick runs one kill/restart cycle instead of two (PR CI).
+set -euo pipefail
+
+cycles=2
+if [ "${1:-}" = "--quick" ]; then
+    cycles=1
+fi
+
+root=$(cd "$(dirname "$0")/.." && pwd)
+bin="$root/rust/target/release/brecq"
+if [ ! -x "$bin" ]; then
+    (cd "$root/rust" && cargo build --release)
+fi
+
+# CHAOS_SOAK_TMP pins the scratch dir and keeps it after exit (CI
+# uploads the daemon/client logs from it on failure).
+tmp=${CHAOS_SOAK_TMP:-$(mktemp -d)}
+mkdir -p "$tmp"
+pid_a=""
+pid_b=""
+cleanup() {
+    for pid in "$pid_a" "$pid_b"; do
+        if [ -n "$pid" ] && kill -0 "$pid" 2>/dev/null; then
+            kill -9 "$pid" 2>/dev/null || true
+            wait "$pid" 2>/dev/null || true
+        fi
+    done
+    if [ -z "${CHAOS_SOAK_TMP:-}" ]; then
+        rm -rf "$tmp"
+    fi
+}
+trap cleanup EXIT
+
+sock_a="$tmp/a.sock"
+sock_b="$tmp/b.sock"
+store="$tmp/store"
+jobs="$root/examples/jobs.json"
+
+die() {
+    echo "chaos_soak: FAIL — $1" >&2
+    for log in "$tmp"/*.log; do
+        [ -e "$log" ] || continue
+        echo "--- $log ---" >&2
+        cat "$log" >&2
+    done
+    exit 1
+}
+
+wait_sock() {
+    for _ in $(seq 1 300); do
+        if "$bin" ctl ping --sock "$1" >/dev/null 2>&1; then
+            return 0
+        fi
+        sleep 0.2
+    done
+    die "daemon socket never came up at $1"
+}
+
+# start_daemon <name> <sock>: sets $daemon_pid. Runs in the current
+# shell (no subshell) so the daemon stays wait-able/kill-able.
+start_daemon() {
+    "$bin" serve --sock "$2" --store "$store" \
+        >>"$tmp/daemon-$1.log" 2>&1 &
+    daemon_pid=$!
+}
+
+stop_daemon() { # <sock> <pid>
+    "$bin" ctl shutdown --sock "$1" >/dev/null
+    if ! wait "$2"; then
+        die "daemon on $1 exited non-zero after ctl shutdown"
+    fi
+}
+
+# check <ref.json> <client.json> <want_computes|-|sum> [<other.json>]
+# Fingerprints must match the fault-free in-process reference job for
+# job; computes is pinned to a number, or to "sum" across two clients
+# equalling the reference (exactly-once across daemons).
+check() {
+    python3 - "$@" <<'PY'
+import json, sys
+
+ref = json.load(open(sys.argv[1]))
+got = json.load(open(sys.argv[2]))
+want = sys.argv[3]
+rf = [j.get("fingerprint") for j in ref["jobs"]]
+gf = [j.get("fingerprint") for j in got["jobs"]]
+if not (all(rf) and all(gf)):
+    print("a job is missing its fingerprint (errored?)")
+    print(" ref:", rf)
+    print(" got:", gf)
+    sys.exit(1)
+if rf != gf:
+    print("fingerprint mismatch vs fault-free in-process run:")
+    print(" ref:", rf)
+    print(" got:", gf)
+    sys.exit(1)
+msg = f"{sys.argv[2]}: {len(gf)} fingerprints match the reference"
+if want == "-":
+    pass
+elif want == "sum":
+    other = json.load(open(sys.argv[4]))
+    total = int(got["done"]["computes"]) + \
+        int(other["done"]["computes"])
+    if total != int(ref["computes"]):
+        print(f"clients computed {total} artifacts under faults; the "
+              f"fault-free run computed {ref['computes']} — "
+              "compute-exactly-once is broken")
+        sys.exit(1)
+    msg += f", computes sum == {total} (exactly once)"
+else:
+    c = int(got["done"]["computes"])
+    if c != int(want):
+        print(f"expected computes == {want}, got {c}")
+        sys.exit(1)
+    msg += f", computes == {c}"
+print("chaos_soak:", msg)
+PY
+}
+
+# stats_clean <sock>: the daemon must never have served a corrupt entry.
+stats_clean() {
+    "$bin" ctl stats --sock "$1" | python3 - <<'PY'
+import json, sys
+
+st = json.loads(sys.stdin.read())
+corrupt = int(st.get("store_corrupt", 0))
+if corrupt != 0:
+    print(f"daemon served-side store saw {corrupt} corrupt entries")
+    sys.exit(1)
+print("chaos_soak: store_corrupt == 0, retried ==",
+      int(st.get("store_retried", 0)),
+      "recovered ==", int(st.get("journal_recovered", 0)))
+PY
+}
+
+# ---------------------------------------------------------------------
+# Fault-free references (BRECQ_FAULTS must NOT be set yet)
+# ---------------------------------------------------------------------
+echo "chaos_soak: fault-free in-process reference run"
+"$bin" run "$jobs" --stats --json "$tmp/ref.json" \
+    >"$tmp/ref.log" 2>&1 || die "reference brecq run failed"
+
+for i in $(seq 1 "$cycles"); do
+    python3 - "$jobs" "$tmp/jobs$i.json" "$i" <<'PY'
+import json, sys
+
+jobs = json.load(open(sys.argv[1]))
+for j in jobs:
+    j["seed"] = int(sys.argv[3])
+json.dump(jobs, open(sys.argv[2], "w"))
+PY
+    echo "chaos_soak: reference run for kill cycle $i (seed $i)"
+    "$bin" run "$tmp/jobs$i.json" --stats --json "$tmp/ref$i.json" \
+        >"$tmp/ref$i.log" 2>&1 || die "reference run $i failed"
+done
+
+# ---------------------------------------------------------------------
+# Phase 1: two daemons, one store, armed fault plan
+# ---------------------------------------------------------------------
+export BRECQ_FAULTS="store.publish:io@0.15;store.index:io@0.1;store.load:io@0.1;store.lock:io@0.1"
+export BRECQ_FAULTS_SEED=7
+echo "chaos_soak: starting two daemons over one store, faults armed"
+echo "chaos_soak:   BRECQ_FAULTS=$BRECQ_FAULTS"
+start_daemon a "$sock_a"
+pid_a=$daemon_pid
+start_daemon b "$sock_b"
+pid_b=$daemon_pid
+wait_sock "$sock_a"
+wait_sock "$sock_b"
+
+echo "chaos_soak: concurrent cold submits against both daemons"
+"$bin" submit "$jobs" --sock "$sock_a" --quiet --timeout 600 \
+    --json "$tmp/a.json" >"$tmp/client-a.log" 2>&1 &
+ca=$!
+"$bin" submit "$jobs" --sock "$sock_b" --quiet --timeout 600 \
+    --json "$tmp/b.json" >"$tmp/client-b.log" 2>&1 &
+cb=$!
+ok=0
+wait "$ca" || ok=1
+wait "$cb" || ok=1
+[ "$ok" -eq 0 ] || die "a submit client exited non-zero under io faults"
+check "$tmp/ref.json" "$tmp/a.json" sum "$tmp/b.json"
+check "$tmp/ref.json" "$tmp/b.json" -
+
+echo "chaos_soak: warm re-submit under the same fault plan"
+"$bin" submit "$jobs" --sock "$sock_b" --quiet --timeout 600 \
+    --json "$tmp/warm.json" >"$tmp/client-warm.log" 2>&1 \
+    || die "warm submit failed under io faults"
+check "$tmp/ref.json" "$tmp/warm.json" 0
+
+# ---------------------------------------------------------------------
+# Phase 2: kill -9 mid-batch, restart, journal recovery
+# ---------------------------------------------------------------------
+for i in $(seq 1 "$cycles"); do
+    echo "chaos_soak: kill cycle $i — submitting cold batch to daemon A"
+    "$bin" submit "$tmp/jobs$i.json" --sock "$sock_a" --timeout 600 \
+        --json "$tmp/kill$i.json" >"$tmp/client-kill$i.log" 2>&1 &
+    ck=$!
+    # wait for the batch to actually start running, then SIGKILL
+    started=0
+    for _ in $(seq 1 200); do
+        if grep -q '"event":"stage"' "$tmp/client-kill$i.log" \
+            2>/dev/null; then
+            started=1
+            break
+        fi
+        sleep 0.05
+    done
+    [ "$started" -eq 1 ] || die "kill cycle $i: batch never started"
+    echo "chaos_soak: kill cycle $i — SIGKILL daemon A (pid $pid_a)"
+    kill -9 "$pid_a"
+    wait "$pid_a" 2>/dev/null || true
+    pid_a=""
+    if wait "$ck"; then
+        die "kill cycle $i: client exited 0 despite daemon death"
+    fi
+    grep -q "EOF" "$tmp/client-kill$i.log" \
+        || die "kill cycle $i: client did not report the EOF error"
+    compgen -G "$store/journal/*.json" >/dev/null \
+        || die "kill cycle $i: no in-flight journal left behind"
+
+    echo "chaos_soak: kill cycle $i — restarting daemon A (recovery)"
+    start_daemon a "$sock_a"
+    pid_a=$daemon_pid
+    wait_sock "$sock_a"
+    grep -q "\[recover\] claimed" "$tmp/daemon-a.log" \
+        || die "kill cycle $i: restarted daemon did not recover the journal"
+    if compgen -G "$store/journal/*.json" >/dev/null; then
+        die "kill cycle $i: journal not consumed by recovery"
+    fi
+
+    echo "chaos_soak: kill cycle $i — warm resubmit after recovery"
+    "$bin" submit "$tmp/jobs$i.json" --sock "$sock_a" --quiet \
+        --timeout 600 --json "$tmp/recovered$i.json" \
+        >"$tmp/client-recovered$i.log" 2>&1 \
+        || die "kill cycle $i: post-recovery submit failed"
+    check "$tmp/ref$i.json" "$tmp/recovered$i.json" 0
+done
+
+# ---------------------------------------------------------------------
+# Final accounting: nothing corrupt was ever served
+# ---------------------------------------------------------------------
+stats_clean "$sock_a" || die "daemon A served corrupt artifacts"
+stats_clean "$sock_b" || die "daemon B served corrupt artifacts"
+
+echo "chaos_soak: clean shutdown"
+stop_daemon "$sock_a" "$pid_a"
+pid_a=""
+stop_daemon "$sock_b" "$pid_b"
+pid_b=""
+
+echo "chaos_soak: all checks passed ($cycles kill cycles)"
