@@ -267,13 +267,21 @@ fn run() -> Result<()> {
                     ss.hits, ss.misses, ss.publishes, ss.corrupt,
                     st.len(), st.dir().display()
                 );
+                println!(
+                    "checkpoints: {} written / {} units resumed / {} \
+                     corrupt",
+                    s.cache().ckpt_written(),
+                    s.cache().units_resumed(),
+                    s.cache().ckpt_corrupt(),
+                );
             }
             // --stats: per-slot outcome tallies — which cache keys were
             // served from memory, from the store, or computed fresh
             if a.bool("stats", false) {
                 let mut st = Table::new(
                     "per-slot cache outcomes",
-                    &["Key", "Hit", "Store hit", "Computed", "Loaded"]);
+                    &["Key", "Hit", "Store hit", "Computed", "Loaded",
+                      "Resumed"]);
                 for (key, ss) in s.cache().per_key_stats() {
                     st.row(vec![
                         key,
@@ -281,6 +289,7 @@ fn run() -> Result<()> {
                         ss.store_hits.to_string(),
                         ss.computes.to_string(),
                         ss.loads.to_string(),
+                        ss.resumed.to_string(),
                     ]);
                 }
                 st.print();
@@ -307,6 +316,12 @@ fn run() -> Result<()> {
                      json::num(s.cache().computes() as f64)),
                     ("store_hits",
                      json::num(s.cache().store_hits() as f64)),
+                    ("units_resumed",
+                     json::num(s.cache().units_resumed() as f64)),
+                    ("ckpt_written",
+                     json::num(s.cache().ckpt_written() as f64)),
+                    ("ckpt_corrupt",
+                     json::num(s.cache().ckpt_corrupt() as f64)),
                 ];
                 if let Some(st) = s.cache().store() {
                     let ss = st.stats();
@@ -598,19 +613,25 @@ USAGE: brecq <cmd> [--flags]
               events; SIGINT/SIGTERM drain and exit cleanly. Pair with
               --store DIR so results persist across daemon restarts.
               Jobs run panic-isolated; with a store, in-flight batches
-              are journalled and a restarted daemon finishes them.
-              $BRECQ_FAULTS arms deterministic fault injection (see
-              DESIGN.md, chaos testing only)
+              are journalled and a restarted daemon finishes them —
+              reconstruction resumes from per-unit checkpoints, bitwise
+              identical to an uninterrupted run. $BRECQ_FAULTS arms
+              deterministic fault injection (see DESIGN.md, chaos
+              testing only)
   submit      <jobs.json> --sock PATH [--priority P] [--json OUT]
               [--quiet] [--timeout SECS]   send a batch to a running
               daemon and stream its events; exits non-zero if any job
               failed. --timeout bounds the whole wait (default: wait
-              forever); a daemon that dies mid-batch is reported as a
-              connection EOF, distinct from per-job failures
+              forever) and sends a best-effort 'ctl cancel' on expiry —
+              finished units stay checkpointed, so resubmitting resumes;
+              a daemon that dies mid-batch is reported as a connection
+              EOF, distinct from per-job failures
   ctl         <ping|stats|shutdown|cancel BATCH> --sock PATH   one-shot
               daemon control; cancel stops a batch by the id from its
               'accepted' event (running jobs stop at the next stage or
-              iteration boundary)
+              iteration boundary; finished units stay checkpointed for
+              resume). stats reports cache/store counters plus
+              units_resumed / ckpt_written / ckpt_corrupt
   exp         <list|table1|table2|table3|table4|table5|table6|fig2|fig3|
               fig4|all> [--models a,b,c] [--iters N] [--seeds S]
               [--qat-steps N] [--out DIR]

@@ -16,6 +16,12 @@
 //!   <store>/<keyhash32hex>.bin    binary payload, little-endian sections
 //!   <store>/<keyhash32hex>.json   index: key, kind, sections, checksum
 //!   <store>/<keyhash32hex>.lock   cross-process advisory lock (flock)
+//!   <store>/ckpt/<keyhash>.*      pinned namespace: keys containing
+//!                                 "/ckpt/" (per-unit reconstruction
+//!                                 checkpoints) — same entry format, but
+//!                                 outside the LRU capacity sweep
+//!   <store>/journal/…             write-ahead batch journals (serve.rs),
+//!                                 likewise never swept
 //! ```
 //!
 //! Publication is atomic: both files are written to a temp name and
@@ -53,7 +59,7 @@ use crate::calib::CalibSet;
 use crate::mp::SearchResult;
 use crate::util::faults;
 use crate::util::rng::Rng;
-use crate::recon::{BitConfig, QuantizedModel, UnitReport};
+use crate::recon::{BitConfig, QuantizedModel, UnitCheckpoint, UnitReport};
 use crate::sensitivity::SensitivityTable;
 use crate::tensor::Tensor;
 use crate::util::json::{self, Json};
@@ -625,6 +631,77 @@ impl Artifact for QuantizedModel {
     }
 }
 
+impl Artifact for UnitCheckpoint {
+    const KIND: &'static str = "recon-ckpt";
+
+    fn encode(&self) -> Blob {
+        let mut b = Blob::new(Self::KIND);
+        b.set_meta("layers", json::num(self.qweights.len() as f64));
+        b.set_meta("unit", json::s(&self.report.name));
+        b.set_meta("iters", json::num(self.report.iters as f64));
+        for (i, t) in self.qweights.iter().enumerate() {
+            b.push_tensor(&format!("w{i}"), t);
+        }
+        b.push_f32s(
+            "act_steps",
+            vec![self.act_steps.len()],
+            &self.act_steps,
+        );
+        // the report losses feed JobOutput::fingerprint(), so they ride
+        // in a binary f64 section like every other payload float
+        b.push_f64s(
+            "report",
+            &[
+                self.report.initial_loss,
+                self.report.final_loss,
+                self.report.soft_fraction_before_commit,
+                self.report.seconds,
+            ],
+        );
+        b.push_u64s("rng", &self.rng);
+        b
+    }
+
+    fn decode(b: &Blob) -> Result<UnitCheckpoint, Error> {
+        let n = b.meta_usize("layers")?;
+        let name = b
+            .meta("unit")
+            .and_then(Json::as_str)
+            .ok_or_else(|| {
+                Error::Exec("recon-ckpt blob: missing 'unit' meta".into())
+            })?
+            .to_string();
+        let iters = b.meta_usize("iters")?;
+        let mut qweights = Vec::with_capacity(n);
+        for i in 0..n {
+            qweights.push(b.tensor(&format!("w{i}"))?);
+        }
+        let rep = b.f64s("report")?;
+        if rep.len() != 4 {
+            return Err(Error::Exec(
+                "recon-ckpt blob: bad 'report' section".into(),
+            ));
+        }
+        let rng: [u64; 6] =
+            b.u64s("rng")?.as_slice().try_into().map_err(|_| {
+                Error::Exec("recon-ckpt blob: bad 'rng' section".into())
+            })?;
+        Ok(UnitCheckpoint {
+            qweights,
+            act_steps: b.f32s("act_steps")?,
+            report: UnitReport {
+                name,
+                initial_loss: rep[0],
+                final_loss: rep[1],
+                soft_fraction_before_commit: rep[2],
+                iters,
+                seconds: rep[3],
+            },
+            rng,
+        })
+    }
+}
+
 impl Artifact for SearchResult {
     const KIND: &'static str = "mp-search";
 
@@ -799,6 +876,16 @@ pub struct StoreStats {
     pub retried: u64,
 }
 
+/// Outcome of [`ArtifactStore::load_entry`]: a verified blob, a clean
+/// miss (no committed entry), or a corruption that was detected and
+/// discarded (the caller will recompute).
+#[derive(Debug)]
+pub enum Loaded {
+    Hit(Blob),
+    Miss,
+    Corrupt,
+}
+
 // ---------------------------------------------------------------------
 // Transient-IO retry policy
 // ---------------------------------------------------------------------
@@ -852,7 +939,9 @@ impl ArtifactStore {
         cap_bytes: Option<u64>,
     ) -> Result<ArtifactStore, Error> {
         let dir = dir.into();
-        fs::create_dir_all(&dir).map_err(|e| {
+        // the pinned checkpoint namespace lives in a subdirectory (see
+        // entry_dir), created up front so publishes never race a mkdir
+        fs::create_dir_all(dir.join("ckpt")).map_err(|e| {
             Error::Exec(format!(
                 "creating artifact store at {}: {e}",
                 dir.display()
@@ -943,18 +1032,36 @@ impl ArtifactStore {
         self.len() == 0
     }
 
+    /// Keys in the checkpoint namespace — any key containing "/ckpt/"
+    /// (per-unit reconstruction checkpoints, `{recon_key}/ckpt/<i>`) —
+    /// are *pinned*: they live under `<store>/ckpt/`, outside the
+    /// top-level scan that [`Self::len`] counts and
+    /// [`Self::evict_to_cap`] sweeps. A cap squeeze can therefore never
+    /// evict another daemon's in-flight partial progress (the same
+    /// isolation the `journal/` subdirectory gives batch journals).
+    fn pinned(key: &str) -> bool {
+        key.contains("/ckpt/")
+    }
+
+    fn entry_dir(&self, key: &str) -> PathBuf {
+        if Self::pinned(key) {
+            self.dir.join("ckpt")
+        } else {
+            self.dir.clone()
+        }
+    }
+
     fn entry_paths(&self, key: &str) -> (PathBuf, PathBuf) {
         let h = key_hash(key);
-        (
-            self.dir.join(format!("{h}.json")),
-            self.dir.join(format!("{h}.bin")),
-        )
+        let d = self.entry_dir(key);
+        (d.join(format!("{h}.json")), d.join(format!("{h}.bin")))
     }
 
     /// Exclusive cross-process lock for `key`'s entry. Hold it over the
     /// whole load→compute→publish window for compute-once semantics.
     pub fn lock(&self, key: &str) -> Result<EntryLock, Error> {
-        let path = self.dir.join(format!("{}.lock", key_hash(key)));
+        let path =
+            self.entry_dir(key).join(format!("{}.lock", key_hash(key)));
         self.with_retry("store.lock", key, || entry_lock::acquire(&path))
             .map_err(|e| {
                 Error::Exec(format!(
@@ -970,6 +1077,16 @@ impl ArtifactStore {
     /// recency signal [`Self::evict_to_cap`] sorts by: eviction under a
     /// size cap is least-recently-*used*, not oldest-published.
     pub fn load(&self, key: &str) -> Option<Blob> {
+        match self.load_entry(key) {
+            Loaded::Hit(b) => Some(b),
+            _ => None,
+        }
+    }
+
+    /// Like [`Self::load`], but distinguishes a clean miss from a
+    /// detected-and-discarded corruption — checkpoint resume surfaces
+    /// that distinction as its `ckpt_corrupt` tally.
+    pub fn load_entry(&self, key: &str) -> Loaded {
         let (jp, bp) = self.entry_paths(key);
         let text =
             match self.with_retry("store.index", key, || {
@@ -978,7 +1095,7 @@ impl ArtifactStore {
                 Ok(t) => t,
                 Err(_) => {
                     self.misses.fetch_add(1, Ordering::Relaxed);
-                    return None;
+                    return Loaded::Miss;
                 }
             };
         match self.verify_and_decode(key, &text, &bp) {
@@ -987,14 +1104,31 @@ impl ArtifactStore {
                 if self.cap_bytes.is_some() {
                     Self::touch(&jp);
                 }
-                Some(blob)
+                Loaded::Hit(blob)
             }
             Err(why) => {
                 self.discard_corrupt(key, &why);
                 self.misses.fetch_add(1, Ordering::Relaxed);
-                None
+                Loaded::Corrupt
             }
         }
+    }
+
+    /// Whether a committed entry exists for `key` — one `stat`, no
+    /// verification, no counter traffic. Cheap existence probe for
+    /// checkpoint cleanup on warm hits.
+    pub fn contains(&self, key: &str) -> bool {
+        let (jp, _) = self.entry_paths(key);
+        jp.exists()
+    }
+
+    /// Best-effort unpublish of `key`: index first (readers stop seeing
+    /// the entry), then payload. Used to clear per-unit checkpoints once
+    /// the final reconstruction artifact commits; missing files are fine.
+    pub fn remove(&self, key: &str) {
+        let (jp, bp) = self.entry_paths(key);
+        let _ = fs::remove_file(jp);
+        let _ = fs::remove_file(bp);
     }
 
     /// Best-effort mtime bump on hit (capped stores only) — keeps hot
@@ -1119,7 +1253,11 @@ impl ArtifactStore {
     /// `cap_bytes`, never touching the just-published `keep`. Recency
     /// is the index mtime (path as the deterministic tie-break), which
     /// [`Self::load`] bumps on every hit — so a hot entry outlives
-    /// colder but younger ones.
+    /// colder but younger ones. The sweep walks only top-level indexes
+    /// ([`Self::index_paths`]): the `ckpt/` and `journal/`
+    /// subdirectories — in-flight partial progress and write-ahead
+    /// batch journals — are pinned out of it by construction (see
+    /// [`Self::pinned`]).
     fn evict_to_cap(&self, keep: &Path) {
         let Some(cap) = self.cap_bytes else { return };
         let mut entries: Vec<(std::time::SystemTime, PathBuf, u64)> =
@@ -1290,6 +1428,97 @@ mod tests {
         );
         assert!(store.load("k3").is_some());
         assert!(store.load("k1").is_none(), "LRU entry survived");
+        let _ = fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn ckpt_namespace_survives_a_cap_squeeze() {
+        let store =
+            ArtifactStore::open_with_cap(tmp_dir("pinned"), Some(4096))
+                .unwrap();
+        let ck = "recon/m/brecq/1/32/0/train/abc/ckpt/0";
+        let mut cb = Blob::new("recon-ckpt");
+        cb.push_f64s("x", &vec![9.0; 256]); // ~2KiB, over half the cap
+        store.publish(ck, &cb).unwrap();
+        // pinned entries are outside len() (top-level indexes only)
+        assert_eq!(store.len(), 0);
+        for i in 0..8 {
+            let mut b = Blob::new("test");
+            b.push_f64s("x", &vec![i as f64; 128]);
+            store.publish(&format!("k{i}"), &b).unwrap();
+        }
+        assert!(store.stats().evicted > 0, "cap never evicted");
+        assert!(
+            store.load(ck).is_some(),
+            "cap squeeze evicted a pinned /ckpt/ entry"
+        );
+        // remove() unpublishes it: clean miss, not corruption
+        store.remove(ck);
+        assert!(store.load(ck).is_none());
+        assert_eq!(store.stats().corrupt, 0);
+        let _ = fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn load_entry_classifies_miss_vs_corrupt() {
+        let store = ArtifactStore::open(tmp_dir("classify")).unwrap();
+        assert!(matches!(store.load_entry("nope"), Loaded::Miss));
+        let mut b = Blob::new("test");
+        b.push_f64s("x", &[1.0, 2.0]);
+        store.publish("k", &b).unwrap();
+        assert!(matches!(store.load_entry("k"), Loaded::Hit(_)));
+        let (_, bp) = store.entry_paths("k");
+        let mut bytes = fs::read(&bp).unwrap();
+        bytes[0] ^= 0xff;
+        fs::write(&bp, &bytes).unwrap();
+        assert!(matches!(store.load_entry("k"), Loaded::Corrupt));
+        // discarded: the next probe is a clean miss
+        assert!(matches!(store.load_entry("k"), Loaded::Miss));
+        let _ = fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn recon_ckpt_blob_round_trips_bitwise() {
+        let ck = UnitCheckpoint {
+            qweights: vec![
+                Tensor::new(vec![2, 2], vec![1.5, -0.0, 3.5e-42, 2.0]),
+                Tensor::new(vec![1, 3], vec![-7.25, 0.125, 1e30]),
+            ],
+            act_steps: vec![0.01, f32::MIN_POSITIVE],
+            report: UnitReport {
+                name: "block2".into(),
+                initial_loss: 0.1,
+                final_loss: 1e-300,
+                soft_fraction_before_commit: 0.25,
+                iters: 80,
+                seconds: 1.25,
+            },
+            rng: [1, u64::MAX, 3, 4, 1, 0x3ff0_0000_0000_0001],
+        };
+        let store = ArtifactStore::open(tmp_dir("ckptrt")).unwrap();
+        store.publish("r/ckpt/3", &ck.encode()).unwrap();
+        let blob = store.load("r/ckpt/3").unwrap();
+        assert_eq!(blob.kind(), UnitCheckpoint::KIND);
+        let back = UnitCheckpoint::decode(&blob).unwrap();
+        for (a, b) in ck.qweights.iter().zip(&back.qweights) {
+            assert_eq!(a.shape, b.shape);
+            let bits =
+                |t: &Tensor| -> Vec<u32> {
+                    t.data.iter().map(|x| x.to_bits()).collect()
+                };
+            assert_eq!(bits(a), bits(b));
+        }
+        assert_eq!(
+            ck.act_steps.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            back.act_steps.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(back.report.name, "block2");
+        assert_eq!(
+            back.report.final_loss.to_bits(),
+            ck.report.final_loss.to_bits()
+        );
+        assert_eq!(back.report.iters, 80);
+        assert_eq!(back.rng, ck.rng);
         let _ = fs::remove_dir_all(store.dir());
     }
 

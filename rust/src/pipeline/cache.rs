@@ -49,6 +49,10 @@ pub enum Outcome {
     /// Built in memory from local inputs (datasets, distilled batches)
     /// — backend-free, so not counted as a compute.
     Loaded,
+    /// One reconstruction unit restored from a per-unit checkpoint
+    /// instead of recomputed (emitted per unit under the recon key by
+    /// [`ArtifactCache::note_ckpt`], alongside the final build outcome).
+    Resumed,
 }
 
 impl Outcome {
@@ -58,6 +62,7 @@ impl Outcome {
             Outcome::StoreHit => "store-hit",
             Outcome::Computed => "computed",
             Outcome::Loaded => "loaded",
+            Outcome::Resumed => "resumed",
         }
     }
 }
@@ -69,6 +74,7 @@ pub struct SlotStats {
     pub store_hits: usize,
     pub computes: usize,
     pub loads: usize,
+    pub resumed: usize,
 }
 
 impl SlotStats {
@@ -78,6 +84,7 @@ impl SlotStats {
             Outcome::StoreHit => self.store_hits += 1,
             Outcome::Computed => self.computes += 1,
             Outcome::Loaded => self.loads += 1,
+            Outcome::Resumed => self.resumed += 1,
         }
     }
 }
@@ -130,6 +137,9 @@ pub struct ArtifactCache {
     misses: AtomicUsize,
     computes: AtomicUsize,
     store_hits: AtomicUsize,
+    units_resumed: AtomicUsize,
+    ckpt_written: AtomicUsize,
+    ckpt_corrupt: AtomicUsize,
     per_key: Mutex<BTreeMap<String, SlotStats>>,
     store: Option<Arc<ArtifactStore>>,
 }
@@ -303,6 +313,50 @@ impl ArtifactCache {
     /// Memory misses resolved from the on-disk store.
     pub fn store_hits(&self) -> usize {
         self.store_hits.load(Ordering::Relaxed)
+    }
+
+    /// Checkpoint-resume accounting for the recon stage: `resumed`
+    /// units restored from per-unit checkpoints instead of recomputed
+    /// (recorded per key and traced as one [`Outcome::Resumed`] event
+    /// each, so the daemon can attribute them per batch), `written`
+    /// checkpoints published, `corrupt` checkpoint entries discarded.
+    pub fn note_ckpt(
+        &self,
+        key: &str,
+        resumed: usize,
+        written: usize,
+        corrupt: usize,
+    ) {
+        self.units_resumed.fetch_add(resumed, Ordering::Relaxed);
+        self.ckpt_written.fetch_add(written, Ordering::Relaxed);
+        self.ckpt_corrupt.fetch_add(corrupt, Ordering::Relaxed);
+        if resumed > 0 {
+            let mut per_key =
+                self.per_key.lock().unwrap_or_else(|e| e.into_inner());
+            per_key.entry(key.to_string()).or_default().resumed +=
+                resumed;
+            drop(per_key);
+            for _ in 0..resumed {
+                trace_push(key, Outcome::Resumed);
+            }
+        }
+    }
+
+    /// Reconstruction units restored from per-unit checkpoints instead
+    /// of recomputed.
+    pub fn units_resumed(&self) -> usize {
+        self.units_resumed.load(Ordering::Relaxed)
+    }
+
+    /// Per-unit checkpoints published by the recon stage.
+    pub fn ckpt_written(&self) -> usize {
+        self.ckpt_written.load(Ordering::Relaxed)
+    }
+
+    /// Checkpoint entries that failed verification/decode and were
+    /// discarded (each one cost exactly one recomputed unit).
+    pub fn ckpt_corrupt(&self) -> usize {
+        self.ckpt_corrupt.load(Ordering::Relaxed)
     }
 
     /// Per-key outcome tallies, sorted by key (`brecq run --stats`).

@@ -23,6 +23,7 @@
 //! manifest without touching the backend. `rust/tests/qaas.rs` pins both
 //! properties via [`JobOutput::fingerprint`] and dispatch accounting.
 
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use crate::baselines;
@@ -32,14 +33,17 @@ use crate::distill::{self, DistillConfig};
 use crate::eval::{accuracy, map_score, EvalParams};
 use crate::model::ModelInfo;
 use crate::mp::{GaConfig, GeneticSearch, SearchResult};
-use crate::recon::{BitConfig, Calibrator, QuantizedModel, ReconConfig,
+use crate::recon::{BitConfig, Calibrator, CkptHook, QuantizedModel,
+                   ReconConfig, UnitCheckpoint, UnitCheckpointer,
                    UnitReport};
 use crate::sensitivity::{Profiler, SensitivityTable};
 use crate::util::cancel::CancelToken;
+use crate::util::faults;
 use crate::util::json::{self, Json};
 use crate::util::pool;
 
-use super::artifact_store::{fnv64, ArtifactStore, EvalScore};
+use super::artifact_store::{fnv64, Artifact, ArtifactStore, EvalScore,
+                            Loaded};
 use super::cache::{self, ArtifactCache, Outcome};
 use super::{hw_report, DataSource, Error, HwBudget, HwReport, JobSpec,
             Method};
@@ -699,6 +703,15 @@ impl Session {
     /// persisted under [`Session::recon_key`]. BRECQ honors the spec's
     /// granularity directly — there is no special-cased non-block path
     /// anymore.
+    ///
+    /// Store-backed sessions run the calibrate methods under a
+    /// [`StoreCheckpointer`]: every committed unit publishes a resumable
+    /// checkpoint at `{recon_key}/ckpt/<unit_idx>`, and a rerun of the
+    /// same key replays the valid checkpoint prefix instead of
+    /// recomputing it — bitwise identical to an uninterrupted run. Once
+    /// the final artifact commits the checkpoints are superseded and
+    /// removed (they live in the pinned `ckpt/` namespace, outside the
+    /// eviction scan, so leaks would otherwise be permanent).
     fn reconstruct(
         &self,
         model: &ModelInfo,
@@ -708,51 +721,91 @@ impl Session {
         cancel: &CancelToken,
     ) -> Result<Arc<QuantizedModel>, Error> {
         let key = self.recon_key(spec, bits);
-        self.cache.get_or_build(&key, || {
+        let ckpt = match (self.cache.store(), spec.method) {
+            // Omse/BiasCorr never calibrate — nothing to checkpoint.
+            (Some(_), Method::Omse | Method::BiasCorr) => None,
+            (Some(st), _) => {
+                Some(Arc::new(StoreCheckpointer::new(st.clone(), &key)))
+            }
+            (None, _) => None,
+        };
+        let out = self.cache.get_or_build(&key, || {
+            if let Some(c) = &ckpt {
+                c.ran.store(true, Ordering::Relaxed);
+            }
             let cal = Calibrator::new(&self.env.rt, &self.env.mf, model);
             let base = ReconConfig {
                 iters: spec.iters,
                 seed: spec.seed,
                 verbose: spec.verbose,
                 cancel: cancel.clone(),
+                ckpt: CkptHook(ckpt.clone().map(|c| {
+                    c as Arc<dyn UnitCheckpointer>
+                })),
                 ..ReconConfig::default()
             };
-            let qm = match spec.method {
-                Method::Fp => {
-                    unreachable!("Fp skips the Reconstruct stage")
+            let qm: Result<QuantizedModel, Error> = (|| {
+                Ok(match spec.method {
+                    Method::Fp => {
+                        unreachable!("Fp skips the Reconstruct stage")
+                    }
+                    Method::Brecq => cal.calibrate(
+                        calib,
+                        bits,
+                        &baselines::brecq_cfg(&base, spec.gran.as_str()),
+                    )?,
+                    Method::AdaRoundLayer => cal.calibrate(
+                        calib,
+                        bits,
+                        &baselines::adaround_layer_cfg(&base),
+                    )?,
+                    Method::AdaQuantLike => cal.calibrate(
+                        calib,
+                        bits,
+                        &baselines::adaquant_like_cfg(&base),
+                    )?,
+                    Method::Omse => baselines::omse(
+                        &self.env.rt,
+                        &self.env.mf,
+                        model,
+                        calib,
+                        bits,
+                    )?,
+                    Method::BiasCorr => baselines::bias_correction(
+                        &self.env.rt,
+                        &self.env.mf,
+                        model,
+                        calib,
+                        bits,
+                    )?,
+                })
+            })();
+            // Tally on success AND failure (a cancelled/deadline-expired
+            // job's checkpoint progress must show in stats), and before
+            // get_or_build records its own outcome so the per-unit
+            // Resumed trace events precede this key's Computed.
+            if let Some(c) = &ckpt {
+                let (r, w, co) = c.counts();
+                self.cache.note_ckpt(&key, r, w, co);
+            }
+            qm
+        })?;
+        // Reached only with the final artifact committed (computed and
+        // published above, or already present): the checkpoints are now
+        // superseded. The `contains` probe also clears stale checkpoints
+        // left by a process that crashed between publish and cleanup —
+        // this run then memory-/store-hit without ever reading them. An
+        // error return skips this, deliberately: those checkpoints are
+        // the resume state.
+        if let Some(c) = &ckpt {
+            if c.ran.load(Ordering::Relaxed) || c.store.contains(&c.key(0))
+            {
+                for ui in 0..out.reports.len() {
+                    c.store.remove(&c.key(ui));
                 }
-                Method::Brecq => cal.calibrate(
-                    calib,
-                    bits,
-                    &baselines::brecq_cfg(&base, spec.gran.as_str()),
-                )?,
-                Method::AdaRoundLayer => cal.calibrate(
-                    calib,
-                    bits,
-                    &baselines::adaround_layer_cfg(&base),
-                )?,
-                Method::AdaQuantLike => cal.calibrate(
-                    calib,
-                    bits,
-                    &baselines::adaquant_like_cfg(&base),
-                )?,
-                Method::Omse => baselines::omse(
-                    &self.env.rt,
-                    &self.env.mf,
-                    model,
-                    calib,
-                    bits,
-                )?,
-                Method::BiasCorr => baselines::bias_correction(
-                    &self.env.rt,
-                    &self.env.mf,
-                    model,
-                    calib,
-                    bits,
-                )?,
-            };
-            Ok(qm)
-        })
+            }
+        }
+        Ok(out)
     }
 
     /// `Eval` stage: held-out score, persisted so a warm replay never
@@ -799,5 +852,145 @@ impl Session {
             Ok(EvalScore(a))
         })?;
         Ok(score.0)
+    }
+}
+
+/// Store-backed [`UnitCheckpointer`]: publishes one artifact per
+/// committed reconstruction unit at `{recon_key}/ckpt/<unit_idx>` (the
+/// pinned `ckpt/` store namespace — never evicted by `evict_to_cap`)
+/// and replays them on a rerun of the same key. A load that fails
+/// verification, carries the wrong kind, or describes a different unit
+/// shape is discarded as corrupt — exactly that unit recomputes. A
+/// failed save is logged and skipped: the job stays correct, it just
+/// loses resume granularity for that unit. `ckpt.load` / `ckpt.save`
+/// are fault-injection sites over and above the store's own IO sites,
+/// so the chaos suite can target the checkpoint paths specifically.
+struct StoreCheckpointer {
+    store: Arc<ArtifactStore>,
+    base: String,
+    resumed: AtomicUsize,
+    written: AtomicUsize,
+    corrupt: AtomicUsize,
+    /// Set at builder entry: distinguishes "computed (cleanup owed)"
+    /// from a memory/store hit that never touched checkpoints.
+    ran: AtomicBool,
+}
+
+impl StoreCheckpointer {
+    fn new(store: Arc<ArtifactStore>, recon_key: &str) -> Self {
+        StoreCheckpointer {
+            store,
+            base: recon_key.to_string(),
+            resumed: AtomicUsize::new(0),
+            written: AtomicUsize::new(0),
+            corrupt: AtomicUsize::new(0),
+            ran: AtomicBool::new(false),
+        }
+    }
+
+    fn key(&self, ui: usize) -> String {
+        format!("{}/ckpt/{ui}", self.base)
+    }
+
+    /// (resumed, written, corrupt) so far.
+    fn counts(&self) -> (usize, usize, usize) {
+        (
+            self.resumed.load(Ordering::Relaxed),
+            self.written.load(Ordering::Relaxed),
+            self.corrupt.load(Ordering::Relaxed),
+        )
+    }
+
+    fn discard(&self, key: &str, why: &str) {
+        self.store.discard_corrupt(key, why);
+        self.corrupt.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+impl UnitCheckpointer for StoreCheckpointer {
+    fn load(
+        &self,
+        ui: usize,
+        unit: &str,
+        layers: usize,
+    ) -> Option<UnitCheckpoint> {
+        match faults::check("ckpt.load") {
+            Some(faults::Kind::Panic) => {
+                panic!("injected panic at ckpt.load (unit '{unit}')")
+            }
+            // An injected read fault is a miss: the unit recomputes.
+            Some(_) => return None,
+            None => {}
+        }
+        let key = self.key(ui);
+        let blob = match self.store.load_entry(&key) {
+            Loaded::Hit(b) => b,
+            Loaded::Miss => return None,
+            Loaded::Corrupt => {
+                self.corrupt.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+        };
+        if blob.kind() != UnitCheckpoint::KIND {
+            self.discard(
+                &key,
+                &format!(
+                    "kind mismatch ('{}' != '{}')",
+                    blob.kind(),
+                    UnitCheckpoint::KIND
+                ),
+            );
+            return None;
+        }
+        let ck = match UnitCheckpoint::decode(&blob) {
+            Ok(c) => c,
+            Err(e) => {
+                self.discard(&key, &format!("decode failed: {e}"));
+                return None;
+            }
+        };
+        if ck.report.name != unit
+            || ck.qweights.len() != layers
+            || ck.act_steps.len() != layers
+        {
+            self.discard(
+                &key,
+                &format!(
+                    "checkpoint is for unit '{}' ({} layers), expected \
+                     '{unit}' ({layers})",
+                    ck.report.name,
+                    ck.qweights.len()
+                ),
+            );
+            return None;
+        }
+        self.resumed.fetch_add(1, Ordering::Relaxed);
+        Some(ck)
+    }
+
+    fn save(&self, ui: usize, ckpt: &UnitCheckpoint) {
+        match faults::check("ckpt.save") {
+            Some(faults::Kind::Panic) => {
+                panic!("injected panic at ckpt.save (unit {ui})")
+            }
+            Some(_) => {
+                eprintln!(
+                    "[ckpt] injected fault at ckpt.save (unit {ui}) — \
+                     checkpoint skipped"
+                );
+                return;
+            }
+            None => {}
+        }
+        let key = self.key(ui);
+        // Best-effort by design: a full disk must not fail the job.
+        match self.store.publish(&key, &ckpt.encode()) {
+            Ok(()) => {
+                self.written.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(e) => {
+                eprintln!("[ckpt] {e}; unit {ui} will recompute on resume")
+            }
+        }
     }
 }

@@ -40,7 +40,7 @@ pub mod job;
 #[cfg(unix)]
 pub mod serve;
 
-pub use artifact_store::{Artifact, ArtifactStore, Blob, EvalScore,
+pub use artifact_store::{Artifact, ArtifactStore, Blob, EvalScore, Loaded,
                          StoreStats};
 pub use cache::{ArtifactCache, Outcome, SlotStats};
 pub use job::{FpWeights, JobEvent, JobOutput, Session};

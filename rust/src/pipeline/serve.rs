@@ -18,12 +18,12 @@
 //!   {"event":"accepted", "batch": N, "jobs": N}
 //!   {"event":"stage", "job": i, "stage": "reconstruct", "done": false}
 //!   {"event":"cache", "job": i, "key": "fp/resnet_s",
-//!    "outcome": "hit|store-hit|computed|loaded"}
+//!    "outcome": "hit|store-hit|computed|resumed|loaded"}
 //!   {"event":"result", "job": i, "ok": true, "output": {...}}
 //!   {"event":"result", "job": i, "ok": false, "error": "..."}
 //!   {"event":"cancelling", "batch": N, "queued_dropped": N}
 //!   {"event":"done", "batch": N, "ok": N, "failed": N, "computes": N,
-//!    "cache_hits": N, "store_hits": N}
+//!    "cache_hits": N, "store_hits": N, "units_resumed": N}
 //! ```
 //!
 //! Scheduling: jobs queue with a per-batch priority and run on a fixed
@@ -58,6 +58,14 @@
 //!   jobs before binding the socket — warm cache hits for anything the
 //!   dead daemon had already published, so interrupted work is finished
 //!   exactly once.
+//! * Reconstruction itself is resumable at unit granularity: each
+//!   completed Algorithm-1 unit publishes a checkpoint under the recon
+//!   key's pinned `ckpt/` namespace, so a journal-recovered, cancelled,
+//!   deadline-expired or killed job that is re-run replays its finished
+//!   units bit-identically (`"outcome":"resumed"` cache events;
+//!   `units_resumed` on `done` and in `stats`) instead of recomputing
+//!   them. Checkpoints are removed once the final recon artifact
+//!   publishes.
 //!
 //! Results are deterministic by construction — every job runs through
 //! the same [`Session`] cache/store machinery as `brecq run`, so a
@@ -149,6 +157,9 @@ struct Batch {
     computes: AtomicUsize,
     cache_hits: AtomicUsize,
     store_hits: AtomicUsize,
+    /// Reconstruction units replayed from per-unit checkpoints instead
+    /// of recomputed — the resume-progress signal for this batch.
+    units_resumed: AtomicUsize,
 }
 
 struct Queued {
@@ -328,6 +339,8 @@ impl Shared {
                     b.cache_hits.load(Ordering::SeqCst) as f64)),
                 ("store_hits", json::num(
                     b.store_hits.load(Ordering::SeqCst) as f64)),
+                ("units_resumed", json::num(
+                    b.units_resumed.load(Ordering::SeqCst) as f64)),
             ]),
         );
         if let Some(p) = &b.journal {
@@ -371,6 +384,9 @@ impl Shared {
                     Outcome::Hit => &b.cache_hits,
                     Outcome::StoreHit => &b.store_hits,
                     Outcome::Computed => &b.computes,
+                    // one trace event per checkpoint-restored unit; a
+                    // resumed unit is neither a cache hit nor a compute
+                    Outcome::Resumed => &b.units_resumed,
                     Outcome::Loaded => &b.cache_hits,
                 };
                 if outcome != Outcome::Loaded {
@@ -446,6 +462,24 @@ impl Shared {
                         "journal_recovered",
                         json::num(
                             self.recovered.load(Ordering::SeqCst) as f64,
+                        ),
+                    ),
+                    (
+                        "units_resumed",
+                        json::num(
+                            self.session.cache().units_resumed() as f64,
+                        ),
+                    ),
+                    (
+                        "ckpt_written",
+                        json::num(
+                            self.session.cache().ckpt_written() as f64,
+                        ),
+                    ),
+                    (
+                        "ckpt_corrupt",
+                        json::num(
+                            self.session.cache().ckpt_corrupt() as f64,
                         ),
                     ),
                 ];
@@ -572,6 +606,7 @@ impl Shared {
                             ("computes", json::num(0.0)),
                             ("cache_hits", json::num(0.0)),
                             ("store_hits", json::num(0.0)),
+                            ("units_resumed", json::num(0.0)),
                         ]),
                     );
                     return;
@@ -597,6 +632,7 @@ impl Shared {
                     computes: AtomicUsize::new(0),
                     cache_hits: AtomicUsize::new(0),
                     store_hits: AtomicUsize::new(0),
+                    units_resumed: AtomicUsize::new(0),
                 });
                 // journal before the first job can run: a crash after
                 // this point leaves a record to recover from
@@ -963,18 +999,38 @@ pub fn submit(
     let mut results: Vec<Option<Result<Json, String>>> =
         (0..specs.len()).map(|_| None).collect();
     let mut got = 0usize;
+    // batch id from the `accepted` event — the cancel handle
+    let mut batch_id: Option<u64> = None;
     let t0 = Instant::now();
     let mut reader = BufReader::new(stream);
     let mut buf = String::new();
     loop {
         if let Some(d) = timeout {
             if t0.elapsed() > d {
+                // Best-effort cancel so an abandoned batch stops
+                // burning daemon workers. In-flight units have already
+                // checkpointed, so a resubmit of the same specs resumes
+                // from where the cancel landed rather than from zero.
+                let cancelled = batch_id.is_some_and(|id| {
+                    control_fields(
+                        socket,
+                        "cancel",
+                        vec![("batch", json::num(id as f64))],
+                    )
+                    .is_ok()
+                });
                 return Err(Error::Exec(format!(
                     "timed out after {:.1}s with {got} of {} job \
-                     results received — the batch is still running \
-                     on the daemon (use 'brecq ctl cancel' to stop it)",
+                     results received — {}",
                     t0.elapsed().as_secs_f64(),
-                    specs.len()
+                    specs.len(),
+                    if cancelled {
+                        "sent 'ctl cancel'; finished units are \
+                         checkpointed, resubmit to resume"
+                    } else {
+                        "the batch may still be running on the \
+                         daemon (use 'brecq ctl cancel' to stop it)"
+                    }
                 )));
             }
         }
@@ -1014,6 +1070,12 @@ pub fn submit(
         })?;
         on_event(&ev);
         match ev.get("event").and_then(Json::as_str) {
+            Some("accepted") => {
+                batch_id = ev
+                    .get("batch")
+                    .and_then(Json::as_f64)
+                    .map(|n| n as u64);
+            }
             Some("error") => {
                 return Err(Error::Exec(format!(
                     "daemon rejected the batch: {}",

@@ -84,6 +84,62 @@ impl BitConfig {
     }
 }
 
+/// One completed unit of Algorithm 1, frozen for resume: the committed
+/// hard-rounded weights and learned activation steps for the unit's
+/// layers (unit order), the unit report (its losses feed
+/// `JobOutput::fingerprint()`, so it must round-trip bitwise), and the
+/// post-unit RNG snapshot ([`Rng::state`]) so the next unit draws the
+/// exact calibration rows it would have drawn uninterrupted.
+///
+/// Activation streams are deliberately *not* stored: on resume they are
+/// recomputed by advancing `unit_fwd` with the restored weights — a
+/// deterministic, thread-invariant function of the checkpointed state —
+/// which keeps checkpoints small (weights, not K-sample activations).
+#[derive(Debug, Clone)]
+pub struct UnitCheckpoint {
+    pub qweights: Vec<Tensor>,
+    pub act_steps: Vec<f32>,
+    pub report: UnitReport,
+    pub rng: [u64; 6],
+}
+
+/// Per-unit checkpoint sink/source for resumable reconstruction. The
+/// engine stays storage-agnostic: [`crate::pipeline`] installs a
+/// store-backed implementation keyed under the recon cache key; with no
+/// hook installed (benches, direct `Calibrator` use) the cost is one
+/// `Option` branch per unit.
+pub trait UnitCheckpointer: Send + Sync {
+    /// Checkpoint for unit `ui`, or `None` on miss/corruption. `unit`
+    /// and `layers` let the implementation reject an entry that does
+    /// not match the unit it claims to be (counted as corrupt, never
+    /// applied). Invalid entries are discarded so only that unit is
+    /// recomputed.
+    fn load(
+        &self,
+        ui: usize,
+        unit: &str,
+        layers: usize,
+    ) -> Option<UnitCheckpoint>;
+    /// Publish the checkpoint for unit `ui`. Best-effort: failures are
+    /// logged by the implementation and never fail the calibration.
+    fn save(&self, ui: usize, ckpt: &UnitCheckpoint);
+}
+
+/// Optional checkpointer slot on [`ReconConfig`] — a newtype so the
+/// config keeps deriving `Debug`/`Clone` around the trait object.
+#[derive(Clone, Default)]
+pub struct CkptHook(pub Option<std::sync::Arc<dyn UnitCheckpointer>>);
+
+impl std::fmt::Debug for CkptHook {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(if self.0.is_some() {
+            "CkptHook(installed)"
+        } else {
+            "CkptHook(none)"
+        })
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct ReconConfig {
     pub gran: String,
@@ -108,6 +164,9 @@ pub struct ReconConfig {
     /// Cooperative cancellation scope, checked at unit and iteration
     /// boundaries. The default inert token costs one branch per check.
     pub cancel: CancelToken,
+    /// Per-unit checkpoint hook for resumable reconstruction (default
+    /// none — checkpointing off).
+    pub ckpt: CkptHook,
 }
 
 impl Default for ReconConfig {
@@ -125,6 +184,7 @@ impl Default for ReconConfig {
             seed: 0,
             verbose: false,
             cancel: CancelToken::none(),
+            ckpt: CkptHook(None),
         }
     }
 }
@@ -353,44 +413,98 @@ impl<'a> Calibrator<'a> {
                     unit.name
                 );
             }
-            // Fault-injection site: lets the chaos harness fail or
-            // panic mid-reconstruction, between committed units.
-            match faults::check("job.recon") {
-                Some(faults::Kind::Panic) => panic!(
-                    "injected panic at job.recon (unit '{}')",
-                    unit.name
-                ),
-                Some(k) => anyhow::bail!(
-                    "injected {} fault at job.recon (unit '{}')",
-                    k.as_str(),
-                    unit.name
-                ),
-                None => {}
+            // Resume probe: a valid checkpoint replays this unit's
+            // committed result instead of reconstructing it. A miss,
+            // a checksum failure or a mismatched entry (all handled
+            // inside the hook) falls through to the live path, so a
+            // corrupt checkpoint costs exactly one recomputed unit.
+            let restored = cfg
+                .ckpt
+                .0
+                .as_deref()
+                .and_then(|h| h.load(ui, &unit.name, unit.layer_ids.len()));
+            if restored.is_none() {
+                // Fault-injection site: lets the chaos harness fail or
+                // panic mid-reconstruction, between committed units.
+                match faults::check("job.recon") {
+                    Some(faults::Kind::Panic) => panic!(
+                        "injected panic at job.recon (unit '{}')",
+                        unit.name
+                    ),
+                    Some(k) => anyhow::bail!(
+                        "injected {} fault at job.recon (unit '{}')",
+                        k.as_str(),
+                        unit.name
+                    ),
+                    None => {}
+                }
             }
             if unit.save_skip {
                 fp_skip = Some(fp_main.clone());
                 q_skip = Some(q_main.clone());
             }
-            // FP targets for this unit
+            // FP targets for this unit. On the resume path this runs
+            // before the checkpointed act steps are applied — the same
+            // pre-reconstruction ordering as the live path, so the FP
+            // stream is bit-identical either way.
             let z_fp = self.advance(
                 unit, &fp_main, fp_skip.as_ref(), &ws, &bs, &act_steps,
                 bits, false,
             )?;
-            // no FIM clone: the reconstruction borrows the per-unit
-            // cache; None means unit weight (plain MSE) inside the loss
-            let unit_fim: Option<&Tensor> = fim.as_ref().map(|f| &f[ui]);
 
-            let report = self.reconstruct_unit(
-                unit, &q_main, q_skip.as_ref(), &z_fp, unit_fim, &ws, &bs,
-                &mut states, &mut act_steps, bits, cfg, &mut rng, nbatch,
-            )?;
-            reports.push(report);
+            if let Some(c) = restored {
+                // Apply the committed result and the post-unit RNG
+                // snapshot; the quantized stream is recomputed below by
+                // advancing with the restored weights (deterministic,
+                // thread-invariant — see UnitCheckpoint docs).
+                for (i, &l) in unit.layer_ids.iter().enumerate() {
+                    qweights[l] = c.qweights[i].clone();
+                    act_steps[l] = c.act_steps[i];
+                }
+                rng = Rng::from_state(c.rng);
+                reports.push(c.report);
+            } else {
+                // no FIM clone: the reconstruction borrows the per-unit
+                // cache; None means unit weight (plain MSE) inside the
+                // loss
+                let unit_fim: Option<&Tensor> =
+                    fim.as_ref().map(|f| &f[ui]);
 
-            // commit hard-rounded weights for this unit's layers
-            for &l in &unit.layer_ids {
-                qweights[l] = states[l].commit(&ws[l]);
+                let report = self.reconstruct_unit(
+                    unit, &q_main, q_skip.as_ref(), &z_fp, unit_fim, &ws,
+                    &bs, &mut states, &mut act_steps, bits, cfg, &mut rng,
+                    nbatch,
+                )?;
+
+                // commit hard-rounded weights for this unit's layers
+                for &l in &unit.layer_ids {
+                    qweights[l] = states[l].commit(&ws[l]);
+                }
+                // checkpoint the committed unit (best-effort) before
+                // the streams advance: everything after this point is
+                // recomputable from the checkpoint alone
+                if let Some(h) = cfg.ckpt.0.as_deref() {
+                    h.save(
+                        ui,
+                        &UnitCheckpoint {
+                            qweights: unit
+                                .layer_ids
+                                .iter()
+                                .map(|&l| qweights[l].clone())
+                                .collect(),
+                            act_steps: unit
+                                .layer_ids
+                                .iter()
+                                .map(|&l| act_steps[l])
+                                .collect(),
+                            report: report.clone(),
+                            rng: rng.state(),
+                        },
+                    );
+                }
+                reports.push(report);
             }
-            // advance both streams
+            // advance the quantized stream with the committed weights
             let q_next = self.advance(
                 unit, &q_main, q_skip.as_ref(), &qweights, &bs, &act_steps,
                 bits, bits.aq,

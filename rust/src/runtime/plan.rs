@@ -52,6 +52,13 @@
 //! plans skip the slab feed (the trained activation step re-quantizes
 //! the frozen input every iteration) while keeping the persistent
 //! scratch and fused dispatch.
+//!
+//! Plans are also why per-unit checkpoint/resume (`recon.rs`'s
+//! `UnitCheckpointer`) needs no state from this module: a plan lives
+//! for exactly one unit's iteration loop and is dropped at commit, so
+//! a unit boundary — the checkpoint/resume boundary — holds no plan
+//! state at all. Resuming rebuilds later units' plans from their
+//! restored inputs, bit-identically.
 
 // Kernel-feeding loops index several buffers with shared offset
 // arithmetic (same rationale as runtime::native).

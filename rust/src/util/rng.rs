@@ -101,6 +101,29 @@ impl Rng {
     pub fn fork(&mut self) -> Rng {
         Rng::new(self.next_u64())
     }
+
+    /// Bit-exact snapshot of the generator as six words: the xoshiro256++
+    /// state followed by a presence flag and the bits of the cached
+    /// Box-Muller sample. `from_state(state())` continues the exact
+    /// sequence — the checkpoint/resume contract.
+    pub fn state(&self) -> [u64; 6] {
+        [
+            self.s[0],
+            self.s[1],
+            self.s[2],
+            self.s[3],
+            self.cached_gauss.is_some() as u64,
+            self.cached_gauss.unwrap_or(0.0).to_bits(),
+        ]
+    }
+
+    /// Rebuild a generator from a `state()` snapshot.
+    pub fn from_state(w: [u64; 6]) -> Rng {
+        Rng {
+            s: [w[0], w[1], w[2], w[3]],
+            cached_gauss: (w[4] != 0).then(|| f64::from_bits(w[5])),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -164,6 +187,23 @@ mod tests {
         sorted.dedup();
         assert_eq!(sorted.len(), 40);
         assert!(idx.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn state_roundtrip_continues_sequence() {
+        let mut a = Rng::new(42);
+        for _ in 0..37 {
+            a.next_u64();
+        }
+        a.gauss(); // leave a cached Box-Muller sample pending
+        let mut b = Rng::from_state(a.state());
+        for _ in 0..100 {
+            assert_eq!(a.gauss().to_bits(), b.gauss().to_bits());
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let idx_a = a.sample_indices(64, 16);
+        let idx_b = b.sample_indices(64, 16);
+        assert_eq!(idx_a, idx_b);
     }
 
     #[test]

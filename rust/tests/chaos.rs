@@ -10,7 +10,14 @@
 //!   while its sibling jobs in the batch complete normally;
 //! - a daemon killed with SIGKILL mid-batch leaves a journal that a
 //!   restarted daemon recovers before binding, after which the batch
-//!   replays warm with zero recomputation.
+//!   replays warm with zero recomputation;
+//! - reconstruction interrupted after k of n units resumes from per-unit
+//!   checkpoints, recomputing exactly n−k units, bit-identical to an
+//!   uninterrupted run at 1/2/8 threads;
+//! - a corrupt checkpoint is discarded and costs exactly one recomputed
+//!   unit;
+//! - a deadline-expired batch leaves its finished units checkpointed and
+//!   a resubmit finishes from them.
 //!
 //! The fault plan is process-global, so every test here serializes on
 //! one mutex and clears the plan before releasing it. (The faults
@@ -25,6 +32,7 @@ use brecq::coordinator::Env;
 use brecq::pipeline::{ArtifactCache, ArtifactStore, EvalScore, JobSpec,
                       Session};
 use brecq::util::faults::{self, FaultPlan};
+use brecq::util::pool;
 
 /// One lock for every test in this binary: the fault plan (and the
 /// daemon sockets under the shared tmp naming) are process-global.
@@ -58,6 +66,39 @@ fn tmp(name: &str) -> PathBuf {
 
 fn store_cache(dir: &PathBuf) -> ArtifactCache {
     ArtifactCache::with_store(Arc::new(ArtifactStore::open(dir).unwrap()))
+}
+
+fn brecq_spec(iters: usize) -> JobSpec {
+    JobSpec {
+        model: "resnet_s".into(),
+        wbits: 4,
+        abits: Some(8),
+        iters,
+        calib_n: 32,
+        seed: 0,
+        ..JobSpec::default()
+    }
+}
+
+fn store_session(dir: &PathBuf) -> Session {
+    Session::with_store(
+        env(),
+        Arc::new(ArtifactStore::open(dir).unwrap()),
+    )
+}
+
+/// Committed checkpoint entries (index files) in a store's pinned
+/// `ckpt/` namespace.
+fn ckpt_jsons(store_dir: &PathBuf) -> usize {
+    std::fs::read_dir(store_dir.join("ckpt"))
+        .map(|rd| {
+            rd.flatten()
+                .filter(|e| {
+                    e.path().extension().map_or(false, |x| x == "json")
+                })
+                .count()
+        })
+        .unwrap_or(0)
 }
 
 // ---------------------------------------------------------------------
@@ -115,6 +156,141 @@ fn injected_publish_io_fault_retries_to_a_bitwise_identical_artifact() {
 }
 
 // ---------------------------------------------------------------------
+// Per-unit checkpoint resume
+// ---------------------------------------------------------------------
+
+#[test]
+fn interrupted_recon_resumes_bitwise_at_each_thread_count() {
+    let _g = lock_chaos();
+    let _disarm = DisarmOnDrop;
+    let spec = brecq_spec(6);
+
+    // fault-free, store-free reference fingerprint
+    let ref_fp = {
+        let s = Session::new(env());
+        format!("{:016x}", s.run(&spec).unwrap().fingerprint())
+    };
+
+    let before = pool::threads();
+    for &t in &[1usize, 2, 8] {
+        pool::set_threads(t);
+        let dir = tmp(&format!("resume_t{t}"));
+
+        // interrupt after two committed units (the job.recon site is
+        // probed once per non-restored unit; the 3rd probe fails)
+        faults::set_plan(Some(
+            FaultPlan::parse("job.recon:io@3", 0).unwrap(),
+        ));
+        let s1 = store_session(&dir);
+        let err = s1
+            .run(&spec)
+            .expect_err("the injected fault must fail the job");
+        faults::set_plan(None);
+        assert!(
+            err.to_string().contains("job.recon"),
+            "expected the injected recon fault, got: {err}"
+        );
+        assert_eq!(
+            ckpt_jsons(&dir),
+            2,
+            "both finished units must be checkpointed (threads={t})"
+        );
+        assert_eq!(s1.cache().ckpt_written(), 2);
+
+        // a fresh session over the same store resumes: the two
+        // checkpointed units replay, the rest recompute
+        let s2 = store_session(&dir);
+        let out = s2.run(&spec).unwrap();
+        assert_eq!(
+            format!("{:016x}", out.fingerprint()),
+            ref_fp,
+            "resumed run must be bit-identical to an uninterrupted \
+             one (threads={t})"
+        );
+        assert_eq!(s2.cache().units_resumed(), 2);
+        assert_eq!(
+            s2.cache().ckpt_written(),
+            out.reports().len() - 2,
+            "exactly the non-resumed units recompute"
+        );
+        assert_eq!(s2.cache().ckpt_corrupt(), 0);
+        assert_eq!(
+            ckpt_jsons(&dir),
+            0,
+            "checkpoints must be removed once the final recon \
+             artifact publishes"
+        );
+    }
+    pool::set_threads(before);
+}
+
+#[test]
+fn corrupt_checkpoint_recomputes_exactly_that_unit() {
+    let _g = lock_chaos();
+    let _disarm = DisarmOnDrop;
+    let spec = brecq_spec(6);
+
+    let ref_fp = {
+        let s = Session::new(env());
+        format!("{:016x}", s.run(&spec).unwrap().fingerprint())
+    };
+
+    // interrupt after three committed units
+    let dir = tmp("resume_corrupt");
+    faults::set_plan(Some(
+        FaultPlan::parse("job.recon:io@4", 0).unwrap(),
+    ));
+    store_session(&dir)
+        .run(&spec)
+        .expect_err("the injected fault must fail the job");
+    faults::set_plan(None);
+    assert_eq!(ckpt_jsons(&dir), 3);
+
+    // flip one payload byte of unit 1's checkpoint (the index json
+    // carries the full key, which is how we find the right entry)
+    let mut target = None;
+    for e in std::fs::read_dir(dir.join("ckpt")).unwrap().flatten() {
+        let p = e.path();
+        if p.extension().map_or(false, |x| x == "json")
+            && std::fs::read_to_string(&p).unwrap().contains("/ckpt/1")
+        {
+            target = Some(p.with_extension("bin"));
+        }
+    }
+    let bin = target.expect("unit 1's checkpoint must be on disk");
+    let mut bytes = std::fs::read(&bin).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&bin, bytes).unwrap();
+
+    // resume: units 0 and 2 replay, unit 1 is detected corrupt and
+    // recomputed (along with the never-checkpointed tail)
+    let s2 = store_session(&dir);
+    let out = s2.run(&spec).unwrap();
+    assert_eq!(
+        format!("{:016x}", out.fingerprint()),
+        ref_fp,
+        "a corrupt checkpoint must not poison the result"
+    );
+    assert_eq!(
+        s2.cache().ckpt_corrupt(),
+        1,
+        "the flipped checkpoint must be detected exactly once"
+    );
+    assert_eq!(
+        s2.cache().units_resumed(),
+        2,
+        "only the two intact checkpoints resume"
+    );
+    assert_eq!(
+        s2.cache().ckpt_written(),
+        out.reports().len() - 2,
+        "the corrupt unit and the tail recompute"
+    );
+    assert_eq!(ckpt_jsons(&dir), 0);
+}
+
+// ---------------------------------------------------------------------
 // Daemon fault isolation (panic, deadline, kill -9)
 // ---------------------------------------------------------------------
 
@@ -133,18 +309,6 @@ mod serve {
             std::thread::sleep(Duration::from_millis(10));
         }
         panic!("daemon socket {sock:?} never appeared");
-    }
-
-    fn brecq_spec(iters: usize) -> JobSpec {
-        JobSpec {
-            model: "resnet_s".into(),
-            wbits: 4,
-            abits: Some(8),
-            iters,
-            calib_n: 32,
-            seed: 0,
-            ..JobSpec::default()
-        }
     }
 
     fn omse_spec() -> JobSpec {
@@ -423,6 +587,178 @@ mod serve {
             0,
             "warm resubmit after recovery must compute nothing"
         );
+
+        control(&sock, "shutdown").unwrap();
+        daemon.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn deadline_expired_batch_resumes_from_checkpoints_on_resubmit() {
+        let _g = lock_chaos();
+        let _disarm = DisarmOnDrop;
+        let spec = brecq_spec(80);
+
+        let ref_fp = {
+            let s = Session::new(env());
+            format!("{:016x}", s.run(&spec).unwrap().fingerprint())
+        };
+
+        let dir = tmp("deadline_resume");
+        let sock = dir.join("d.sock");
+        let store_dir = dir.join("store");
+        let daemon = spawn(
+            Session::with_store(
+                env(),
+                Arc::new(ArtifactStore::open(&store_dir).unwrap()),
+            ),
+            sock.clone(),
+            1,
+        );
+        wait_for_socket(&sock);
+
+        // Keep resubmitting with a growing deadline until the job fits.
+        // Whatever units a failed attempt finished stay checkpointed,
+        // and the next attempt's `done` must report exactly that many
+        // units resumed — the checkpoint count is read off disk before
+        // each attempt, so the equality is exact however the timing
+        // falls.
+        let mut summary = None;
+        for attempt in 0..12u32 {
+            let k_before = ckpt_jsons(&store_dir);
+            let doomed = JobSpec {
+                deadline_ms: Some(100u64 << attempt),
+                ..spec.clone()
+            };
+            let s = submit(
+                &sock,
+                &[doomed],
+                0,
+                Some(Duration::from_secs(300)),
+                |_| {},
+            )
+            .unwrap();
+            match &s.results[0] {
+                Ok(_) => {
+                    assert_eq!(
+                        done_field(&s, "units_resumed"),
+                        k_before,
+                        "the finishing attempt must resume every \
+                         checkpointed unit"
+                    );
+                    summary = Some(s);
+                    break;
+                }
+                Err(e) => assert!(
+                    e.contains("deadline"),
+                    "expected a typed deadline error, got: {e}"
+                ),
+            }
+        }
+        let s = summary.expect("some deadline must be long enough");
+        assert_eq!(result_fingerprints(&s), vec![ref_fp]);
+        assert_eq!(
+            ckpt_jsons(&store_dir),
+            0,
+            "checkpoints must be cleared once the job completes"
+        );
+
+        control(&sock, "shutdown").unwrap();
+        daemon.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn killed_daemon_recovery_resumes_from_unit_checkpoints() {
+        let _g = lock_chaos();
+        let dir = tmp("kill9_resume");
+        let sock = dir.join("d.sock");
+        let store_dir = dir.join("store");
+        let spec = brecq_spec(60);
+
+        let ref_fp = {
+            let s = Session::new(env());
+            format!("{:016x}", s.run(&spec).unwrap().fingerprint())
+        };
+
+        let exe = std::env::current_exe().unwrap();
+        let mut child = KillOnDrop(
+            std::process::Command::new(&exe)
+                .args([
+                    "chaos_daemon_child_helper",
+                    "--exact",
+                    "--nocapture",
+                ])
+                .env("BRECQ_CHAOS_SERVE_DIR", &dir)
+                .stdout(std::process::Stdio::null())
+                .stderr(std::process::Stdio::null())
+                .spawn()
+                .unwrap(),
+        );
+        wait_for_socket(&sock);
+
+        // submit, then SIGKILL the daemon as soon as the first unit
+        // checkpoint commits — mid-reconstruction by construction
+        let r = std::thread::scope(|s| {
+            let h = s.spawn(|| {
+                submit(&sock, &[spec.clone()], 0, None, |_| {})
+            });
+            while ckpt_jsons(&store_dir) == 0 && !h.is_finished() {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            child.0.kill().unwrap();
+            let _ = child.0.wait();
+            h.join().unwrap()
+        });
+        r.expect_err("a killed daemon must not return Ok");
+        // index files commit by atomic rename, so each one on disk is a
+        // complete, loadable checkpoint — this count must resume
+        let k = ckpt_jsons(&store_dir);
+        assert!(k >= 1, "the kill landed after a checkpoint committed");
+
+        // restart over the same store: journal recovery re-runs the job
+        // before binding, replaying exactly the k checkpointed units
+        let daemon = spawn(
+            Session::with_store(
+                env(),
+                Arc::new(ArtifactStore::open(&store_dir).unwrap()),
+            ),
+            sock.clone(),
+            2,
+        );
+        wait_for_socket(&sock);
+        let stats = control(&sock, "stats").unwrap();
+        let stat = |f: &str| {
+            stats
+                .get(f)
+                .and_then(Json::as_usize)
+                .unwrap_or_else(|| panic!("stats carries {f}"))
+        };
+        assert!(stat("journal_recovered") >= 1);
+        assert_eq!(
+            stat("units_resumed"),
+            k,
+            "recovery must resume exactly the units the dead daemon \
+             checkpointed: {}",
+            stats.to_string()
+        );
+        assert_eq!(stat("ckpt_corrupt"), 0);
+        assert_eq!(
+            ckpt_jsons(&store_dir),
+            0,
+            "recovery finished the job, so its checkpoints are gone"
+        );
+
+        // the recovered artifact serves warm and bit-identical
+        let warm = submit(
+            &sock,
+            &[spec],
+            0,
+            Some(Duration::from_secs(300)),
+            |_| {},
+        )
+        .unwrap();
+        assert_eq!(result_fingerprints(&warm), vec![ref_fp]);
+        assert_eq!(done_field(&warm, "computes"), 0);
+        assert_eq!(done_field(&warm, "units_resumed"), 0);
 
         control(&sock, "shutdown").unwrap();
         daemon.join().unwrap().unwrap();

@@ -10,6 +10,12 @@
 #     client sees a typed EOF error; a restarted daemon recovers the
 #     journal before binding, after which the batch replays warm
 #     (computes == 0) and still matches the fault-free reference;
+#   * a daemon SIGKILLed mid-RECONSTRUCTION leaves per-unit checkpoints
+#     in the store's pinned ckpt/ namespace; the restarted daemon's
+#     journal recovery resumes exactly those units (units_resumed == the
+#     checkpoint count at kill time, ckpt_corrupt == 0), the finished
+#     result is bitwise-equal to the fault-free reference, and the
+#     checkpoints are cleared once the final artifact publishes;
 #   * at the end, no daemon ever served a corrupt artifact
 #     (store_corrupt == 0 everywhere).
 #
@@ -34,8 +40,9 @@ tmp=${CHAOS_SOAK_TMP:-$(mktemp -d)}
 mkdir -p "$tmp"
 pid_a=""
 pid_b=""
+pid_c=""
 cleanup() {
-    for pid in "$pid_a" "$pid_b"; do
+    for pid in "$pid_a" "$pid_b" "$pid_c"; do
         if [ -n "$pid" ] && kill -0 "$pid" 2>/dev/null; then
             kill -9 "$pid" 2>/dev/null || true
             wait "$pid" 2>/dev/null || true
@@ -72,10 +79,10 @@ wait_sock() {
     die "daemon socket never came up at $1"
 }
 
-# start_daemon <name> <sock>: sets $daemon_pid. Runs in the current
-# shell (no subshell) so the daemon stays wait-able/kill-able.
+# start_daemon <name> <sock> [<store>]: sets $daemon_pid. Runs in the
+# current shell (no subshell) so the daemon stays wait-able/kill-able.
 start_daemon() {
-    "$bin" serve --sock "$2" --store "$store" \
+    "$bin" serve --sock "$2" --store "${3:-$store}" \
         >>"$tmp/daemon-$1.log" 2>&1 &
     daemon_pid=$!
 }
@@ -254,15 +261,109 @@ for i in $(seq 1 "$cycles"); do
 done
 
 # ---------------------------------------------------------------------
+# Phase 3: kill -9 mid-RECONSTRUCTION, restart, checkpoint resume
+# ---------------------------------------------------------------------
+# Fault-free phase over a fresh store: the property under test is the
+# checkpoint/resume path itself, pinned deterministically.
+unset BRECQ_FAULTS BRECQ_FAULTS_SEED
+store_c="$tmp/store_c"
+sock_c="$tmp/c.sock"
+
+# one slow single-job batch so the SIGKILL lands between recon units
+python3 - "$tmp/jobs-resume.json" <<'PY'
+import json, sys
+
+json.dump([{"model": "resnet_s", "method": "brecq", "gran": "block",
+            "wbits": 4, "abits": 8, "iters": 200, "calib_n": 64,
+            "seed": 33}], open(sys.argv[1], "w"))
+PY
+echo "chaos_soak: fault-free reference for the resume batch"
+"$bin" run "$tmp/jobs-resume.json" --stats --json "$tmp/ref-resume.json" \
+    >"$tmp/ref-resume.log" 2>&1 || die "resume reference run failed"
+
+echo "chaos_soak: resume cycle — submitting slow batch to daemon C"
+start_daemon c "$sock_c" "$store_c"
+pid_c=$daemon_pid
+wait_sock "$sock_c"
+"$bin" submit "$tmp/jobs-resume.json" --sock "$sock_c" --timeout 600 \
+    >"$tmp/client-resume.log" 2>&1 &
+cr=$!
+# ckpt_count: pinned-namespace index files; the directory may
+# legitimately not exist yet, so guard against set -e/pipefail.
+ckpt_count() {
+    local n
+    n=$(find "$store_c/ckpt" -maxdepth 1 -name '*.json' 2>/dev/null \
+        | wc -l) || n=0
+    echo "$n"
+}
+
+# wait for the first committed unit checkpoint, then SIGKILL
+ckpts=0
+for _ in $(seq 1 600); do
+    ckpts=$(ckpt_count)
+    [ "$ckpts" -ge 1 ] && break
+    sleep 0.05
+done
+[ "$ckpts" -ge 1 ] || die "resume cycle: no unit checkpoint appeared"
+echo "chaos_soak: resume cycle — SIGKILL daemon C (pid $pid_c)"
+kill -9 "$pid_c"
+wait "$pid_c" 2>/dev/null || true
+pid_c=""
+if wait "$cr"; then
+    die "resume cycle: client exited 0 despite daemon death"
+fi
+grep -q "EOF" "$tmp/client-resume.log" \
+    || die "resume cycle: client did not report the EOF error"
+# index files commit by atomic rename: every one on disk at kill time
+# is a complete checkpoint and must be resumed, not recomputed
+k=$(ckpt_count)
+[ "$k" -ge 1 ] || die "resume cycle: checkpoints vanished after kill"
+
+echo "chaos_soak: resume cycle — restarting daemon C (recovery, k=$k)"
+start_daemon c "$sock_c" "$store_c"
+pid_c=$daemon_pid
+wait_sock "$sock_c"
+"$bin" ctl stats --sock "$sock_c" | python3 - "$k" <<'PY' \
+    || die "resume cycle: recovery stats are wrong"
+import json, sys
+
+st = json.loads(sys.stdin.read())
+k = int(sys.argv[1])
+resumed = int(st.get("units_resumed", 0))
+corrupt = int(st.get("ckpt_corrupt", 0))
+if resumed != k:
+    print(f"expected units_resumed == {k}, got {resumed}")
+    sys.exit(1)
+if corrupt != 0:
+    print(f"expected ckpt_corrupt == 0, got {corrupt}")
+    sys.exit(1)
+print(f"chaos_soak: recovery resumed {resumed} checkpointed units, "
+      "ckpt_corrupt == 0")
+PY
+if [ "$(ckpt_count)" -ne 0 ]; then
+    die "resume cycle: checkpoints not cleared after the final publish"
+fi
+
+echo "chaos_soak: resume cycle — warm resubmit after recovery"
+"$bin" submit "$tmp/jobs-resume.json" --sock "$sock_c" --quiet \
+    --timeout 600 --json "$tmp/resumed.json" \
+    >"$tmp/client-resumed.log" 2>&1 \
+    || die "resume cycle: post-recovery submit failed"
+check "$tmp/ref-resume.json" "$tmp/resumed.json" 0
+
+# ---------------------------------------------------------------------
 # Final accounting: nothing corrupt was ever served
 # ---------------------------------------------------------------------
 stats_clean "$sock_a" || die "daemon A served corrupt artifacts"
 stats_clean "$sock_b" || die "daemon B served corrupt artifacts"
+stats_clean "$sock_c" || die "daemon C served corrupt artifacts"
 
 echo "chaos_soak: clean shutdown"
 stop_daemon "$sock_a" "$pid_a"
 pid_a=""
 stop_daemon "$sock_b" "$pid_b"
 pid_b=""
+stop_daemon "$sock_c" "$pid_c"
+pid_c=""
 
-echo "chaos_soak: all checks passed ($cycles kill cycles)"
+echo "chaos_soak: all checks passed ($cycles kill cycles + resume cycle)"
